@@ -1,0 +1,93 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! 1. **Generate** a physics dataset through the AOT-compiled
+//!    JAX/Pallas PRNG graph (L1/L2) executed from rust via PJRT.
+//! 2. **Write** it as a compressed columnar RNTF file with parallel
+//!    per-branch compression (paper §3.1).
+//! 3. **Read it back two ways**: per-column parallel read (Figure 1)
+//!    and the basket-decompression pipeline *interleaved with PJRT
+//!    analysis* (Figure 2), reporting speedups over serial.
+//! 4. Print the dimuon mass spectrum computed by the Pallas kernel.
+//!
+//! This is the repo's headline-metric driver recorded in
+//! EXPERIMENTS.md. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example analysis_pipeline`
+
+use std::sync::Arc;
+
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::coordinator::baskets::{self, PipelineOptions};
+use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::experiments::util::synthesize_physics_file;
+use rootio_par::format::reader::FileReader;
+use rootio_par::imt;
+use rootio_par::runtime::Engine;
+use rootio_par::tree::reader::TreeReader;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load_default()
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let entries = 262_144;
+    let threads = imt::num_cpus().min(8);
+
+    // --- 1+2: generate via PJRT, write compressed columnar file ------
+    let t0 = std::time::Instant::now();
+    let (be, wrep) =
+        synthesize_physics_file(entries, Settings::new(Codec::Rzip, 4), Some(&engine))?;
+    println!(
+        "generated+wrote {} events ({:.1} MB raw -> {:.1} MB stored, ratio {:.2}) in {:.0} ms",
+        wrep.entries,
+        wrep.raw_bytes as f64 / 1e6,
+        wrep.stored_bytes as f64 / 1e6,
+        wrep.compression_ratio(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+
+    // --- 3a: Figure 1 style parallel column read ---------------------
+    imt::disable();
+    let serial = read_columns(&reader, &ReadOptions { branches: None, force_serial: true })?;
+    imt::enable(threads);
+    let parallel = read_columns(&reader, &ReadOptions::default())?;
+    assert_eq!(serial.columns, parallel.columns);
+    println!(
+        "column read : serial {:.0} ms -> {} threads {:.0} ms ({:.2}x, {:.0} MB/s)",
+        serial.wall.as_secs_f64() * 1e3,
+        threads,
+        parallel.wall.as_secs_f64() * 1e3,
+        serial.wall.as_secs_f64() / parallel.wall.as_secs_f64(),
+        parallel.throughput_mbps()
+    );
+
+    // --- 3b: Figure 2 style pipeline with interleaved PJRT analysis --
+    imt::disable();
+    let s = baskets::run(&reader, Some(&engine), &PipelineOptions { force_serial: true })?;
+    imt::enable(threads);
+    let p = baskets::run(&reader, Some(&engine), &PipelineOptions::default())?;
+    imt::disable();
+    assert_eq!(s.analyzed, p.analyzed);
+    println!(
+        "decomp+analyze: serial {:.0} ms -> {} threads {:.0} ms ({:.2}x), {} events analyzed",
+        s.wall.as_secs_f64() * 1e3,
+        threads,
+        p.wall.as_secs_f64() * 1e3,
+        s.wall.as_secs_f64() / p.wall.as_secs_f64(),
+        p.analyzed
+    );
+
+    // --- 4: the physics result (computed by the Pallas kernel) -------
+    let hist = p.hist.expect("analysis ran");
+    let meta = engine.meta();
+    let max = hist.iter().cloned().fold(1.0f32, f32::max);
+    println!("\ndimuon mass spectrum [{:.0}, {:.0}] GeV:", meta.hist_lo, meta.hist_hi);
+    for (i, &count) in hist.iter().enumerate().step_by(2) {
+        let lo = meta.hist_lo + (meta.hist_hi - meta.hist_lo) * i as f64 / hist.len() as f64;
+        println!("{lo:6.1} | {} {count}", "#".repeat((count / max * 48.0) as usize));
+    }
+    let total: f32 = hist.iter().sum();
+    assert_eq!(total as u64, p.analyzed, "histogram counts every analyzed event");
+    println!("\nanalysis_pipeline OK");
+    Ok(())
+}

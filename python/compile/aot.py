@@ -1,0 +1,100 @@
+"""AOT lowering: jit the L2 graphs, emit HLO *text* artifacts for rust.
+
+HLO text (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Usage: ``cd python && python -m compile.aot --outdir ../artifacts``
+Emits, per block size N in BLOCK_SIZES:
+    gen_<N>.hlo.txt       generate_events: (2,)u32 -> (N,8)f32
+    analyze_<N>.hlo.txt   analyze_events: (N,8)f32 -> ((N,)f32, (64,)f32)
+plus ``meta.json`` describing shapes for the rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import physics
+
+# Block sizes the rust coordinator uses: 16384 for production pipelines,
+# 4096 for tests/examples that want small files.
+BLOCK_SIZES = (4096, 16384)
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> HLO text with a 1-tuple root."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gen(n: int) -> str:
+    seed_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    fn = lambda seed: (model.generate_events(seed, n),)
+    return to_hlo_text(jax.jit(fn).lower(seed_spec))
+
+
+def lower_analyze(n: int) -> str:
+    cols_spec = jax.ShapeDtypeStruct((n, model.NCOLS), jnp.float32)
+    fn = lambda cols: model.analyze_events(cols)
+    return to_hlo_text(jax.jit(fn).lower(cols_spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--sizes", type=int, nargs="*", default=list(BLOCK_SIZES)
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    meta = {
+        "ncols": model.NCOLS,
+        "nbins": physics.NBINS,
+        "hist_lo": physics.HIST_LO,
+        "hist_hi": physics.HIST_HI,
+        "blocks": sorted(args.sizes),
+        "artifacts": {},
+    }
+    for n in args.sizes:
+        for name, text in (
+            (f"gen_{n}", lower_gen(n)),
+            (f"analyze_{n}", lower_analyze(n)),
+        ):
+            path = os.path.join(args.outdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            meta["artifacts"][name] = {
+                "file": f"{name}.hlo.txt",
+                "bytes": len(text),
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.outdir, 'meta.json')}")
+
+    # Plain-text twin of meta.json for the rust runtime (no JSON parser
+    # in the dependency-free rust build).
+    with open(os.path.join(args.outdir, "meta.txt"), "w") as f:
+        f.write(f"ncols {model.NCOLS}\n")
+        f.write(f"nbins {physics.NBINS}\n")
+        f.write(f"hist_lo {physics.HIST_LO}\n")
+        f.write(f"hist_hi {physics.HIST_HI}\n")
+        f.write("blocks " + " ".join(str(n) for n in sorted(args.sizes)) + "\n")
+    print(f"wrote {os.path.join(args.outdir, 'meta.txt')}")
+
+
+if __name__ == "__main__":
+    main()

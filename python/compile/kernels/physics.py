@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: dimuon invariant-mass + histogram analysis.
+
+This is the "processing of decompressed data" the paper interleaves with
+parallel basket decompression (sec. 2.2 / Figure 2). The L3 coordinator
+decompresses baskets on the task pool and feeds decoded column blocks to
+this kernel through PJRT.
+
+Input layout: a (n, 8) f32 column block
+  [pt1, eta1, phi1, m1, pt2, eta2, phi2, m2]
+Output: per-event invariant mass (n,) and per-tile partial histograms
+(n_tiles, NBINS); L2 sums partials into the final (NBINS,) histogram.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * the histogram is computed as ones(1,t) @ one_hot(idx) — a matmul that
+    maps onto the MXU systolic array — instead of the GPU-style
+    scatter-add, which TPUs do not do well;
+  * per-tile partials avoid cross-grid-step accumulation (no carried VMEM
+    state), so grid steps stay independent and pipelineable;
+  * everything stays f32: mass resolution near narrow resonances is the
+    physics signal, bf16 would smear it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+NBINS = 64
+HIST_LO = 0.0
+HIST_HI = 160.0  # GeV; covers the J/psi..Z-like range of the toy spectrum
+
+
+def _four_vector(pt, eta, phi, m):
+    px = pt * jnp.cos(phi)
+    py = pt * jnp.sin(phi)
+    pz = pt * jnp.sinh(eta)
+    e = jnp.sqrt(px * px + py * py + pz * pz + m * m)
+    return px, py, pz, e
+
+
+def _mass_hist_kernel(cols_ref, mass_ref, hist_ref):
+    c = cols_ref[...]  # (tile, 8)
+    px1, py1, pz1, e1 = _four_vector(c[:, 0], c[:, 1], c[:, 2], c[:, 3])
+    px2, py2, pz2, e2 = _four_vector(c[:, 4], c[:, 5], c[:, 6], c[:, 7])
+    e = e1 + e2
+    px, py, pz = px1 + px2, py1 + py2, pz1 + pz2
+    m2 = e * e - (px * px + py * py + pz * pz)
+    mass = jnp.sqrt(jnp.maximum(m2, 0.0))
+    mass_ref[...] = mass
+
+    # Histogram as a one-hot matmul (MXU-friendly reduction).
+    width = (HIST_HI - HIST_LO) / NBINS
+    idx = jnp.clip(
+        jnp.floor((mass - HIST_LO) / width), 0.0, float(NBINS - 1)
+    ).astype(jnp.int32)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (mass.shape[0], NBINS), 1)
+    onehot = (idx[:, None] == bins).astype(jnp.float32)  # (tile, NBINS)
+    ones = jnp.ones((1, mass.shape[0]), dtype=jnp.float32)
+    hist_ref[...] = jnp.dot(ones, onehot)  # (1, NBINS)
+
+
+def mass_hist(cols, tile=TILE):
+    """cols: (n, 8) f32 -> (mass (n,), partial_hist (n//tile, NBINS))."""
+    n = cols.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    ntiles = n // tile
+    return pl.pallas_call(
+        _mass_hist_kernel,
+        grid=(ntiles,),
+        in_specs=[pl.BlockSpec((tile, 8), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles, NBINS), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution path; see DESIGN.md
+    )(cols)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: counter-based pseudo-random event-column generator.
+
+The paper's Figure 6 benchmark "generates 1GB of pseudo-random numbers and
+writes them out as a single column data file"; Figure 3's CMSSW streams
+generate events before the output module writes them. This kernel is that
+data source, as a counter-based (stateless, splittable) PRNG so every tile
+of the output is independent — exactly the property the L3 coordinator
+needs to generate event blocks from many threads without shared state.
+
+Design (TPU adaptation, DESIGN.md §Hardware-Adaptation):
+  * grid over row-tiles; each grid step materialises a (TILE, NCOLS) f32
+    block in VMEM — no HBM round-trips inside a step;
+  * the counter is derived from (program_id, iota) so there is no carried
+    state between grid steps (trivially parallel on the grid);
+  * mixing is `lowbias32`, a 3-round xorshift-multiply hash with good
+    avalanche — integer ALU only, no MXU contention with the analysis
+    kernel it overlaps with.
+
+Must stay bit-identical to `ref.uniform_ref` (pytest enforces exact
+equality, not allclose, since the pipeline's compression tests depend on a
+deterministic byte stream).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default tile height: 2048 rows x 8 cols x 4B = 64 KiB per block, far under
+# VMEM (~16 MiB/core); room for double buffering and the analysis kernel.
+TILE = 2048
+
+# numpy scalars, not jnp arrays: jnp constants created at import time would
+# be *captured* by the pallas kernel trace, which pallas_call rejects.
+GOLDEN = np.uint32(0x9E3779B9)  # 2^32 / phi, decorrelates seed from counter
+SPLIT = np.uint32(0x85EBCA6B)  # stream splitting constant (from murmur3)
+
+
+def lowbias32(x):
+    """3-round integer mixer (avalanche ~0.17% bias). Wraps on uint32."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x7FEB352D)
+    x = x ^ (x >> np.uint32(15))
+    x = x * np.uint32(0x846CA68B)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def _uniform_kernel(seed_ref, o_ref):
+    """One grid step: fill a (tile, ncols) block with uniforms in [0, 1)."""
+    tile = pl.program_id(0)
+    n, c = o_ref.shape
+    row = jax.lax.broadcasted_iota(jnp.uint32, (n, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (n, c), 1)
+    # Global flat counter for this lane; independent of grid decomposition.
+    ctr = (tile.astype(jnp.uint32) * np.uint32(n) + row) * np.uint32(c) + col
+    x = ctr ^ (seed_ref[0] * GOLDEN) ^ (seed_ref[1] * SPLIT)
+    x = lowbias32(x)
+    # Top 24 bits -> [0, 1) exactly representable in f32.
+    o_ref[...] = (x >> np.uint32(8)).astype(jnp.float32) * np.float32(
+        1.0 / (1 << 24)
+    )
+
+
+def uniform(seed, n, ncols, tile=TILE):
+    """(n, ncols) f32 uniforms in [0,1) from a (2,) uint32 seed vector.
+
+    `n` must be a multiple of `tile`.
+    """
+    if n % tile != 0:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    return pl.pallas_call(
+        _uniform_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((tile, ncols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ncols), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see DESIGN.md
+    )(seed)

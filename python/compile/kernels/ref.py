@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `uniform_ref` must match the PRNG
+kernel *bit-exactly* (the rust pipeline's compression tests rely on a
+deterministic byte stream), `mass_hist_ref` within float tolerance.
+No pallas imports here — plain jax.numpy only.
+"""
+
+import jax.numpy as jnp
+
+from .physics import HIST_HI, HIST_LO, NBINS
+from .prng import GOLDEN, SPLIT, lowbias32
+
+
+def uniform_ref(seed, n, ncols):
+    """Reference (n, ncols) uniforms for a (2,) uint32 seed vector."""
+    ctr = jnp.arange(n * ncols, dtype=jnp.uint32).reshape(n, ncols)
+    x = ctr ^ (seed[0] * GOLDEN) ^ (seed[1] * SPLIT)
+    x = lowbias32(x)
+    return (x >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24)
+    )
+
+
+def _four_vector(pt, eta, phi, m):
+    px = pt * jnp.cos(phi)
+    py = pt * jnp.sin(phi)
+    pz = pt * jnp.sinh(eta)
+    e = jnp.sqrt(px * px + py * py + pz * pz + m * m)
+    return px, py, pz, e
+
+
+def mass_ref(cols):
+    """Reference per-event invariant mass for an (n, 8) column block."""
+    px1, py1, pz1, e1 = _four_vector(
+        cols[:, 0], cols[:, 1], cols[:, 2], cols[:, 3]
+    )
+    px2, py2, pz2, e2 = _four_vector(
+        cols[:, 4], cols[:, 5], cols[:, 6], cols[:, 7]
+    )
+    e = e1 + e2
+    px, py, pz = px1 + px2, py1 + py2, pz1 + pz2
+    m2 = e * e - (px * px + py * py + pz * pz)
+    return jnp.sqrt(jnp.maximum(m2, 0.0))
+
+
+def hist_ref(mass):
+    """Reference histogram of the mass spectrum."""
+    width = (HIST_HI - HIST_LO) / NBINS
+    idx = jnp.clip(
+        jnp.floor((mass - HIST_LO) / width), 0.0, float(NBINS - 1)
+    ).astype(jnp.int32)
+    return (
+        (idx[:, None] == jnp.arange(NBINS)[None, :])
+        .astype(jnp.float32)
+        .sum(axis=0)
+    )
+
+
+def mass_hist_ref(cols):
+    mass = mass_ref(cols)
+    return mass, hist_ref(mass)

@@ -1,0 +1,58 @@
+"""L2: the jitted compute graphs the rust coordinator executes via PJRT.
+
+Two graphs, both built on the L1 Pallas kernels:
+
+  * ``generate_events(seed) -> (n, 8) f32`` — the event source. Uniform
+    deviates from the counter-based PRNG kernel are shaped into physics-like
+    columns: exponential transverse momenta, flat pseudorapidity/azimuth,
+    near-constant muon masses. Column layout (shared with the rust side,
+    see rust/src/framework/dataset.rs):
+        [pt1, eta1, phi1, m1, pt2, eta2, phi2, m2]
+  * ``analyze_events(cols) -> (mass (n,), hist (NBINS,))`` — the analysis
+    step interleaved with basket decompression (paper Fig 2): dimuon
+    invariant mass + spectrum histogram.
+
+Shapes are fixed at lowering time (one artifact per block size); the rust
+runtime picks the artifact matching its event-block size. Python never runs
+after ``make artifacts``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import physics, prng
+
+NCOLS = 8
+MUON_MASS = 0.1057  # GeV
+
+# Transform parameters — shared with ref-based tests.
+PT_SCALE = 30.0  # GeV, exponential tail
+ETA_RANGE = 2.5  # |eta| < 2.5, tracker acceptance
+PT_CLAMP = 0.999999  # avoid log(0)
+
+
+def shape_columns(u):
+    """Map (n, 8) uniforms onto physics-like columns (pure jnp)."""
+    two_pi = 2.0 * jnp.pi
+
+    def leg(up, ue, uf, um):
+        pt = -PT_SCALE * jnp.log1p(-jnp.minimum(up, PT_CLAMP))
+        eta = ETA_RANGE * (2.0 * ue - 1.0)
+        phi = two_pi * uf - jnp.pi
+        m = MUON_MASS * (1.0 + 0.01 * (um - 0.5))
+        return pt, eta, phi, m
+
+    p1 = leg(u[:, 0], u[:, 1], u[:, 2], u[:, 3])
+    p2 = leg(u[:, 4], u[:, 5], u[:, 6], u[:, 7])
+    return jnp.stack(p1 + p2, axis=1)
+
+
+def generate_events(seed, n, tile=prng.TILE):
+    """seed: (2,) uint32 -> (n, 8) f32 event columns."""
+    u = prng.uniform(seed, n, NCOLS, tile=tile)
+    return shape_columns(u)
+
+
+def analyze_events(cols, tile=physics.TILE):
+    """cols: (n, 8) f32 -> (mass (n,), hist (NBINS,) f32)."""
+    mass, partials = physics.mass_hist(cols, tile=tile)
+    return mass, jnp.sum(partials, axis=0)

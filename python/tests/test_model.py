@@ -1,0 +1,68 @@
+"""L2 model checks: column shaping, physics ranges, lowering round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import physics, ref
+
+
+def test_shape_columns_ranges():
+    u = ref.uniform_ref(jnp.array([5, 0], dtype=jnp.uint32), 2048, 8)
+    cols = np.asarray(model.shape_columns(u))
+    assert cols.shape == (2048, 8)
+    for leg in (0, 4):
+        pt, eta, phi, m = (cols[:, leg + i] for i in range(4))
+        assert (pt >= 0).all() and np.isfinite(pt).all()
+        assert (np.abs(eta) <= model.ETA_RANGE + 1e-6).all()
+        assert (phi >= -np.pi - 1e-6).all() and (phi < np.pi + 1e-6).all()
+        assert np.allclose(m, model.MUON_MASS, rtol=0.01)
+
+
+def test_generate_events_deterministic():
+    s = jnp.array([42, 7], dtype=jnp.uint32)
+    a = np.asarray(model.generate_events(s, 512, tile=128))
+    b = np.asarray(model.generate_events(s, 512, tile=256))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_analyze_events_shapes():
+    s = jnp.array([1, 1], dtype=jnp.uint32)
+    cols = model.generate_events(s, 512, tile=128)
+    mass, hist = model.analyze_events(cols, tile=128)
+    assert mass.shape == (512,)
+    assert hist.shape == (physics.NBINS,)
+    assert float(jnp.sum(hist)) == 512.0
+
+
+def test_pt_distribution_is_exponential_like():
+    s = jnp.array([9, 4], dtype=jnp.uint32)
+    cols = np.asarray(model.generate_events(s, 16384, tile=2048))
+    pt = cols[:, 0]
+    # exponential with scale PT_SCALE: mean ~ PT_SCALE (clamp-truncated)
+    assert abs(pt.mean() - model.PT_SCALE) / model.PT_SCALE < 0.05
+
+
+@pytest.mark.parametrize("n", [4096])
+def test_lowering_emits_hlo_text(n):
+    text = aot.lower_gen(n)
+    assert "HloModule" in text and "ROOT" in text
+    text2 = aot.lower_analyze(n)
+    assert "HloModule" in text2
+
+
+@pytest.mark.parametrize("n", [4096])
+def test_lowered_gen_matches_eager(n, tmp_path):
+    """The lowered artifact computes the same thing jax computes eagerly."""
+    from jax._src.lib import xla_client as xc
+
+    s = jnp.array([8, 2], dtype=jnp.uint32)
+    want = np.asarray(model.generate_events(s, n))
+    fn = lambda seed: (model.generate_events(seed, n),)
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2,), jnp.uint32))
+    got = np.asarray(lowered.compile()(s)[0])
+    # XLA may fuse transcendentals differently under AOT compile options;
+    # allow last-ulp-level drift.
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,11 @@
+//! Codec ratio/throughput characterisation (harness = false).
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::codec_bench(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("codec: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench harness for the paper's fig3 experiment (harness = false;
+//! criterion is unavailable offline — see Cargo.toml). Pass --quick
+//! for a reduced sweep.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::fig3(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("fig3_parallel_write: {e}");
+            std::process::exit(1);
+        }
+    }
+}

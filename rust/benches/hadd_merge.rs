@@ -1,0 +1,11 @@
+//! Bench harness for the §3.4 hadd experiment (harness = false).
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::hadd_bench(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("hadd_merge: {e}");
+            std::process::exit(1);
+        }
+    }
+}

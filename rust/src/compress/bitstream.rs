@@ -1,0 +1,162 @@
+//! LSB-first bit reader/writer for the entropy-coded `Rzip` codec.
+
+/// LSB-first bit writer over a growable byte buffer.
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { out: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        BitWriter { out: Vec::with_capacity(cap), acc: 0, nbits: 0 }
+    }
+
+    /// Write the low `n` bits of `bits` (n <= 32), LSB first.
+    #[inline]
+    pub fn put(&mut self, bits: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || bits < (1u32 << n));
+        self.acc |= (bits as u64) << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Flush any partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+        }
+        self.out
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.nbits as usize
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path (EXPERIMENTS.md §Perf, L3 iteration 3): absorb up
+        // to 7 bytes with one unaligned u64 load instead of a per-byte
+        // loop — the refill sits under every decoded symbol.
+        if self.pos + 8 <= self.data.len() {
+            let w = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.acc |= w << self.nbits;
+            let consumed = (63 - self.nbits) >> 3;
+            self.pos += consumed as usize;
+            self.nbits += consumed * 8;
+            return;
+        }
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n <= 32), LSB first. Reading past the end yields
+    /// zero bits — callers detect truncation via symbol counts.
+    #[inline]
+    pub fn get(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        if self.nbits < n {
+            self.refill();
+        }
+        let mask = if n == 32 { u64::MAX } else { (1u64 << n) - 1 };
+        let v = (self.acc & mask) as u32;
+        let taken = n.min(self.nbits);
+        self.acc >>= taken;
+        self.nbits -= taken;
+        v
+    }
+
+    /// Peek up to `n` bits without consuming.
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u32 {
+        if self.nbits < n {
+            self.refill();
+        }
+        let mask = if n == 32 { u64::MAX } else { (1u64 << n) - 1 };
+        (self.acc & mask) as u32
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        let taken = n.min(self.nbits);
+        self.acc >>= taken;
+        self.nbits -= taken;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_varied_widths() {
+        let mut w = BitWriter::new();
+        let vals: Vec<(u32, u32)> = (0..1000)
+            .map(|i| {
+                let n = 1 + (i % 24) as u32;
+                let v = (i as u32).wrapping_mul(2654435761) & ((1u32 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        for &(v, n) in &vals {
+            w.put(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.get(n), v);
+        }
+    }
+
+    #[test]
+    fn peek_then_skip() {
+        let mut w = BitWriter::new();
+        w.put(0b1011, 4);
+        w.put(0b110, 3);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek(4), 0b1011);
+        r.skip(4);
+        assert_eq!(r.get(3), 0b110);
+    }
+
+    #[test]
+    fn read_past_end_is_zero() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.get(8), 0xFF);
+        assert_eq!(r.get(8), 0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Canonical Huffman coding for the `Rzip` codec.
+//!
+//! Codes are length-limited to [`MAX_BITS`] (15, as in deflate) by
+//! halving frequencies and rebuilding when the tree grows too deep; the
+//! canonical assignment means only the code *lengths* need to be stored
+//! in the block header.
+
+use crate::error::{Error, Result};
+
+use super::bitstream::{BitReader, BitWriter};
+
+pub const MAX_BITS: u32 = 15;
+
+/// Encoder table: per-symbol (code, length). Length 0 = symbol unused.
+#[derive(Clone)]
+pub struct Encoder {
+    pub lengths: Vec<u8>,
+    codes: Vec<u16>,
+}
+
+/// Build optimal length-limited code lengths for `freqs`.
+///
+/// Standard two-queue Huffman over a scratch heap; if the deepest leaf
+/// exceeds `MAX_BITS`, halve all frequencies (keeping nonzero alive) and
+/// rebuild — converges quickly and costs at most a fraction of a percent
+/// of compression ratio.
+pub fn build_lengths(freqs: &[u64]) -> Vec<u8> {
+    let n = freqs.len();
+    let mut f: Vec<u64> = freqs.to_vec();
+    loop {
+        let lengths = build_lengths_once(&f);
+        let maxlen = lengths.iter().copied().max().unwrap_or(0);
+        if maxlen as u32 <= MAX_BITS {
+            return lengths;
+        }
+        for v in f.iter_mut().take(n) {
+            if *v > 0 {
+                *v = (*v + 1) / 2;
+            }
+        }
+    }
+}
+
+fn build_lengths_once(freqs: &[u64]) -> Vec<u8> {
+    let n = freqs.len();
+    let mut lengths = vec![0u8; n];
+    let live: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    match live.len() {
+        0 => return lengths,
+        1 => {
+            // A single symbol still needs one bit on the wire.
+            lengths[live[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Node arena: leaves then internals; parent pointers give depths.
+    #[derive(Clone, Copy)]
+    struct Node {
+        freq: u64,
+        parent: usize,
+    }
+    let mut nodes: Vec<Node> =
+        live.iter().map(|&i| Node { freq: freqs[i], parent: usize::MAX }).collect();
+
+    // Min-heap of (freq, node index); ties broken by index for determinism.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        nodes.iter().enumerate().map(|(i, nd)| Reverse((nd.freq, i))).collect();
+
+    while heap.len() > 1 {
+        let Reverse((fa, a)) = heap.pop().unwrap();
+        let Reverse((fb, b)) = heap.pop().unwrap();
+        let id = nodes.len();
+        nodes.push(Node { freq: fa + fb, parent: usize::MAX });
+        nodes[a].parent = id;
+        nodes[b].parent = id;
+        heap.push(Reverse((fa + fb, id)));
+    }
+
+    for (leaf, &sym) in live.iter().enumerate() {
+        let mut depth = 0u8;
+        let mut cur = leaf;
+        while nodes[cur].parent != usize::MAX {
+            cur = nodes[cur].parent;
+            depth += 1;
+        }
+        lengths[sym] = depth;
+    }
+    lengths
+}
+
+/// Assign canonical codes for `lengths` (shorter codes first, then by
+/// symbol order), LSB-first bit-reversed so they can be written with the
+/// LSB-first bitstream.
+fn canonical_codes(lengths: &[u8]) -> Result<Vec<u16>> {
+    let mut bl_count = [0u32; (MAX_BITS + 1) as usize];
+    for &l in lengths {
+        if l as u32 > MAX_BITS {
+            return Err(Error::Codec(format!("code length {l} > {MAX_BITS}")));
+        }
+        bl_count[l as usize] += 1;
+    }
+    bl_count[0] = 0;
+    let mut next_code = [0u16; (MAX_BITS + 2) as usize];
+    let mut code = 0u32;
+    for bits in 1..=MAX_BITS as usize {
+        code = (code + bl_count[bits - 1]) << 1;
+        if code > (1 << bits) && bl_count[bits] > 0 {
+            return Err(Error::Codec("over-subscribed code".into()));
+        }
+        next_code[bits] = code as u16;
+    }
+    let mut codes = vec![0u16; lengths.len()];
+    for (sym, &l) in lengths.iter().enumerate() {
+        if l > 0 {
+            let c = next_code[l as usize];
+            next_code[l as usize] += 1;
+            // bit-reverse to LSB-first order
+            codes[sym] = reverse_bits(c, l as u32);
+        }
+    }
+    Ok(codes)
+}
+
+#[inline]
+fn reverse_bits(v: u16, n: u32) -> u16 {
+    let mut r = 0u16;
+    let mut v = v;
+    for _ in 0..n {
+        r = (r << 1) | (v & 1);
+        v >>= 1;
+    }
+    r
+}
+
+impl Encoder {
+    pub fn from_freqs(freqs: &[u64]) -> Result<Self> {
+        let lengths = build_lengths(freqs);
+        let codes = canonical_codes(&lengths)?;
+        Ok(Encoder { lengths, codes })
+    }
+
+    pub fn from_lengths(lengths: Vec<u8>) -> Result<Self> {
+        let codes = canonical_codes(&lengths)?;
+        Ok(Encoder { lengths, codes })
+    }
+
+    #[inline]
+    pub fn emit(&self, w: &mut BitWriter, sym: usize) {
+        debug_assert!(self.lengths[sym] > 0, "emitting unused symbol {sym}");
+        w.put(self.codes[sym] as u32, self.lengths[sym] as u32);
+    }
+
+    /// Cost in bits of coding `sym`.
+    #[inline]
+    pub fn cost(&self, sym: usize) -> u32 {
+        self.lengths[sym] as u32
+    }
+}
+
+/// Decoder: a flat `(1 << max_len)`-entry lookup table mapping the next
+/// `max_len` bits to (symbol, length) — one table load per symbol.
+///
+/// Perf note (EXPERIMENTS.md §Perf, L3 iteration 2): the table is sized
+/// to the *actual* longest code of the block, not the 15-bit ceiling —
+/// typical blocks top out at 11–13 bits, shrinking table construction
+/// (the per-block fixed cost of decompression) by 4–16×.
+pub struct Decoder {
+    table: Vec<u32>, // (len << 16) | symbol
+    peek_bits: u32,
+}
+
+impl Decoder {
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self> {
+        let codes = canonical_codes(lengths)?;
+        let max_len = lengths.iter().copied().max().unwrap_or(1).max(1) as u32;
+        let mut table = vec![u32::MAX; 1 << max_len];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l == 0 {
+                continue;
+            }
+            let l32 = l as u32;
+            let code = codes[sym] as usize; // already LSB-first
+            let step = 1usize << l32;
+            let mut idx = code;
+            while idx < table.len() {
+                table[idx] = (l32 << 16) | sym as u32;
+                idx += step;
+            }
+        }
+        Ok(Decoder { table, peek_bits: max_len })
+    }
+
+    /// Decode one symbol.
+    #[inline]
+    pub fn read(&self, r: &mut BitReader<'_>) -> Result<usize> {
+        let bits = r.peek(self.peek_bits);
+        let entry = self.table[bits as usize];
+        if entry == u32::MAX {
+            return Err(Error::Codec("invalid huffman code".into()));
+        }
+        r.skip(entry >> 16);
+        Ok((entry & 0xFFFF) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(freqs: &[u64], stream: &[usize]) {
+        let enc = Encoder::from_freqs(freqs).unwrap();
+        let mut w = BitWriter::new();
+        for &s in stream {
+            enc.emit(&mut w, s);
+        }
+        let bytes = w.finish();
+        let dec = Decoder::from_lengths(&enc.lengths).unwrap();
+        let mut r = BitReader::new(&bytes);
+        for &s in stream {
+            assert_eq!(dec.read(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn skewed_alphabet() {
+        let mut freqs = vec![0u64; 8];
+        freqs[0] = 1000;
+        freqs[1] = 200;
+        freqs[2] = 50;
+        freqs[3] = 1;
+        let stream: Vec<usize> = (0..500).map(|i| [0, 0, 0, 1, 0, 2, 0, 3][i % 8]).collect();
+        roundtrip(&freqs, &stream);
+    }
+
+    #[test]
+    fn single_symbol() {
+        let mut freqs = vec![0u64; 4];
+        freqs[2] = 42;
+        roundtrip(&freqs, &[2; 100]);
+    }
+
+    #[test]
+    fn uniform_256() {
+        let freqs = vec![7u64; 256];
+        let stream: Vec<usize> = (0..2048).map(|i| (i * 37) % 256).collect();
+        roundtrip(&freqs, &stream);
+    }
+
+    #[test]
+    fn length_limiting_kicks_in() {
+        // Fibonacci-like frequencies force depth > 15 without limiting.
+        let mut freqs = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lengths = build_lengths(&freqs);
+        assert!(lengths.iter().all(|&l| l as u32 <= MAX_BITS));
+        let stream: Vec<usize> = (0..200).map(|i| i % 40).collect();
+        roundtrip(&freqs, &stream);
+    }
+
+    #[test]
+    fn shorter_codes_for_hotter_symbols() {
+        let freqs = vec![1000u64, 10, 10, 10];
+        let enc = Encoder::from_freqs(&freqs).unwrap();
+        assert!(enc.lengths[0] <= enc.lengths[1]);
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let freqs: Vec<u64> = (1..100).map(|i| (i * i) as u64).collect();
+        let lengths = build_lengths(&freqs);
+        let kraft: f64 =
+            lengths.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-9, "kraft = {kraft}");
+    }
+}

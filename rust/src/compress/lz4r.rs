@@ -1,0 +1,273 @@
+//! `Lz4r`: a from-scratch LZ4-style byte-aligned codec.
+//!
+//! This is the "fast, light" point in the paper's codec trade-off
+//! (ROOT's LZ4 backend): greedy hash-table matching, byte-aligned token
+//! stream, no entropy stage. Compression and decompression are both
+//! memory-bandwidth-bound, an order of magnitude faster than [`super::rzip`]
+//! at a worse ratio.
+//!
+//! Token stream (own format, both ends controlled here):
+//! ```text
+//! token := (lit_len:4 | match_code:4)
+//! lit_len   15 => extension bytes (255-continuation)
+//! literals  lit_len bytes
+//! -- if input exhausted after literals, stream ends (no match part) --
+//! offset    u16 LE, 1..=65535 back-reference distance
+//! match_code 15 => extension bytes; match_len = match_code + 4
+//! ```
+
+use crate::error::{Error, Result};
+
+const MIN_MATCH: usize = 4;
+const HASH_LOG: usize = 14;
+const HASH_SHIFT: u32 = 32 - HASH_LOG as u32;
+const MAX_OFFSET: usize = 65535;
+
+#[inline]
+fn hash4(data: &[u8], pos: usize) -> usize {
+    let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    (v.wrapping_mul(2_654_435_761) >> HASH_SHIFT) as usize
+}
+
+#[inline]
+fn write_len(out: &mut Vec<u8>, mut extra: usize) {
+    while extra >= 255 {
+        out.push(255);
+        extra -= 255;
+    }
+    out.push(extra as u8);
+}
+
+/// Compress `src`. `effort` (1..=9) scales the match-search step
+/// acceleration: higher effort = denser probing = better ratio.
+pub fn compress(src: &[u8], effort: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    let n = src.len();
+    if n < MIN_MATCH + 1 {
+        emit_sequence(&mut out, src, None);
+        return out;
+    }
+
+    // Acceleration: after `miss_budget` consecutive misses, start
+    // skipping positions (LZ4-style). Higher effort = larger budget.
+    let miss_budget = 1usize << (3 + effort.clamp(1, 9) as usize);
+
+    let mut table = vec![0u32; 1 << HASH_LOG]; // pos + 1; 0 = empty
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+    let mut misses = 0usize;
+    let limit = n - MIN_MATCH;
+
+    while pos <= limit {
+        let h = hash4(src, pos);
+        let cand = table[h] as usize;
+        table[h] = (pos + 1) as u32;
+        if cand > 0 {
+            let cpos = cand - 1;
+            let off = pos - cpos;
+            if off <= MAX_OFFSET && src[cpos..cpos + MIN_MATCH] == src[pos..pos + MIN_MATCH] {
+                // Extend forward.
+                let mut len = MIN_MATCH;
+                while pos + len < n && src[cpos + len] == src[pos + len] {
+                    len += 1;
+                }
+                emit_sequence(&mut out, &src[lit_start..pos], Some((off, len)));
+                pos += len;
+                lit_start = pos;
+                misses = 0;
+                continue;
+            }
+        }
+        misses += 1;
+        pos += 1 + misses / miss_budget;
+    }
+    emit_sequence(&mut out, &src[lit_start..], None);
+    out
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], m: Option<(usize, usize)>) {
+    if literals.is_empty() && m.is_none() {
+        return;
+    }
+    let lit_nibble = literals.len().min(15) as u8;
+    let match_code = match m {
+        Some((_, len)) => (len - MIN_MATCH).min(15) as u8,
+        None => 0,
+    };
+    out.push((lit_nibble << 4) | match_code);
+    if literals.len() >= 15 {
+        write_len(out, literals.len() - 15);
+    }
+    out.extend_from_slice(literals);
+    if let Some((off, mlen)) = m {
+        debug_assert!(off >= 1 && off <= MAX_OFFSET);
+        out.extend_from_slice(&(off as u16).to_le_bytes());
+        if mlen - MIN_MATCH >= 15 {
+            write_len(out, mlen - MIN_MATCH - 15);
+        }
+    }
+}
+
+/// Decompress into exactly `dst_len` bytes.
+pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(dst_len);
+    let mut pos = 0usize;
+    let err = |m: &str| Error::Codec(format!("lz4r: {m}"));
+
+    while out.len() < dst_len {
+        if pos >= src.len() {
+            return Err(err("truncated stream"));
+        }
+        let token = src[pos];
+        pos += 1;
+        // literals
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            loop {
+                let b = *src.get(pos).ok_or_else(|| err("truncated litlen"))?;
+                pos += 1;
+                lit += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        if pos + lit > src.len() {
+            return Err(err("literal overrun"));
+        }
+        out.extend_from_slice(&src[pos..pos + lit]);
+        pos += lit;
+        if pos == src.len() {
+            break; // final literal-only sequence
+        }
+        // match
+        if pos + 2 > src.len() {
+            return Err(err("truncated offset"));
+        }
+        let off = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
+        pos += 2;
+        if off == 0 || off > out.len() {
+            return Err(err("bad offset"));
+        }
+        let mut mlen = (token & 0x0F) as usize;
+        if mlen == 15 {
+            loop {
+                let b = *src.get(pos).ok_or_else(|| err("truncated matchlen"))?;
+                pos += 1;
+                mlen += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        let mlen = mlen + MIN_MATCH;
+        let start = out.len() - off;
+        if off >= mlen {
+            // non-overlapping: one memcpy (§Perf L3 iteration 4)
+            out.extend_from_within(start..start + mlen);
+        } else {
+            // overlapping copy (off < mlen), byte-by-byte semantics
+            for i in 0..mlen {
+                let b = out[start + i];
+                out.push(b);
+            }
+        }
+    }
+
+    if out.len() != dst_len {
+        return Err(err(&format!("size mismatch: got {}, want {}", out.len(), dst_len)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8], effort: u8) {
+        let c = compress(data, effort);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        for data in [&b""[..], b"a", b"ab", b"abcd", b"abcde"] {
+            roundtrip(data, 5);
+        }
+    }
+
+    #[test]
+    fn highly_compressible() {
+        let data = vec![42u8; 100_000];
+        let c = compress(&data, 5);
+        assert!(c.len() < data.len() / 50, "ratio too poor: {}", c.len());
+        roundtrip(&data, 5);
+    }
+
+    #[test]
+    fn repeating_pattern() {
+        let data: Vec<u8> = b"the quick brown fox ".iter().cycle().take(50_000).copied().collect();
+        let c = compress(&data, 5);
+        assert!(c.len() < data.len() / 10);
+        roundtrip(&data, 5);
+    }
+
+    #[test]
+    fn incompressible_random() {
+        // xorshift-ish stream: should stay ~1:1, must still roundtrip
+        let mut x = 0x12345678u32;
+        let data: Vec<u8> = (0..65_536)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        let c = compress(&data, 9);
+        assert!(c.len() <= data.len() + data.len() / 128 + 64);
+        roundtrip(&data, 9);
+    }
+
+    #[test]
+    fn overlapping_matches() {
+        // "aaaa..." forces offset-1 overlapping copies
+        let mut data = vec![b'a'; 1000];
+        data.extend_from_slice(b"bcd");
+        data.extend(vec![b'a'; 500]);
+        roundtrip(&data, 5);
+    }
+
+    #[test]
+    fn all_efforts_roundtrip() {
+        let data: Vec<u8> =
+            (0..30_000u32).flat_map(|i| ((i % 1000) as u16).to_be_bytes()).collect();
+        for e in 1..=9 {
+            roundtrip(&data, e);
+        }
+    }
+
+    #[test]
+    fn corrupt_input_is_an_error_not_a_panic() {
+        let data = b"hello world hello world hello world".repeat(100);
+        let mut c = compress(&data, 5);
+        // Truncate and mangle.
+        c.truncate(c.len() / 2);
+        assert!(decompress(&c, data.len()).is_err());
+        assert!(decompress(&[], 10).is_err());
+        // bad offset: token demanding a match with no history
+        assert!(decompress(&[0x01, b'x', 0xFF, 0xFF, 0x00], 100).is_err());
+    }
+
+    #[test]
+    fn long_matches_cross_extension_boundary() {
+        // match length around 15+255 boundaries
+        for extra in [14, 15, 16, 269, 270, 271, 600] {
+            let mut data = b"0123456789abcdef".to_vec();
+            let rep: Vec<u8> = data.iter().cycle().take(MIN_MATCH + extra).copied().collect();
+            data.extend_from_slice(&rep);
+            roundtrip(&data, 5);
+        }
+    }
+}

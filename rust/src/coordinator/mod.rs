@@ -1,0 +1,17 @@
+//! The paper's coordination layer: the scheduling policies that
+//! parallelise each phase of the I/O pipeline.
+//!
+//! * [`read`] — §2.1 / Figure 1: per-column (branch) parallel
+//!   decompression + deserialisation.
+//! * [`baskets`] — §2.2 / Figure 2: per-basket parallel decompression,
+//!   optionally interleaved with processing of the decompressed data
+//!   (the PJRT analysis graph).
+//! * [`write`] — §3.1 / Figure 3: per-column parallel serialisation +
+//!   compression on the write path.
+//!
+//! All policies degrade gracefully to serial execution when IMT is
+//! disabled — the "IMT off" baselines of every figure.
+
+pub mod baskets;
+pub mod read;
+pub mod write;

@@ -1,0 +1,50 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+/// Unified error for every layer of the I/O subsystem.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying OS / backend I/O failure.
+    Io(std::io::Error),
+    /// Malformed container file (bad magic, truncated footer, ...).
+    Format(String),
+    /// Codec failure (corrupt block, bad header, checksum mismatch).
+    Codec(String),
+    /// Schema/streamer mismatch (wrong type for column, unknown field).
+    Schema(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// Coordinator-level invariant violation (basket index gap, ...).
+    Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Schema(m) => write!(f, "schema error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

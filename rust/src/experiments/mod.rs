@@ -1,0 +1,697 @@
+//! Experiment harnesses: one function per paper table/figure.
+//!
+//! Each harness regenerates the corresponding figure's data — the same
+//! workload structure, sweep axes and baselines — and returns a
+//! rendered table (also saved as `results/<name>.csv`).
+//!
+//! **Methodology on this host.** The paper sweeps thread counts on
+//! multi-core machines; this reproduction host has a single CPU core
+//! (see DESIGN.md §4 and `simsched`). Every harness therefore:
+//!
+//! 1. runs the *real* pipeline serially (real codecs, real serialiser,
+//!    real PJRT graphs, real data) and measures per-task costs;
+//! 2. replays the coordinator's exact task graph through the
+//!    [`crate::simsched`] discrete-event scheduler to obtain the
+//!    multi-worker scaling the paper plots;
+//! 3. reports the measured serial wall time alongside the simulated
+//!    sweep, so on a real multi-core host the two columns can be
+//!    cross-checked (the real thread pool implements the same FIFO
+//!    list-scheduling policy the simulator models).
+//!
+//! The bench binaries (`rust/benches/`) and `rootio bench` CLI are thin
+//! wrappers over these functions.
+
+pub mod util;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compress::{self, Codec, Settings};
+use crate::coordinator::baskets;
+use crate::error::Result;
+use crate::format::reader::FileReader;
+use crate::framework::dataset::{self, DatasetKind};
+use crate::hadd::{hadd, HaddOptions};
+use crate::imt;
+use crate::metrics::SpanKind;
+use crate::serial::column::ColumnData;
+use crate::simsched::{simulate, Graph};
+use crate::storage::sim::DeviceModel;
+use crate::storage::BackendRef;
+use crate::tree::reader::TreeReader;
+
+use util::{save_csv, synthesize_dataset, synthesize_physics_file, try_engine, Table};
+
+fn thread_sweep(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 2, 4]
+    } else {
+        vec![1, 2, 4, 8]
+    }
+}
+
+fn measure<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+fn ms(d: Duration) -> String {
+    format!("{:.1}", d.as_secs_f64() * 1e3)
+}
+
+/// Figure 1 — parallel reading of multiple data columns.
+///
+/// CMS GenSim-like (70 columns) and ATLAS xAOD-like (200 columns)
+/// datasets. Per-branch fetch+decompress+deserialise costs are measured
+/// for real; the per-column task fan-out (one task per branch, the
+/// ROOT 6.08 IMT policy) is then scheduled on 1..8 workers.
+pub fn fig1(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let entries = if quick { 32_768 } else { 131_072 };
+    let mut table = Table::new(&[
+        "dataset", "columns", "threads", "wall_ms", "read_MBps", "speedup",
+    ]);
+    for kind in [DatasetKind::GenSim, DatasetKind::Xaod] {
+        let entries = if kind == DatasetKind::Xaod { entries / 2 } else { entries };
+        let (be, _) = synthesize_dataset(
+            kind,
+            entries,
+            4096,
+            Settings::new(Codec::Rzip, 4),
+            engine.as_ref(),
+        )?;
+        let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+        let raw_bytes: u64 = reader.meta().branches.iter().map(|b| b.raw_bytes()).sum();
+
+        // calibrate: real per-branch read cost
+        let mut graph = Graph::new();
+        let mut serial_wall = Duration::ZERO;
+        for b in 0..reader.n_branches() {
+            let (col, cost) = measure(|| reader.read_branch(b).unwrap());
+            assert_eq!(col.len(), entries);
+            serial_wall += cost;
+            graph.pool(SpanKind::Decompress, cost, vec![]);
+        }
+
+        let t1 = simulate(&graph, 1).makespan;
+        for &t in &thread_sweep(quick) {
+            let r = simulate(&graph, t);
+            let label =
+                if t == 1 { format!("{t} (measured serial: {} ms)", ms(serial_wall)) } else { t.to_string() };
+            table.row(vec![
+                kind.name().into(),
+                kind.n_branches().to_string(),
+                label,
+                ms(r.makespan),
+                format!("{:.1}", raw_bytes as f64 / 1e6 / r.makespan.as_secs_f64()),
+                format!("{:.2}x", t1.as_secs_f64() / r.makespan.as_secs_f64()),
+            ]);
+        }
+    }
+    save_csv("fig1_parallel_read", &table);
+    Ok(format!(
+        "## Figure 1 — parallel column reading\n(simulated workers, calibrated from \
+         measured per-branch costs; see DESIGN.md §4)\n\n{}",
+        table.render()
+    ))
+}
+
+/// Figure 2 — parallel basket decompression, with and without
+/// interleaved processing of decompressed data (PJRT analysis).
+///
+/// Per-cluster decode and per-cluster analysis costs are measured for
+/// real; decompression tasks go on the worker pool, analysis tasks on
+/// the single PJRT service unit (which is how the runtime works), so
+/// processing overlaps decompression exactly as in ROOT 6.14.
+pub fn fig2(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let entries = if quick { 65_536 } else { 262_144 };
+    let (be, _) =
+        synthesize_physics_file(entries, Settings::new(Codec::Rzip, 4), engine.as_ref())?;
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+    let cuts = baskets::clusters(&reader)?;
+    let raw_bytes: u64 = reader.meta().branches.iter().map(|b| b.raw_bytes()).sum();
+
+    // calibrate: per-cluster decode cost + per-cluster analyze cost
+    let mut decode_costs = Vec::with_capacity(cuts.len());
+    let mut analyze_costs = Vec::with_capacity(cuts.len());
+    for &(_, n_entries, k) in &cuts {
+        let (cols, d_cost) = measure(|| {
+            (0..reader.n_branches())
+                .map(|b| {
+                    let raw = reader.fetch_raw(b, k).unwrap();
+                    reader.decode(b, k, &raw).unwrap()
+                })
+                .collect::<Vec<_>>()
+        });
+        decode_costs.push(d_cost);
+        if let Some(e) = engine.as_ref() {
+            let n = n_entries as usize;
+            let ncols = e.meta().ncols;
+            let mut flat = vec![0f32; n * ncols];
+            for (c, col) in cols.iter().take(ncols).enumerate() {
+                let v = col.as_f32().unwrap();
+                for i in 0..n {
+                    flat[i * ncols + c] = v[i];
+                }
+            }
+            let (_, a_cost) = measure(|| e.analyze(flat, n).unwrap());
+            analyze_costs.push(a_cost);
+        }
+    }
+
+    let mut table = Table::new(&[
+        "mode", "threads", "wall_ms", "decomp_MBps", "speedup",
+    ]);
+    for (mode, with_processing) in
+        [("decompress", false), ("decompress+process", !analyze_costs.is_empty())]
+    {
+        let mut graph = Graph::new();
+        for (i, &d) in decode_costs.iter().enumerate() {
+            let dt = graph.pool(SpanKind::Decompress, d, vec![]);
+            if with_processing {
+                graph.named("pjrt", SpanKind::Process, analyze_costs[i], vec![dt]);
+            }
+        }
+        // Baseline = pre-6.14 ROOT: decompress, then process, all on one
+        // thread with no overlap — i.e. the plain serial sum.
+        let t1 = decode_costs.iter().sum::<Duration>()
+            + if with_processing { analyze_costs.iter().sum() } else { Duration::ZERO };
+        for &t in &thread_sweep(quick) {
+            let r = simulate(&graph, t);
+            table.row(vec![
+                mode.into(),
+                t.to_string(),
+                ms(r.makespan),
+                format!("{:.1}", raw_bytes as f64 / 1e6 / r.makespan.as_secs_f64()),
+                format!("{:.2}x", t1.as_secs_f64() / r.makespan.as_secs_f64()),
+            ]);
+        }
+    }
+    save_csv("fig2_basket_decompression", &table);
+    Ok(format!(
+        "## Figure 2 — parallel basket decompression (+ interleaved processing)\n\
+         (simulated workers, calibrated costs; analysis runs on the PJRT service unit)\n\n{}",
+        table.render()
+    ))
+}
+
+/// Figure 3 — framework write throughput vs streams: RECO and AOD,
+/// IMT off (single-threaded output module) vs IMT on (TBufferMerger +
+/// per-branch parallel compression) vs the no-output ceiling.
+pub fn fig3(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let block = engine.as_ref().map(|e| e.meta().blocks[0]).unwrap_or(4096);
+    let blocks_per_stream = if quick { 2 } else { 4 };
+    let streams_sweep: Vec<usize> =
+        if quick { vec![1, 2, 4, 8] } else { vec![1, 2, 4, 8, 16, 24, 32] };
+
+    let mut table = Table::new(&[
+        "dataset", "mode", "streams", "events_per_s", "ingest_MBps",
+    ]);
+    for kind in [DatasetKind::Reco, DatasetKind::Aod] {
+        // calibrate on one block: generate cost, per-event processing
+        // cost (CMSSW streams reconstruct before writing — we use the
+        // real PJRT analysis graph as the stand-in), per-branch
+        // ser+comp cost, and output-append cost
+        let (cols, gen_cost) = measure(|| {
+            match engine.as_ref() {
+                Some(e) => dataset::engine_block(e, kind, 1, 0, block).unwrap(),
+                None => {
+                    let mut rng = dataset::SplitMix::new(1);
+                    dataset::fallback_block(&mut rng, kind, block)
+                }
+            }
+        });
+        let process_cost = match engine.as_ref() {
+            Some(e) => {
+                let ev = e.generate(1, 0, block)?;
+                // reconstruction is heavier than one analysis pass; CMS
+                // reco is O(10-100)x — use 4x as a conservative stand-in
+                let (_, c) = measure(|| e.analyze_block(&ev).unwrap());
+                c * 4
+            }
+            None => gen_cost * 4,
+        };
+        let settings = Settings::new(Codec::Rzip, 2);
+        let mut branch_costs = Vec::with_capacity(cols.len());
+        let mut stored_per_block = 0u64;
+        for col in &cols {
+            let (payload, cost) = measure(|| {
+                let raw = col.encode();
+                compress::compress(settings, &raw)
+            });
+            stored_per_block += payload.len() as u64;
+            branch_costs.push(cost);
+        }
+        let ser_comp_total: Duration = branch_costs.iter().sum();
+        // output append: memory-bandwidth copy of the stored bytes
+        let append_cost = Duration::from_secs_f64(stored_per_block as f64 / 8e9);
+        let raw_per_block = (kind.n_branches() * block * 4) as u64;
+
+        for (mode_name, mode) in [("no-output", 0), ("imt-off", 1), ("imt-on", 2)] {
+            for &streams in &streams_sweep {
+                let mut graph = Graph::new();
+                for s in 0..streams {
+                    let stream_unit = format!("stream-{s}");
+                    let mut prev: Option<usize> = None;
+                    for _ in 0..blocks_per_stream {
+                        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+                        let g =
+                            graph.named(&stream_unit, SpanKind::Generate, gen_cost, deps);
+                        // per-block event processing on the stream thread
+                        let g = graph.named(
+                            &stream_unit,
+                            SpanKind::Process,
+                            process_cost,
+                            vec![g],
+                        );
+                        prev = Some(g);
+                        match mode {
+                            0 => {}
+                            1 => {
+                                // single output thread serialises+compresses+writes
+                                let o = graph.named(
+                                    "output",
+                                    SpanKind::Compress,
+                                    ser_comp_total + append_cost,
+                                    vec![g],
+                                );
+                                // stream hands off and continues; no dep back
+                                let _ = o;
+                            }
+                            _ => {
+                                // IMT on: per-branch compression on the pool
+                                // (paper: 0.5 extra threads per stream), then
+                                // the merger output thread appends bytes
+                                let mut branch_tasks = Vec::with_capacity(branch_costs.len());
+                                for &c in &branch_costs {
+                                    branch_tasks.push(graph.pool(
+                                        SpanKind::Compress,
+                                        c,
+                                        vec![g],
+                                    ));
+                                }
+                                graph.named(
+                                    "output",
+                                    SpanKind::Merge,
+                                    append_cost,
+                                    branch_tasks,
+                                );
+                            }
+                        }
+                    }
+                }
+                let pool_workers = ((streams + 1) / 2).max(1);
+                let r = simulate(&graph, pool_workers);
+                let events = (streams * blocks_per_stream * block) as f64;
+                let secs = r.makespan.as_secs_f64();
+                table.row(vec![
+                    kind.name().into(),
+                    mode_name.into(),
+                    streams.to_string(),
+                    format!("{:.0}", events / secs),
+                    format!("{:.1}", events / block as f64 * raw_per_block as f64 / 1e6 / secs),
+                ]);
+            }
+        }
+    }
+    save_csv("fig3_parallel_write", &table);
+    Ok(format!(
+        "## Figure 3 — parallel column writing (framework streams)\n\
+         (simulated streams, calibrated generate/compress/append costs)\n\n{}",
+        table.render()
+    ))
+}
+
+/// Figure 6 — TBufferMerger write performance across devices.
+///
+/// Workers generate pseudo-random single-column data through the PRNG
+/// kernel and compress baskets on their own threads; the output thread
+/// appends to the device, whose cost comes from the calibrated
+/// [`DeviceModel`] (sequential append: bandwidth-dominated).
+pub fn fig6(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let total_mb = if quick { 64 } else { 256 };
+    let workers_sweep: Vec<usize> = if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] };
+
+    // calibrate: generation + compression cost per ~1MB basket of PRNG data
+    let block = engine.as_ref().map(|e| e.max_block()).unwrap_or(16384);
+    let (ev_data, gen_block_cost) = measure(|| match engine.as_ref() {
+        Some(e) => e.generate(1, 0, block).unwrap().data,
+        None => {
+            let mut rng = dataset::SplitMix::new(1);
+            (0..block * 8).map(|_| rng.uniform()).collect()
+        }
+    });
+    let basket_values = ev_data.len(); // one engine block = one basket here
+    let basket_bytes = basket_values * 4;
+    let raw = ColumnData::F32(ev_data).encode();
+    let cases: Vec<(&str, Settings)> = vec![
+        ("none", Settings::uncompressed()),
+        ("rzip", Settings::new(Codec::Rzip, 4)),
+    ];
+    let mut table = Table::new(&[
+        "panel", "device", "codec", "workers", "write_MBps", "speedup",
+    ]);
+    // Right panel: the paper scales compressed writing "to a larger
+    // number of threads until the limit of the disk is reached" — the
+    // HDD saturates first, the NVMe keeps going (the 4x gap).
+    let right_sweep: Vec<usize> =
+        if quick { vec![4, 16, 32] } else { vec![4, 8, 16, 32, 64, 128] };
+    for (panel, device) in [
+        ("left", DeviceModel::ssd()),
+        ("left", DeviceModel::tmpfs()),
+        ("right", DeviceModel::hdd()),
+        ("right", DeviceModel::nvme()),
+    ] {
+        for (codec_name, settings) in &cases {
+            // paper panels: left = ssd/tmpfs both codecs; right = hdd/nvme compressed
+            if panel == "right" && *codec_name == "none" {
+                continue;
+            }
+            let workers_sweep =
+                if panel == "right" { right_sweep.clone() } else { workers_sweep.clone() };
+            let (packed, comp_cost) = measure(|| compress::compress(*settings, &raw));
+            let stored = packed.len();
+            let device_cost = Duration::from_secs_f64(
+                stored as f64 / (device.write_mbps * 1e6),
+            );
+            let n_baskets = (total_mb * 1_000_000usize).div_ceil(basket_bytes);
+            let mut base: Option<f64> = None;
+            for &w in &workers_sweep {
+                let mut graph = Graph::new();
+                for k in 0..n_baskets {
+                    let unit = format!("w{:02}", k % w);
+                    let g = graph.named(&unit, SpanKind::Generate, gen_block_cost, vec![]);
+                    let c = graph.named(&unit, SpanKind::Compress, comp_cost, vec![g]);
+                    graph.named("device", SpanKind::Write, device_cost, vec![c]);
+                }
+                let r = simulate(&graph, 1);
+                let mbps =
+                    n_baskets as f64 * basket_bytes as f64 / 1e6 / r.makespan.as_secs_f64();
+                let speedup = mbps / *base.get_or_insert(mbps);
+                table.row(vec![
+                    panel.into(),
+                    device.name.into(),
+                    (*codec_name).into(),
+                    w.to_string(),
+                    format!("{mbps:.1}"),
+                    format!("{speedup:.2}x"),
+                ]);
+            }
+        }
+    }
+    save_csv("fig6_buffer_merger", &table);
+    Ok(format!(
+        "## Figure 6 — TBufferMerger write performance\n\
+         (simulated workers; compression/generation costs measured, device costs \
+         from the calibrated device models)\n\n{}",
+        table.render()
+    ))
+}
+
+/// Figure 7 — concurrency optimisations: the Figure 6 compressed/SSD
+/// benchmark with ("before") and without ("after") a global streamer
+/// lock, with per-thread timelines and useful-work fractions.
+pub fn fig7(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let workers = if quick { 8 } else { 16 };
+    let total_mb = if quick { 32 } else { 96 };
+    let block = engine.as_ref().map(|e| e.max_block()).unwrap_or(16384);
+    let (ev_data, gen_cost) = measure(|| match engine.as_ref() {
+        Some(e) => e.generate(1, 0, block).unwrap().data,
+        None => {
+            let mut rng = dataset::SplitMix::new(1);
+            (0..block * 8).map(|_| rng.uniform()).collect()
+        }
+    });
+    let basket_bytes = ev_data.len() * 4;
+    let raw = ColumnData::F32(ev_data).encode();
+    let settings = Settings::new(Codec::Rzip, 4);
+    let (packed, comp_cost) = measure(|| compress::compress(settings, &raw));
+    let device = DeviceModel::ssd();
+    let device_cost =
+        Duration::from_secs_f64(packed.len() as f64 / (device.write_mbps * 1e6));
+    let n_baskets = (total_mb * 1_000_000usize).div_ceil(basket_bytes);
+
+    let mut out =
+        String::from("## Figure 7 — concurrency optimisations (thread timelines)\n\n");
+    let mut table =
+        Table::new(&["mode", "workers", "wall_ms", "write_MBps", "worker_utilization"]);
+    for (mode, locked) in [("before (global lock)", true), ("after (optimized)", false)] {
+        let mut graph = Graph::new();
+        let mut startup = Vec::new();
+        // single-threaded startup phase (the paper's leading stripe)
+        startup.push(graph.named("w00", SpanKind::Startup, gen_cost, vec![]));
+        for k in 0..n_baskets {
+            let unit = format!("w{:02}", k % workers);
+            let g = graph.named(&unit, SpanKind::Generate, gen_cost, startup.clone());
+            // "before": serialisation+compression under the global lock
+            let c = if locked {
+                graph.named("lock", SpanKind::Compress, comp_cost, vec![g])
+            } else {
+                graph.named(&unit, SpanKind::Compress, comp_cost, vec![g])
+            };
+            graph.named("device", SpanKind::Write, device_cost, vec![c]);
+        }
+        let r = simulate(&graph, 1);
+        let mbps = n_baskets as f64 * basket_bytes as f64 / 1e6 / r.makespan.as_secs_f64();
+        // worker-unit utilization (the VTune brown fraction)
+        let worker_busy: f64 = r
+            .busy
+            .iter()
+            .filter(|(u, _)| u.starts_with('w'))
+            .map(|(_, b)| b.as_secs_f64())
+            .sum();
+        let util = worker_busy / (workers as f64 * r.makespan.as_secs_f64());
+        table.row(vec![
+            mode.into(),
+            workers.to_string(),
+            ms(r.makespan),
+            format!("{mbps:.1}"),
+            format!("{util:.2}"),
+        ]);
+        out.push_str(&format!(
+            "### {mode}\n\n```\n{}```\n\n",
+            crate::simsched::timeline(&graph, &r, 100)
+        ));
+    }
+    save_csv("fig7_concurrency", &table);
+    out.push_str(&table.render());
+    out.push_str(
+        "\nlegend: S startup, g generate, c compress, w write, m merge; \
+         `lock` row = the global streamer mutex, `device` row = the SSD queue\n",
+    );
+    Ok(out)
+}
+
+/// §3.4 — serial vs parallel `hadd`. Real execution (I/O + checksum
+/// dominated, runs fine on one core) plus a simulated -j sweep from the
+/// measured per-file load costs.
+pub fn hadd_bench(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let n_files = if quick { 4 } else { 8 };
+    let entries = if quick { 16_384 } else { 65_536 };
+    let inputs: Vec<BackendRef> = (0..n_files)
+        .map(|_| {
+            synthesize_dataset(
+                DatasetKind::Aod,
+                entries,
+                4096,
+                Settings::new(Codec::Rzip, 4),
+                engine.as_ref(),
+            )
+            .map(|(be, _)| be)
+        })
+        .collect::<Result<_>>()?;
+
+    // real serial run + calibration of per-file load cost
+    imt::disable();
+    let out_be: BackendRef = Arc::new(crate::storage::mem::MemBackend::new());
+    let (serial, serial_wall) =
+        measure(|| hadd(out_be, &inputs, &HaddOptions::default()).unwrap());
+
+    let mut load_costs = Vec::new();
+    for input in &inputs {
+        let (_, c) = measure(|| {
+            // re-load the input (fetch + CRC verify), the parallel phase
+            let f = FileReader::open(input.clone()).unwrap();
+            let t = &f.directory().trees[0];
+            for br in &t.branches {
+                for k in &br.baskets {
+                    f.fetch_basket(k).unwrap();
+                }
+            }
+        });
+        load_costs.push(c);
+    }
+    let append_cost = Duration::from_secs_f64(serial.stored_bytes as f64 / 8e9);
+
+    let mut table = Table::new(&["mode", "threads", "files", "wall_ms", "speedup"]);
+    table.row(vec![
+        "serial (measured)".into(),
+        "1".into(),
+        n_files.to_string(),
+        ms(serial_wall),
+        "1.00x".into(),
+    ]);
+    let mut graph1 = Graph::new();
+    let loads: Vec<usize> =
+        load_costs.iter().map(|&c| graph1.pool(SpanKind::Read, c, vec![])).collect();
+    graph1.named("output", SpanKind::Merge, append_cost, loads);
+    let t1 = simulate(&graph1, 1).makespan;
+    for t in [2usize, 4, 8] {
+        let r = simulate(&graph1, t);
+        table.row(vec![
+            "parallel -j (simulated)".into(),
+            t.to_string(),
+            n_files.to_string(),
+            ms(r.makespan),
+            format!("{:.2}x", t1.as_secs_f64() / r.makespan.as_secs_f64()),
+        ]);
+    }
+    save_csv("hadd_merge", &table);
+    Ok(format!("## §3.4 — parallel hadd\n\n{}", table.render()))
+}
+
+/// Codec characterisation (the §2 compression-choice discussion).
+/// Real measurements — single-threaded by nature.
+pub fn codec_bench(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let entries = if quick { 65_536 } else { 262_144 };
+    let block = engine.as_ref().map(|e| e.meta().blocks[0]).unwrap_or(4096);
+    let mut cols: Vec<u8> = Vec::new();
+    let mut produced = 0usize;
+    let mut i = 0u32;
+    while produced < entries {
+        let blockcols: Vec<ColumnData> = match engine.as_ref() {
+            Some(e) => dataset::engine_block(e, DatasetKind::Aod, i + 1, 0, block)?,
+            None => {
+                let mut rng = dataset::SplitMix::new(i as u64);
+                dataset::fallback_block(&mut rng, DatasetKind::Aod, block)
+            }
+        };
+        cols.extend_from_slice(&blockcols[0].encode());
+        produced += block;
+        i += 1;
+    }
+
+    let mut table = Table::new(&["codec", "level", "ratio", "comp_MBps", "decomp_MBps"]);
+    let mut cases: Vec<Settings> = vec![Settings::uncompressed()];
+    for level in [1u8, 4, 9] {
+        cases.push(Settings::new(Codec::Lz4r, level));
+        cases.push(Settings::new(Codec::Rzip, level));
+    }
+    for settings in cases {
+        let reps = if quick { 1 } else { 3 };
+        let mut compressed = Vec::new();
+        let (_, enc) = measure(|| {
+            for _ in 0..reps {
+                compressed = compress::compress(settings, &cols);
+            }
+        });
+        let enc = enc / reps;
+        let (_, dec) = measure(|| {
+            for _ in 0..reps {
+                let out = compress::decompress(&compressed).unwrap();
+                assert_eq!(out.len(), cols.len());
+            }
+        });
+        let dec = dec / reps;
+        table.row(vec![
+            settings.codec.name().into(),
+            settings.level.to_string(),
+            format!("{:.2}", cols.len() as f64 / compressed.len() as f64),
+            format!("{:.1}", cols.len() as f64 / 1e6 / enc.as_secs_f64()),
+            format!("{:.1}", cols.len() as f64 / 1e6 / dec.as_secs_f64()),
+        ]);
+    }
+    save_csv("codec", &table);
+    Ok(format!("## Codec characterisation\n\n{}", table.render()))
+}
+
+/// Ablation — basket (cluster) size vs compression ratio, write cost
+/// and read cost. The design choice behind ROOT's default 32 kB basket:
+/// small baskets pay per-block header + Huffman-table overhead and
+/// fragment matches; huge baskets hurt parallel granularity (fewer
+/// tasks than workers in Figs 1/2).
+pub fn ablation_bench(quick: bool) -> Result<String> {
+    let engine = try_engine();
+    let entries = if quick { 32_768 } else { 131_072 };
+    let mut table = Table::new(&[
+        "basket_entries", "baskets", "ratio", "write_ms", "read_ms", "tasks_for_fig2",
+    ]);
+    for basket in [512usize, 2048, 4096, 16384, 65536] {
+        let t0 = Instant::now();
+        let (be, rep) = synthesize_dataset(
+            DatasetKind::Aod,
+            entries,
+            basket,
+            Settings::new(Codec::Rzip, 4),
+            engine.as_ref(),
+        )?;
+        let write = t0.elapsed();
+        let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+        let n_baskets = reader.meta().branches[0].baskets.len();
+        let (_, read) = measure(|| reader.read_all().unwrap());
+        table.row(vec![
+            basket.to_string(),
+            n_baskets.to_string(),
+            format!("{:.3}", rep.compression_ratio()),
+            ms(write),
+            ms(read),
+            (n_baskets * reader.n_branches()).to_string(),
+        ]);
+    }
+    save_csv("ablation_basket_size", &table);
+    Ok(format!(
+        "## Ablation — basket size (write/read cost vs ratio vs task granularity)\n\n{}",
+        table.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Quick smoke runs of each harness: integration tests proving every
+    // figure's pipeline composes end to end.
+
+    #[test]
+    fn fig1_smoke() {
+        let s = fig1(true).unwrap();
+        assert!(s.contains("GenSim") && s.contains("xAOD"));
+    }
+
+    #[test]
+    fn fig2_smoke() {
+        let s = fig2(true).unwrap();
+        assert!(s.contains("decompress"));
+    }
+
+    #[test]
+    fn fig3_smoke() {
+        let s = fig3(true).unwrap();
+        assert!(s.contains("imt-on") && s.contains("no-output"));
+    }
+
+    #[test]
+    fn fig6_smoke() {
+        let s = fig6(true).unwrap();
+        assert!(s.contains("nvme") && s.contains("hdd"));
+    }
+
+    #[test]
+    fn fig7_smoke() {
+        let s = fig7(true).unwrap();
+        assert!(s.contains("before") && s.contains("after"));
+    }
+
+    #[test]
+    fn hadd_smoke() {
+        let s = hadd_bench(true).unwrap();
+        assert!(s.contains("parallel -j"));
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared plumbing for the experiment harnesses: table rendering, CSV
+//! output, and synthetic dataset construction.
+
+use std::sync::Arc;
+
+use crate::compress::Settings;
+use crate::coordinator::write::{write_blocks, WriteReport};
+use crate::error::Result;
+use crate::framework::dataset::{self, DatasetKind, SplitMix};
+use crate::runtime::Engine;
+use crate::serial::column::ColumnData;
+use crate::storage::mem::MemBackend;
+use crate::storage::BackendRef;
+use crate::tree::writer::WriterConfig;
+
+/// Simple fixed-width table printer (markdown-flavoured).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:>w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    /// CSV twin of the table.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write the CSV beside the repo (results/<name>.csv), best-effort.
+pub fn save_csv(name: &str, table: &Table) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), table.to_csv());
+    }
+}
+
+/// Try to load the PJRT engine; fall back to None (pure-rust event
+/// synthesis) when artifacts are not built.
+pub fn try_engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("note: PJRT engine unavailable ({e}); using rust fallback generator");
+            None
+        }
+    }
+}
+
+/// Build an in-memory dataset file of `kind` with `entries` rows.
+pub fn synthesize_dataset(
+    kind: DatasetKind,
+    entries: usize,
+    basket_entries: usize,
+    compression: Settings,
+    engine: Option<&Engine>,
+) -> Result<(BackendRef, WriteReport)> {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let block_size = engine.map(|e| e.meta().blocks[0]).unwrap_or(4096);
+    let mut blocks: Vec<Vec<ColumnData>> = Vec::new();
+    let mut produced = 0usize;
+    let mut idx = 0u32;
+    while produced < entries {
+        let cols = match engine {
+            Some(e) => dataset::engine_block(e, kind, idx + 1, 0, block_size)?,
+            None => {
+                let mut rng = SplitMix::new(idx as u64 + 1);
+                dataset::fallback_block(&mut rng, kind, block_size)
+            }
+        };
+        produced += block_size;
+        idx += 1;
+        blocks.push(cols);
+    }
+    let cfg = WriterConfig { basket_entries, compression, parallel_flush: false };
+    let report = write_blocks(be.clone(), kind.schema(), "events", cfg, blocks)?;
+    Ok((be, report))
+}
+
+/// Build an in-memory *physics* file: exactly the engine's 8 analysis
+/// columns, cluster size = an engine block size (so the Fig 2 pipeline
+/// can feed PJRT directly).
+pub fn synthesize_physics_file(
+    entries: usize,
+    compression: Settings,
+    engine: Option<&Engine>,
+) -> Result<(BackendRef, WriteReport)> {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let block_size = engine.map(|e| e.meta().blocks[0]).unwrap_or(4096);
+    let schema = crate::serial::schema::Schema::flat_f32("p", 8);
+    let mut blocks = Vec::new();
+    let mut produced = 0usize;
+    let mut idx = 0u32;
+    while produced < entries {
+        let cols: Vec<ColumnData> = match engine {
+            Some(e) => {
+                let ev = e.generate(idx + 1, 0, block_size)?;
+                ev.columns().into_iter().map(ColumnData::F32).collect()
+            }
+            None => {
+                let mut rng = SplitMix::new(idx as u64 + 1);
+                let ev = rng.event_block(block_size, 8);
+                ev.columns().into_iter().map(ColumnData::F32).collect()
+            }
+        };
+        produced += block_size;
+        idx += 1;
+        blocks.push(cols);
+    }
+    let cfg = WriterConfig { basket_entries: block_size, compression, parallel_flush: false };
+    let report = write_blocks(be.clone(), schema, "events", cfg, blocks)?;
+    Ok((be, report))
+}
+
+pub fn fmt_mbps(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn fmt_speedup(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::format::reader::FileReader;
+    use crate::tree::reader::TreeReader;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "speedup"]);
+        t.row(vec!["1".into(), "3.50x".into()]);
+        let s = t.render();
+        assert!(s.contains("3.50x |"), "rendered:\n{s}");
+        assert!(t.to_csv().starts_with("a,speedup\n1,3.50x\n"));
+    }
+
+    #[test]
+    fn synthesize_dataset_fallback() {
+        let (be, rep) = synthesize_dataset(
+            DatasetKind::Aod,
+            8192,
+            4096,
+            Settings::new(Codec::Lz4r, 3),
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.entries, 8192);
+        let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert_eq!(r.n_branches(), 12);
+        assert_eq!(r.entries(), 8192);
+    }
+
+    #[test]
+    fn synthesize_physics_fallback() {
+        let (be, rep) = synthesize_physics_file(8192, Settings::uncompressed(), None).unwrap();
+        assert_eq!(rep.entries, 8192);
+        let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert_eq!(r.n_branches(), 8);
+        // clusters aligned at 4096
+        let cuts = crate::coordinator::baskets::clusters(&r).unwrap();
+        assert_eq!(cuts.len(), 2);
+    }
+}

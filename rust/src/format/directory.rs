@@ -1,0 +1,275 @@
+//! Footer directory: the file's table of contents (TDirectory/TKey
+//! metadata analogue). Lists every tree, its schema, and the location,
+//! sizes, entry range and checksum of every basket of every branch.
+
+use crate::error::{Error, Result};
+use crate::serial::schema::{ColumnType, Schema};
+
+use super::wire::{WireReader, WireWriter};
+
+/// Location + integrity info for one stored basket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BasketInfo {
+    /// Absolute file offset of the compressed container bytes.
+    pub offset: u64,
+    /// Stored (compressed container) length.
+    pub comp_len: u32,
+    /// Decompressed payload length.
+    pub raw_len: u32,
+    /// First entry number covered by this basket.
+    pub first_entry: u64,
+    /// Number of entries in this basket.
+    pub n_entries: u32,
+    /// CRC-32 of the stored bytes.
+    pub crc: u32,
+}
+
+/// Per-branch metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BranchMeta {
+    pub name: String,
+    pub ty: ColumnType,
+    pub baskets: Vec<BasketInfo>,
+}
+
+impl BranchMeta {
+    /// Total entries across baskets.
+    pub fn entries(&self) -> u64 {
+        self.baskets.iter().map(|b| b.n_entries as u64).sum()
+    }
+
+    /// Stored bytes across baskets.
+    pub fn stored_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.comp_len as u64).sum()
+    }
+
+    /// Uncompressed bytes across baskets.
+    pub fn raw_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.raw_len as u64).sum()
+    }
+
+    /// Find the basket covering `entry`.
+    pub fn basket_for(&self, entry: u64) -> Option<usize> {
+        self.baskets
+            .iter()
+            .position(|b| entry >= b.first_entry && entry < b.first_entry + b.n_entries as u64)
+    }
+
+    /// Validate the basket index: contiguous, gapless entry ranges.
+    pub fn check_index(&self) -> Result<()> {
+        let mut next = 0u64;
+        for (i, b) in self.baskets.iter().enumerate() {
+            if b.first_entry != next {
+                return Err(Error::Format(format!(
+                    "branch '{}': basket {i} starts at {} expected {next}",
+                    self.name, b.first_entry
+                )));
+            }
+            next += b.n_entries as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Per-tree metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeMeta {
+    pub name: String,
+    pub schema: Schema,
+    pub entries: u64,
+    pub branches: Vec<BranchMeta>,
+}
+
+impl TreeMeta {
+    pub fn branch(&self, name: &str) -> Option<&BranchMeta> {
+        self.branches.iter().find(|b| b.name == name)
+    }
+
+    /// Validate invariants: one branch per schema field, consistent
+    /// entry counts, gapless basket indexes.
+    pub fn check(&self) -> Result<()> {
+        if self.branches.len() != self.schema.len() {
+            return Err(Error::Format(format!(
+                "tree '{}': {} branches vs {} schema fields",
+                self.name,
+                self.branches.len(),
+                self.schema.len()
+            )));
+        }
+        for (br, f) in self.branches.iter().zip(&self.schema.fields) {
+            if br.name != f.name || br.ty != f.ty {
+                return Err(Error::Format(format!(
+                    "tree '{}': branch '{}' does not match field '{}'",
+                    self.name, br.name, f.name
+                )));
+            }
+            br.check_index()?;
+            if br.entries() != self.entries {
+                return Err(Error::Format(format!(
+                    "tree '{}': branch '{}' has {} entries, tree has {}",
+                    self.name,
+                    br.name,
+                    br.entries(),
+                    self.entries
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole footer directory.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Directory {
+    pub trees: Vec<TreeMeta>,
+}
+
+impl Directory {
+    pub fn tree(&self, name: &str) -> Option<&TreeMeta> {
+        self.trees.iter().find(|t| t.name == name)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.put_u32(self.trees.len() as u32);
+        for t in &self.trees {
+            w.put_str(&t.name);
+            w.put_bytes(&t.schema.encode());
+            w.put_u64(t.entries);
+            w.put_u32(t.branches.len() as u32);
+            for br in &t.branches {
+                w.put_str(&br.name);
+                w.put_u8(br.ty.code());
+                w.put_u32(br.baskets.len() as u32);
+                for b in &br.baskets {
+                    w.put_u64(b.offset);
+                    w.put_u32(b.comp_len);
+                    w.put_u32(b.raw_len);
+                    w.put_u64(b.first_entry);
+                    w.put_u32(b.n_entries);
+                    w.put_u32(b.crc);
+                }
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = WireReader::new(buf);
+        let n_trees = r.get_u32()? as usize;
+        let mut trees = Vec::with_capacity(n_trees);
+        for _ in 0..n_trees {
+            let name = r.get_str()?;
+            let (schema, _) = Schema::decode(r.get_bytes()?)?;
+            let entries = r.get_u64()?;
+            let n_branches = r.get_u32()? as usize;
+            let mut branches = Vec::with_capacity(n_branches);
+            for _ in 0..n_branches {
+                let bname = r.get_str()?;
+                let ty = ColumnType::from_code(r.get_u8()?)?;
+                let n_baskets = r.get_u32()? as usize;
+                let mut baskets = Vec::with_capacity(n_baskets);
+                for _ in 0..n_baskets {
+                    baskets.push(BasketInfo {
+                        offset: r.get_u64()?,
+                        comp_len: r.get_u32()?,
+                        raw_len: r.get_u32()?,
+                        first_entry: r.get_u64()?,
+                        n_entries: r.get_u32()?,
+                        crc: r.get_u32()?,
+                    });
+                }
+                branches.push(BranchMeta { name: bname, ty, baskets });
+            }
+            trees.push(TreeMeta { name, schema, entries, branches });
+        }
+        Ok(Directory { trees })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::schema::Field;
+
+    fn sample() -> Directory {
+        let schema = Schema::new(vec![
+            Field::new("pt", ColumnType::F32),
+            Field::new("n", ColumnType::I32),
+        ]);
+        let mk = |name: &str, ty| BranchMeta {
+            name: name.into(),
+            ty,
+            baskets: vec![
+                BasketInfo {
+                    offset: 24,
+                    comp_len: 100,
+                    raw_len: 400,
+                    first_entry: 0,
+                    n_entries: 100,
+                    crc: 0xABCD,
+                },
+                BasketInfo {
+                    offset: 124,
+                    comp_len: 80,
+                    raw_len: 400,
+                    first_entry: 100,
+                    n_entries: 100,
+                    crc: 0x1234,
+                },
+            ],
+        };
+        Directory {
+            trees: vec![TreeMeta {
+                name: "events".into(),
+                schema,
+                entries: 200,
+                branches: vec![mk("pt", ColumnType::F32), mk("n", ColumnType::I32)],
+            }],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let d = sample();
+        let enc = d.encode();
+        assert_eq!(Directory::decode(&enc).unwrap(), d);
+    }
+
+    #[test]
+    fn check_passes_for_consistent_meta() {
+        sample().trees[0].check().unwrap();
+    }
+
+    #[test]
+    fn check_catches_gaps() {
+        let mut d = sample();
+        d.trees[0].branches[0].baskets[1].first_entry = 150;
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn check_catches_entry_mismatch() {
+        let mut d = sample();
+        d.trees[0].entries = 999;
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn basket_for_lookup() {
+        let d = sample();
+        let br = &d.trees[0].branches[0];
+        assert_eq!(br.basket_for(0), Some(0));
+        assert_eq!(br.basket_for(99), Some(0));
+        assert_eq!(br.basket_for(100), Some(1));
+        assert_eq!(br.basket_for(199), Some(1));
+        assert_eq!(br.basket_for(200), None);
+    }
+
+    #[test]
+    fn decode_garbage_errors() {
+        assert!(Directory::decode(&[0xFF; 3]).is_err());
+        let enc = sample().encode();
+        assert!(Directory::decode(&enc[..enc.len() / 2]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The `RNTF` container file format (TFile analogue).
+//!
+//! ```text
+//! [0..4)    magic  "RNTF"
+//! [4..8)    u32 BE version (1)
+//! [8..16)   u64 BE footer offset   (0 until the file is finalised)
+//! [16..24)  u64 BE footer length
+//! [24..)    basket payloads (self-describing compressed containers),
+//!           appended in any order by the writer
+//! footer:   Directory::encode() + u32 BE crc32(footer)
+//! ```
+//!
+//! The footer-last layout mirrors ROOT: a file is readable iff the
+//! footer was committed, and appending payloads never rewrites existing
+//! bytes (crash-safe up to the final header update).
+
+pub mod directory;
+pub mod reader;
+pub mod wire;
+pub mod writer;
+
+pub use directory::{BasketInfo, BranchMeta, Directory, TreeMeta};
+pub use reader::FileReader;
+pub use writer::FileWriter;
+
+pub const MAGIC: &[u8; 4] = b"RNTF";
+pub const VERSION: u32 = 1;
+pub const HEADER_LEN: u64 = 24;

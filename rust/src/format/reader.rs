@@ -1,0 +1,160 @@
+//! File reader: header/footer parsing and basket payload fetches.
+
+use crate::compress::crc32;
+use crate::error::{Error, Result};
+use crate::storage::BackendRef;
+
+use super::directory::{BasketInfo, Directory};
+use super::{HEADER_LEN, MAGIC, VERSION};
+
+/// Read-side handle on an `RNTF` file.
+pub struct FileReader {
+    backend: BackendRef,
+    directory: Directory,
+}
+
+impl FileReader {
+    /// Open and validate: magic, version, footer checksum, and every
+    /// tree's structural invariants.
+    pub fn open(backend: BackendRef) -> Result<Self> {
+        let total = backend.len()?;
+        if total < HEADER_LEN {
+            return Err(Error::Format(format!("file too short: {total} bytes")));
+        }
+        let mut header = [0u8; HEADER_LEN as usize];
+        backend.read_at(0, &mut header)?;
+        if &header[0..4] != MAGIC {
+            return Err(Error::Format("bad magic".into()));
+        }
+        let version = u32::from_be_bytes(header[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::Format(format!("unsupported version {version}")));
+        }
+        let foff = u64::from_be_bytes(header[8..16].try_into().unwrap());
+        let flen = u64::from_be_bytes(header[16..24].try_into().unwrap());
+        if foff == 0 {
+            return Err(Error::Format("file was never finalised (no footer)".into()));
+        }
+        if foff + flen > total || flen < 4 {
+            return Err(Error::Format("footer out of bounds".into()));
+        }
+        let mut footer = vec![0u8; flen as usize];
+        backend.read_at(foff, &mut footer)?;
+        let (payload, crc_bytes) = footer.split_at(footer.len() - 4);
+        let want_crc = u32::from_be_bytes(crc_bytes.try_into().unwrap());
+        if crc32(payload) != want_crc {
+            return Err(Error::Format("footer checksum mismatch".into()));
+        }
+        let directory = Directory::decode(payload)?;
+        for t in &directory.trees {
+            t.check()?;
+        }
+        Ok(FileReader { backend, directory })
+    }
+
+    pub fn directory(&self) -> &Directory {
+        &self.directory
+    }
+
+    pub fn backend(&self) -> &BackendRef {
+        &self.backend
+    }
+
+    /// Fetch the stored bytes of one basket, verifying its CRC.
+    pub fn fetch_basket(&self, b: &BasketInfo) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; b.comp_len as usize];
+        self.backend.read_at(b.offset, &mut buf)?;
+        if crc32(&buf) != b.crc {
+            return Err(Error::Format(format!(
+                "basket at offset {} failed checksum",
+                b.offset
+            )));
+        }
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::writer::FileWriter;
+    use crate::format::{BranchMeta, TreeMeta};
+    use crate::serial::schema::{ColumnType, Field, Schema};
+    use crate::storage::mem::MemBackend;
+    use crate::storage::Backend;
+    use std::sync::Arc;
+
+    fn one_basket_file() -> (Arc<MemBackend>, Directory, Vec<u8>) {
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be.clone()).unwrap();
+        let payload = b"compressed-bytes-go-here".to_vec();
+        let (off, crc) = w.append(&payload).unwrap();
+        let dir = Directory {
+            trees: vec![TreeMeta {
+                name: "t".into(),
+                schema: Schema::new(vec![Field::new("x", ColumnType::U8)]),
+                entries: 24,
+                branches: vec![BranchMeta {
+                    name: "x".into(),
+                    ty: ColumnType::U8,
+                    baskets: vec![BasketInfo {
+                        offset: off,
+                        comp_len: payload.len() as u32,
+                        raw_len: payload.len() as u32,
+                        first_entry: 0,
+                        n_entries: 24,
+                        crc,
+                    }],
+                }],
+            }],
+        };
+        w.finish(&dir).unwrap();
+        (be, dir, payload)
+    }
+
+    #[test]
+    fn open_and_fetch() {
+        let (be, dir, payload) = one_basket_file();
+        let r = FileReader::open(be).unwrap();
+        assert_eq!(r.directory(), &dir);
+        let b = r.directory().trees[0].branches[0].baskets[0];
+        assert_eq!(r.fetch_basket(&b).unwrap(), payload);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let (be, _, _) = one_basket_file();
+        be.write_at(0, b"JUNK").unwrap();
+        assert!(FileReader::open(be).is_err());
+    }
+
+    #[test]
+    fn rejects_unfinalised() {
+        let be = Arc::new(MemBackend::new());
+        let _w = FileWriter::create(be.clone()).unwrap();
+        assert!(FileReader::open(be).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_footer() {
+        let (be, _, _) = one_basket_file();
+        let end = be.len().unwrap();
+        be.write_at(end - 6, &[0xFF, 0xFF]).unwrap();
+        assert!(FileReader::open(be).is_err());
+    }
+
+    #[test]
+    fn detects_corrupt_basket() {
+        let (be, _, _) = one_basket_file();
+        be.write_at(HEADER_LEN + 2, &[0xAA]).unwrap();
+        let r = FileReader::open(be).unwrap();
+        let b = r.directory().trees[0].branches[0].baskets[0];
+        assert!(r.fetch_basket(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_short_file() {
+        let be = Arc::new(MemBackend::from_vec(b"RN".to_vec()));
+        assert!(FileReader::open(be).is_err());
+    }
+}

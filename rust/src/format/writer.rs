@@ -1,0 +1,140 @@
+//! Append-only file writer.
+
+use std::sync::Mutex;
+
+use crate::compress::crc32;
+use crate::error::{Error, Result};
+use crate::storage::BackendRef;
+
+use super::directory::Directory;
+use super::{HEADER_LEN, MAGIC, VERSION};
+
+/// Writes an `RNTF` file: header, appended payloads, footer.
+///
+/// Thread-safe appends: [`FileWriter::append`] reserves a range under a
+/// cursor lock and performs the device write outside it, so multiple
+/// compression tasks can land baskets concurrently (the device itself
+/// serialises per its own queue model).
+pub struct FileWriter {
+    backend: BackendRef,
+    cursor: Mutex<u64>,
+    finished: Mutex<bool>,
+}
+
+impl FileWriter {
+    /// Start a new file on `backend`: writes the provisional header.
+    pub fn create(backend: BackendRef) -> Result<Self> {
+        let mut header = Vec::with_capacity(HEADER_LEN as usize);
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&VERSION.to_be_bytes());
+        header.extend_from_slice(&0u64.to_be_bytes()); // footer offset
+        header.extend_from_slice(&0u64.to_be_bytes()); // footer length
+        backend.write_at(0, &header)?;
+        Ok(FileWriter {
+            backend,
+            cursor: Mutex::new(HEADER_LEN),
+            finished: Mutex::new(false),
+        })
+    }
+
+    pub fn backend(&self) -> &BackendRef {
+        &self.backend
+    }
+
+    /// Reserve `len` bytes, returning the absolute offset.
+    pub fn reserve(&self, len: u64) -> u64 {
+        let mut c = self.cursor.lock().unwrap();
+        let off = *c;
+        *c += len;
+        off
+    }
+
+    /// Append `payload`, returning `(offset, crc32)`.
+    pub fn append(&self, payload: &[u8]) -> Result<(u64, u32)> {
+        let off = self.reserve(payload.len() as u64);
+        self.backend.write_at(off, payload)?;
+        Ok((off, crc32(payload)))
+    }
+
+    /// Bytes written so far (payloads + header).
+    pub fn position(&self) -> u64 {
+        *self.cursor.lock().unwrap()
+    }
+
+    /// Commit the footer and finalise the header. Consumes the logical
+    /// write session; further appends are an error.
+    pub fn finish(&self, dir: &Directory) -> Result<u64> {
+        {
+            let mut fin = self.finished.lock().unwrap();
+            if *fin {
+                return Err(Error::Format("file already finalised".into()));
+            }
+            *fin = true;
+        }
+        let mut footer = dir.encode();
+        let crc = crc32(&footer);
+        footer.extend_from_slice(&crc.to_be_bytes());
+        let foff = self.reserve(footer.len() as u64);
+        self.backend.write_at(foff, &footer)?;
+        // Patch header with footer location.
+        self.backend.write_at(8, &foff.to_be_bytes())?;
+        self.backend.write_at(16, &(footer.len() as u64).to_be_bytes())?;
+        self.backend.sync()?;
+        Ok(foff + footer.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemBackend;
+    use crate::storage::Backend;
+    use std::sync::Arc;
+
+    #[test]
+    fn header_then_payloads_then_footer() {
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be.clone()).unwrap();
+        let (off1, crc1) = w.append(b"basket-one").unwrap();
+        let (off2, _) = w.append(b"basket-two!").unwrap();
+        assert_eq!(off1, HEADER_LEN);
+        assert_eq!(off2, HEADER_LEN + 10);
+        assert_eq!(crc1, crc32(b"basket-one"));
+        let end = w.finish(&Directory::default()).unwrap();
+        assert_eq!(be.len().unwrap(), end);
+        // header patched
+        let mut b8 = [0u8; 8];
+        be.read_at(8, &mut b8).unwrap();
+        assert_eq!(u64::from_be_bytes(b8), off2 + 11);
+    }
+
+    #[test]
+    fn double_finish_is_error() {
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be).unwrap();
+        w.finish(&Directory::default()).unwrap();
+        assert!(w.finish(&Directory::default()).is_err());
+    }
+
+    #[test]
+    fn concurrent_appends_do_not_overlap() {
+        let be = Arc::new(MemBackend::new());
+        let w = Arc::new(FileWriter::create(be).unwrap());
+        let offsets: Vec<u64> = {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let w = w.clone();
+                    std::thread::spawn(move || {
+                        let payload = vec![i as u8; 100 + i as usize];
+                        w.append(&payload).unwrap().0
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        let mut sorted = offsets.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8, "offsets collided: {offsets:?}");
+    }
+}

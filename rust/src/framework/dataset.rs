@@ -1,0 +1,192 @@
+//! Dataset shapes and synthetic event sources.
+//!
+//! The paper benchmarks two CMSSW output datasets — an I/O-heavy
+//! reconstruction set (RECO) and a slim analysis set (AOD) — plus the
+//! CMS GenSim (~70 columns) and ATLAS xAOD (~200 columns) read
+//! workloads. [`DatasetKind`] captures those shapes; event content
+//! comes from the PJRT PRNG kernel (via [`crate::runtime::Engine`]) or
+//! from [`SplitMix`], a rust fallback with the same statistical shape
+//! for engine-less tests.
+
+use crate::error::Result;
+use crate::runtime::{Engine, EventBlock};
+use crate::serial::column::ColumnData;
+use crate::serial::schema::Schema;
+
+/// Benchmark dataset shapes (column counts from the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// CMSSW reconstruction output: many wide columns, I/O heavy.
+    Reco,
+    /// CMSSW analysis output: slim.
+    Aod,
+    /// CMS GenSim-like read workload (~70 columns).
+    GenSim,
+    /// ATLAS xAOD-like read workload (~200 columns).
+    Xaod,
+}
+
+impl DatasetKind {
+    pub fn n_branches(self) -> usize {
+        match self {
+            DatasetKind::Reco => 48,
+            DatasetKind::Aod => 12,
+            DatasetKind::GenSim => 70,
+            DatasetKind::Xaod => 200,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::Reco => "RECO",
+            DatasetKind::Aod => "AOD",
+            DatasetKind::GenSim => "GenSim",
+            DatasetKind::Xaod => "xAOD",
+        }
+    }
+
+    pub fn schema(self) -> Schema {
+        Schema::flat_f32(&format!("{}_c", self.name()), self.n_branches())
+    }
+}
+
+/// Quantise a float to ~3 fractional bits of mantissa precision loss —
+/// the "physics precision" trick real experiments use so reco data
+/// compresses; keeps our synthetic columns zlib-friendly (~2-3x) like
+/// real event data rather than incompressible white noise.
+#[inline]
+pub fn quantize(x: f32) -> f32 {
+    (x * 128.0).round() / 128.0
+}
+
+/// Expand an 8-column physics block to `width` derived columns.
+///
+/// Column `j` is an affine transform of base column `j % 8` with a
+/// per-column scale/offset — cheap, deterministic, and with the same
+/// per-column entropy profile as the base physics columns.
+pub fn expand_block(block: &EventBlock, width: usize) -> Vec<ColumnData> {
+    let base = block.columns();
+    (0..width)
+        .map(|j| {
+            let src = &base[j % base.len()];
+            let scale = 1.0 + 0.125 * (j / base.len()) as f32;
+            let offset = 0.25 * j as f32;
+            ColumnData::F32(src.iter().map(|&x| quantize(x * scale + offset)).collect())
+        })
+        .collect()
+}
+
+/// Generate one expanded dataset block through the PJRT engine.
+pub fn engine_block(
+    engine: &Engine,
+    kind: DatasetKind,
+    seed: u32,
+    stream: u32,
+    block: usize,
+) -> Result<Vec<ColumnData>> {
+    let ev = engine.generate(seed, stream, block)?;
+    Ok(expand_block(&ev, kind.n_branches()))
+}
+
+/// SplitMix32 fallback generator (tests / engine-less paths). Produces
+/// the same *shape* of data as the PJRT path: pt-like exponential
+/// columns, quantised.
+pub struct SplitMix {
+    state: u64,
+}
+
+impl SplitMix {
+    pub fn new(seed: u64) -> Self {
+        SplitMix { state: seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1) }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        (z ^ (z >> 31)) as u32
+    }
+
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// A physics-shaped fallback event block (n, 8), row-major.
+    pub fn event_block(&mut self, n: usize, ncols: usize) -> EventBlock {
+        let data: Vec<f32> = (0..n * ncols)
+            .map(|i| {
+                let u = self.uniform();
+                match i % 8 {
+                    0 | 4 => -30.0 * (1.0 - 0.999999 * u).ln(), // pt
+                    1 | 5 => 2.5 * (2.0 * u - 1.0),             // eta
+                    2 | 6 => std::f32::consts::PI * (2.0 * u - 1.0), // phi
+                    _ => 0.1057 * (1.0 + 0.01 * (u - 0.5)),     // m
+                }
+            })
+            .collect();
+        EventBlock { n, ncols, data }
+    }
+}
+
+/// Generate one expanded dataset block from the fallback PRNG.
+pub fn fallback_block(
+    rng: &mut SplitMix,
+    kind: DatasetKind,
+    block: usize,
+) -> Vec<ColumnData> {
+    let ev = rng.event_block(block, 8);
+    expand_block(&ev, kind.n_branches())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        assert_eq!(DatasetKind::Reco.n_branches(), 48);
+        assert_eq!(DatasetKind::GenSim.n_branches(), 70);
+        assert_eq!(DatasetKind::Xaod.n_branches(), 200);
+        assert_eq!(DatasetKind::Aod.schema().len(), 12);
+    }
+
+    #[test]
+    fn expand_covers_width_and_length() {
+        let mut rng = SplitMix::new(1);
+        let ev = rng.event_block(256, 8);
+        let cols = expand_block(&ev, 70);
+        assert_eq!(cols.len(), 70);
+        assert!(cols.iter().all(|c| c.len() == 256));
+        // derived columns differ from each other
+        assert_ne!(cols[0], cols[8]);
+    }
+
+    #[test]
+    fn fallback_block_is_deterministic() {
+        let a = fallback_block(&mut SplitMix::new(9), DatasetKind::Aod, 128);
+        let b = fallback_block(&mut SplitMix::new(9), DatasetKind::Aod, 128);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantized_data_compresses() {
+        use crate::compress::{self, Codec, Settings};
+        let mut rng = SplitMix::new(3);
+        let cols = fallback_block(&mut rng, DatasetKind::Reco, 4096);
+        let raw = cols[0].encode();
+        let c = compress::compress(Settings::new(Codec::Rzip, 5), &raw);
+        let ratio = raw.len() as f64 / c.len() as f64;
+        assert!(ratio > 1.3, "quantised physics data should compress, got {ratio:.2}");
+    }
+
+    #[test]
+    fn splitmix_uniformity() {
+        let mut rng = SplitMix::new(42);
+        let n = 10_000;
+        let mean: f32 = (0..n).map(|_| rng.uniform()).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,398 @@
+//! CMSSW-like mini framework (paper §3.1, Figure 3).
+//!
+//! N *streams* (worker threads) each generate event blocks — through
+//! the PJRT PRNG graph when an [`Engine`] is attached — and hand them
+//! to the output module. Three output modes reproduce the three curves
+//! of Figure 3:
+//!
+//! * [`OutputMode::None`] — events are generated and dropped: the
+//!   "not writing out any data" ceiling (red line).
+//! * [`OutputMode::SerialOutput`] — streams ship *raw* column blocks to
+//!   a single output thread that serialises, compresses and writes
+//!   them: the IMT-off CMSSW output module, which saturates once one
+//!   core's compression throughput is reached.
+//! * [`OutputMode::ImtMerger`] — streams serialise + compress locally
+//!   (in parallel across streams, and across branches when IMT is on)
+//!   and the `TBufferMerger` output thread only appends bytes: the
+//!   IMT-on path that keeps scaling.
+
+pub mod dataset;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compress::Settings;
+use crate::error::{Error, Result};
+use crate::format::writer::FileWriter;
+use crate::format::Directory;
+use crate::merger::{MergerConfig, TBufferMerger};
+use crate::metrics::{Recorder, SpanKind};
+use crate::runtime::Engine;
+use crate::serial::column::ColumnData;
+use crate::storage::BackendRef;
+use crate::tree::sink::FileSink;
+use crate::tree::writer::{TreeWriter, WriterConfig};
+
+use dataset::{DatasetKind, SplitMix};
+
+/// Output-module mode (the three Figure 3 configurations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Generate and drop (throughput ceiling).
+    None,
+    /// Single output thread does serialisation+compression+write
+    /// (IMT off).
+    SerialOutput,
+    /// TBufferMerger: workers compress, output thread appends (IMT on).
+    ImtMerger,
+}
+
+/// Framework run configuration.
+#[derive(Clone)]
+pub struct FrameworkConfig {
+    pub streams: usize,
+    /// Event blocks each stream produces.
+    pub blocks_per_stream: usize,
+    /// Events per block (must be a compiled engine block size when an
+    /// engine is used).
+    pub block: usize,
+    pub dataset: DatasetKind,
+    pub output: OutputMode,
+    pub compression: Settings,
+    /// Merger queue depth (backpressure knob).
+    pub queue_depth: usize,
+}
+
+impl Default for FrameworkConfig {
+    fn default() -> Self {
+        FrameworkConfig {
+            streams: 2,
+            blocks_per_stream: 4,
+            block: 4096,
+            dataset: DatasetKind::Reco,
+            output: OutputMode::ImtMerger,
+            compression: Settings::default_compressed(),
+            queue_depth: 16,
+        }
+    }
+}
+
+/// Outcome of a framework run.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameworkReport {
+    pub events: u64,
+    pub raw_bytes: u64,
+    pub stored_bytes: u64,
+    pub wall: std::time::Duration,
+}
+
+impl FrameworkReport {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn throughput_mbps(&self) -> f64 {
+        self.raw_bytes as f64 / 1e6 / self.wall.as_secs_f64()
+    }
+}
+
+/// Run the framework; `backend` receives the output file (ignored for
+/// [`OutputMode::None`]).
+pub fn run(
+    cfg: &FrameworkConfig,
+    backend: BackendRef,
+    engine: Option<&Engine>,
+    recorder: Option<Arc<Recorder>>,
+) -> Result<FrameworkReport> {
+    match cfg.output {
+        OutputMode::None => run_no_output(cfg, engine, recorder),
+        OutputMode::SerialOutput => run_serial_output(cfg, backend, engine, recorder),
+        OutputMode::ImtMerger => run_imt_merger(cfg, backend, engine, recorder),
+    }
+}
+
+/// Generate one block for `(stream, index)` deterministically.
+fn gen_block(
+    cfg: &FrameworkConfig,
+    engine: Option<&Engine>,
+    stream: usize,
+    index: usize,
+) -> Result<Vec<ColumnData>> {
+    match engine {
+        Some(e) => {
+            dataset::engine_block(e, cfg.dataset, index as u32 + 1, stream as u32, cfg.block)
+        }
+        None => {
+            let mut rng = SplitMix::new(((stream as u64) << 32) | index as u64);
+            Ok(dataset::fallback_block(&mut rng, cfg.dataset, cfg.block))
+        }
+    }
+}
+
+fn raw_bytes_of(cfg: &FrameworkConfig) -> u64 {
+    (cfg.streams * cfg.blocks_per_stream * cfg.block * cfg.dataset.n_branches() * 4) as u64
+}
+
+fn run_no_output(
+    cfg: &FrameworkConfig,
+    engine: Option<&Engine>,
+    recorder: Option<Arc<Recorder>>,
+) -> Result<FrameworkReport> {
+    let t0 = Instant::now();
+    let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for stream in 0..cfg.streams {
+            let recorder = recorder.clone();
+            let errs = &errs;
+            s.spawn(move || {
+                for i in 0..cfg.blocks_per_stream {
+                    let out = match &recorder {
+                        Some(r) => r.record(SpanKind::Generate, || {
+                            gen_block(cfg, engine, stream, i)
+                        }),
+                        None => gen_block(cfg, engine, stream, i),
+                    };
+                    if let Err(e) = out {
+                        errs.lock().unwrap().push(e);
+                        return;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+        return Err(e);
+    }
+    Ok(FrameworkReport {
+        events: (cfg.streams * cfg.blocks_per_stream * cfg.block) as u64,
+        raw_bytes: raw_bytes_of(cfg),
+        stored_bytes: 0,
+        wall: t0.elapsed(),
+    })
+}
+
+fn run_serial_output(
+    cfg: &FrameworkConfig,
+    backend: BackendRef,
+    engine: Option<&Engine>,
+    recorder: Option<Arc<Recorder>>,
+) -> Result<FrameworkReport> {
+    let t0 = Instant::now();
+    let schema = cfg.dataset.schema();
+    let fw = Arc::new(FileWriter::create(backend)?);
+    let sink = FileSink::new(fw.clone(), schema.len());
+    let writer_cfg = WriterConfig {
+        basket_entries: cfg.block,
+        compression: cfg.compression,
+        parallel_flush: false, // the whole point: single-threaded output
+    };
+    let mut writer = TreeWriter::new(schema.clone(), sink, writer_cfg);
+    if let Some(r) = &recorder {
+        writer = writer.with_recorder(r.clone());
+    }
+
+    let (tx, rx) = sync_channel::<Vec<ColumnData>>(cfg.queue_depth.max(1));
+    let stored = AtomicU64::new(0);
+    let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        // Output thread: does ALL serialisation + compression + writes.
+        let out_handle = s.spawn(move || -> Result<(FileSink, u64)> {
+            while let Ok(block) = rx.recv() {
+                writer.fill_columns(&block)?;
+            }
+            writer.close()
+        });
+        for stream in 0..cfg.streams {
+            let tx = tx.clone();
+            let recorder = recorder.clone();
+            let errs = &errs;
+            s.spawn(move || {
+                for i in 0..cfg.blocks_per_stream {
+                    let out = match &recorder {
+                        Some(r) => {
+                            r.record(SpanKind::Generate, || gen_block(cfg, engine, stream, i))
+                        }
+                        None => gen_block(cfg, engine, stream, i),
+                    };
+                    match out {
+                        Ok(block) => {
+                            let send = || tx.send(block);
+                            let sent = match &recorder {
+                                Some(r) => r.record(SpanKind::Running, send),
+                                None => send(),
+                            };
+                            if sent.is_err() {
+                                return; // output thread died; error surfaces there
+                            }
+                        }
+                        Err(e) => {
+                            errs.lock().unwrap().push(e);
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        match out_handle.join().map_err(|_| Error::Coordinator("output thread panicked".into())) {
+            Ok(Ok((sink, entries))) => {
+                let meta = sink.into_meta("events".into(), schema.clone(), entries);
+                stored.store(
+                    meta.branches.iter().map(|b| b.stored_bytes()).sum(),
+                    Ordering::Relaxed,
+                );
+                fw.finish(&Directory { trees: vec![meta] }).map(|_| ())
+            }
+            Ok(Err(e)) => Err(e),
+            Err(e) => Err(e),
+        }
+    })?;
+
+    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+        return Err(e);
+    }
+    Ok(FrameworkReport {
+        events: (cfg.streams * cfg.blocks_per_stream * cfg.block) as u64,
+        raw_bytes: raw_bytes_of(cfg),
+        stored_bytes: stored.load(Ordering::Relaxed),
+        wall: t0.elapsed(),
+    })
+}
+
+fn run_imt_merger(
+    cfg: &FrameworkConfig,
+    backend: BackendRef,
+    engine: Option<&Engine>,
+    recorder: Option<Arc<Recorder>>,
+) -> Result<FrameworkReport> {
+    let t0 = Instant::now();
+    let schema = cfg.dataset.schema();
+    let merger_cfg = MergerConfig {
+        tree_name: "events".into(),
+        queue_depth: cfg.queue_depth,
+        writer: WriterConfig {
+            basket_entries: cfg.block,
+            compression: cfg.compression,
+            parallel_flush: true, // per-branch IMT parallelism inside streams
+        },
+    };
+    let merger = TBufferMerger::create_with_recorder(
+        backend,
+        schema,
+        merger_cfg,
+        recorder.clone(),
+    )?;
+    let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        for stream in 0..cfg.streams {
+            let mut file = merger.get_file();
+            let recorder = recorder.clone();
+            let errs = &errs;
+            s.spawn(move || {
+                let mut work = || -> Result<()> {
+                    for i in 0..cfg.blocks_per_stream {
+                        let block = match &recorder {
+                            Some(r) => r.record(SpanKind::Generate, || {
+                                gen_block(cfg, engine, stream, i)
+                            })?,
+                            None => gen_block(cfg, engine, stream, i)?,
+                        };
+                        // fill serialises+compresses on this stream thread
+                        file.fill_columns(&block)?;
+                    }
+                    file.write()
+                };
+                if let Err(e) = work() {
+                    errs.lock().unwrap().push(e);
+                }
+            });
+        }
+    });
+    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+        return Err(e);
+    }
+    let stats = merger.close()?;
+    Ok(FrameworkReport {
+        events: stats.entries,
+        raw_bytes: raw_bytes_of(cfg),
+        stored_bytes: stats.stored_bytes,
+        wall: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::format::reader::FileReader;
+    use crate::storage::mem::MemBackend;
+    use crate::tree::reader::TreeReader;
+
+    fn cfg(output: OutputMode) -> FrameworkConfig {
+        FrameworkConfig {
+            streams: 3,
+            blocks_per_stream: 2,
+            block: 256,
+            dataset: DatasetKind::Aod,
+            output,
+            compression: Settings::new(Codec::Lz4r, 3),
+            queue_depth: 4,
+        }
+    }
+
+    #[test]
+    fn no_output_counts_events() {
+        let be = Arc::new(MemBackend::new());
+        let rep = run(&cfg(OutputMode::None), be, None, None).unwrap();
+        assert_eq!(rep.events, 3 * 2 * 256);
+        assert_eq!(rep.stored_bytes, 0);
+        assert!(rep.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn serial_output_writes_valid_file() {
+        let be = Arc::new(MemBackend::new());
+        let rep = run(&cfg(OutputMode::SerialOutput), be.clone(), None, None).unwrap();
+        assert_eq!(rep.events, 1536);
+        assert!(rep.stored_bytes > 0);
+        let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert_eq!(r.entries(), 1536);
+        assert_eq!(r.n_branches(), 12);
+    }
+
+    #[test]
+    fn imt_merger_writes_valid_file() {
+        let be = Arc::new(MemBackend::new());
+        let rep = run(&cfg(OutputMode::ImtMerger), be.clone(), None, None).unwrap();
+        assert_eq!(rep.events, 1536);
+        let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert_eq!(r.entries(), 1536);
+        let cols = r.read_all().unwrap();
+        assert_eq!(cols.len(), 12);
+        assert_eq!(cols[0].len(), 1536);
+    }
+
+    #[test]
+    fn both_output_modes_store_same_multiset() {
+        use crate::serial::value::Value;
+        let collect = |mode| {
+            let be = Arc::new(MemBackend::new());
+            run(&cfg(mode), be.clone(), None, None).unwrap();
+            let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+            let cols = r.read_all().unwrap();
+            let mut vals: Vec<u32> = (0..r.entries() as usize)
+                .map(|i| match cols[0].get(i).unwrap() {
+                    Value::F32(v) => v.to_bits(),
+                    _ => unreachable!(),
+                })
+                .collect();
+            vals.sort();
+            vals
+        };
+        assert_eq!(collect(OutputMode::SerialOutput), collect(OutputMode::ImtMerger));
+    }
+}

@@ -1,0 +1,219 @@
+//! `hadd`: merging many existing files into one (paper §3.4).
+//!
+//! Fast merge in the ROOT sense: baskets are copied *without*
+//! re-compression; only entry numbers are rebased. The parallel mode
+//! (`hadd -j`) reads and validates the input files on the IMT pool —
+//! the dominant cost — while the output append stays in input order so
+//! serial and parallel merges produce byte-identical directories.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::format::directory::{BasketInfo, BranchMeta, Directory, TreeMeta};
+use crate::format::reader::FileReader;
+use crate::format::writer::FileWriter;
+use crate::imt;
+use crate::storage::BackendRef;
+use crate::tree::buffer::{BasketPayload, TreeBuffer};
+
+/// hadd options.
+#[derive(Clone, Debug)]
+pub struct HaddOptions {
+    /// Parallel input reading (the `-j` flag). Uses the IMT pool.
+    pub parallel: bool,
+    /// Merge only this tree (default: first tree of the first file).
+    pub tree: Option<String>,
+}
+
+impl Default for HaddOptions {
+    fn default() -> Self {
+        HaddOptions { parallel: false, tree: None }
+    }
+}
+
+/// Merge accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct HaddReport {
+    pub files: usize,
+    pub entries: u64,
+    pub stored_bytes: u64,
+    pub wall: std::time::Duration,
+}
+
+/// Load one input file's tree into an in-memory [`TreeBuffer`]
+/// (compressed bytes, CRC-verified).
+fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
+    let reader = FileReader::open(input.clone())?;
+    let meta = match tree {
+        Some(name) => reader
+            .directory()
+            .tree(name)
+            .ok_or_else(|| Error::Format(format!("no tree '{name}'")))?,
+        None => reader
+            .directory()
+            .trees
+            .first()
+            .ok_or_else(|| Error::Format("input has no trees".into()))?,
+    };
+    let mut buf = TreeBuffer::new(meta.schema.clone());
+    buf.entries = meta.entries;
+    for (bb, br) in buf.branches.iter_mut().zip(&meta.branches) {
+        for k in &br.baskets {
+            bb.baskets.push(BasketPayload {
+                bytes: reader.fetch_basket(k)?,
+                raw_len: k.raw_len,
+                first_entry: k.first_entry,
+                n_entries: k.n_entries,
+            });
+        }
+    }
+    Ok(buf)
+}
+
+/// Merge `inputs` into a fresh file on `output`.
+pub fn hadd(output: BackendRef, inputs: &[BackendRef], opts: &HaddOptions) -> Result<HaddReport> {
+    if inputs.is_empty() {
+        return Err(Error::Coordinator("hadd: no input files".into()));
+    }
+    let t0 = Instant::now();
+
+    // Phase 1: read + checksum-verify inputs (parallel with -j).
+    let buffers: Vec<Result<TreeBuffer>> = if opts.parallel && imt::is_enabled() {
+        imt::parallel_map(inputs.len(), |i| load_input(&inputs[i], &opts.tree))
+    } else {
+        inputs.iter().map(|b| load_input(b, &opts.tree)).collect()
+    };
+    let buffers: Vec<TreeBuffer> = buffers.into_iter().collect::<Result<_>>()?;
+
+    // Schema consistency across inputs.
+    let schema = buffers[0].schema.clone();
+    for (i, b) in buffers.iter().enumerate() {
+        if b.schema != schema {
+            return Err(Error::Schema(format!("input {i} has a different schema")));
+        }
+    }
+
+    // Phase 2: append in input order, rebasing entries.
+    let fw = Arc::new(FileWriter::create(output)?);
+    let mut branches: Vec<BranchMeta> = schema
+        .fields
+        .iter()
+        .map(|f| BranchMeta { name: f.name.clone(), ty: f.ty, baskets: Vec::new() })
+        .collect();
+    let mut entries = 0u64;
+    let mut stored = 0u64;
+    for buf in &buffers {
+        for (dst, src) in branches.iter_mut().zip(&buf.branches) {
+            for k in &src.baskets {
+                let (offset, crc) = fw.append(&k.bytes)?;
+                stored += k.bytes.len() as u64;
+                dst.baskets.push(BasketInfo {
+                    offset,
+                    comp_len: k.bytes.len() as u32,
+                    raw_len: k.raw_len,
+                    first_entry: entries + k.first_entry,
+                    n_entries: k.n_entries,
+                    crc,
+                });
+            }
+        }
+        entries += buf.entries;
+    }
+    let meta = TreeMeta {
+        name: opts.tree.clone().unwrap_or_else(|| "events".into()),
+        schema,
+        entries,
+        branches,
+    };
+    meta.check()?;
+    fw.finish(&Directory { trees: vec![meta] })?;
+    Ok(HaddReport { files: inputs.len(), entries, stored_bytes: stored, wall: t0.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Codec, Settings};
+    use crate::coordinator::write::write_blocks;
+    use crate::serial::column::ColumnData;
+    use crate::serial::schema::Schema;
+    use crate::serial::value::Value;
+    use crate::storage::mem::MemBackend;
+    use crate::tree::reader::TreeReader;
+
+    fn make_input(start: i32, n: usize) -> BackendRef {
+        let schema = Schema::flat_f32("v", 2);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let block: Vec<ColumnData> = (0..2)
+            .map(|b| ColumnData::F32((0..n).map(|i| (start + i as i32 + b) as f32).collect()))
+            .collect();
+        let cfg = crate::tree::writer::WriterConfig {
+            basket_entries: 64,
+            compression: Settings::new(Codec::Lz4r, 3),
+            parallel_flush: false,
+        };
+        write_blocks(be.clone(), schema, "events", cfg, vec![block]).unwrap();
+        be
+    }
+
+    fn read_first_col(be: BackendRef) -> Vec<f32> {
+        let r = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        let cols = r.read_all().unwrap();
+        (0..r.entries() as usize)
+            .map(|i| match cols[0].get(i).unwrap() {
+                Value::F32(v) => v,
+                _ => unreachable!(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serial_merge_concatenates_in_order() {
+        let inputs = vec![make_input(0, 100), make_input(100, 100), make_input(200, 50)];
+        let out: BackendRef = Arc::new(MemBackend::new());
+        let rep = hadd(out.clone(), &inputs, &HaddOptions::default()).unwrap();
+        assert_eq!(rep.files, 3);
+        assert_eq!(rep.entries, 250);
+        let vals = read_first_col(out);
+        assert_eq!(vals, (0..250).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_merge_identical_to_serial() {
+        let inputs: Vec<BackendRef> =
+            (0..6).map(|i| make_input(i * 100, 100)).collect();
+        let serial_out: BackendRef = Arc::new(MemBackend::new());
+        hadd(serial_out.clone(), &inputs, &HaddOptions::default()).unwrap();
+        crate::imt::enable(4);
+        let par_out: BackendRef = Arc::new(MemBackend::new());
+        hadd(par_out.clone(), &inputs, &HaddOptions { parallel: true, tree: None }).unwrap();
+        crate::imt::disable();
+        assert_eq!(read_first_col(serial_out), read_first_col(par_out));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let a = make_input(0, 10);
+        let b: BackendRef = Arc::new(MemBackend::new());
+        let schema = Schema::flat_f32("other", 3);
+        let block: Vec<ColumnData> =
+            (0..3).map(|_| ColumnData::F32(vec![1.0; 10])).collect();
+        write_blocks(
+            b.clone(),
+            schema,
+            "events",
+            crate::tree::writer::WriterConfig::default(),
+            vec![block],
+        )
+        .unwrap();
+        let out: BackendRef = Arc::new(MemBackend::new());
+        assert!(hadd(out, &[a, b], &HaddOptions::default()).is_err());
+    }
+
+    #[test]
+    fn empty_inputs_rejected() {
+        let out: BackendRef = Arc::new(MemBackend::new());
+        assert!(hadd(out, &[], &HaddOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Implicit multi-threading (IMT): ROOT's `ROOT::EnableImplicitMT()`.
+//!
+//! A process-global task pool plus scoped task groups. Every implicitly
+//! parallel path in the library (parallel column read/write, parallel
+//! basket decompression, merger helpers) funnels through here, so a
+//! single switch — exactly like ROOT's — turns implicit parallelism on
+//! and off for the whole process:
+//!
+//! ```no_run
+//! rootio_par::imt::enable(4);
+//! assert!(rootio_par::imt::is_enabled());
+//! rootio_par::imt::disable();
+//! ```
+//!
+//! The pool is a from-scratch scoped work queue (the TBB analogue):
+//! workers pull boxed jobs from a mutex-protected deque; [`Pool::scope`]
+//! lets callers spawn borrowing closures, and the scope owner *helps
+//! execute* queued jobs while it waits, so nested scopes cannot
+//! deadlock and a blocked caller still contributes CPU.
+
+mod pool;
+
+pub use pool::{Pool, Scope};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+static GLOBAL: OnceLock<RwLock<Option<Arc<Pool>>>> = OnceLock::new();
+static POOL_SIZE: AtomicUsize = AtomicUsize::new(0);
+
+fn cell() -> &'static RwLock<Option<Arc<Pool>>> {
+    GLOBAL.get_or_init(|| RwLock::new(None))
+}
+
+/// Enable implicit multi-threading with `n` workers (0 = all cores).
+/// Idempotent; re-enabling with a different `n` rebuilds the pool.
+pub fn enable(n: usize) {
+    let n = if n == 0 { num_cpus() } else { n };
+    let mut g = cell().write().unwrap();
+    if let Some(p) = g.as_ref() {
+        if p.threads() == n {
+            return;
+        }
+    }
+    *g = Some(Arc::new(Pool::new(n)));
+    POOL_SIZE.store(n, Ordering::Relaxed);
+}
+
+/// Disable implicit multi-threading; parallel paths fall back to serial.
+pub fn disable() {
+    *cell().write().unwrap() = None;
+    POOL_SIZE.store(0, Ordering::Relaxed);
+}
+
+/// Is IMT currently on?
+pub fn is_enabled() -> bool {
+    cell().read().unwrap().is_some()
+}
+
+/// The global pool, if enabled.
+pub fn pool() -> Option<Arc<Pool>> {
+    cell().read().unwrap().clone()
+}
+
+/// Number of IMT workers (0 when disabled).
+pub fn threads() -> usize {
+    POOL_SIZE.load(Ordering::Relaxed)
+}
+
+/// Best-effort hardware concurrency.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for `i in 0..n`, on the global pool when IMT is enabled,
+/// serially otherwise. This is the library's `TThreadExecutor::Foreach`.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    match pool() {
+        Some(p) => p.parallel_for(n, &f),
+        None => {
+            for i in 0..n {
+                f(i);
+            }
+        }
+    }
+}
+
+/// Map `f` over `0..n` preserving order, parallel when IMT is on.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match pool() {
+        Some(p) => p.parallel_map(n, &f),
+        None => (0..n).map(f).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn global_switch() {
+        // Single test exercising the global state to avoid cross-test
+        // interference (other tests use private pools).
+        disable();
+        assert!(!is_enabled());
+        let hits = AtomicUsize::new(0);
+        parallel_for(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+
+        enable(3);
+        assert!(is_enabled());
+        assert_eq!(threads(), 3);
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+
+        let v = parallel_map(50, |i| i * i);
+        assert_eq!(v, (0..50).map(|i| i * i).collect::<Vec<_>>());
+
+        enable(3); // idempotent
+        assert_eq!(threads(), 3);
+        disable();
+        assert!(!is_enabled());
+        assert_eq!(threads(), 0);
+    }
+}

@@ -1,0 +1,303 @@
+//! The scoped task pool backing IMT.
+//!
+//! Safety model: [`Pool::scope`] erases the lifetime of spawned closures
+//! (they borrow from the caller's stack) but guarantees every spawned
+//! job has finished before `scope` returns — the standard
+//! scoped-threadpool construction. Panics inside jobs are caught,
+//! recorded, and re-thrown at the scope join point.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size worker pool with a shared FIFO queue.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    nthreads: usize,
+}
+
+impl Pool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("imt-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn imt worker")
+            })
+            .collect();
+        Pool { shared, workers, nthreads: n }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.nthreads
+    }
+
+    fn push(&self, job: Job) {
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.work_cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.shared.queue.lock().unwrap().pop_front()
+    }
+
+    /// Run a scope: closures spawned on `Scope` may borrow from the
+    /// caller; all of them complete before `scope` returns.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env, '_>) -> R,
+    {
+        let state = Arc::new(GroupState {
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            panicked: AtomicBool::new(false),
+        });
+        let scope = Scope { pool: self, state: state.clone(), _marker: std::marker::PhantomData };
+        let out = f(&scope);
+        // Help execute queued work while waiting for our jobs.
+        while state.pending.load(Ordering::Acquire) > 0 {
+            if let Some(job) = self.try_pop() {
+                job();
+            } else {
+                let g = state.done_mx.lock().unwrap();
+                if state.pending.load(Ordering::Acquire) > 0 {
+                    let _ = state.done_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                }
+            }
+        }
+        if state.panicked.load(Ordering::Acquire) {
+            panic!("task in imt scope panicked");
+        }
+        out
+    }
+
+    /// `f(i)` for all `i in 0..n`, chunked across the pool.
+    pub fn parallel_for<F>(&self, n: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        // ~4 chunks per worker balances scheduling overhead vs skew.
+        let chunks = (self.nthreads * 4).min(n);
+        let chunk = n.div_ceil(chunks);
+        self.scope(|s| {
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                s.spawn(move || {
+                    for i in start..end {
+                        f(i);
+                    }
+                });
+                start = end;
+            }
+        });
+    }
+
+    /// Ordered parallel map.
+    pub fn parallel_map<T, F>(&self, n: usize, f: &F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots = out.as_mut_ptr() as usize;
+            self.scope(|s| {
+                for i in 0..n {
+                    s.spawn(move || {
+                        // SAFETY: each task writes a distinct slot, and the
+                        // scope joins before `out` is read or dropped.
+                        unsafe {
+                            let p = (slots as *mut Option<T>).add(i);
+                            std::ptr::write(p, Some(f(i)));
+                        }
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|v| v.expect("slot filled")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = sh.work_cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+struct GroupState {
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+    panicked: AtomicBool,
+}
+
+/// Handle for spawning borrowing jobs inside [`Pool::scope`].
+pub struct Scope<'env, 'p> {
+    pool: &'p Pool,
+    state: Arc<GroupState>,
+    _marker: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env, 'p> Scope<'env, 'p> {
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.state.pending.fetch_add(1, Ordering::AcqRel);
+        let state = self.state.clone();
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                state.panicked.store(true, Ordering::Release);
+            }
+            let _g = state.done_mx.lock().unwrap();
+            state.pending.fetch_sub(1, Ordering::AcqRel);
+            state.done_cv.notify_all();
+        });
+        // SAFETY: Pool::scope joins all jobs before 'env ends.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        self.pool.push(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_borrows_stack_data() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(100) {
+                let sum = &sum;
+                s.spawn(move || {
+                    sum.fetch_add(chunk.iter().sum::<u64>(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let pool = Pool::new(8);
+        let v = pool.parallel_map(257, &|i| i as u32 * 3);
+        assert_eq!(v, (0..257u32).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_for_covers_all_once() {
+        let pool = Pool::new(3);
+        let flags: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(500, &|i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let total = &total;
+                let pool_ref = &pool;
+                s.spawn(move || {
+                    pool_ref.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "task in imt scope panicked")]
+    fn panic_propagates_at_join() {
+        let pool = Pool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        let pool = Pool::new(2);
+        pool.parallel_for(0, &|_| panic!("must not run"));
+        let v: Vec<u8> = pool.parallel_map(0, &|_| 0u8);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn many_small_scopes() {
+        let pool = Pool::new(4);
+        for round in 0..100 {
+            let n = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..8 {
+                    let n = &n;
+                    s.spawn(move || {
+                        n.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 8, "round {round}");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! # rootio-par
+//!
+//! Reproduction of *"Increasing Parallelism in the ROOT I/O Subsystem"*
+//! (Amadio, Bockelman, Canal, Piparo, Tejedor, Zhang — 2018).
+//!
+//! A self-contained parallel columnar I/O subsystem modelled on the ROOT
+//! I/O stack, with every substrate the paper depends on built from
+//! scratch:
+//!
+//! * [`compress`] — block compression codecs (LZ4-style and a
+//!   deflate-style LZ77 + canonical-Huffman codec) behind ROOT-like
+//!   9-byte block headers, plus CRC32 integrity.
+//! * [`serial`] — schema-driven object streamers: rows of typed values
+//!   split into per-column buffers (ROOT's TBuffer + streamer-info).
+//! * [`format`] — the `RNTF` container file format (TFile/TKey/TDirectory
+//!   analogue): append-only records plus a footer directory.
+//! * [`tree`] — TTree/TBranch/TBasket analogue: columnar trees of typed
+//!   branches, basketised, written/read through [`format`].
+//! * [`imt`] — implicit multi-threading: a global task pool with scoped
+//!   task groups, the engine behind all "IMT on" paths (TBB analogue).
+//! * [`storage`] — storage backends: local files and deterministic
+//!   simulated devices (HDD / SSD / NVMe / tmpfs) for the paper's
+//!   device-comparison experiments.
+//! * [`merger`] — `TBufferMerger`: many writer threads, one output
+//!   thread, a bounded queue of in-memory tree files merged into a
+//!   single physical file (paper §3.2, Figures 4–6).
+//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas
+//!   compute graphs from `artifacts/*.hlo.txt` and executes them from
+//!   the hot path. Python never runs at request time.
+//! * [`framework`] — a CMSSW-like mini framework: N concurrent streams
+//!   generating, processing and writing events (paper §3.1, Figure 3).
+//! * [`coordinator`] — the paper's contribution: parallel column
+//!   reading, parallel basket decompression with interleaved
+//!   processing, and parallel column writing.
+//! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
+//! * [`hadd`] — serial and parallel merging of existing files (§3.4).
+
+pub mod compress;
+pub mod coordinator;
+pub mod error;
+pub mod format;
+pub mod framework;
+pub mod hadd;
+pub mod imt;
+pub mod merger;
+pub mod metrics;
+pub mod runtime;
+pub mod serial;
+pub mod storage;
+pub mod tree;
+
+pub use error::{Error, Result};
+pub mod experiments;
+pub mod simsched;

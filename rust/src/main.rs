@@ -1,0 +1,251 @@
+//! `rootio` — CLI for the parallel I/O subsystem reproduction.
+//!
+//! ```text
+//! rootio bench <fig1|fig2|fig3|fig6|fig7|hadd|codec|all> [--quick]
+//! rootio generate --out <path> [--dataset reco|aod|gensim|xaod]
+//!                 [--entries N] [--codec none|lz4|zlib] [--level L]
+//! rootio inspect <path>
+//! rootio read <path> [--threads N]
+//! rootio analyze <path> [--threads N]
+//! ```
+//!
+//! Argument parsing is hand-rolled (no external CLI crates available in
+//! this environment — see Cargo.toml).
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::coordinator::baskets::{self, PipelineOptions};
+use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::error::Result;
+use rootio_par::format::reader::FileReader;
+use rootio_par::framework::dataset::DatasetKind;
+use rootio_par::runtime::Engine;
+use rootio_par::storage::local::LocalFile;
+use rootio_par::storage::BackendRef;
+use rootio_par::tree::reader::TreeReader;
+use rootio_par::{experiments, imt};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("rootio: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Split `args` into positional arguments and `--key value` options.
+fn parse(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
+    let mut pos = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key, args[i + 1].as_str());
+                i += 2;
+            } else {
+                opts.insert(key, "true");
+                i += 1;
+            }
+        } else {
+            pos.push(a);
+            i += 1;
+        }
+    }
+    (pos, opts)
+}
+
+fn usage() -> Result<()> {
+    println!(
+        "usage:\n  rootio bench <fig1|fig2|fig3|fig6|fig7|hadd|codec|all> [--quick]\n  \
+         rootio generate --out <path> [--dataset reco|aod|gensim|xaod] [--entries N] \
+         [--codec none|lz4|zlib] [--level L]\n  rootio inspect <path>\n  \
+         rootio read <path> [--threads N]\n  rootio analyze <path> [--threads N]"
+    );
+    Ok(())
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (pos, opts) = parse(args);
+    match pos.first().copied() {
+        Some("bench") => bench(pos.get(1).copied().unwrap_or("all"), &opts),
+        Some("generate") => generate(&opts),
+        Some("inspect") => inspect(pos.get(1).copied()),
+        Some("read") => read(pos.get(1).copied(), &opts),
+        Some("analyze") => analyze(pos.get(1).copied(), &opts),
+        _ => usage(),
+    }
+}
+
+fn bench(which: &str, opts: &HashMap<&str, &str>) -> Result<()> {
+    let quick = opts.contains_key("quick");
+    let all = which == "all";
+    let mut outputs = Vec::new();
+    if all || which == "fig1" {
+        outputs.push(experiments::fig1(quick)?);
+    }
+    if all || which == "fig2" {
+        outputs.push(experiments::fig2(quick)?);
+    }
+    if all || which == "fig3" {
+        outputs.push(experiments::fig3(quick)?);
+    }
+    if all || which == "fig6" {
+        outputs.push(experiments::fig6(quick)?);
+    }
+    if all || which == "fig7" {
+        outputs.push(experiments::fig7(quick)?);
+    }
+    if all || which == "hadd" {
+        outputs.push(experiments::hadd_bench(quick)?);
+    }
+    if all || which == "codec" {
+        outputs.push(experiments::codec_bench(quick)?);
+    }
+    if all || which == "ablation" {
+        outputs.push(experiments::ablation_bench(quick)?);
+    }
+    if outputs.is_empty() {
+        return usage();
+    }
+    for o in outputs {
+        println!("{o}\n");
+    }
+    Ok(())
+}
+
+fn generate(opts: &HashMap<&str, &str>) -> Result<()> {
+    let out = opts
+        .get("out")
+        .copied()
+        .ok_or_else(|| rootio_par::Error::Coordinator("generate: --out required".into()))?;
+    let dataset = match opts.get("dataset").copied().unwrap_or("aod") {
+        "reco" => DatasetKind::Reco,
+        "aod" => DatasetKind::Aod,
+        "gensim" => DatasetKind::GenSim,
+        "xaod" => DatasetKind::Xaod,
+        other => {
+            return Err(rootio_par::Error::Coordinator(format!("unknown dataset '{other}'")))
+        }
+    };
+    let entries: usize = opts.get("entries").and_then(|v| v.parse().ok()).unwrap_or(65_536);
+    let codec: Codec = opts.get("codec").copied().unwrap_or("zlib").parse()?;
+    let level: u8 = opts.get("level").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let engine = Engine::load_default().ok();
+
+    // Synthesize in memory, then copy to the real file.
+    let (mem, report) = experiments::util::synthesize_dataset(
+        dataset,
+        entries,
+        4096,
+        Settings::new(codec, level),
+        engine.as_ref(),
+    )?;
+    copy_backend_to_file(&mem, out)?;
+    println!(
+        "wrote {out}: {} entries, {} branches, {:.1} MB raw, {:.1} MB stored (ratio {:.2})",
+        report.entries,
+        dataset.n_branches(),
+        report.raw_bytes as f64 / 1e6,
+        report.stored_bytes as f64 / 1e6,
+        report.compression_ratio()
+    );
+    Ok(())
+}
+
+fn copy_backend_to_file(src: &BackendRef, path: &str) -> Result<()> {
+    use rootio_par::storage::Backend;
+    let len = src.len()?;
+    let mut buf = vec![0u8; len as usize];
+    src.read_at(0, &mut buf)?;
+    let dst = LocalFile::create(path)?;
+    dst.write_at(0, &buf)?;
+    dst.sync()
+}
+
+fn open_file(path: Option<&str>) -> Result<Arc<FileReader>> {
+    let path =
+        path.ok_or_else(|| rootio_par::Error::Coordinator("missing file argument".into()))?;
+    let backend: BackendRef = Arc::new(LocalFile::open(path)?);
+    Ok(Arc::new(FileReader::open(backend)?))
+}
+
+fn inspect(path: Option<&str>) -> Result<()> {
+    let file = open_file(path)?;
+    for tree in &file.directory().trees {
+        println!(
+            "tree '{}': {} entries, {} branches",
+            tree.name,
+            tree.entries,
+            tree.branches.len()
+        );
+        for br in &tree.branches {
+            println!(
+                "  branch {:<12} {:<7} {:>4} baskets  {:>10} raw  {:>10} stored  ({:.2}x)",
+                br.name,
+                format!("[{}]", br.ty.name()),
+                br.baskets.len(),
+                br.raw_bytes(),
+                br.stored_bytes(),
+                br.raw_bytes() as f64 / br.stored_bytes().max(1) as f64,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn read(path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
+    let file = open_file(path)?;
+    let threads: usize = opts.get("threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    if threads > 0 {
+        imt::enable(threads);
+    }
+    let reader = TreeReader::open_first(file)?;
+    let rep = read_columns(&reader, &ReadOptions::default())?;
+    println!(
+        "read {} branches / {} entries: {:.1} MB in {:.1} ms ({:.1} MB/s, imt={})",
+        rep.branches_read,
+        rep.entries,
+        rep.raw_bytes as f64 / 1e6,
+        rep.wall.as_secs_f64() * 1e3,
+        rep.throughput_mbps(),
+        imt::threads(),
+    );
+    Ok(())
+}
+
+fn analyze(path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
+    let file = open_file(path)?;
+    let threads: usize = opts.get("threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    if threads > 0 {
+        imt::enable(threads);
+    }
+    let engine = Engine::load_default()?;
+    let reader = TreeReader::open_first(file)?;
+    let rep = baskets::run(&reader, Some(&engine), &PipelineOptions::default())?;
+    println!(
+        "analyzed {} events in {:.1} ms ({:.1} MB/s decompression)",
+        rep.analyzed,
+        rep.wall.as_secs_f64() * 1e3,
+        rep.decompression_mbps()
+    );
+    if let Some(hist) = rep.hist {
+        let max = hist.iter().cloned().fold(1.0f32, f32::max);
+        let meta = engine.meta();
+        println!("mass spectrum [{:.0}, {:.0}] GeV:", meta.hist_lo, meta.hist_hi);
+        for (i, &count) in hist.iter().enumerate() {
+            let lo =
+                meta.hist_lo + (meta.hist_hi - meta.hist_lo) * i as f64 / hist.len() as f64;
+            let bar = "#".repeat((count / max * 50.0) as usize);
+            println!("{lo:6.1} | {bar} {count}");
+        }
+    }
+    Ok(())
+}

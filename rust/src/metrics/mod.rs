@@ -1,0 +1,282 @@
+//! Per-thread activity timelines — the stand-in for the paper's VTune
+//! screenshots (Figure 7).
+//!
+//! A [`Recorder`] collects `(thread, kind, start, end)` spans from any
+//! instrumented code path. After a run it can report the useful-work
+//! fraction per thread, dump CSV for plotting, and render the same kind
+//! of ASCII timeline the paper shows: one stripe per thread, dark where
+//! the thread does useful work.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::thread::ThreadId;
+use std::time::{Duration, Instant};
+
+/// What a thread was doing during a span. `Running` counts as *not*
+/// useful (the "green" in VTune); everything else is useful ("brown").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    Startup,
+    Generate,
+    Serialize,
+    Compress,
+    Decompress,
+    Deserialize,
+    Process,
+    Read,
+    Write,
+    Merge,
+    /// Scheduled but not doing useful work (lock wait, queue wait).
+    Running,
+}
+
+impl SpanKind {
+    pub fn is_useful(self) -> bool {
+        !matches!(self, SpanKind::Running)
+    }
+
+    pub fn glyph(self) -> char {
+        match self {
+            SpanKind::Startup => 'S',
+            SpanKind::Generate => 'g',
+            SpanKind::Serialize => 's',
+            SpanKind::Compress => 'c',
+            SpanKind::Decompress => 'd',
+            SpanKind::Deserialize => 'u',
+            SpanKind::Process => 'p',
+            SpanKind::Read => 'r',
+            SpanKind::Write => 'w',
+            SpanKind::Merge => 'm',
+            SpanKind::Running => '.',
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Startup => "startup",
+            SpanKind::Generate => "generate",
+            SpanKind::Serialize => "serialize",
+            SpanKind::Compress => "compress",
+            SpanKind::Decompress => "decompress",
+            SpanKind::Deserialize => "deserialize",
+            SpanKind::Process => "process",
+            SpanKind::Read => "read",
+            SpanKind::Write => "write",
+            SpanKind::Merge => "merge",
+            SpanKind::Running => "running",
+        }
+    }
+}
+
+/// One recorded activity interval, times relative to the recorder epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub thread: usize,
+    pub kind: SpanKind,
+    pub start: Duration,
+    pub end: Duration,
+}
+
+#[derive(Default)]
+struct State {
+    spans: Vec<Span>,
+    threads: HashMap<ThreadId, usize>,
+}
+
+/// Thread-safe span collector.
+pub struct Recorder {
+    epoch: Instant,
+    state: Mutex<State>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { epoch: Instant::now(), state: Mutex::new(State::default()) }
+    }
+
+    fn thread_index(&self, state: &mut State) -> usize {
+        let id = std::thread::current().id();
+        let next = state.threads.len();
+        *state.threads.entry(id).or_insert(next)
+    }
+
+    /// Time `f` and record it under `kind`.
+    pub fn record<R>(&self, kind: SpanKind, f: impl FnOnce() -> R) -> R {
+        let start = self.epoch.elapsed();
+        let out = f();
+        let end = self.epoch.elapsed();
+        let mut st = self.state.lock().unwrap();
+        let thread = self.thread_index(&mut st);
+        st.spans.push(Span { thread, kind, start, end });
+        out
+    }
+
+    /// Record an externally timed span.
+    pub fn push(&self, kind: SpanKind, start: Duration, end: Duration) {
+        let mut st = self.state.lock().unwrap();
+        let thread = self.thread_index(&mut st);
+        st.spans.push(Span { thread, kind, start, end });
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.state.lock().unwrap().spans.clone()
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.state.lock().unwrap().threads.len()
+    }
+
+    /// Useful-work time per thread, and the total wall time observed.
+    pub fn useful_per_thread(&self) -> (Vec<Duration>, Duration) {
+        let st = self.state.lock().unwrap();
+        let n = st.threads.len();
+        let mut useful = vec![Duration::ZERO; n];
+        let mut wall = Duration::ZERO;
+        for s in &st.spans {
+            if s.kind.is_useful() {
+                useful[s.thread] += s.end.saturating_sub(s.start);
+            }
+            wall = wall.max(s.end);
+        }
+        (useful, wall)
+    }
+
+    /// Fraction of (threads × wall) spent doing useful work — the
+    /// quantity Figure 7's before/after comparison improves.
+    pub fn useful_fraction(&self) -> f64 {
+        let (useful, wall) = self.useful_per_thread();
+        if useful.is_empty() || wall.is_zero() {
+            return 0.0;
+        }
+        let total: f64 = useful.iter().map(|d| d.as_secs_f64()).sum();
+        total / (useful.len() as f64 * wall.as_secs_f64())
+    }
+
+    /// CSV dump: `thread,kind,start_us,end_us`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("thread,kind,start_us,end_us\n");
+        for s in self.snapshot() {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                s.thread,
+                s.kind.name(),
+                s.start.as_micros(),
+                s.end.as_micros()
+            ));
+        }
+        out
+    }
+
+    /// ASCII timeline: one row per thread, `width` buckets across the
+    /// observed wall time. A bucket shows the glyph of the dominant
+    /// useful kind, '.' if only `Running`, ' ' if idle.
+    pub fn timeline_ascii(&self, width: usize) -> String {
+        let spans = self.snapshot();
+        let n_threads = self.n_threads();
+        let wall = spans.iter().map(|s| s.end).max().unwrap_or_default();
+        if wall.is_zero() || n_threads == 0 || width == 0 {
+            return String::new();
+        }
+        let bucket = wall.as_secs_f64() / width as f64;
+        // per (thread, bucket): accumulated useful time per kind glyph
+        let mut grid: Vec<Vec<HashMap<char, f64>>> = vec![vec![HashMap::new(); width]; n_threads];
+        for s in &spans {
+            let b0 = ((s.start.as_secs_f64() / bucket) as usize).min(width - 1);
+            let b1 = ((s.end.as_secs_f64() / bucket) as usize).min(width - 1);
+            for b in b0..=b1 {
+                let cell_start = b as f64 * bucket;
+                let cell_end = cell_start + bucket;
+                let overlap = (s.end.as_secs_f64().min(cell_end)
+                    - s.start.as_secs_f64().max(cell_start))
+                .max(0.0);
+                *grid[s.thread][b].entry(s.kind.glyph()).or_insert(0.0) += overlap;
+            }
+        }
+        let mut out = String::new();
+        for (t, row) in grid.iter().enumerate() {
+            out.push_str(&format!("T{t:02} |"));
+            for cell in row {
+                let ch = cell
+                    .iter()
+                    .filter(|(g, _)| **g != '.')
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(g, _)| *g)
+                    .or_else(|| cell.keys().next().copied())
+                    .unwrap_or(' ');
+                out.push(ch);
+            }
+            out.push_str("|\n");
+        }
+        out.push_str("legend: S startup, g generate, s serialize, c compress, ");
+        out.push_str("d decompress, u deserialize, p process, r read, w write, m merge, . idle-running\n");
+        out
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn record_and_fractions() {
+        let r = Recorder::new();
+        r.record(SpanKind::Compress, || std::thread::sleep(Duration::from_millis(10)));
+        r.record(SpanKind::Running, || std::thread::sleep(Duration::from_millis(10)));
+        let (useful, wall) = r.useful_per_thread();
+        assert_eq!(useful.len(), 1);
+        assert!(useful[0] >= Duration::from_millis(9));
+        assert!(wall >= Duration::from_millis(19));
+        let f = r.useful_fraction();
+        assert!(f > 0.2 && f < 0.8, "fraction {f}");
+    }
+
+    #[test]
+    fn multithreaded_spans() {
+        let r = Arc::new(Recorder::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    r.record(SpanKind::Write, || std::thread::sleep(Duration::from_millis(5)));
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(r.n_threads(), 4);
+        assert_eq!(r.snapshot().len(), 4);
+    }
+
+    #[test]
+    fn csv_and_ascii_render() {
+        let r = Recorder::new();
+        r.push(SpanKind::Generate, Duration::ZERO, Duration::from_millis(5));
+        r.push(SpanKind::Write, Duration::from_millis(5), Duration::from_millis(10));
+        let csv = r.to_csv();
+        assert!(csv.contains("generate"));
+        assert!(csv.contains("write"));
+        let art = r.timeline_ascii(20);
+        assert!(art.contains("T00 |"));
+        assert!(art.contains('g'));
+        assert!(art.contains('w'));
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = Recorder::new();
+        assert_eq!(r.useful_fraction(), 0.0);
+        assert_eq!(r.timeline_ascii(10), "");
+    }
+}

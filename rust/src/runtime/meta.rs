@@ -1,0 +1,114 @@
+//! Artifact metadata (`artifacts/meta.txt`, emitted by `aot.py`).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Shapes and constants shared between the L2 graphs and the rust side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactsMeta {
+    pub ncols: usize,
+    pub nbins: usize,
+    pub hist_lo: f64,
+    pub hist_hi: f64,
+    /// Supported event-block sizes, ascending.
+    pub blocks: Vec<usize>,
+}
+
+impl ArtifactsMeta {
+    /// Parse `meta.txt` (whitespace-separated `key value...` lines).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut ncols = None;
+        let mut nbins = None;
+        let mut hist_lo = None;
+        let mut hist_hi = None;
+        let mut blocks: Vec<usize> = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            match key {
+                "ncols" => ncols = it.next().and_then(|v| v.parse().ok()),
+                "nbins" => nbins = it.next().and_then(|v| v.parse().ok()),
+                "hist_lo" => hist_lo = it.next().and_then(|v| v.parse().ok()),
+                "hist_hi" => hist_hi = it.next().and_then(|v| v.parse().ok()),
+                "blocks" => blocks = it.filter_map(|v| v.parse().ok()).collect(),
+                _ => {}
+            }
+        }
+        let meta = ArtifactsMeta {
+            ncols: ncols.ok_or_else(|| Error::Runtime("meta.txt: missing ncols".into()))?,
+            nbins: nbins.ok_or_else(|| Error::Runtime("meta.txt: missing nbins".into()))?,
+            hist_lo: hist_lo.ok_or_else(|| Error::Runtime("meta.txt: missing hist_lo".into()))?,
+            hist_hi: hist_hi.ok_or_else(|| Error::Runtime("meta.txt: missing hist_hi".into()))?,
+            blocks,
+        };
+        if meta.blocks.is_empty() {
+            return Err(Error::Runtime("meta.txt: no block sizes".into()));
+        }
+        if !meta.blocks.windows(2).all(|w| w[0] < w[1]) {
+            return Err(Error::Runtime("meta.txt: blocks not ascending".into()));
+        }
+        Ok(meta)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn check_block(&self, block: usize) -> Result<()> {
+        if self.blocks.contains(&block) {
+            Ok(())
+        } else {
+            Err(Error::Runtime(format!(
+                "block size {block} not compiled (available: {:?})",
+                self.blocks
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "ncols 8\nnbins 64\nhist_lo 0.0\nhist_hi 160.0\nblocks 4096 16384\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = ArtifactsMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.ncols, 8);
+        assert_eq!(m.nbins, 64);
+        assert_eq!(m.blocks, vec![4096, 16384]);
+        m.check_block(4096).unwrap();
+        assert!(m.check_block(999).is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ArtifactsMeta::parse("ncols 8\n").is_err());
+        assert!(ArtifactsMeta::parse("").is_err());
+        assert!(ArtifactsMeta::parse(
+            "ncols 8\nnbins 64\nhist_lo 0\nhist_hi 1\nblocks\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let m = ArtifactsMeta::parse(&format!("comment hello\n{SAMPLE}")).unwrap();
+        assert_eq!(m.ncols, 8);
+    }
+
+    #[test]
+    fn unsorted_blocks_rejected() {
+        let bad = "ncols 8\nnbins 64\nhist_lo 0\nhist_hi 1\nblocks 16384 4096\n";
+        assert!(ArtifactsMeta::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! PJRT runtime: executes the AOT-compiled JAX/Pallas compute graphs
+//! from `artifacts/*.hlo.txt` on the request path. Python never runs at
+//! request time — `make artifacts` is the only Python step.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient` is reference-counted with a
+//! non-atomic `Rc`, so it must never be touched from two threads. The
+//! engine therefore runs a dedicated **runtime service thread** that
+//! owns the client and every compiled executable; callers submit
+//! requests over a channel and block on a per-request response channel.
+//! PJRT dispatch is microseconds against event-block compute of
+//! hundreds of microseconds, so a single dispatcher does not bottleneck
+//! the coordinator (measured in EXPERIMENTS.md §Perf).
+
+mod meta;
+
+pub use meta::ArtifactsMeta;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// A generated event block: `n` events × `ncols` f32 columns, flattened
+/// row-major (event-major) exactly as the L2 graph emits it.
+#[derive(Clone, Debug)]
+pub struct EventBlock {
+    pub n: usize,
+    pub ncols: usize,
+    /// row-major (n, ncols)
+    pub data: Vec<f32>,
+}
+
+impl EventBlock {
+    /// Extract column `c` as a contiguous vector.
+    pub fn column(&self, c: usize) -> Vec<f32> {
+        (0..self.n).map(|i| self.data[i * self.ncols + c]).collect()
+    }
+
+    /// All columns, column-major (what the tree writer wants).
+    pub fn columns(&self) -> Vec<Vec<f32>> {
+        (0..self.ncols).map(|c| self.column(c)).collect()
+    }
+}
+
+/// Result of the analysis graph on one block.
+#[derive(Clone, Debug)]
+pub struct AnalysisResult {
+    /// Per-event invariant mass.
+    pub mass: Vec<f32>,
+    /// Histogram counts (length = meta.nbins).
+    pub hist: Vec<f32>,
+}
+
+enum Request {
+    Generate { seed: [u32; 2], block: usize, resp: Sender<Result<Vec<f32>>> },
+    Analyze { data: Vec<f32>, block: usize, resp: Sender<Result<(Vec<f32>, Vec<f32>)>> },
+    Shutdown,
+}
+
+/// Handle to the runtime service thread.
+pub struct Engine {
+    tx: Sender<Request>,
+    meta: ArtifactsMeta,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Load every artifact under `dir` and compile it on the service
+    /// thread. Fails fast if any artifact is missing or un-compilable.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = ArtifactsMeta::load(&dir)?;
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread_meta = meta.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || service_loop(dir, thread_meta, rx, ready_tx))
+            .map_err(Error::Io)?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during startup".into()))??;
+        Ok(Engine { tx, meta, handle: Some(handle) })
+    }
+
+    /// Default artifacts location (`$ROOTIO_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<Engine> {
+        let dir = std::env::var("ROOTIO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Engine::load(dir)
+    }
+
+    pub fn meta(&self) -> &ArtifactsMeta {
+        &self.meta
+    }
+
+    /// Largest supported block size.
+    pub fn max_block(&self) -> usize {
+        *self.meta.blocks.last().expect("at least one block size")
+    }
+
+    /// Generate one event block via the AOT PRNG+shaping graph.
+    pub fn generate(&self, seed: u32, stream: u32, block: usize) -> Result<EventBlock> {
+        self.meta.check_block(block)?;
+        let (resp, rx) = channel();
+        self.tx
+            .send(Request::Generate { seed: [seed, stream], block, resp })
+            .map_err(|_| Error::Runtime("runtime thread is gone".into()))?;
+        let data =
+            rx.recv().map_err(|_| Error::Runtime("runtime thread dropped request".into()))??;
+        Ok(EventBlock { n: block, ncols: self.meta.ncols, data })
+    }
+
+    /// Run the analysis graph on a row-major (block, ncols) buffer.
+    pub fn analyze(&self, data: Vec<f32>, block: usize) -> Result<AnalysisResult> {
+        self.meta.check_block(block)?;
+        if data.len() != block * self.meta.ncols {
+            return Err(Error::Runtime(format!(
+                "analyze: buffer has {} floats, want {}x{}",
+                data.len(),
+                block,
+                self.meta.ncols
+            )));
+        }
+        let (resp, rx) = channel();
+        self.tx
+            .send(Request::Analyze { data, block, resp })
+            .map_err(|_| Error::Runtime("runtime thread is gone".into()))?;
+        let (mass, hist) =
+            rx.recv().map_err(|_| Error::Runtime("runtime thread dropped request".into()))??;
+        Ok(AnalysisResult { mass, hist })
+    }
+
+    /// Analyze an [`EventBlock`] directly.
+    pub fn analyze_block(&self, block: &EventBlock) -> Result<AnalysisResult> {
+        self.analyze(block.data.clone(), block.n)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| Error::Runtime(format!("load {}: {e}", path.display())))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| Error::Runtime(format!("compile {name}: {e}")))
+}
+
+fn service_loop(
+    dir: PathBuf,
+    meta: ArtifactsMeta,
+    rx: std::sync::mpsc::Receiver<Request>,
+    ready: Sender<Result<()>>,
+) {
+    // Build client + executables; report startup outcome.
+    let setup = (|| -> Result<_> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        let mut gens = HashMap::new();
+        let mut anas = HashMap::new();
+        for &b in &meta.blocks {
+            gens.insert(b, compile_artifact(&client, &dir, &format!("gen_{b}"))?);
+            anas.insert(b, compile_artifact(&client, &dir, &format!("analyze_{b}"))?);
+        }
+        Ok((client, gens, anas))
+    })();
+    let (_client, gens, anas) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Generate { seed, block, resp } => {
+                let out = (|| -> Result<Vec<f32>> {
+                    let exe = gens.get(&block).unwrap();
+                    let lit = xla::Literal::vec1(&seed[..]);
+                    let bufs = exe
+                        .execute::<xla::Literal>(&[lit])
+                        .map_err(|e| Error::Runtime(format!("execute gen: {e}")))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::Runtime(format!("fetch gen: {e}")))?;
+                    let out = lit
+                        .to_tuple1()
+                        .map_err(|e| Error::Runtime(format!("untuple gen: {e}")))?;
+                    out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("gen to_vec: {e}")))
+                })();
+                let _ = resp.send(out);
+            }
+            Request::Analyze { data, block, resp } => {
+                let out = (|| -> Result<(Vec<f32>, Vec<f32>)> {
+                    let exe = anas.get(&block).unwrap();
+                    let lit = xla::Literal::vec1(&data)
+                        .reshape(&[block as i64, meta.ncols as i64])
+                        .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&[lit])
+                        .map_err(|e| Error::Runtime(format!("execute analyze: {e}")))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::Runtime(format!("fetch analyze: {e}")))?;
+                    let (mass, hist) = lit
+                        .to_tuple2()
+                        .map_err(|e| Error::Runtime(format!("untuple analyze: {e}")))?;
+                    Ok((
+                        mass.to_vec::<f32>()
+                            .map_err(|e| Error::Runtime(format!("mass to_vec: {e}")))?,
+                        hist.to_vec::<f32>()
+                            .map_err(|e| Error::Runtime(format!("hist to_vec: {e}")))?,
+                    ))
+                })();
+                let _ = resp.send(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::env::var("ROOTIO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let p = PathBuf::from(dir);
+        if p.join("meta.txt").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping runtime test: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn generate_and_analyze_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(dir).unwrap();
+        let block = engine.meta().blocks[0];
+        let ev = engine.generate(42, 0, block).unwrap();
+        assert_eq!(ev.data.len(), block * engine.meta().ncols);
+        // physics sanity: pt >= 0, |eta| <= 2.5
+        let pt = ev.column(0);
+        assert!(pt.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        let eta = ev.column(1);
+        assert!(eta.iter().all(|&x| x.abs() <= 2.5 + 1e-5));
+
+        let res = engine.analyze_block(&ev).unwrap();
+        assert_eq!(res.mass.len(), block);
+        assert_eq!(res.hist.len(), engine.meta().nbins);
+        let total: f32 = res.hist.iter().sum();
+        assert_eq!(total as usize, block, "histogram counts all events");
+        assert!(res.mass.iter().all(|&m| m >= 0.0 && m.is_finite()));
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(dir).unwrap();
+        let block = engine.meta().blocks[0];
+        let a = engine.generate(7, 3, block).unwrap();
+        let b = engine.generate(7, 3, block).unwrap();
+        let c = engine.generate(7, 4, block).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = std::sync::Arc::new(Engine::load(dir).unwrap());
+        let block = engine.meta().blocks[0];
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let engine = engine.clone();
+                s.spawn(move || {
+                    let ev = engine.generate(1, t as u32, block).unwrap();
+                    let res = engine.analyze_block(&ev).unwrap();
+                    assert_eq!(res.hist.iter().sum::<f32>() as usize, block);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn bad_block_size_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(dir).unwrap();
+        assert!(engine.generate(0, 0, 12345).is_err());
+        assert!(engine.analyze(vec![0.0; 8], 12345).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_an_error() {
+        assert!(Engine::load("/nonexistent/artifacts").is_err());
+    }
+}

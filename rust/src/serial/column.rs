@@ -1,0 +1,316 @@
+//! Typed column buffers: the in-memory and on-wire form of one branch's
+//! data for a range of entries.
+
+use crate::error::{Error, Result};
+
+use super::schema::ColumnType;
+use super::value::Value;
+
+/// Decoded column data for a contiguous entry range.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColumnData {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    U8(Vec<u8>),
+    Bytes(Vec<Vec<u8>>),
+}
+
+impl ColumnData {
+    pub fn new(ty: ColumnType) -> Self {
+        match ty {
+            ColumnType::I32 => ColumnData::I32(Vec::new()),
+            ColumnType::I64 => ColumnData::I64(Vec::new()),
+            ColumnType::F32 => ColumnData::F32(Vec::new()),
+            ColumnType::F64 => ColumnData::F64(Vec::new()),
+            ColumnType::U8 => ColumnData::U8(Vec::new()),
+            ColumnType::Bytes => ColumnData::Bytes(Vec::new()),
+        }
+    }
+
+    pub fn column_type(&self) -> ColumnType {
+        match self {
+            ColumnData::I32(_) => ColumnType::I32,
+            ColumnData::I64(_) => ColumnType::I64,
+            ColumnData::F32(_) => ColumnType::F32,
+            ColumnData::F64(_) => ColumnType::F64,
+            ColumnData::U8(_) => ColumnType::U8,
+            ColumnData::Bytes(_) => ColumnType::Bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::I32(v) => v.len(),
+            ColumnData::I64(v) => v.len(),
+            ColumnData::F32(v) => v.len(),
+            ColumnData::F64(v) => v.len(),
+            ColumnData::U8(v) => v.len(),
+            ColumnData::Bytes(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate in-memory payload bytes (used for basket sizing).
+    pub fn byte_len(&self) -> usize {
+        match self {
+            ColumnData::I32(v) => v.len() * 4,
+            ColumnData::I64(v) => v.len() * 8,
+            ColumnData::F32(v) => v.len() * 4,
+            ColumnData::F64(v) => v.len() * 8,
+            ColumnData::U8(v) => v.len(),
+            ColumnData::Bytes(v) => v.iter().map(|b| 4 + b.len()).sum(),
+        }
+    }
+
+    pub fn push(&mut self, v: Value) -> Result<()> {
+        match (self, v) {
+            (ColumnData::I32(c), Value::I32(x)) => c.push(x),
+            (ColumnData::I64(c), Value::I64(x)) => c.push(x),
+            (ColumnData::F32(c), Value::F32(x)) => c.push(x),
+            (ColumnData::F64(c), Value::F64(x)) => c.push(x),
+            (ColumnData::U8(c), Value::U8(x)) => c.push(x),
+            (ColumnData::Bytes(c), Value::Bytes(x)) => c.push(x),
+            (c, v) => {
+                return Err(Error::Schema(format!(
+                    "type mismatch: column {:?}, value {:?}",
+                    c.column_type(),
+                    v.column_type()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, i: usize) -> Option<Value> {
+        match self {
+            ColumnData::I32(v) => v.get(i).map(|&x| Value::I32(x)),
+            ColumnData::I64(v) => v.get(i).map(|&x| Value::I64(x)),
+            ColumnData::F32(v) => v.get(i).map(|&x| Value::F32(x)),
+            ColumnData::F64(v) => v.get(i).map(|&x| Value::F64(x)),
+            ColumnData::U8(v) => v.get(i).map(|&x| Value::U8(x)),
+            ColumnData::Bytes(v) => v.get(i).map(|x| Value::Bytes(x.clone())),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            ColumnData::I32(v) => v.clear(),
+            ColumnData::I64(v) => v.clear(),
+            ColumnData::F32(v) => v.clear(),
+            ColumnData::F64(v) => v.clear(),
+            ColumnData::U8(v) => v.clear(),
+            ColumnData::Bytes(v) => v.clear(),
+        }
+    }
+
+    /// Serialise to the on-wire (big-endian) representation.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        match self {
+            ColumnData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_be_bytes());
+                }
+            }
+            ColumnData::I64(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_be_bytes());
+                }
+            }
+            ColumnData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_be_bytes());
+                }
+            }
+            ColumnData::F64(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_be_bytes());
+                }
+            }
+            ColumnData::U8(v) => out.extend_from_slice(v),
+            ColumnData::Bytes(v) => {
+                for b in v {
+                    out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+                    out.extend_from_slice(b);
+                }
+            }
+        }
+        out
+    }
+
+    /// Deserialise `count` entries of type `ty` from wire bytes.
+    pub fn decode(ty: ColumnType, buf: &[u8], count: usize) -> Result<Self> {
+        let err = |m: String| Error::Schema(format!("column decode: {m}"));
+        fn fixed<T, const W: usize>(
+            buf: &[u8],
+            count: usize,
+            f: impl Fn([u8; W]) -> T,
+        ) -> Result<Vec<T>> {
+            if buf.len() != count * W {
+                return Err(Error::Schema(format!(
+                    "column decode: want {} bytes, have {}",
+                    count * W,
+                    buf.len()
+                )));
+            }
+            Ok(buf.chunks_exact(W).map(|c| f(c.try_into().unwrap())).collect())
+        }
+        Ok(match ty {
+            ColumnType::I32 => ColumnData::I32(fixed(buf, count, i32::from_be_bytes)?),
+            ColumnType::I64 => ColumnData::I64(fixed(buf, count, i64::from_be_bytes)?),
+            ColumnType::F32 => ColumnData::F32(fixed(buf, count, f32::from_be_bytes)?),
+            ColumnType::F64 => ColumnData::F64(fixed(buf, count, f64::from_be_bytes)?),
+            ColumnType::U8 => {
+                if buf.len() != count {
+                    return Err(err(format!("want {} bytes, have {}", count, buf.len())));
+                }
+                ColumnData::U8(buf.to_vec())
+            }
+            ColumnType::Bytes => {
+                let mut v = Vec::with_capacity(count);
+                let mut pos = 0usize;
+                for _ in 0..count {
+                    if pos + 4 > buf.len() {
+                        return Err(err("truncated length prefix".into()));
+                    }
+                    let n = u32::from_be_bytes([
+                        buf[pos],
+                        buf[pos + 1],
+                        buf[pos + 2],
+                        buf[pos + 3],
+                    ]) as usize;
+                    pos += 4;
+                    if pos + n > buf.len() {
+                        return Err(err("truncated payload".into()));
+                    }
+                    v.push(buf[pos..pos + n].to_vec());
+                    pos += n;
+                }
+                if pos != buf.len() {
+                    return Err(err("trailing bytes".into()));
+                }
+                ColumnData::Bytes(v)
+            }
+        })
+    }
+
+    /// Append all entries of `other` (same type) — used by hadd/merger.
+    pub fn append(&mut self, other: &ColumnData) -> Result<()> {
+        match (self, other) {
+            (ColumnData::I32(a), ColumnData::I32(b)) => a.extend_from_slice(b),
+            (ColumnData::I64(a), ColumnData::I64(b)) => a.extend_from_slice(b),
+            (ColumnData::F32(a), ColumnData::F32(b)) => a.extend_from_slice(b),
+            (ColumnData::F64(a), ColumnData::F64(b)) => a.extend_from_slice(b),
+            (ColumnData::U8(a), ColumnData::U8(b)) => a.extend_from_slice(b),
+            (ColumnData::Bytes(a), ColumnData::Bytes(b)) => a.extend_from_slice(b),
+            (a, b) => {
+                return Err(Error::Schema(format!(
+                    "append type mismatch: {:?} vs {:?}",
+                    a.column_type(),
+                    b.column_type()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove and return the first `n` entries (basket chunking).
+    pub fn drain_front(&mut self, n: usize) -> ColumnData {
+        match self {
+            ColumnData::I32(v) => ColumnData::I32(v.drain(..n).collect()),
+            ColumnData::I64(v) => ColumnData::I64(v.drain(..n).collect()),
+            ColumnData::F32(v) => ColumnData::F32(v.drain(..n).collect()),
+            ColumnData::F64(v) => ColumnData::F64(v.drain(..n).collect()),
+            ColumnData::U8(v) => ColumnData::U8(v.drain(..n).collect()),
+            ColumnData::Bytes(v) => ColumnData::Bytes(v.drain(..n).collect()),
+        }
+    }
+
+    /// View as f32 slice (the PJRT hand-off path for analysis columns).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            ColumnData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(col: ColumnData) {
+        let n = col.len();
+        let wire = col.encode();
+        let back = ColumnData::decode(col.column_type(), &wire, n).unwrap();
+        assert_eq!(back, col);
+    }
+
+    #[test]
+    fn all_types_roundtrip() {
+        roundtrip(ColumnData::I32(vec![1, -2, i32::MAX, i32::MIN]));
+        roundtrip(ColumnData::I64(vec![1, -2, i64::MAX, i64::MIN]));
+        roundtrip(ColumnData::F32(vec![0.0, -1.5, f32::MAX, f32::MIN_POSITIVE]));
+        roundtrip(ColumnData::F64(vec![0.0, 2.5e300, f64::MIN_POSITIVE]));
+        roundtrip(ColumnData::U8(vec![0, 255, 7]));
+        roundtrip(ColumnData::Bytes(vec![b"".to_vec(), b"hello".to_vec(), vec![0u8; 1000]]));
+    }
+
+    #[test]
+    fn nan_roundtrips_bitwise() {
+        let col = ColumnData::F32(vec![f32::NAN]);
+        let wire = col.encode();
+        let back = ColumnData::decode(ColumnType::F32, &wire, 1).unwrap();
+        if let ColumnData::F32(v) = back {
+            assert!(v[0].is_nan());
+        } else {
+            panic!("wrong type");
+        }
+    }
+
+    #[test]
+    fn push_type_safety() {
+        let mut col = ColumnData::new(ColumnType::F32);
+        col.push(Value::F32(1.0)).unwrap();
+        assert!(col.push(Value::I32(1)).is_err());
+        assert_eq!(col.len(), 1);
+    }
+
+    #[test]
+    fn decode_wrong_sizes() {
+        assert!(ColumnData::decode(ColumnType::I32, &[0u8; 7], 2).is_err());
+        assert!(ColumnData::decode(ColumnType::Bytes, &[0, 0, 0, 5, b'a'], 1).is_err());
+        // trailing garbage after var column
+        let mut wire = ColumnData::Bytes(vec![b"ab".to_vec()]).encode();
+        wire.push(0);
+        assert!(ColumnData::decode(ColumnType::Bytes, &wire, 1).is_err());
+    }
+
+    #[test]
+    fn append_and_get() {
+        let mut a = ColumnData::I32(vec![1, 2]);
+        let b = ColumnData::I32(vec![3]);
+        a.append(&b).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get(2), Some(Value::I32(3)));
+        assert_eq!(a.get(3), None);
+        assert!(a.append(&ColumnData::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn byte_len_matches_encoding() {
+        let cols = [
+            ColumnData::I32(vec![5; 10]),
+            ColumnData::F64(vec![1.0; 3]),
+            ColumnData::Bytes(vec![b"xy".to_vec(), b"".to_vec()]),
+        ];
+        for c in cols {
+            assert_eq!(c.byte_len(), c.encode().len());
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Object streamers: the (de)serialisation phase of ROOT I/O.
+//!
+//! ROOT auto-generates streamers that split C++ objects into per-member
+//! columns ("splitting"). Here a [`schema::Schema`] plays the role of the
+//! streamer-info dictionary: it describes an event record as a list of
+//! typed fields, and [`streamer::Streamer`] turns batches of rows into
+//! per-column byte buffers (big-endian, like ROOT's on-disk format) and
+//! back.
+//!
+//! Serialisation and deserialisation of *different columns are
+//! independent* — this is precisely the property the paper exploits to
+//! parallelise both directions (§2.1, §3.1).
+
+pub mod column;
+pub mod schema;
+pub mod streamer;
+pub mod value;
+
+pub use column::ColumnData;
+pub use schema::{ColumnType, Field, Schema};
+pub use streamer::Streamer;
+pub use value::{Row, Value};

@@ -1,0 +1,216 @@
+//! Event-record schemas (ROOT streamer-info analogue).
+
+use crate::error::{Error, Result};
+
+/// Column (leaf) types. Fixed-width types serialise big-endian like
+/// ROOT's on-disk representation; `Bytes` is a variable-length payload
+/// with a u32 length prefix (TString/std::vector analogue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ColumnType {
+    I32,
+    I64,
+    F32,
+    F64,
+    U8,
+    Bytes,
+}
+
+impl ColumnType {
+    pub fn code(self) -> u8 {
+        match self {
+            ColumnType::I32 => 0,
+            ColumnType::I64 => 1,
+            ColumnType::F32 => 2,
+            ColumnType::F64 => 3,
+            ColumnType::U8 => 4,
+            ColumnType::Bytes => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => ColumnType::I32,
+            1 => ColumnType::I64,
+            2 => ColumnType::F32,
+            3 => ColumnType::F64,
+            4 => ColumnType::U8,
+            5 => ColumnType::Bytes,
+            other => return Err(Error::Schema(format!("bad column type code {other}"))),
+        })
+    }
+
+    /// Fixed on-disk width, or None for variable-length columns.
+    pub fn width(self) -> Option<usize> {
+        match self {
+            ColumnType::I32 | ColumnType::F32 => Some(4),
+            ColumnType::I64 | ColumnType::F64 => Some(8),
+            ColumnType::U8 => Some(1),
+            ColumnType::Bytes => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ColumnType::I32 => "i32",
+            ColumnType::I64 => "i64",
+            ColumnType::F32 => "f32",
+            ColumnType::F64 => "f64",
+            ColumnType::U8 => "u8",
+            ColumnType::Bytes => "bytes",
+        }
+    }
+}
+
+/// One named column (TBranch/TLeaf analogue).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub ty: ColumnType,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, ty: ColumnType) -> Self {
+        Field { name: name.into(), ty }
+    }
+}
+
+/// An ordered list of fields describing one event record.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|f| f.name == name)
+    }
+
+    /// A schema of `n` f32 columns named `<prefix>0..n` — the shape of
+    /// the synthetic CMS/ATLAS-like datasets.
+    pub fn flat_f32(prefix: &str, n: usize) -> Self {
+        Schema {
+            fields: (0..n).map(|i| Field::new(format!("{prefix}{i}"), ColumnType::F32)).collect(),
+        }
+    }
+
+    /// Serialise the schema itself (stored in the file footer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.fields.len() as u32).to_be_bytes());
+        for f in &self.fields {
+            out.push(f.ty.code());
+            let name = f.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u16).to_be_bytes());
+            out.extend_from_slice(name);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<(Self, usize)> {
+        let err = |m: &str| Error::Schema(format!("schema decode: {m}"));
+        if buf.len() < 4 {
+            return Err(err("truncated count"));
+        }
+        let n = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        let mut pos = 4usize;
+        let mut fields = Vec::with_capacity(n);
+        for _ in 0..n {
+            if pos + 3 > buf.len() {
+                return Err(err("truncated field"));
+            }
+            let ty = ColumnType::from_code(buf[pos])?;
+            let nlen = u16::from_be_bytes([buf[pos + 1], buf[pos + 2]]) as usize;
+            pos += 3;
+            if pos + nlen > buf.len() {
+                return Err(err("truncated name"));
+            }
+            let name = std::str::from_utf8(&buf[pos..pos + nlen])
+                .map_err(|_| err("name not utf8"))?
+                .to_string();
+            pos += nlen;
+            fields.push(Field { name, ty });
+        }
+        Ok((Schema { fields }, pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Schema {
+        Schema::new(vec![
+            Field::new("run", ColumnType::I32),
+            Field::new("event", ColumnType::I64),
+            Field::new("pt", ColumnType::F32),
+            Field::new("weight", ColumnType::F64),
+            Field::new("flag", ColumnType::U8),
+            Field::new("tag", ColumnType::Bytes),
+        ])
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = sample();
+        let enc = s.encode();
+        let (dec, used) = Schema::decode(&enc).unwrap();
+        assert_eq!(dec, s);
+        assert_eq!(used, enc.len());
+    }
+
+    #[test]
+    fn decode_with_trailing_data() {
+        let s = sample();
+        let mut enc = s.encode();
+        let schema_len = enc.len();
+        enc.extend_from_slice(b"TRAILER");
+        let (dec, used) = Schema::decode(&enc).unwrap();
+        assert_eq!(dec, s);
+        assert_eq!(used, schema_len);
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let enc = sample().encode();
+        for cut in [0, 2, 5, enc.len() - 1] {
+            assert!(Schema::decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn flat_f32_shape() {
+        let s = Schema::flat_f32("col", 70);
+        assert_eq!(s.len(), 70);
+        assert_eq!(s.fields[69].name, "col69");
+        assert!(s.fields.iter().all(|f| f.ty == ColumnType::F32));
+        assert_eq!(s.index_of("col13"), Some(13));
+        assert_eq!(s.index_of("nope"), None);
+    }
+
+    #[test]
+    fn type_codes_roundtrip() {
+        for ty in [
+            ColumnType::I32,
+            ColumnType::I64,
+            ColumnType::F32,
+            ColumnType::F64,
+            ColumnType::U8,
+            ColumnType::Bytes,
+        ] {
+            assert_eq!(ColumnType::from_code(ty.code()).unwrap(), ty);
+        }
+        assert!(ColumnType::from_code(99).is_err());
+    }
+}

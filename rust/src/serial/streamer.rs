@@ -1,0 +1,163 @@
+//! Row ⇄ column streamer: ROOT's "splitting" of objects into branches.
+
+use crate::error::{Error, Result};
+
+use super::column::ColumnData;
+use super::schema::Schema;
+use super::value::{Row, Value};
+
+/// Splits rows into per-field column accumulators and reassembles rows
+/// from decoded columns. One streamer per tree.
+#[derive(Clone, Debug)]
+pub struct Streamer {
+    schema: Schema,
+}
+
+impl Streamer {
+    pub fn new(schema: Schema) -> Self {
+        Streamer { schema }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Fresh, empty column accumulators in schema order.
+    pub fn make_columns(&self) -> Vec<ColumnData> {
+        self.schema.fields.iter().map(|f| ColumnData::new(f.ty)).collect()
+    }
+
+    /// Split one row into the accumulators (type-checked).
+    pub fn fill(&self, cols: &mut [ColumnData], row: Row) -> Result<()> {
+        if row.len() != self.schema.len() {
+            return Err(Error::Schema(format!(
+                "row has {} cells, schema has {} fields",
+                row.len(),
+                self.schema.len()
+            )));
+        }
+        for (col, cell) in cols.iter_mut().zip(row) {
+            col.push(cell)?;
+        }
+        Ok(())
+    }
+
+    /// Reassemble row `i` from decoded columns.
+    pub fn assemble(&self, cols: &[ColumnData], i: usize) -> Result<Row> {
+        cols.iter()
+            .map(|c| {
+                c.get(i).ok_or_else(|| {
+                    Error::Schema(format!("entry {i} out of range (len {})", c.len()))
+                })
+            })
+            .collect()
+    }
+
+    /// Convenience: split a batch of rows into fresh columns.
+    pub fn split(&self, rows: Vec<Row>) -> Result<Vec<ColumnData>> {
+        let mut cols = self.make_columns();
+        for row in rows {
+            self.fill(&mut cols, row)?;
+        }
+        Ok(cols)
+    }
+
+    /// Convenience: reassemble all rows from columns.
+    pub fn unsplit(&self, cols: &[ColumnData]) -> Result<Vec<Row>> {
+        let n = cols.first().map(|c| c.len()).unwrap_or(0);
+        for (c, f) in cols.iter().zip(&self.schema.fields) {
+            if c.len() != n {
+                return Err(Error::Schema(format!(
+                    "column '{}' has {} entries, expected {n}",
+                    f.name,
+                    c.len()
+                )));
+            }
+        }
+        (0..n).map(|i| self.assemble(cols, i)).collect()
+    }
+}
+
+/// Build a row from plain values: `row![1i32, 2.5f32, "tag"]`-style helper.
+pub fn row(values: Vec<Value>) -> Row {
+    values
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::schema::{ColumnType, Field};
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            Field::new("id", ColumnType::I32),
+            Field::new("e", ColumnType::F64),
+            Field::new("name", ColumnType::Bytes),
+        ])
+    }
+
+    fn rows() -> Vec<Row> {
+        (0..50)
+            .map(|i| {
+                vec![
+                    Value::I32(i),
+                    Value::F64(i as f64 * 0.5),
+                    Value::Bytes(format!("evt{i}").into_bytes()),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn split_unsplit_roundtrip() {
+        let st = Streamer::new(schema());
+        let original = rows();
+        let cols = st.split(original.clone()).unwrap();
+        assert_eq!(cols.len(), 3);
+        assert_eq!(cols[0].len(), 50);
+        let back = st.unsplit(&cols).unwrap();
+        assert_eq!(back, original);
+    }
+
+    #[test]
+    fn wire_roundtrip_per_column() {
+        // The full path a basket takes: split -> encode -> decode -> unsplit.
+        let st = Streamer::new(schema());
+        let original = rows();
+        let cols = st.split(original.clone()).unwrap();
+        let decoded: Vec<ColumnData> = cols
+            .iter()
+            .zip(&st.schema().fields)
+            .map(|(c, f)| ColumnData::decode(f.ty, &c.encode(), c.len()).unwrap())
+            .collect();
+        assert_eq!(st.unsplit(&decoded).unwrap(), original);
+    }
+
+    #[test]
+    fn fill_rejects_wrong_arity_and_type() {
+        let st = Streamer::new(schema());
+        let mut cols = st.make_columns();
+        assert!(st.fill(&mut cols, vec![Value::I32(1)]).is_err());
+        assert!(st
+            .fill(
+                &mut cols,
+                vec![Value::F32(1.0), Value::F64(1.0), Value::Bytes(vec![])]
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn unsplit_rejects_ragged_columns() {
+        let st = Streamer::new(schema());
+        let mut cols = st.make_columns();
+        cols[0].push(Value::I32(1)).unwrap();
+        assert!(st.unsplit(&cols).is_err());
+    }
+
+    #[test]
+    fn empty_batch() {
+        let st = Streamer::new(schema());
+        let cols = st.split(vec![]).unwrap();
+        assert_eq!(st.unsplit(&cols).unwrap(), Vec::<Row>::new());
+    }
+}

@@ -1,0 +1,87 @@
+//! Dynamically-typed cell values and rows (the user-facing fill API).
+
+use super::schema::ColumnType;
+
+/// One cell of an event record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+    U8(u8),
+    Bytes(Vec<u8>),
+}
+
+impl Value {
+    pub fn column_type(&self) -> ColumnType {
+        match self {
+            Value::I32(_) => ColumnType::I32,
+            Value::I64(_) => ColumnType::I64,
+            Value::F32(_) => ColumnType::F32,
+            Value::F64(_) => ColumnType::F64,
+            Value::U8(_) => ColumnType::U8,
+            Value::Bytes(_) => ColumnType::Bytes,
+        }
+    }
+}
+
+impl From<i32> for Value {
+    fn from(v: i32) -> Self {
+        Value::I32(v)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::I64(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Self {
+        Value::F32(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+impl From<u8> for Value {
+    fn from(v: u8) -> Self {
+        Value::U8(v)
+    }
+}
+impl From<Vec<u8>> for Value {
+    fn from(v: Vec<u8>) -> Self {
+        Value::Bytes(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Bytes(v.as_bytes().to_vec())
+    }
+}
+
+/// One event record: a cell per schema field, in schema order.
+pub type Row = Vec<Value>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_impls() {
+        assert_eq!(Value::from(1i32), Value::I32(1));
+        assert_eq!(Value::from(1i64), Value::I64(1));
+        assert_eq!(Value::from(1.5f32), Value::F32(1.5));
+        assert_eq!(Value::from(2.5f64), Value::F64(2.5));
+        assert_eq!(Value::from(7u8), Value::U8(7));
+        assert_eq!(Value::from("hi"), Value::Bytes(b"hi".to_vec()));
+    }
+
+    #[test]
+    fn column_types() {
+        assert_eq!(Value::I32(0).column_type(), ColumnType::I32);
+        assert_eq!(Value::Bytes(vec![]).column_type(), ColumnType::Bytes);
+    }
+}

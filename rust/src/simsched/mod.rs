@@ -1,0 +1,359 @@
+//! Deterministic task-schedule simulator.
+//!
+//! **Why this exists.** The paper's figures sweep thread counts on
+//! quad-core laptops, a 36-core Xeon and a 64-core KNL. This
+//! reproduction host has **one** CPU core, so wall-clock speedups
+//! cannot exceed 1×. Following the repo's substitution rule
+//! (DESIGN.md §4), the experiment harnesses therefore *measure* every
+//! task's real cost serially (real codec, real serialiser, real PJRT
+//! graph — on real data) and replay the coordinator's task graph
+//! through this discrete-event simulator to obtain the multi-core
+//! scaling shape. The scheduler implemented here — FIFO list
+//! scheduling onto a homogeneous worker pool plus named exclusive
+//! resources — is exactly the policy of [`crate::imt`]'s pool, the
+//! merger's single output thread, the PJRT service thread, and the
+//! storage device queue.
+//!
+//! On a multi-core host the same harnesses also report real wall-clock
+//! numbers; the simulator is validated against them in tests (1-worker
+//! simulation == serial sum; n-worker makespan lower-bounds hold).
+
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+use crate::metrics::SpanKind;
+
+/// Task identifier (index into the schedule's task list).
+pub type TaskId = usize;
+
+/// Where a task may execute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Place {
+    /// Any worker of the simulated pool (IMT worker).
+    Pool,
+    /// A named exclusive resource: `"output"`, `"pjrt"`, `"device"`,
+    /// `"lock"`, `"stream-3"`, ... Exactly one task at a time.
+    Named(String),
+}
+
+/// One unit of work.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub kind: SpanKind,
+    pub cost: Duration,
+    pub place: Place,
+    /// Tasks that must complete before this one starts.
+    pub deps: Vec<TaskId>,
+}
+
+/// A task graph under construction.
+#[derive(Default, Clone)]
+pub struct Graph {
+    pub tasks: Vec<Task>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    pub fn push(&mut self, kind: SpanKind, cost: Duration, place: Place, deps: Vec<TaskId>) -> TaskId {
+        let id = self.tasks.len();
+        for &d in &deps {
+            assert!(d < id, "dependency {d} of task {id} not yet defined");
+        }
+        self.tasks.push(Task { kind, cost, place, deps });
+        id
+    }
+
+    pub fn pool(&mut self, kind: SpanKind, cost: Duration, deps: Vec<TaskId>) -> TaskId {
+        self.push(kind, cost, Place::Pool, deps)
+    }
+
+    pub fn named(
+        &mut self,
+        name: &str,
+        kind: SpanKind,
+        cost: Duration,
+        deps: Vec<TaskId>,
+    ) -> TaskId {
+        self.push(kind, cost, Place::Named(name.to_string()), deps)
+    }
+}
+
+/// Placement of one task in the simulated schedule.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub task: TaskId,
+    /// Worker index for pool tasks; usize::MAX-based ids for named.
+    pub unit: String,
+    pub start: Duration,
+    pub end: Duration,
+}
+
+/// Result of a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan: Duration,
+    pub placements: Vec<Placement>,
+    /// (unit name, busy time) pairs.
+    pub busy: Vec<(String, Duration)>,
+}
+
+impl SimResult {
+    /// Busy fraction of the pool workers (Figure 7's useful-work metric).
+    pub fn pool_utilization(&self, workers: usize) -> f64 {
+        if self.makespan.is_zero() || workers == 0 {
+            return 0.0;
+        }
+        let pool_busy: f64 = self
+            .busy
+            .iter()
+            .filter(|(u, _)| u.starts_with("w"))
+            .map(|(_, b)| b.as_secs_f64())
+            .sum();
+        pool_busy / (workers as f64 * self.makespan.as_secs_f64())
+    }
+
+}
+
+fn render_rows(
+    n_rows: usize,
+    spans: &[(usize, SpanKind, Duration, Duration)],
+    width: usize,
+    names: &[&String],
+) -> String {
+    let wall = spans.iter().map(|s| s.3).max().unwrap_or_default();
+    if wall.is_zero() || n_rows == 0 || width == 0 {
+        return String::new();
+    }
+    let bucket = wall.as_secs_f64() / width as f64;
+    let mut grid = vec![vec![(' ', 0f64); width]; n_rows];
+    for (row, kind, start, end) in spans {
+        let b0 = ((start.as_secs_f64() / bucket) as usize).min(width - 1);
+        let b1 = ((end.as_secs_f64() / bucket) as usize).min(width - 1);
+        for b in b0..=b1 {
+            let cell_start = b as f64 * bucket;
+            let cell_end = cell_start + bucket;
+            let overlap =
+                (end.as_secs_f64().min(cell_end) - start.as_secs_f64().max(cell_start)).max(0.0);
+            if overlap > grid[*row][b].1 {
+                grid[*row][b] = (kind.glyph(), overlap);
+            }
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        out.push_str(&format!("{:<10}|", names[r]));
+        for (ch, _) in row {
+            out.push(*ch);
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Simulate `graph` on `workers` pool workers (+ named resources).
+///
+/// FIFO list scheduling: tasks become ready when all deps complete;
+/// ready tasks are started in (ready_time, id) order on the earliest
+/// free matching unit.
+pub fn simulate(graph: &Graph, workers: usize) -> SimResult {
+    use std::cmp::Reverse;
+    use std::collections::HashMap;
+
+    let n = graph.tasks.len();
+    let mut remaining_deps: Vec<usize> = graph.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for (id, t) in graph.tasks.iter().enumerate() {
+        for &d in &t.deps {
+            dependents[d].push(id);
+        }
+    }
+
+    // ready queue ordered by (ready_time, id)
+    let mut ready: BinaryHeap<Reverse<(Duration, TaskId)>> = BinaryHeap::new();
+    for (id, t) in graph.tasks.iter().enumerate() {
+        if t.deps.is_empty() {
+            ready.push(Reverse((Duration::ZERO, id)));
+        }
+    }
+
+    let mut worker_free: BinaryHeap<Reverse<(Duration, usize)>> =
+        (0..workers.max(1)).map(|i| Reverse((Duration::ZERO, i))).collect();
+    let mut named_free: HashMap<String, Duration> = HashMap::new();
+    let mut finish: Vec<Duration> = vec![Duration::ZERO; n];
+    let mut placements = Vec::with_capacity(n);
+    let mut busy: HashMap<String, Duration> = HashMap::new();
+    let mut makespan = Duration::ZERO;
+
+    while let Some(Reverse((ready_at, id))) = ready.pop() {
+        let t = &graph.tasks[id];
+        let (unit, start) = match &t.place {
+            Place::Pool => {
+                let Reverse((free_at, w)) = worker_free.pop().unwrap();
+                (format!("w{w:02}"), free_at.max(ready_at))
+            }
+            Place::Named(name) => {
+                let free_at = named_free.get(name).copied().unwrap_or_default();
+                (name.clone(), free_at.max(ready_at))
+            }
+        };
+        let end = start + t.cost;
+        finish[id] = end;
+        makespan = makespan.max(end);
+        *busy.entry(unit.clone()).or_default() += t.cost;
+        match &t.place {
+            Place::Pool => {
+                let w: usize = unit[1..].parse().unwrap();
+                worker_free.push(Reverse((end, w)));
+            }
+            Place::Named(name) => {
+                named_free.insert(name.clone(), end);
+            }
+        }
+        placements.push(Placement { task: id, unit, start, end });
+        for &dep in &dependents[id] {
+            remaining_deps[dep] -= 1;
+            if remaining_deps[dep] == 0 {
+                ready.push(Reverse((end, dep)));
+            }
+        }
+    }
+
+    debug_assert!(remaining_deps.iter().all(|&d| d == 0), "cycle in task graph");
+    let mut busy: Vec<(String, Duration)> = busy.into_iter().collect();
+    busy.sort();
+    SimResult { makespan, placements, busy }
+}
+
+/// Render a simulated schedule with correct per-task kinds.
+pub fn timeline(graph: &Graph, result: &SimResult, width: usize) -> String {
+    let mut units: Vec<String> = result.placements.iter().map(|p| p.unit.clone()).collect();
+    units.sort();
+    units.dedup();
+    let refs: Vec<&String> = units.iter().collect();
+    let spans: Vec<(usize, SpanKind, Duration, Duration)> = result
+        .placements
+        .iter()
+        .map(|p| {
+            (
+                units.iter().position(|u| *u == p.unit).unwrap(),
+                graph.tasks[p.task].kind,
+                p.start,
+                p.end,
+            )
+        })
+        .collect();
+    render_rows(units.len(), &spans, width, &refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn one_worker_equals_serial_sum() {
+        let mut g = Graph::new();
+        for _ in 0..10 {
+            g.pool(SpanKind::Compress, ms(7), vec![]);
+        }
+        let r = simulate(&g, 1);
+        assert_eq!(r.makespan, ms(70));
+    }
+
+    #[test]
+    fn independent_tasks_scale_perfectly() {
+        let mut g = Graph::new();
+        for _ in 0..8 {
+            g.pool(SpanKind::Decompress, ms(10), vec![]);
+        }
+        assert_eq!(simulate(&g, 2).makespan, ms(40));
+        assert_eq!(simulate(&g, 4).makespan, ms(20));
+        assert_eq!(simulate(&g, 8).makespan, ms(10));
+        // more workers than tasks: no further gain
+        assert_eq!(simulate(&g, 16).makespan, ms(10));
+    }
+
+    #[test]
+    fn critical_path_bounds_makespan() {
+        let mut g = Graph::new();
+        let a = g.pool(SpanKind::Read, ms(5), vec![]);
+        let b = g.pool(SpanKind::Decompress, ms(10), vec![a]);
+        let _c = g.pool(SpanKind::Process, ms(3), vec![b]);
+        // independent short task
+        g.pool(SpanKind::Read, ms(1), vec![]);
+        let r = simulate(&g, 4);
+        assert_eq!(r.makespan, ms(18));
+    }
+
+    #[test]
+    fn named_resource_serialises() {
+        let mut g = Graph::new();
+        for _ in 0..5 {
+            g.named("output", SpanKind::Write, ms(4), vec![]);
+        }
+        // pool width is irrelevant for named units
+        assert_eq!(simulate(&g, 8).makespan, ms(20));
+    }
+
+    #[test]
+    fn pipeline_overlaps_pool_and_named() {
+        // decode (pool) -> analyze (pjrt); with 2 workers the pjrt unit
+        // becomes the bottleneck: total = first decode + 4 analyses
+        let mut g = Graph::new();
+        for _ in 0..4 {
+            let d = g.pool(SpanKind::Decompress, ms(10), vec![]);
+            g.named("pjrt", SpanKind::Process, ms(10), vec![d]);
+        }
+        let r = simulate(&g, 4);
+        assert_eq!(r.makespan, ms(50));
+    }
+
+    #[test]
+    fn utilization_and_timeline() {
+        let mut g = Graph::new();
+        for _ in 0..4 {
+            g.pool(SpanKind::Compress, ms(10), vec![]);
+        }
+        let r = simulate(&g, 2);
+        assert!((r.pool_utilization(2) - 1.0).abs() < 1e-9);
+        let art = timeline(&g, &r, 20);
+        assert!(art.contains("w00"));
+        assert!(art.contains('c'));
+    }
+
+    #[test]
+    fn deps_to_undefined_task_panics() {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Graph::new();
+            g.pool(SpanKind::Read, ms(1), vec![5]);
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn speedup_curve_shape_matches_amdahl() {
+        // 1 serial startup + 12 parallel units: classic saturating curve
+        let build = || {
+            let mut g = Graph::new();
+            let s = g.named("startup", SpanKind::Startup, ms(12), vec![]);
+            for _ in 0..12 {
+                g.pool(SpanKind::Decompress, ms(12), vec![s]);
+            }
+            g
+        };
+        let g = build();
+        let t1 = simulate(&g, 1).makespan;
+        let t4 = simulate(&g, 4).makespan;
+        let t12 = simulate(&g, 12).makespan;
+        let s4 = t1.as_secs_f64() / t4.as_secs_f64();
+        let s12 = t1.as_secs_f64() / t12.as_secs_f64();
+        assert!(s4 > 3.2 && s4 < 3.7, "s4={s4}");
+        assert!(s12 > 6.0 && s12 < 7.0, "s12={s12}"); // Amdahl limit
+    }
+}

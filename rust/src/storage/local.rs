@@ -1,0 +1,93 @@
+//! Real file backend (positioned I/O on the host filesystem).
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+use super::Backend;
+
+/// A file on the host filesystem, accessed with pread/pwrite so
+/// concurrent readers need no seek coordination.
+pub struct LocalFile {
+    file: File,
+    path: PathBuf,
+}
+
+impl LocalFile {
+    /// Create (truncate) a file for writing and reading back.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(&path)?;
+        Ok(LocalFile { file, path })
+    }
+
+    /// Open an existing file read-only (writes will fail at the OS level).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new().read(true).open(&path)?;
+        Ok(LocalFile { file, path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Backend for LocalFile {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.file.read_exact_at(buf, off)?;
+        Ok(())
+    }
+
+    fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        self.file.write_all_at(data, off)?;
+        Ok(())
+    }
+
+    fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("local:{}", self.path.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_write_read() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rootio-local-{}.bin", std::process::id()));
+        let f = LocalFile::create(&path).unwrap();
+        f.write_at(0, b"header").unwrap();
+        f.write_at(100, b"tail").unwrap();
+        f.sync().unwrap();
+        assert_eq!(f.len().unwrap(), 104);
+        let mut buf = [0u8; 4];
+        f.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"tail");
+        drop(f);
+
+        let r = LocalFile::open(&path).unwrap();
+        let mut buf = [0u8; 6];
+        r.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"header");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_missing_is_error() {
+        assert!(LocalFile::open("/nonexistent/dir/nope.bin").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Plain in-memory backend (no cost model) — the substrate for
+//! `TMemFile` buffers and for unit tests.
+
+use std::sync::RwLock;
+
+use crate::error::{Error, Result};
+
+use super::Backend;
+
+/// Growable in-memory byte device.
+pub struct MemBackend {
+    data: RwLock<Vec<u8>>,
+}
+
+impl MemBackend {
+    pub fn new() -> Self {
+        MemBackend { data: RwLock::new(Vec::new()) }
+    }
+
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        MemBackend { data: RwLock::new(v) }
+    }
+
+    /// Consume into the underlying buffer (used when shipping a
+    /// TMemFile's contents to the merger queue).
+    pub fn into_vec(self) -> Vec<u8> {
+        self.data.into_inner().unwrap()
+    }
+
+    /// Snapshot of the current contents.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.data.read().unwrap().clone()
+    }
+}
+
+impl Default for MemBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for MemBackend {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        let data = self.data.read().unwrap();
+        let off = off as usize;
+        if off + buf.len() > data.len() {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("read {}..{} beyond end {}", off, off + buf.len(), data.len()),
+            )));
+        }
+        buf.copy_from_slice(&data[off..off + buf.len()]);
+        Ok(())
+    }
+
+    fn write_at(&self, off: u64, src: &[u8]) -> Result<()> {
+        let mut data = self.data.write().unwrap();
+        let off = off as usize;
+        if off + src.len() > data.len() {
+            data.resize(off + src.len(), 0);
+        }
+        data[off..off + src.len()].copy_from_slice(src);
+        Ok(())
+    }
+
+    fn len(&self) -> Result<u64> {
+        Ok(self.data.read().unwrap().len() as u64)
+    }
+
+    fn describe(&self) -> String {
+        "mem".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_extend() {
+        let m = MemBackend::new();
+        m.write_at(0, b"abc").unwrap();
+        m.write_at(10, b"xyz").unwrap();
+        assert_eq!(m.len().unwrap(), 13);
+        let mut buf = [0u8; 3];
+        m.read_at(10, &mut buf).unwrap();
+        assert_eq!(&buf, b"xyz");
+        // the gap is zero-filled
+        m.read_at(3, &mut buf).unwrap();
+        assert_eq!(&buf, &[0, 0, 0]);
+    }
+
+    #[test]
+    fn read_past_end_errors() {
+        let m = MemBackend::new();
+        m.write_at(0, b"ab").unwrap();
+        let mut buf = [0u8; 3];
+        assert!(m.read_at(0, &mut buf).is_err());
+        assert!(m.read_at(100, &mut buf[..1]).is_err());
+    }
+
+    #[test]
+    fn overwrite() {
+        let m = MemBackend::from_vec(b"hello world".to_vec());
+        m.write_at(6, b"rust!").unwrap();
+        assert_eq!(m.to_vec(), b"hello rust!");
+    }
+}

@@ -1,0 +1,271 @@
+//! Deterministic simulated storage devices.
+//!
+//! Cost model per operation: a single device queue (one op in flight,
+//! like a disk's command queue drained serially) charging
+//! `seek + bytes / bandwidth`, where seek applies when the op is not
+//! sequential with the previous one. Contents live in memory, so the
+//! *data* path is exact and only the *timing* is modelled.
+//!
+//! Calibration (sustained large-block write/read, circa the paper's
+//! 2017/2018 testbeds):
+//!
+//! | device | bw write | bw read | seek   |
+//! |--------|----------|---------|--------|
+//! | HDD    | 150 MB/s | 160 MB/s| 8 ms   |
+//! | SSD    | 350 MB/s | 480 MB/s| 80 µs  |
+//! | NVMe   | 1400 MB/s| 2500 MB/s| 20 µs |
+//! | tmpfs  | 8 GB/s   | 10 GB/s | ~0     |
+//!
+//! The SSD write figure makes the paper's "over 320 MB/s ... near the
+//! hardware limit" observation reproducible, and NVMe/HDD ≈ 4–9× apart
+//! brackets the paper's "four times faster" compressed-write gap.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+use super::mem::MemBackend;
+use super::Backend;
+
+/// Device timing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub write_mbps: f64,
+    pub read_mbps: f64,
+    pub seek: Duration,
+}
+
+impl DeviceModel {
+    pub fn hdd() -> Self {
+        DeviceModel {
+            name: "hdd",
+            write_mbps: 150.0,
+            read_mbps: 160.0,
+            seek: Duration::from_millis(8),
+        }
+    }
+
+    pub fn ssd() -> Self {
+        DeviceModel {
+            name: "ssd",
+            write_mbps: 350.0,
+            read_mbps: 480.0,
+            seek: Duration::from_micros(80),
+        }
+    }
+
+    pub fn nvme() -> Self {
+        DeviceModel {
+            name: "nvme",
+            write_mbps: 1400.0,
+            read_mbps: 2500.0,
+            seek: Duration::from_micros(20),
+        }
+    }
+
+    pub fn tmpfs() -> Self {
+        DeviceModel {
+            name: "tmpfs",
+            write_mbps: 8000.0,
+            read_mbps: 10000.0,
+            seek: Duration::from_micros(1),
+        }
+    }
+}
+
+struct QueueState {
+    /// When the device becomes free (virtual deadline).
+    available_at: Option<Instant>,
+    /// End offset of the previous op, for sequentiality detection.
+    last_end: u64,
+    /// Accumulated busy time (for utilisation reporting).
+    busy: Duration,
+}
+
+/// In-memory device with the [`DeviceModel`] timing applied.
+pub struct SimDevice {
+    mem: MemBackend,
+    model: DeviceModel,
+    time_scale: f64,
+    queue: Mutex<QueueState>,
+    stats: Mutex<SimStats>,
+}
+
+/// Operation counters for experiment reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub ops: u64,
+    pub seeks: u64,
+}
+
+impl SimDevice {
+    /// `time_scale` multiplies all modelled costs. 1.0 = real time;
+    /// 0.0 = count costs but never sleep (pure accounting mode).
+    pub fn new(model: DeviceModel, time_scale: f64) -> Self {
+        SimDevice {
+            mem: MemBackend::new(),
+            model,
+            time_scale,
+            queue: Mutex::new(QueueState {
+                available_at: None,
+                last_end: u64::MAX,
+                busy: Duration::ZERO,
+            }),
+            stats: Mutex::new(SimStats::default()),
+        }
+    }
+
+    pub fn model(&self) -> &DeviceModel {
+        &self.model
+    }
+
+    pub fn stats(&self) -> SimStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Total modelled busy time (unscaled).
+    pub fn busy_time(&self) -> Duration {
+        self.queue.lock().unwrap().busy
+    }
+
+    fn charge(&self, off: u64, len: usize, mbps: f64, is_write: bool) {
+        let transfer = Duration::from_secs_f64(len as f64 / (mbps * 1e6));
+        let (cost, _deadline) = {
+            let mut q = self.queue.lock().unwrap();
+            let seek = if q.last_end == off { Duration::ZERO } else { self.model.seek };
+            let cost = seek + transfer;
+            q.last_end = off + len as u64;
+            q.busy += cost;
+            let mut st = self.stats.lock().unwrap();
+            st.ops += 1;
+            if seek > Duration::ZERO {
+                st.seeks += 1;
+            }
+            if is_write {
+                st.bytes_written += len as u64;
+            } else {
+                st.bytes_read += len as u64;
+            }
+            // Single-issue queue: ops serialise on the device.
+            let scaled = cost.mul_f64(self.time_scale.max(0.0));
+            let now = Instant::now();
+            let start = match q.available_at {
+                Some(t) if t > now => t,
+                _ => now,
+            };
+            let deadline = start + scaled;
+            q.available_at = Some(deadline);
+            (scaled, deadline)
+        };
+        if self.time_scale > 0.0 {
+            // Sleep outside the lock: concurrent callers pile onto the
+            // device queue exactly like blocked writers on one disk.
+            let target = {
+                let q = self.queue.lock().unwrap();
+                q.available_at
+            };
+            if let Some(t) = target {
+                let now = Instant::now();
+                if t > now {
+                    std::thread::sleep(t - now);
+                }
+            }
+            let _ = cost;
+        }
+    }
+}
+
+impl Backend for SimDevice {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.charge(off, buf.len(), self.model.read_mbps, false);
+        self.mem.read_at(off, buf)
+    }
+
+    fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        self.charge(off, data.len(), self.model.write_mbps, true);
+        self.mem.write_at(off, data)
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.mem.len()
+    }
+
+    fn describe(&self) -> String {
+        format!("sim:{} ({} MB/s write)", self.model.name, self.model.write_mbps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_path_is_exact() {
+        let d = SimDevice::new(DeviceModel::nvme(), 0.0);
+        d.write_at(5, b"payload").unwrap();
+        let mut buf = [0u8; 7];
+        d.read_at(5, &mut buf).unwrap();
+        assert_eq!(&buf, b"payload");
+    }
+
+    #[test]
+    fn sequential_writes_skip_seeks() {
+        let d = SimDevice::new(DeviceModel::hdd(), 0.0);
+        d.write_at(0, &[0u8; 100]).unwrap();
+        d.write_at(100, &[0u8; 100]).unwrap();
+        d.write_at(200, &[0u8; 100]).unwrap();
+        d.write_at(1000, &[0u8; 100]).unwrap(); // seek
+        let st = d.stats();
+        assert_eq!(st.ops, 4);
+        assert_eq!(st.seeks, 2); // first op + the jump
+        assert_eq!(st.bytes_written, 400);
+    }
+
+    #[test]
+    fn busy_time_scales_with_bytes_and_bandwidth() {
+        let hdd = SimDevice::new(DeviceModel::hdd(), 0.0);
+        let nvme = SimDevice::new(DeviceModel::nvme(), 0.0);
+        let blob = vec![0u8; 10_000_000];
+        hdd.write_at(0, &blob).unwrap();
+        nvme.write_at(0, &blob).unwrap();
+        let r = hdd.busy_time().as_secs_f64() / nvme.busy_time().as_secs_f64();
+        // 1400/150 ≈ 9.3, seek adds a bit on top for the hdd
+        assert!(r > 8.0 && r < 11.0, "ratio {r}");
+    }
+
+    #[test]
+    fn real_sleep_when_scaled() {
+        let d = SimDevice::new(DeviceModel::hdd(), 1.0);
+        let t0 = Instant::now();
+        // 1.5 MB at 150 MB/s = 10 ms + 8 ms seek
+        d.write_at(0, &vec![0u8; 1_500_000]).unwrap();
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(15), "slept only {dt:?}");
+    }
+
+    #[test]
+    fn queue_serialises_concurrent_writers() {
+        use std::sync::Arc;
+        let d = Arc::new(SimDevice::new(DeviceModel::hdd(), 1.0));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    // 0.75 MB each at 150 MB/s = 5 ms + seek
+                    d.write_at(i * 10_000_000, &vec![0u8; 750_000]).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let dt = t0.elapsed();
+        // 4 ops serialised: >= 4 * (5 ms + 8 ms seek) minus tolerance
+        assert!(dt >= Duration::from_millis(40), "took only {dt:?}");
+    }
+}

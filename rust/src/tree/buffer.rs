@@ -1,0 +1,83 @@
+//! In-memory tree contents: the unit shipped over the `TBufferMerger`
+//! queue (the paper's Figure 4 "buffers").
+//!
+//! Baskets inside a `TreeBuffer` are *already compressed* — the whole
+//! point of the merger design is that workers pay the serialisation +
+//! compression cost in parallel and the single output thread only
+//! appends bytes.
+
+use crate::serial::schema::Schema;
+
+/// One compressed basket awaiting merge.
+#[derive(Clone, Debug)]
+pub struct BasketPayload {
+    /// Compressed container bytes (self-describing blocks).
+    pub bytes: Vec<u8>,
+    /// Decompressed length.
+    pub raw_len: u32,
+    /// Entries covered, relative to the start of this buffer.
+    pub first_entry: u64,
+    pub n_entries: u32,
+}
+
+/// Per-branch basket list.
+#[derive(Clone, Debug, Default)]
+pub struct BranchBuffer {
+    pub baskets: Vec<BasketPayload>,
+}
+
+/// A complete in-memory tree: aligned per-branch baskets plus counts.
+#[derive(Clone, Debug)]
+pub struct TreeBuffer {
+    pub schema: Schema,
+    pub entries: u64,
+    pub branches: Vec<BranchBuffer>,
+}
+
+impl TreeBuffer {
+    pub fn new(schema: Schema) -> Self {
+        let n = schema.len();
+        TreeBuffer {
+            schema,
+            entries: 0,
+            branches: (0..n).map(|_| BranchBuffer::default()).collect(),
+        }
+    }
+
+    /// Total compressed payload bytes held.
+    pub fn stored_bytes(&self) -> usize {
+        self.branches.iter().flat_map(|b| &b.baskets).map(|k| k.bytes.len()).sum()
+    }
+
+    /// Total uncompressed bytes represented.
+    pub fn raw_bytes(&self) -> usize {
+        self.branches.iter().flat_map(|b| &b.baskets).map(|k| k.raw_len as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::schema::{ColumnType, Field};
+
+    #[test]
+    fn accounting() {
+        let schema = Schema::new(vec![Field::new("x", ColumnType::F32)]);
+        let mut b = TreeBuffer::new(schema);
+        assert!(b.is_empty());
+        b.branches[0].baskets.push(BasketPayload {
+            bytes: vec![0; 50],
+            raw_len: 400,
+            first_entry: 0,
+            n_entries: 100,
+        });
+        b.entries = 100;
+        assert_eq!(b.stored_bytes(), 50);
+        assert_eq!(b.raw_bytes(), 400);
+        assert!(!b.is_empty());
+    }
+}

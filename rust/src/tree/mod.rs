@@ -1,0 +1,24 @@
+//! Columnar trees (TTree/TBranch/TBasket analogue).
+//!
+//! A tree is a table: one typed branch per schema field, each branch
+//! stored as a sequence of compressed baskets. Baskets are flushed in
+//! aligned *clusters* (all branches cut at the same entry numbers), so
+//! any contiguous entry range can be read back by touching exactly the
+//! overlapping baskets of each selected branch.
+//!
+//! The writer emits baskets through a [`sink::BasketSink`], which is
+//! either a real file ([`sink::FileSink`]) or an in-memory buffer
+//! ([`buffer::TreeBuffer`] via [`sink::BufferSink`]) — the latter is
+//! what `TBufferMerger` workers produce. Per-branch serialisation +
+//! compression during a flush goes through the IMT pool when implicit
+//! multi-threading is enabled (paper §3.1).
+
+pub mod buffer;
+pub mod reader;
+pub mod sink;
+pub mod writer;
+
+pub use buffer::TreeBuffer;
+pub use reader::TreeReader;
+pub use sink::{BasketSink, BufferSink, FileSink};
+pub use writer::{TreeWriter, WriterConfig};

@@ -1,0 +1,177 @@
+//! Tree reader: basket fetch / decompress / deserialise primitives.
+//!
+//! The reader exposes exactly the decomposition the paper parallelises:
+//! `fetch` (storage), `decompress`, `deserialise` per (branch, basket).
+//! The scheduling strategies — per-column tasks (Fig 1), per-basket
+//! tasks with interleaved processing (Fig 2) — live in
+//! [`crate::coordinator::read`]; this type stays policy-free.
+
+use std::sync::Arc;
+
+use crate::compress;
+use crate::error::{Error, Result};
+use crate::format::directory::TreeMeta;
+use crate::format::reader::FileReader;
+use crate::serial::column::ColumnData;
+use crate::serial::value::Row;
+
+/// Read-side handle on one tree of an open file.
+pub struct TreeReader {
+    file: Arc<FileReader>,
+    meta: TreeMeta,
+}
+
+impl TreeReader {
+    pub fn open(file: Arc<FileReader>, tree: &str) -> Result<Self> {
+        let meta = file
+            .directory()
+            .tree(tree)
+            .ok_or_else(|| Error::Format(format!("no tree '{tree}' in file")))?
+            .clone();
+        Ok(TreeReader { file, meta })
+    }
+
+    /// First tree in the file (the common single-tree case).
+    pub fn open_first(file: Arc<FileReader>) -> Result<Self> {
+        let meta = file
+            .directory()
+            .trees
+            .first()
+            .ok_or_else(|| Error::Format("file contains no trees".into()))?
+            .clone();
+        Ok(TreeReader { file, meta })
+    }
+
+    pub fn meta(&self) -> &TreeMeta {
+        &self.meta
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.meta.entries
+    }
+
+    pub fn n_branches(&self) -> usize {
+        self.meta.branches.len()
+    }
+
+    /// Fetch the stored (compressed) bytes of basket `k` of branch `b`.
+    pub fn fetch_raw(&self, b: usize, k: usize) -> Result<Vec<u8>> {
+        let info = &self.meta.branches[b].baskets[k];
+        self.file.fetch_basket(info)
+    }
+
+    /// Decompress + deserialise previously fetched basket bytes.
+    pub fn decode(&self, b: usize, k: usize, raw: &[u8]) -> Result<ColumnData> {
+        let info = &self.meta.branches[b].baskets[k];
+        let bytes = compress::decompress(raw)?;
+        if bytes.len() != info.raw_len as usize {
+            return Err(Error::Format(format!(
+                "basket ({b},{k}): decompressed to {} bytes, expected {}",
+                bytes.len(),
+                info.raw_len
+            )));
+        }
+        ColumnData::decode(self.meta.branches[b].ty, &bytes, info.n_entries as usize)
+    }
+
+    /// Serial read of one whole branch.
+    pub fn read_branch(&self, b: usize) -> Result<ColumnData> {
+        let branch = &self.meta.branches[b];
+        let mut out = ColumnData::new(branch.ty);
+        for k in 0..branch.baskets.len() {
+            let raw = self.fetch_raw(b, k)?;
+            out.append(&self.decode(b, k, &raw)?)?;
+        }
+        Ok(out)
+    }
+
+    /// Serial read of every branch (the IMT-off baseline for Fig 1).
+    pub fn read_all(&self) -> Result<Vec<ColumnData>> {
+        (0..self.n_branches()).map(|b| self.read_branch(b)).collect()
+    }
+
+    /// Reassemble rows from fully decoded columns.
+    pub fn rows(&self, cols: &[ColumnData]) -> Result<Vec<Row>> {
+        crate::serial::streamer::Streamer::new(self.meta.schema.clone()).unsplit(cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Codec, Settings};
+    use crate::format::writer::FileWriter;
+    use crate::format::Directory;
+    use crate::serial::schema::{ColumnType, Field, Schema};
+    use crate::serial::value::Value;
+    use crate::storage::mem::MemBackend;
+    use crate::tree::sink::FileSink;
+    use crate::tree::writer::{TreeWriter, WriterConfig};
+
+    fn build_file(n: u64, basket: usize) -> Arc<FileReader> {
+        let schema = Schema::new(vec![
+            Field::new("e", ColumnType::F64),
+            Field::new("id", ColumnType::I64),
+            Field::new("tag", ColumnType::Bytes),
+        ]);
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), schema.len());
+        let cfg = WriterConfig {
+            basket_entries: basket,
+            compression: Settings::new(Codec::Rzip, 4),
+            parallel_flush: false,
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..n {
+            w.fill(vec![
+                Value::F64(i as f64 * 1.5),
+                Value::I64(i as i64),
+                Value::Bytes(format!("t{}", i % 7).into_bytes()),
+            ])
+            .unwrap();
+        }
+        let (sink, entries) = w.close().unwrap();
+        let meta = sink.into_meta("events".into(), schema, entries);
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        Arc::new(FileReader::open(be).unwrap())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let file = build_file(1000, 128);
+        let r = TreeReader::open(file, "events").unwrap();
+        assert_eq!(r.entries(), 1000);
+        let cols = r.read_all().unwrap();
+        assert_eq!(cols[0].len(), 1000);
+        let rows = r.rows(&cols).unwrap();
+        assert_eq!(rows[42][0], Value::F64(63.0));
+        assert_eq!(rows[999][1], Value::I64(999));
+        assert_eq!(rows[8][2], Value::Bytes(b"t1".to_vec()));
+    }
+
+    #[test]
+    fn per_basket_primitives() {
+        let file = build_file(300, 100);
+        let r = TreeReader::open(file, "events").unwrap();
+        let branch = &r.meta().branches[1];
+        assert_eq!(branch.baskets.len(), 3);
+        let raw = r.fetch_raw(1, 2).unwrap();
+        let col = r.decode(1, 2, &raw).unwrap();
+        assert_eq!(col.len(), 100);
+        assert_eq!(col.get(0), Some(Value::I64(200)));
+    }
+
+    #[test]
+    fn missing_tree_is_error() {
+        let file = build_file(10, 10);
+        assert!(TreeReader::open(file, "nope").is_err());
+    }
+
+    #[test]
+    fn open_first_works() {
+        let file = build_file(10, 10);
+        let r = TreeReader::open_first(file).unwrap();
+        assert_eq!(r.meta().name, "events");
+    }
+}

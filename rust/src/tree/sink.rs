@@ -1,0 +1,160 @@
+//! Basket destinations for the tree writer.
+
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::format::directory::{BasketInfo, BranchMeta, TreeMeta};
+use crate::format::writer::FileWriter;
+use crate::serial::schema::Schema;
+use crate::storage::BackendRef;
+
+use super::buffer::{BasketPayload, TreeBuffer};
+
+/// Receives finished (compressed) baskets. Must be thread-safe: during
+/// an IMT flush all branches land concurrently.
+pub trait BasketSink: Send + Sync {
+    /// Store one basket of `branch`; entries are buffer-relative.
+    fn put_basket(
+        &self,
+        branch: usize,
+        payload: Vec<u8>,
+        raw_len: u32,
+        first_entry: u64,
+        n_entries: u32,
+    ) -> Result<()>;
+}
+
+/// Sink writing straight into an open [`FileWriter`].
+pub struct FileSink {
+    file: std::sync::Arc<FileWriter>,
+    baskets: Vec<Mutex<Vec<BasketInfo>>>,
+}
+
+impl FileSink {
+    pub fn new(file: std::sync::Arc<FileWriter>, n_branches: usize) -> Self {
+        FileSink { file, baskets: (0..n_branches).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    /// Drain collected metadata into a [`TreeMeta`].
+    pub fn into_meta(self, name: String, schema: Schema, entries: u64) -> TreeMeta {
+        let branches = self
+            .baskets
+            .into_iter()
+            .zip(&schema.fields)
+            .map(|(m, f)| {
+                let mut baskets = m.into_inner().unwrap();
+                baskets.sort_by_key(|b| b.first_entry);
+                BranchMeta { name: f.name.clone(), ty: f.ty, baskets }
+            })
+            .collect();
+        TreeMeta { name, schema, entries, branches }
+    }
+}
+
+impl BasketSink for FileSink {
+    fn put_basket(
+        &self,
+        branch: usize,
+        payload: Vec<u8>,
+        raw_len: u32,
+        first_entry: u64,
+        n_entries: u32,
+    ) -> Result<()> {
+        let (offset, crc) = self.file.append(&payload)?;
+        self.baskets[branch].lock().unwrap().push(BasketInfo {
+            offset,
+            comp_len: payload.len() as u32,
+            raw_len,
+            first_entry,
+            n_entries,
+            crc,
+        });
+        Ok(())
+    }
+}
+
+/// Sink accumulating into an in-memory [`TreeBuffer`].
+pub struct BufferSink {
+    branches: Vec<Mutex<Vec<BasketPayload>>>,
+    schema: Schema,
+}
+
+impl BufferSink {
+    pub fn new(schema: Schema) -> Self {
+        let n = schema.len();
+        BufferSink { branches: (0..n).map(|_| Mutex::new(Vec::new())).collect(), schema }
+    }
+
+    pub fn into_buffer(self, entries: u64) -> TreeBuffer {
+        let mut buf = TreeBuffer::new(self.schema.clone());
+        buf.entries = entries;
+        for (dst, src) in buf.branches.iter_mut().zip(self.branches) {
+            dst.baskets = src.into_inner().unwrap();
+            dst.baskets.sort_by_key(|b| b.first_entry);
+        }
+        buf
+    }
+}
+
+impl BasketSink for BufferSink {
+    fn put_basket(
+        &self,
+        branch: usize,
+        payload: Vec<u8>,
+        raw_len: u32,
+        first_entry: u64,
+        n_entries: u32,
+    ) -> Result<()> {
+        self.branches[branch].lock().unwrap().push(BasketPayload {
+            bytes: payload,
+            raw_len,
+            first_entry,
+            n_entries,
+        });
+        Ok(())
+    }
+}
+
+/// Open a fresh single-tree file writer on `backend` (helper used by
+/// examples and benches).
+pub fn file_writer(backend: BackendRef) -> Result<std::sync::Arc<FileWriter>> {
+    Ok(std::sync::Arc::new(FileWriter::create(backend)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::schema::{ColumnType, Field};
+    use crate::storage::mem::MemBackend;
+    use std::sync::Arc;
+
+    fn schema2() -> Schema {
+        Schema::new(vec![Field::new("a", ColumnType::F32), Field::new("b", ColumnType::I32)])
+    }
+
+    #[test]
+    fn file_sink_collects_sorted_meta() {
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be).unwrap());
+        let sink = FileSink::new(fw, 2);
+        // out-of-order arrival (parallel flush)
+        sink.put_basket(0, vec![1, 2, 3], 12, 100, 50).unwrap();
+        sink.put_basket(0, vec![4, 5], 8, 0, 100).unwrap();
+        sink.put_basket(1, vec![6], 4, 0, 150).unwrap();
+        let meta = sink.into_meta("t".into(), schema2(), 150);
+        assert_eq!(meta.branches[0].baskets[0].first_entry, 0);
+        assert_eq!(meta.branches[0].baskets[1].first_entry, 100);
+        meta.check().unwrap();
+    }
+
+    #[test]
+    fn buffer_sink_builds_tree_buffer() {
+        let sink = BufferSink::new(schema2());
+        sink.put_basket(0, vec![9; 10], 40, 0, 10).unwrap();
+        sink.put_basket(1, vec![8; 5], 40, 0, 10).unwrap();
+        let buf = sink.into_buffer(10);
+        assert_eq!(buf.entries, 10);
+        assert_eq!(buf.branches[0].baskets.len(), 1);
+        assert_eq!(buf.stored_bytes(), 15);
+    }
+}

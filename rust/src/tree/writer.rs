@@ -1,0 +1,253 @@
+//! Tree writer: accumulates rows (or whole column blocks), cuts aligned
+//! basket clusters, and serialises + compresses each branch's basket —
+//! in parallel across branches when IMT is enabled (paper §3.1).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::compress::{self, Settings};
+use crate::error::{Error, Result};
+use crate::imt;
+use crate::metrics::{Recorder, SpanKind};
+use crate::serial::column::ColumnData;
+use crate::serial::schema::Schema;
+use crate::serial::streamer::Streamer;
+use crate::serial::value::Row;
+
+use super::sink::BasketSink;
+
+/// Tuning for a tree writer.
+#[derive(Clone, Debug)]
+pub struct WriterConfig {
+    /// Entries per basket cluster (all branches cut together).
+    pub basket_entries: usize,
+    /// Compression settings applied to every branch.
+    pub compression: Settings,
+    /// Use the IMT pool for per-branch serialise+compress during flush.
+    pub parallel_flush: bool,
+}
+
+impl Default for WriterConfig {
+    fn default() -> Self {
+        WriterConfig {
+            basket_entries: 4096,
+            compression: Settings::default_compressed(),
+            parallel_flush: true,
+        }
+    }
+}
+
+/// Columnar tree writer over any [`BasketSink`].
+pub struct TreeWriter<S: BasketSink> {
+    streamer: Streamer,
+    config: WriterConfig,
+    sink: S,
+    columns: Vec<ColumnData>,
+    buffered: usize,
+    entries: u64,
+    recorder: Option<Arc<Recorder>>,
+}
+
+impl<S: BasketSink> TreeWriter<S> {
+    pub fn new(schema: Schema, sink: S, config: WriterConfig) -> Self {
+        let streamer = Streamer::new(schema);
+        let columns = streamer.make_columns();
+        TreeWriter { streamer, config, sink, columns, buffered: 0, entries: 0, recorder: None }
+    }
+
+    /// Attach a span recorder (Fig 7 instrumentation).
+    pub fn with_recorder(mut self, r: Arc<Recorder>) -> Self {
+        self.recorder = Some(r);
+        self
+    }
+
+    pub fn schema(&self) -> &Schema {
+        self.streamer.schema()
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+
+    /// Append one row; may trigger a cluster flush.
+    pub fn fill(&mut self, row: Row) -> Result<()> {
+        self.streamer.fill(&mut self.columns, row)?;
+        self.buffered += 1;
+        self.entries += 1;
+        if self.buffered >= self.config.basket_entries {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Bulk append: one `ColumnData` per branch, all the same length.
+    /// This is the zero-boxing path used when landing PJRT-generated
+    /// event blocks.
+    pub fn fill_columns(&mut self, block: &[ColumnData]) -> Result<()> {
+        if block.len() != self.columns.len() {
+            return Err(Error::Schema(format!(
+                "block has {} columns, schema has {}",
+                block.len(),
+                self.columns.len()
+            )));
+        }
+        let n = block.first().map(|c| c.len()).unwrap_or(0);
+        for c in block {
+            if c.len() != n {
+                return Err(Error::Schema("ragged column block".into()));
+            }
+        }
+        for (dst, src) in self.columns.iter_mut().zip(block) {
+            dst.append(src)?;
+        }
+        self.buffered += n;
+        self.entries += n as u64;
+        // Chunked flushing: honour basket_entries even for bulk appends
+        // larger than one basket (the granularity Figs 1/2 rely on).
+        while self.buffered >= self.config.basket_entries {
+            let chunk = self.config.basket_entries;
+            self.flush_chunk(chunk)?;
+        }
+        Ok(())
+    }
+
+    /// Flush everything still buffered (tail baskets included).
+    pub fn flush(&mut self) -> Result<()> {
+        while self.buffered > 0 {
+            let chunk = self.buffered.min(self.config.basket_entries);
+            self.flush_chunk(chunk)?;
+        }
+        Ok(())
+    }
+
+    /// Serialise + compress + sink the first `chunk` buffered entries.
+    fn flush_chunk(&mut self, chunk: usize) -> Result<()> {
+        if chunk == 0 {
+            return Ok(());
+        }
+        let n_entries = chunk as u32;
+        let first_entry = self.entries - self.buffered as u64;
+        let cols: Vec<_> =
+            self.columns.iter_mut().map(|c| c.drain_front(chunk)).collect();
+        let settings = self.config.compression;
+        let sink = &self.sink;
+        let recorder = self.recorder.clone();
+
+        let one = |i: usize, col: &ColumnData| -> Result<()> {
+            let (raw, ser_span) = timed(|| col.encode());
+            let (payload, cmp_span) = timed(|| compress::compress(settings, &raw));
+            if let Some(r) = &recorder {
+                r.push(SpanKind::Serialize, ser_span.0, ser_span.1);
+                r.push(SpanKind::Compress, cmp_span.0, cmp_span.1);
+            }
+            sink.put_basket(i, payload, raw.len() as u32, first_entry, n_entries)
+        };
+
+        if self.config.parallel_flush && imt::is_enabled() {
+            let results: Vec<Result<()>> =
+                imt::parallel_map(cols.len(), |i| one(i, &cols[i]));
+            for r in results {
+                r?;
+            }
+        } else {
+            for (i, col) in cols.iter().enumerate() {
+                one(i, col)?;
+            }
+        }
+        self.buffered -= chunk;
+        Ok(())
+    }
+
+    /// Flush the tail and hand back the sink (with the final entry count).
+    pub fn close(mut self) -> Result<(S, u64)> {
+        self.flush()?;
+        Ok((self.sink, self.entries))
+    }
+}
+
+/// Time a closure against the recorder epoch-free monotonic clock.
+/// Returns (value, (start, end)) as durations since an arbitrary t0
+/// shared within the process.
+fn timed<R>(f: impl FnOnce() -> R) -> (R, (Duration, Duration)) {
+    let t0 = process_epoch().elapsed();
+    let out = f();
+    let t1 = process_epoch().elapsed();
+    (out, (t0, t1))
+}
+
+fn process_epoch() -> &'static std::time::Instant {
+    static EPOCH: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
+    EPOCH.get_or_init(std::time::Instant::now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::serial::schema::{ColumnType, Field};
+    use crate::serial::value::Value;
+    use crate::tree::sink::BufferSink;
+
+    fn schema() -> Schema {
+        Schema::new(vec![Field::new("x", ColumnType::F32), Field::new("n", ColumnType::I32)])
+    }
+
+    fn config(basket: usize) -> WriterConfig {
+        WriterConfig {
+            basket_entries: basket,
+            compression: Settings::new(Codec::Lz4r, 3),
+            parallel_flush: false,
+        }
+    }
+
+    #[test]
+    fn clusters_are_aligned_and_cover_all_entries() {
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), config(100));
+        for i in 0..250 {
+            w.fill(vec![Value::F32(i as f32), Value::I32(i)]).unwrap();
+        }
+        let (sink, entries) = w.close().unwrap();
+        assert_eq!(entries, 250);
+        let buf = sink.into_buffer(entries);
+        // 100 + 100 + 50
+        for br in &buf.branches {
+            let counts: Vec<u32> = br.baskets.iter().map(|b| b.n_entries).collect();
+            assert_eq!(counts, vec![100, 100, 50]);
+            let firsts: Vec<u64> = br.baskets.iter().map(|b| b.first_entry).collect();
+            assert_eq!(firsts, vec![0, 100, 200]);
+        }
+    }
+
+    #[test]
+    fn fill_columns_bulk_path() {
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), config(64));
+        let block = vec![
+            ColumnData::F32((0..100).map(|i| i as f32).collect()),
+            ColumnData::I32((0..100).collect()),
+        ];
+        w.fill_columns(&block).unwrap();
+        w.fill_columns(&block).unwrap();
+        let (sink, entries) = w.close().unwrap();
+        assert_eq!(entries, 200);
+        let buf = sink.into_buffer(entries);
+        let total: u32 = buf.branches[0].baskets.iter().map(|b| b.n_entries).sum();
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn fill_columns_rejects_ragged_and_wrong_arity() {
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), config(64));
+        assert!(w.fill_columns(&[ColumnData::F32(vec![1.0])]).is_err());
+        assert!(w
+            .fill_columns(&[ColumnData::F32(vec![1.0]), ColumnData::I32(vec![1, 2])])
+            .is_err());
+    }
+
+    #[test]
+    fn empty_close() {
+        let w = TreeWriter::new(schema(), BufferSink::new(schema()), config(10));
+        let (sink, entries) = w.close().unwrap();
+        assert_eq!(entries, 0);
+        assert!(sink.into_buffer(0).is_empty());
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared test utilities: a minimal property-testing harness (the
+//! environment has no proptest crate — see Cargo.toml) and random data
+//! generators built on the library's own SplitMix PRNG.
+
+use rootio_par::framework::dataset::SplitMix;
+use rootio_par::serial::schema::{ColumnType, Field, Schema};
+use rootio_par::serial::value::{Row, Value};
+
+/// Deterministic random generator for property cases.
+pub struct Gen {
+    rng: SplitMix,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: SplitMix::new(seed) }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.u32() as usize) % (hi - lo)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        // mix of magnitudes, no NaNs (Row equality)
+        let u = self.rng.uniform();
+        (u - 0.5) * 10f32.powi(self.range(0, 8) as i32 - 4)
+    }
+
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.range(0, max_len + 1);
+        (0..n).map(|_| self.u32() as u8).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(0, items.len())]
+    }
+
+    /// Random schema: 1..=max_fields typed fields.
+    pub fn schema(&mut self, max_fields: usize) -> Schema {
+        let types = [
+            ColumnType::I32,
+            ColumnType::I64,
+            ColumnType::F32,
+            ColumnType::F64,
+            ColumnType::U8,
+            ColumnType::Bytes,
+        ];
+        let n = self.range(1, max_fields + 1);
+        Schema::new(
+            (0..n).map(|i| Field::new(format!("f{i}"), *self.choose(&types))).collect(),
+        )
+    }
+
+    /// A random row matching `schema`.
+    pub fn row(&mut self, schema: &Schema) -> Row {
+        schema
+            .fields
+            .iter()
+            .map(|f| match f.ty {
+                ColumnType::I32 => Value::I32(self.u32() as i32),
+                ColumnType::I64 => {
+                    Value::I64(((self.u32() as i64) << 32) | self.u32() as i64)
+                }
+                ColumnType::F32 => Value::F32(self.f32()),
+                ColumnType::F64 => Value::F64(self.f32() as f64 * 1e3),
+                ColumnType::U8 => Value::U8(self.u32() as u8),
+                ColumnType::Bytes => Value::Bytes(self.bytes(24)),
+            })
+            .collect()
+    }
+}
+
+/// Run `f` across `cases` deterministic seeds; failures report the seed.
+pub fn property(cases: u64, f: impl Fn(&mut Gen)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed * 0x9E3779B9 + 1);
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

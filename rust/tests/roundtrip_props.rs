@@ -1,0 +1,219 @@
+//! Property-based integration tests over coordinator invariants:
+//! arbitrary schemas, row batches, codecs, basket sizes and thread
+//! counts must round-trip through write → file → read; the merger must
+//! preserve the multiset of entries; hadd(serial) ≡ hadd(parallel);
+//! the basket index must stay gapless and monotone.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{property, Gen};
+use rootio_par::compress::{self, Codec, Settings};
+use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::format::reader::FileReader;
+use rootio_par::format::writer::FileWriter;
+use rootio_par::format::Directory;
+use rootio_par::hadd::{hadd, HaddOptions};
+use rootio_par::merger::{MergerConfig, TBufferMerger};
+use rootio_par::serial::schema::Schema;
+use rootio_par::serial::value::{Row, Value};
+use rootio_par::storage::mem::MemBackend;
+use rootio_par::storage::BackendRef;
+use rootio_par::tree::reader::TreeReader;
+use rootio_par::tree::sink::FileSink;
+use rootio_par::tree::writer::{TreeWriter, WriterConfig};
+
+fn codecs() -> [Settings; 4] {
+    [
+        Settings::uncompressed(),
+        Settings::new(Codec::Lz4r, 2),
+        Settings::new(Codec::Lz4r, 7),
+        Settings::new(Codec::Rzip, 3),
+    ]
+}
+
+fn write_rows(
+    schema: &Schema,
+    rows: &[Row],
+    cfg: WriterConfig,
+) -> (Arc<FileReader>, BackendRef) {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+    let sink = FileSink::new(fw.clone(), schema.len());
+    let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+    for row in rows {
+        w.fill(row.clone()).unwrap();
+    }
+    let (sink, entries) = w.close().unwrap();
+    let meta = sink.into_meta("t".into(), schema.clone(), entries);
+    meta.check().unwrap(); // basket index invariant: gapless + monotone
+    fw.finish(&Directory { trees: vec![meta] }).unwrap();
+    (Arc::new(FileReader::open(be.clone()).unwrap()), be)
+}
+
+#[test]
+fn prop_write_read_roundtrip_any_schema() {
+    property(40, |g| {
+        let schema = g.schema(6);
+        let n_rows = g.range(0, 400);
+        let rows: Vec<Row> = (0..n_rows).map(|_| g.row(&schema)).collect();
+        let cfg = WriterConfig {
+            basket_entries: g.range(1, 128),
+            compression: *g.choose(&codecs()),
+            parallel_flush: false,
+        };
+        let (reader, _) = write_rows(&schema, &rows, cfg);
+        let tr = TreeReader::open_first(reader).unwrap();
+        assert_eq!(tr.entries(), n_rows as u64);
+        let cols = tr.read_all().unwrap();
+        let back = tr.rows(&cols).unwrap();
+        assert_eq!(back, rows);
+    });
+}
+
+#[test]
+fn prop_parallel_read_equals_serial_read() {
+    property(15, |g| {
+        let schema = g.schema(8);
+        let rows: Vec<Row> = (0..g.range(50, 300)).map(|_| g.row(&schema)).collect();
+        let cfg = WriterConfig {
+            basket_entries: g.range(8, 64),
+            compression: *g.choose(&codecs()),
+            parallel_flush: false,
+        };
+        let (reader, _) = write_rows(&schema, &rows, cfg);
+        let tr = TreeReader::open_first(reader).unwrap();
+        let serial =
+            read_columns(&tr, &ReadOptions { branches: None, force_serial: true }).unwrap();
+        rootio_par::imt::enable(g.range(2, 6));
+        let parallel = read_columns(&tr, &ReadOptions::default()).unwrap();
+        rootio_par::imt::disable();
+        assert_eq!(serial.columns, parallel.columns);
+    });
+}
+
+#[test]
+fn prop_merger_preserves_entry_multiset() {
+    property(15, |g| {
+        let schema = Schema::flat_f32("v", g.range(1, 4));
+        let n_workers = g.range(1, 6);
+        let per_worker = g.range(1, 200);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let merger = TBufferMerger::create(
+            be.clone(),
+            schema.clone(),
+            MergerConfig {
+                tree_name: "t".into(),
+                queue_depth: g.range(1, 4),
+                writer: WriterConfig {
+                    basket_entries: g.range(1, 64),
+                    compression: *g.choose(&codecs()),
+                    parallel_flush: false,
+                },
+            },
+        )
+        .unwrap();
+        std::thread::scope(|s| {
+            for w in 0..n_workers {
+                let mut f = merger.get_file();
+                let schema = &schema;
+                s.spawn(move || {
+                    for i in 0..per_worker {
+                        let row: Row = schema
+                            .fields
+                            .iter()
+                            .map(|_| Value::F32((w * 10_000 + i) as f32))
+                            .collect();
+                        f.fill(row).unwrap();
+                    }
+                    f.write().unwrap();
+                });
+            }
+        });
+        let stats = merger.close().unwrap();
+        assert_eq!(stats.entries, (n_workers * per_worker) as u64);
+
+        let tr = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        let cols = tr.read_all().unwrap();
+        let mut got: Vec<u32> = (0..tr.entries() as usize)
+            .map(|i| match cols[0].get(i).unwrap() {
+                Value::F32(v) => v as u32,
+                _ => unreachable!(),
+            })
+            .collect();
+        got.sort();
+        let mut want: Vec<u32> = (0..n_workers)
+            .flat_map(|w| (0..per_worker).map(move |i| (w * 10_000 + i) as u32))
+            .collect();
+        want.sort();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_hadd_parallel_equals_serial() {
+    property(10, |g| {
+        let schema = g.schema(4);
+        let n_files = g.range(1, 5);
+        let inputs: Vec<BackendRef> = (0..n_files)
+            .map(|_| {
+                let rows: Vec<Row> = (0..g.range(1, 120)).map(|_| g.row(&schema)).collect();
+                let cfg = WriterConfig {
+                    basket_entries: g.range(4, 64),
+                    compression: *g.choose(&codecs()),
+                    parallel_flush: false,
+                };
+                write_rows(&schema, &rows, cfg).1
+            })
+            .collect();
+        let serial_out: BackendRef = Arc::new(MemBackend::new());
+        let opts = HaddOptions { parallel: false, tree: Some("t".into()) };
+        hadd(serial_out.clone(), &inputs, &opts).unwrap();
+        rootio_par::imt::enable(3);
+        let par_out: BackendRef = Arc::new(MemBackend::new());
+        hadd(par_out.clone(), &inputs, &HaddOptions { parallel: true, tree: Some("t".into()) })
+            .unwrap();
+        rootio_par::imt::disable();
+
+        let dump = |be: BackendRef| {
+            let tr = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+            let cols = tr.read_all().unwrap();
+            tr.rows(&cols).unwrap()
+        };
+        assert_eq!(dump(serial_out), dump(par_out));
+    });
+}
+
+#[test]
+fn prop_codec_container_roundtrips_arbitrary_bytes() {
+    property(60, |g| {
+        // Mix random and structured payloads of varied sizes.
+        let n = g.range(0, 60_000);
+        let data: Vec<u8> = if g.bool() {
+            (0..n).map(|_| g.u32() as u8).collect()
+        } else {
+            (0..n).map(|i| ((i / g.range(1, 17)) % 251) as u8).collect()
+        };
+        let settings = *g.choose(&codecs());
+        let packed = compress::compress(settings, &data);
+        assert_eq!(compress::decompress(&packed).unwrap(), data);
+        // blocks scan cleanly and account for all payload bytes
+        let blocks = compress::scan_blocks(&packed).unwrap();
+        let total: usize = blocks.iter().map(|b| b.raw_len).sum();
+        assert_eq!(total, data.len());
+    });
+}
+
+#[test]
+fn prop_crc_detects_single_bit_flips() {
+    property(40, |g| {
+        let n = g.range(1, 5000);
+        let data: Vec<u8> = (0..n).map(|_| g.u32() as u8).collect();
+        let crc = compress::crc32(&data);
+        let mut flipped = data.clone();
+        let bit = g.range(0, n * 8);
+        flipped[bit / 8] ^= 1 << (bit % 8);
+        assert_ne!(compress::crc32(&flipped), crc);
+    });
+}
