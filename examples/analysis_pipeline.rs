@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3a: Figure 1 style parallel column read ---------------------
     imt::disable();
-    let serial = read_columns(&reader, &ReadOptions { branches: None, force_serial: true })?;
+    let serial = read_columns(&reader, &ReadOptions { force_serial: true, ..Default::default() })?;
     imt::enable(threads);
     let parallel = read_columns(&reader, &ReadOptions::default())?;
     assert_eq!(serial.columns, parallel.columns);
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3b: Figure 2 style pipeline with interleaved PJRT analysis --
     imt::disable();
-    let s = baskets::run(&reader, Some(&engine), &PipelineOptions { force_serial: true })?;
+    let s = baskets::run(&reader, Some(&engine), &PipelineOptions { force_serial: true, ..Default::default() })?;
     imt::enable(threads);
     let p = baskets::run(&reader, Some(&engine), &PipelineOptions::default())?;
     imt::disable();

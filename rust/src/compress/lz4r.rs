@@ -108,13 +108,16 @@ fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], m: Option<(usize, usize)>) 
     }
 }
 
-/// Decompress into exactly `dst_len` bytes.
-pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(dst_len);
+/// Decompress exactly `dst_len` bytes, appending to `out`. Match
+/// offsets are resolved relative to the start of this block's output
+/// (`out` may already hold earlier blocks — the pooled-buffer path).
+pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    let base = out.len();
+    out.reserve(dst_len);
     let mut pos = 0usize;
     let err = |m: &str| Error::Codec(format!("lz4r: {m}"));
 
-    while out.len() < dst_len {
+    while out.len() - base < dst_len {
         if pos >= src.len() {
             return Err(err("truncated stream"));
         }
@@ -146,7 +149,7 @@ pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
         }
         let off = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
         pos += 2;
-        if off == 0 || off > out.len() {
+        if off == 0 || off > out.len() - base {
             return Err(err("bad offset"));
         }
         let mut mlen = (token & 0x0F) as usize;
@@ -174,9 +177,20 @@ pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
         }
     }
 
-    if out.len() != dst_len {
-        return Err(err(&format!("size mismatch: got {}, want {}", out.len(), dst_len)));
+    if out.len() - base != dst_len {
+        return Err(err(&format!(
+            "size mismatch: got {}, want {}",
+            out.len() - base,
+            dst_len
+        )));
     }
+    Ok(())
+}
+
+/// Decompress into exactly `dst_len` bytes.
+pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(dst_len);
+    decompress_into(src, dst_len, &mut out)?;
     Ok(out)
 }
 

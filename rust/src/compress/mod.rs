@@ -20,6 +20,7 @@ pub mod bitstream;
 pub mod crc32;
 pub mod huffman;
 pub mod lz4r;
+pub mod pool;
 pub mod rzip;
 
 use crate::error::{Error, Result};
@@ -110,39 +111,53 @@ impl Default for Settings {
     }
 }
 
-fn compress_one(codec: Codec, level: u8, src: &[u8]) -> (Codec, Vec<u8>) {
-    match codec {
-        Codec::None => (Codec::None, src.to_vec()),
-        Codec::Lz4r => (Codec::Lz4r, lz4r::compress(src, level)),
-        Codec::Rzip => (Codec::Rzip, rzip::compress(src, level)),
-    }
+fn write_header(out: &mut Vec<u8>, codec: Codec, level: u8, comp_len: usize, raw_len: usize) {
+    out.extend_from_slice(&codec.tag());
+    out.push(level);
+    out.extend_from_slice(&(comp_len as u32).to_le_bytes());
+    out.extend_from_slice(&(raw_len as u32).to_le_bytes());
 }
 
 fn emit_block(out: &mut Vec<u8>, settings: Settings, chunk: &[u8]) {
-    let (mut codec, mut payload) = compress_one(settings.codec, settings.level, chunk);
-    if payload.len() >= chunk.len() && codec != Codec::None {
+    // The stored (Codec::None) path writes the chunk straight into the
+    // container — no intermediate copy, no per-block allocation.
+    let payload = match settings.codec {
+        Codec::None => None,
+        Codec::Lz4r => Some(lz4r::compress(chunk, settings.level)),
+        Codec::Rzip => Some(rzip::compress(chunk, settings.level)),
+    };
+    match payload {
         // Incompressible: store raw, like ROOT.
-        codec = Codec::None;
-        payload = chunk.to_vec();
+        Some(p) if p.len() < chunk.len() => {
+            write_header(out, settings.codec, settings.level, p.len(), chunk.len());
+            out.extend_from_slice(&p);
+        }
+        _ => {
+            write_header(out, Codec::None, settings.level, chunk.len(), chunk.len());
+            out.extend_from_slice(chunk);
+        }
     }
-    out.extend_from_slice(&codec.tag());
-    out.push(settings.level);
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
-    out.extend_from_slice(&payload);
 }
 
-/// Compress `src` into the block container format.
-pub fn compress(settings: Settings, src: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(src.len() / 2 + HEADER_LEN);
+/// Compress `src` into the block container format, appending to `out`
+/// (which typically comes from [`pool`], so steady-state flushes do
+/// not allocate scratch).
+pub fn compress_into(settings: Settings, src: &[u8], out: &mut Vec<u8>) {
+    out.reserve(src.len() / 2 + HEADER_LEN);
     if src.is_empty() {
         // Always emit at least one block so empty payloads round-trip.
-        emit_block(&mut out, settings, src);
-        return out;
+        emit_block(out, settings, src);
+        return;
     }
     for chunk in src.chunks(MAX_BLOCK) {
-        emit_block(&mut out, settings, chunk);
+        emit_block(out, settings, chunk);
     }
+}
+
+/// Compress `src` into a fresh block-container buffer.
+pub fn compress(settings: Settings, src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + HEADER_LEN);
+    compress_into(settings, src, &mut out);
     out
 }
 
@@ -156,56 +171,80 @@ pub struct BlockInfo {
     pub payload_off: usize,
 }
 
+/// Parse the block header at byte offset `pos`.
+fn parse_block_at(src: &[u8], pos: usize) -> Result<BlockInfo> {
+    if pos + HEADER_LEN > src.len() {
+        return Err(Error::Codec("truncated block header".into()));
+    }
+    let codec = Codec::from_tag([src[pos], src[pos + 1]])?;
+    let comp_len =
+        u32::from_le_bytes([src[pos + 3], src[pos + 4], src[pos + 5], src[pos + 6]]) as usize;
+    let raw_len =
+        u32::from_le_bytes([src[pos + 7], src[pos + 8], src[pos + 9], src[pos + 10]]) as usize;
+    if raw_len > MAX_BLOCK {
+        return Err(Error::Codec(format!("block too large: {raw_len}")));
+    }
+    let payload_off = pos + HEADER_LEN;
+    if payload_off + comp_len > src.len() {
+        return Err(Error::Codec("truncated block payload".into()));
+    }
+    Ok(BlockInfo { codec, comp_len, raw_len, payload_off })
+}
+
 /// Parse block boundaries without decompressing (used by the parallel
 /// decompression scheduler to fan blocks out to the task pool).
 pub fn scan_blocks(src: &[u8]) -> Result<Vec<BlockInfo>> {
     let mut blocks = Vec::new();
     let mut pos = 0usize;
     while pos < src.len() {
-        if pos + HEADER_LEN > src.len() {
-            return Err(Error::Codec("truncated block header".into()));
-        }
-        let codec = Codec::from_tag([src[pos], src[pos + 1]])?;
-        let comp_len =
-            u32::from_le_bytes([src[pos + 3], src[pos + 4], src[pos + 5], src[pos + 6]]) as usize;
-        let raw_len =
-            u32::from_le_bytes([src[pos + 7], src[pos + 8], src[pos + 9], src[pos + 10]]) as usize;
-        if raw_len > MAX_BLOCK {
-            return Err(Error::Codec(format!("block too large: {raw_len}")));
-        }
-        let payload_off = pos + HEADER_LEN;
-        if payload_off + comp_len > src.len() {
-            return Err(Error::Codec("truncated block payload".into()));
-        }
-        blocks.push(BlockInfo { codec, comp_len, raw_len, payload_off });
-        pos = payload_off + comp_len;
+        let b = parse_block_at(src, pos)?;
+        pos = b.payload_off + b.comp_len;
+        blocks.push(b);
     }
     Ok(blocks)
 }
 
-/// Decompress a single scanned block.
-pub fn decompress_block(src: &[u8], b: &BlockInfo) -> Result<Vec<u8>> {
+/// Decompress a single scanned block, appending to `out`.
+pub fn decompress_block_into(src: &[u8], b: &BlockInfo, out: &mut Vec<u8>) -> Result<()> {
     let payload = &src[b.payload_off..b.payload_off + b.comp_len];
     match b.codec {
         Codec::None => {
             if payload.len() != b.raw_len {
                 return Err(Error::Codec("stored block size mismatch".into()));
             }
-            Ok(payload.to_vec())
+            out.extend_from_slice(payload);
+            Ok(())
         }
-        Codec::Lz4r => lz4r::decompress(payload, b.raw_len),
-        Codec::Rzip => rzip::decompress(payload, b.raw_len),
+        Codec::Lz4r => lz4r::decompress_into(payload, b.raw_len, out),
+        Codec::Rzip => rzip::decompress_into(payload, b.raw_len, out),
     }
 }
 
-/// Decompress a whole container buffer (all blocks, sequentially).
-pub fn decompress(src: &[u8]) -> Result<Vec<u8>> {
-    let blocks = scan_blocks(src)?;
-    let total: usize = blocks.iter().map(|b| b.raw_len).sum();
-    let mut out = Vec::with_capacity(total);
-    for b in &blocks {
-        out.extend_from_slice(&decompress_block(src, &b)?);
+/// Decompress a single scanned block into a fresh buffer.
+pub fn decompress_block(src: &[u8], b: &BlockInfo) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(b.raw_len);
+    decompress_block_into(src, b, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress a whole container buffer, appending to `out`. This is
+/// the basket hot path: `out` comes from [`pool`], blocks are parsed
+/// and expanded in-place, and no intermediate buffers are allocated.
+pub fn decompress_into(src: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let mut pos = 0usize;
+    while pos < src.len() {
+        let b = parse_block_at(src, pos)?;
+        out.reserve(b.raw_len);
+        decompress_block_into(src, &b, out)?;
+        pos = b.payload_off + b.comp_len;
     }
+    Ok(())
+}
+
+/// Decompress a whole container buffer into a fresh `Vec`.
+pub fn decompress(src: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_into(src, &mut out)?;
     Ok(out)
 }
 
@@ -272,6 +311,29 @@ mod tests {
         let mut c = compress(Settings::default(), &data);
         c.truncate(c.len() - 1);
         assert!(scan_blocks(&c).is_err());
+    }
+
+    #[test]
+    fn decompress_into_appends_at_nonzero_base() {
+        // Back-references inside a block must resolve relative to the
+        // block's own start, not the start of the output buffer.
+        let data = b"abcabcabc_repeat_repeat_repeat".repeat(500);
+        for codec in [Codec::None, Codec::Lz4r, Codec::Rzip] {
+            let c = compress(Settings::new(codec, 5), &data);
+            let mut out = b"prefix".to_vec();
+            decompress_into(&c, &mut out).unwrap();
+            assert_eq!(&out[..6], b"prefix", "{codec:?}");
+            assert_eq!(&out[6..], &data[..], "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn compress_into_appends() {
+        let data = sample(10_000);
+        let mut out = vec![0xEE; 3];
+        compress_into(Settings::new(Codec::Lz4r, 3), &data, &mut out);
+        assert_eq!(&out[..3], &[0xEE; 3]);
+        assert_eq!(decompress(&out[3..]).unwrap(), data);
     }
 
     #[test]

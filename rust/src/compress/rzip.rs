@@ -236,8 +236,10 @@ pub fn compress(src: &[u8], level: u8) -> Vec<u8> {
     out
 }
 
-/// Decompress into exactly `dst_len` bytes.
-pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
+/// Decompress exactly `dst_len` bytes, appending to `out`. Match
+/// distances are resolved relative to the start of this block's output
+/// (`out` may already hold earlier blocks — the pooled-buffer path).
+pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
     let err = |m: &str| Error::Codec(format!("rzip: {m}"));
     if src.len() < 4 {
         return Err(err("truncated header"));
@@ -254,7 +256,8 @@ pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
     let lit_dec = Decoder::from_lengths(&src[4..4 + n_lit])?;
     let dist_dec = Decoder::from_lengths(&src[4 + n_lit..tbl_end])?;
 
-    let mut out = Vec::with_capacity(dst_len);
+    let base = out.len();
+    out.reserve(dst_len);
     let mut r = BitReader::new(&src[tbl_end..]);
     loop {
         let sym = lit_dec.read(&mut r)?;
@@ -269,7 +272,7 @@ pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
             let dc = dist_dec.read(&mut r)?;
             let dx = r.get(bucket_bits(dc));
             let dist = unbucket(dc, dx) as usize + 1;
-            if dist > out.len() {
+            if dist > out.len() - base {
                 return Err(err("bad distance"));
             }
             let start = out.len() - dist;
@@ -283,13 +286,24 @@ pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
                 }
             }
         }
-        if out.len() > dst_len {
+        if out.len() - base > dst_len {
             return Err(err("output overrun"));
         }
     }
-    if out.len() != dst_len {
-        return Err(err(&format!("size mismatch: got {}, want {}", out.len(), dst_len)));
+    if out.len() - base != dst_len {
+        return Err(err(&format!(
+            "size mismatch: got {}, want {}",
+            out.len() - base,
+            dst_len
+        )));
     }
+    Ok(())
+}
+
+/// Decompress into exactly `dst_len` bytes.
+pub fn decompress(src: &[u8], dst_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(dst_len);
+    decompress_into(src, dst_len, &mut out)?;
     Ok(out)
 }
 

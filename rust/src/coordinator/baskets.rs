@@ -3,11 +3,16 @@
 //!
 //! Baskets are grouped in aligned clusters (all branches cut at the
 //! same entries). Each cluster becomes one task: fetch + decompress +
-//! deserialise its branch baskets. When an analysis [`Engine`] is
-//! attached, the completed cluster is immediately submitted to the PJRT
-//! analysis graph; the graph runs on the runtime service thread, so
-//! *processing of decompressed data overlaps with decompression of the
-//! next clusters* — exactly the interleaving the paper ships in ROOT 6.14.
+//! deserialise its branch baskets. With `split_clusters` (default) a
+//! cluster additionally fans out one subtask per branch basket on the
+//! work-stealing pool, so a tree whose cluster count is smaller than
+//! the thread count still saturates every core — parallelism scales
+//! as `min(total_baskets, T)` rather than `min(clusters, T)`. When an
+//! analysis [`Engine`] is attached, the completed cluster is
+//! immediately submitted to the PJRT analysis graph; the graph runs on
+//! the runtime service thread, so *processing of decompressed data
+//! overlaps with decompression of the next clusters* — exactly the
+//! interleaving the paper ships in ROOT 6.14.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -15,13 +20,24 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::imt;
 use crate::runtime::Engine;
+use crate::serial::column::ColumnData;
 use crate::tree::reader::TreeReader;
 
 /// Pipeline options.
-#[derive(Default, Clone, Debug)]
+#[derive(Clone, Debug)]
 pub struct PipelineOptions {
     /// Force serial decompression (the IMT-off baseline).
     pub force_serial: bool,
+    /// Split each cluster into per-branch basket subtasks (nested on
+    /// the work-stealing pool). Off = one monolithic task per cluster,
+    /// the pre-split behaviour kept for comparison benchmarks.
+    pub split_clusters: bool,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions { force_serial: false, split_clusters: true }
+    }
 }
 
 /// Accounting from one pipeline run.
@@ -91,16 +107,29 @@ pub fn run(
     let errors: Mutex<Vec<Error>> = Mutex::new(Vec::new());
     let t0 = Instant::now();
 
+    let parallel = !opts.force_serial && imt::is_enabled();
+    // Oversized-cluster splitting: with fewer clusters than workers a
+    // per-cluster task graph strands cores, so each cluster's branch
+    // baskets become their own pool subtasks (nested scopes are
+    // deadlock-free — the owner helps execute).
+    let split = parallel && opts.split_clusters && meta.branches.len() > 1;
+
     let process_cluster = |k: usize| {
         let (first_entry, n_entries, basket) = cuts[k];
         let _ = first_entry;
         let run_one = || -> Result<()> {
             // fetch + decompress + deserialise every branch's basket
-            let mut cols = Vec::with_capacity(meta.branches.len());
-            for b in 0..meta.branches.len() {
-                let raw = reader.fetch_raw(b, basket)?;
-                cols.push(reader.decode(b, basket, &raw)?);
-            }
+            let cols: Vec<ColumnData> = if split {
+                imt::parallel_map(meta.branches.len(), |b| reader.read_basket(b, basket))
+                    .into_iter()
+                    .collect::<Result<_>>()?
+            } else {
+                let mut cols = Vec::with_capacity(meta.branches.len());
+                for b in 0..meta.branches.len() {
+                    cols.push(reader.read_basket(b, basket)?);
+                }
+                cols
+            };
             if let Some(engine) = engine {
                 let n = n_entries as usize;
                 let ncols = engine.meta().ncols;
@@ -134,12 +163,12 @@ pub fn run(
         }
     };
 
-    if opts.force_serial || !imt::is_enabled() {
+    if parallel {
+        imt::parallel_for(cuts.len(), process_cluster);
+    } else {
         for k in 0..cuts.len() {
             process_cluster(k);
         }
-    } else {
-        imt::parallel_for(cuts.len(), process_cluster);
     }
 
     if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
@@ -214,7 +243,9 @@ mod tests {
     fn serial_pipeline_accounts_everything() {
         let file = build(6, 2000, 512);
         let reader = TreeReader::open_first(file).unwrap();
-        let rep = run(&reader, None, &PipelineOptions { force_serial: true }).unwrap();
+        let rep =
+            run(&reader, None, &PipelineOptions { force_serial: true, ..Default::default() })
+                .unwrap();
         assert_eq!(rep.clusters, 4);
         assert_eq!(rep.baskets, 24);
         assert_eq!(rep.entries, 2000);
@@ -226,11 +257,34 @@ mod tests {
     fn parallel_matches_serial_accounting() {
         let file = build(6, 2000, 250);
         let reader = TreeReader::open_first(file).unwrap();
-        let serial = run(&reader, None, &PipelineOptions { force_serial: true }).unwrap();
+        let serial =
+            run(&reader, None, &PipelineOptions { force_serial: true, ..Default::default() })
+                .unwrap();
         crate::imt::enable(4);
         let parallel = run(&reader, None, &PipelineOptions::default()).unwrap();
         crate::imt::disable();
         assert_eq!(serial.raw_bytes, parallel.raw_bytes);
         assert_eq!(serial.clusters, parallel.clusters);
+    }
+
+    #[test]
+    fn split_and_unsplit_clusters_agree() {
+        // Fewer clusters (2) than workers (4): splitting is what keeps
+        // the extra workers busy; both modes must account identically.
+        let file = build(8, 1000, 500);
+        let reader = TreeReader::open_first(file).unwrap();
+        crate::imt::enable(4);
+        let split = run(&reader, None, &PipelineOptions::default()).unwrap();
+        let unsplit = run(
+            &reader,
+            None,
+            &PipelineOptions { force_serial: false, split_clusters: false },
+        )
+        .unwrap();
+        crate::imt::disable();
+        assert_eq!(split.clusters, 2);
+        assert_eq!(split.baskets, unsplit.baskets);
+        assert_eq!(split.raw_bytes, unsplit.raw_bytes);
+        assert_eq!(split.entries, unsplit.entries);
     }
 }

@@ -77,6 +77,61 @@ pub fn save_csv(name: &str, table: &Table) {
     }
 }
 
+/// One machine-readable benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Free-form case label (dataset, mode, ...). Must not contain `"`.
+    pub label: String,
+    pub threads: usize,
+    pub wall_ms: f64,
+    pub mbps: f64,
+}
+
+/// Emit `BENCH_<name>.json` in the working directory so CI can track
+/// the perf trajectory across PRs (hand-rolled JSON: no serde in this
+/// offline environment). Best-effort, like [`save_csv`].
+pub fn save_bench_json(name: &str, rows: &[BenchRow]) {
+    let mut s = String::with_capacity(64 + rows.len() * 96);
+    s.push_str("{\"bench\":\"");
+    s.push_str(name);
+    s.push_str("\",\"rows\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"label\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"MBps\":{:.3}}}",
+            r.label, r.threads, r.wall_ms, r.mbps
+        ));
+    }
+    s.push_str("]}\n");
+    let _ = std::fs::write(format!("BENCH_{name}.json"), s);
+}
+
+/// Build an in-memory flat-f32 file with exactly `n_branches` branches
+/// — the narrow-tree shape where basket granularity beats branch
+/// granularity (B < T).
+pub fn synthesize_flat_f32(
+    n_branches: usize,
+    entries: usize,
+    basket_entries: usize,
+    compression: Settings,
+) -> Result<BackendRef> {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let schema = crate::serial::schema::Schema::flat_f32("n", n_branches);
+    let mut rng = SplitMix::new(42);
+    let block: Vec<ColumnData> = (0..n_branches)
+        .map(|b| {
+            ColumnData::F32(
+                (0..entries).map(|i| rng.uniform() * (b + 1) as f32 + (i % 13) as f32).collect(),
+            )
+        })
+        .collect();
+    let cfg = WriterConfig { basket_entries, compression, parallel_flush: false };
+    write_blocks(be.clone(), schema, "events", cfg, vec![block])?;
+    Ok(be)
+}
+
 /// Try to load the PJRT engine; fall back to None (pure-rust event
 /// synthesis) when artifacts are not built.
 pub fn try_engine() -> Option<Engine> {

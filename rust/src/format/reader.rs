@@ -60,16 +60,27 @@ impl FileReader {
         &self.backend
     }
 
-    /// Fetch the stored bytes of one basket, verifying its CRC.
-    pub fn fetch_basket(&self, b: &BasketInfo) -> Result<Vec<u8>> {
-        let mut buf = vec![0u8; b.comp_len as usize];
-        self.backend.read_at(b.offset, &mut buf)?;
-        if crc32(&buf) != b.crc {
+    /// Fetch the stored bytes of one basket into `buf` (replacing its
+    /// contents), verifying the CRC. With a pooled `buf` (see
+    /// [`crate::compress::pool`]) the fetch allocates nothing in
+    /// steady state.
+    pub fn fetch_basket_into(&self, b: &BasketInfo, buf: &mut Vec<u8>) -> Result<()> {
+        buf.clear();
+        buf.resize(b.comp_len as usize, 0);
+        self.backend.read_at(b.offset, buf)?;
+        if crc32(buf) != b.crc {
             return Err(Error::Format(format!(
                 "basket at offset {} failed checksum",
                 b.offset
             )));
         }
+        Ok(())
+    }
+
+    /// Fetch the stored bytes of one basket, verifying its CRC.
+    pub fn fetch_basket(&self, b: &BasketInfo) -> Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(b.comp_len as usize);
+        self.fetch_basket_into(b, &mut buf)?;
         Ok(buf)
     }
 }

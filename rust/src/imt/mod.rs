@@ -12,11 +12,15 @@
 //! rootio_par::imt::disable();
 //! ```
 //!
-//! The pool is a from-scratch scoped work queue (the TBB analogue):
-//! workers pull boxed jobs from a mutex-protected deque; [`Pool::scope`]
-//! lets callers spawn borrowing closures, and the scope owner *helps
-//! execute* queued jobs while it waits, so nested scopes cannot
-//! deadlock and a blocked caller still contributes CPU.
+//! The pool is a from-scratch scoped *work-stealing* scheduler (the
+//! TBB analogue): every worker owns a deque (LIFO local execution,
+//! FIFO stealing) and an injector queue receives jobs from non-worker
+//! threads, so hot paths never contend on a single global lock.
+//! [`Pool::scope`] lets callers spawn borrowing closures, and the
+//! scope owner *helps execute* queued jobs while it waits, so nested
+//! scopes cannot deadlock and a blocked caller still contributes CPU.
+//! Idle threads park on a condvar (no polling) and are woken
+//! event-count style only when work arrives.
 
 mod pool;
 

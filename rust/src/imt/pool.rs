@@ -1,27 +1,152 @@
-//! The scoped task pool backing IMT.
+//! The scoped task pool backing IMT — a work-stealing scheduler.
 //!
-//! Safety model: [`Pool::scope`] erases the lifetime of spawned closures
-//! (they borrow from the caller's stack) but guarantees every spawned
-//! job has finished before `scope` returns — the standard
-//! scoped-threadpool construction. Panics inside jobs are caught,
+//! Topology: every worker owns a deque (local push/pop at the back =
+//! LIFO, steals from the front = FIFO) and the pool keeps one shared
+//! FIFO *injector* queue for jobs submitted from non-worker threads.
+//! LIFO local execution keeps nested task trees cache-hot and bounds
+//! queue growth (depth-first), while FIFO stealing takes the oldest —
+//! typically largest — subtree, which is the classic Cilk/TBB policy
+//! the paper's IMT engine relies on.
+//!
+//! Wakeups are event-count style: sleepers park on one condvar and the
+//! producer side only touches the sleep mutex when `sleepers > 0`, so
+//! the uncontended spawn path is queue-lock + atomic. There is no
+//! polling loop anywhere (the old implementation woke every waiter each
+//! millisecond).
+//!
+//! Safety model: [`Pool::scope`] erases the lifetime of spawned
+//! closures (they borrow from the caller's stack) but guarantees every
+//! spawned job has finished before `scope` returns — the standard
+//! scoped-threadpool construction. The scope owner *helps execute*
+//! queued jobs while it waits, so nested scopes cannot deadlock and a
+//! blocked caller still contributes CPU. Panics inside jobs are caught,
 //! recorded, and re-thrown at the scope join point.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct Shared {
-    queue: Mutex<VecDeque<Job>>,
-    work_cv: Condvar,
-    shutdown: AtomicBool,
+/// Worker identity of the current thread: (shared-state address, index
+/// + 1). Lets `push` route jobs to the local deque and `scope` steal
+/// with the right rotation, without any global registry.
+thread_local! {
+    static WORKER_ID: Cell<(usize, usize)> = const { Cell::new((0, 0)) };
 }
 
-/// Fixed-size worker pool with a shared FIFO queue.
+struct Shared {
+    /// FIFO queue for jobs submitted from threads outside the pool.
+    injector: Mutex<VecDeque<Job>>,
+    /// Per-worker deques: owner pushes/pops at the back, thieves pop
+    /// the front.
+    locals: Vec<Mutex<VecDeque<Job>>>,
+    /// Total jobs currently queued across injector + locals. Producers
+    /// increment *before* enqueuing, consumers decrement *after*
+    /// dequeuing, so a non-zero count is visible to any sleeper that
+    /// races with an in-flight push.
+    queued: AtomicUsize,
+    /// Number of threads parked on `work_cv` (workers and helping
+    /// scope owners alike).
+    sleepers: AtomicUsize,
+    sleep_mx: Mutex<()>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    /// Rotation seed so external stealers don't all hammer worker 0.
+    next_steal: AtomicUsize,
+}
+
+impl Shared {
+    fn id(&self) -> usize {
+        self as *const Shared as usize
+    }
+
+    /// Worker index of the current thread *in this pool*, if any.
+    fn current_worker(&self) -> Option<usize> {
+        WORKER_ID.with(|w| {
+            let (pool, idx) = w.get();
+            if pool == self.id() && idx > 0 {
+                Some(idx - 1)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Enqueue one job: local deque when called from a worker of this
+    /// pool (LIFO execution order), injector otherwise.
+    fn push(&self, job: Job) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        match self.current_worker() {
+            Some(i) => self.locals[i].lock().unwrap().push_back(job),
+            None => self.injector.lock().unwrap().push_back(job),
+        }
+        self.notify_one();
+    }
+
+    /// Wake one sleeper if anyone is parked. The mutex acquisition
+    /// orders the notify against a sleeper that is between its
+    /// `sleepers` increment and its `wait`, closing the lost-wakeup
+    /// window.
+    fn notify_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep_mx.lock().unwrap();
+            self.work_cv.notify_one();
+        }
+    }
+
+    fn notify_all(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep_mx.lock().unwrap();
+            self.work_cv.notify_all();
+        }
+    }
+
+    /// Unconditional wake-everyone, used only at shutdown where the
+    /// `sleepers > 0` fast-path check could race with a worker that is
+    /// about to park.
+    fn notify_all_unconditional(&self) {
+        let _g = self.sleep_mx.lock().unwrap();
+        self.work_cv.notify_all();
+    }
+
+    /// Pop one job: own deque back (LIFO), then injector front, then
+    /// steal the front of the other workers' deques (FIFO), rotating
+    /// the start position.
+    fn find_job(&self, me: Option<usize>) -> Option<Job> {
+        if let Some(i) = me {
+            if let Some(j) = self.locals[i].lock().unwrap().pop_back() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Some(j);
+            }
+        }
+        if let Some(j) = self.injector.lock().unwrap().pop_front() {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            return Some(j);
+        }
+        let n = self.locals.len();
+        let start = match me {
+            Some(i) => i + 1,
+            None => self.next_steal.fetch_add(1, Ordering::Relaxed),
+        };
+        for d in 0..n {
+            let v = (start + d) % n;
+            if Some(v) == me {
+                continue;
+            }
+            if let Some(j) = self.locals[v].lock().unwrap().pop_front() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Some(j);
+            }
+        }
+        None
+    }
+}
+
+/// Fixed-size work-stealing worker pool.
 pub struct Pool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
@@ -33,16 +158,21 @@ impl Pool {
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            sleep_mx: Mutex::new(()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            next_steal: AtomicUsize::new(0),
         });
         let workers = (0..n)
             .map(|i| {
                 let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("imt-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || worker_loop(&sh, i))
                     .expect("spawn imt worker")
             })
             .collect();
@@ -53,15 +183,6 @@ impl Pool {
         self.nthreads
     }
 
-    fn push(&self, job: Job) {
-        self.shared.queue.lock().unwrap().push_back(job);
-        self.shared.work_cv.notify_one();
-    }
-
-    fn try_pop(&self) -> Option<Job> {
-        self.shared.queue.lock().unwrap().pop_front()
-    }
-
     /// Run a scope: closures spawned on `Scope` may borrow from the
     /// caller; all of them complete before `scope` returns.
     pub fn scope<'env, F, R>(&self, f: F) -> R
@@ -70,24 +191,46 @@ impl Pool {
     {
         let state = Arc::new(GroupState {
             pending: AtomicUsize::new(0),
-            done_cv: Condvar::new(),
-            done_mx: Mutex::new(()),
             panicked: AtomicBool::new(false),
         });
         let scope = Scope { pool: self, state: state.clone(), _marker: std::marker::PhantomData };
-        let out = f(&scope);
-        // Help execute queued work while waiting for our jobs.
-        while state.pending.load(Ordering::Acquire) > 0 {
-            if let Some(job) = self.try_pop() {
+        // Catch an unwind of the scope closure itself: jobs it already
+        // spawned borrow the caller's frame, so we must run the join
+        // loop below before letting the panic continue (otherwise a
+        // worker could execute a job against a destroyed stack frame).
+        let out = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        let sh = &self.shared;
+        let me = sh.current_worker();
+        // Help execute queued work until all our jobs have finished.
+        while state.pending.load(Ordering::SeqCst) > 0 {
+            if let Some(job) = sh.find_job(me) {
                 job();
-            } else {
-                let g = state.done_mx.lock().unwrap();
-                if state.pending.load(Ordering::Acquire) > 0 {
-                    let _ = state.done_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
-                }
+                continue;
             }
+            // Nothing runnable: park until a job arrives (it might be
+            // one of ours, stolen back) or our last job completes.
+            let g = sh.sleep_mx.lock().unwrap();
+            sh.sleepers.fetch_add(1, Ordering::SeqCst);
+            if state.pending.load(Ordering::SeqCst) == 0
+                || sh.queued.load(Ordering::SeqCst) > 0
+            {
+                sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let g = sh.work_cv.wait(g).unwrap();
+            sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+            drop(g);
         }
-        if state.panicked.load(Ordering::Acquire) {
+        // If a wake meant for a queued job landed on us while our last
+        // job was completing, pass it on so the job is not stranded.
+        if sh.queued.load(Ordering::SeqCst) > 0 {
+            sh.notify_one();
+        }
+        let out = match out {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
+        if state.panicked.load(Ordering::SeqCst) {
             panic!("task in imt scope panicked");
         }
         out
@@ -101,7 +244,8 @@ impl Pool {
         if n == 0 {
             return;
         }
-        // ~4 chunks per worker balances scheduling overhead vs skew.
+        // ~4 chunks per worker balances scheduling overhead vs skew;
+        // work stealing absorbs whatever skew remains.
         let chunks = (self.nthreads * 4).min(n);
         let chunk = n.div_ceil(chunks);
         self.scope(|s| {
@@ -118,64 +262,81 @@ impl Pool {
         });
     }
 
-    /// Ordered parallel map.
+    /// Ordered parallel map. Each task writes its own slot through a
+    /// dedicated `Mutex<Option<T>>` cell — fully safe (no raw-pointer
+    /// aliasing), and the per-slot locks are uncontended by
+    /// construction (exactly one task touches each slot).
     pub fn parallel_map<T, F>(&self, n: usize, f: &F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        {
-            let slots = out.as_mut_ptr() as usize;
-            self.scope(|s| {
-                for i in 0..n {
-                    s.spawn(move || {
-                        // SAFETY: each task writes a distinct slot, and the
-                        // scope joins before `out` is read or dropped.
-                        unsafe {
-                            let p = (slots as *mut Option<T>).add(i);
-                            std::ptr::write(p, Some(f(i)));
-                        }
-                    });
-                }
-            });
+        if n == 0 {
+            return Vec::new();
         }
-        out.into_iter().map(|v| v.expect("slot filled")).collect()
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.parallel_for(n, &|i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
+            .collect()
     }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.work_cv.notify_all();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.notify_all_unconditional();
+        let current = std::thread::current().id();
         for w in self.workers.drain(..) {
+            // If the last reference to the pool is dropped from inside
+            // one of its own workers (e.g. a nested job held the final
+            // Arc), joining ourselves would deadlock — detach instead;
+            // the worker exits on its own via the shutdown flag.
+            if w.thread().id() == current {
+                continue;
+            }
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(sh: &Shared) {
+fn worker_loop(sh: &Arc<Shared>, me: usize) {
+    WORKER_ID.with(|w| w.set((sh.id(), me + 1)));
     loop {
-        let job = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if let Some(j) = q.pop_front() {
-                    break j;
-                }
-                if sh.shutdown.load(Ordering::Acquire) {
-                    return;
-                }
-                q = sh.work_cv.wait(q).unwrap();
+        if let Some(job) = sh.find_job(Some(me)) {
+            job();
+            continue;
+        }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            // Drain: jobs enqueued before shutdown must still run, or a
+            // scope owner would be left waiting on work nobody takes.
+            while let Some(job) = sh.find_job(Some(me)) {
+                job();
             }
-        };
-        job();
+            break;
+        }
+        // Park. The `sleepers` increment happens under the sleep mutex
+        // and is re-checked by producers, so a push that raced with us
+        // either sees the increment (and notifies) or enqueued before
+        // our `queued` check below (and we skip the wait).
+        let g = sh.sleep_mx.lock().unwrap();
+        sh.sleepers.fetch_add(1, Ordering::SeqCst);
+        if sh.queued.load(Ordering::SeqCst) > 0 || sh.shutdown.load(Ordering::SeqCst) {
+            sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        let g = sh.work_cv.wait(g).unwrap();
+        sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+        drop(g);
     }
+    WORKER_ID.with(|w| w.set((0, 0)));
 }
 
 struct GroupState {
     pending: AtomicUsize,
-    done_cv: Condvar,
-    done_mx: Mutex<()>,
     panicked: AtomicBool,
 }
 
@@ -191,19 +352,22 @@ impl<'env, 'p> Scope<'env, 'p> {
     where
         F: FnOnce() + Send + 'env,
     {
-        self.state.pending.fetch_add(1, Ordering::AcqRel);
+        self.state.pending.fetch_add(1, Ordering::SeqCst);
         let state = self.state.clone();
+        let shared = self.pool.shared.clone();
         let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
             if catch_unwind(AssertUnwindSafe(f)).is_err() {
-                state.panicked.store(true, Ordering::Release);
+                state.panicked.store(true, Ordering::SeqCst);
             }
-            let _g = state.done_mx.lock().unwrap();
-            state.pending.fetch_sub(1, Ordering::AcqRel);
-            state.done_cv.notify_all();
+            // Last job out wakes the (possibly parked) scope owner.
+            if state.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                shared.notify_all();
+            }
         });
-        // SAFETY: Pool::scope joins all jobs before 'env ends.
+        // SAFETY: Pool::scope joins all jobs before 'env ends, and the
+        // wrapper only touches 'env-borrowed data inside `f`.
         let job: Job = unsafe { std::mem::transmute(job) };
-        self.pool.push(job);
+        self.pool.shared.push(job);
     }
 }
 
@@ -233,6 +397,17 @@ mod tests {
         let pool = Pool::new(8);
         let v = pool.parallel_map(257, &|i| i as u32 * 3);
         assert_eq!(v, (0..257u32).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_boxed_values_no_unsafe() {
+        // Non-Copy, heap-owning values through the safe slot cells —
+        // runs clean under Miri (no raw-pointer writes involved).
+        let pool = Pool::new(4);
+        let v = pool.parallel_map(100, &|i| Box::new(format!("item-{i}")));
+        for (i, s) in v.iter().enumerate() {
+            assert_eq!(**s, format!("item-{i}"));
+        }
     }
 
     #[test]
@@ -268,12 +443,55 @@ mod tests {
     }
 
     #[test]
+    fn deeply_nested_scopes_on_one_worker() {
+        // Depth 5 on a single-thread pool: only the helping scope
+        // owners can make progress — exercises LIFO local execution.
+        let pool = Pool::new(1);
+        fn recurse(pool: &Pool, depth: usize, count: &AtomicUsize) {
+            if depth == 0 {
+                count.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            pool.scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(move || recurse(pool, depth - 1, count));
+                }
+            });
+        }
+        let count = AtomicUsize::new(0);
+        recurse(&pool, 5, &count);
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
     #[should_panic(expected = "task in imt scope panicked")]
     fn panic_propagates_at_join() {
         let pool = Pool::new(2);
         pool.scope(|s| {
             s.spawn(|| panic!("boom"));
         });
+    }
+
+    #[test]
+    fn scope_closure_panic_still_joins_jobs() {
+        // If the scope body itself unwinds, already-spawned jobs
+        // borrow the (unwinding) caller frame — scope must join them
+        // before the panic propagates.
+        let pool = Pool::new(2);
+        let n = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                for _ in 0..16 {
+                    let n = &n;
+                    s.spawn(move || {
+                        n.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                panic!("scope body panics");
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(n.load(Ordering::Relaxed), 16, "all jobs joined before unwind");
     }
 
     #[test]
@@ -299,5 +517,75 @@ mod tests {
             });
             assert_eq!(n.load(Ordering::Relaxed), 8, "round {round}");
         }
+    }
+
+    #[test]
+    fn steal_balances_skewed_load() {
+        // One long task plus many short ones: with stealing, the short
+        // ones complete on other workers while the long one runs.
+        let pool = Pool::new(4);
+        let done = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let done = &done;
+            s.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+            for _ in 0..64 {
+                s.spawn(move || {
+                    done.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 65);
+    }
+
+    #[test]
+    fn drop_after_heavy_load_is_clean() {
+        // Shutdown must not strand queued jobs (drain-on-shutdown) and
+        // must not hang the dropping thread.
+        for _ in 0..20 {
+            let pool = Pool::new(3);
+            let n = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..128 {
+                    let n = &n;
+                    s.spawn(move || {
+                        n.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 128);
+            drop(pool);
+        }
+    }
+
+    #[test]
+    fn external_thread_scopes_run_concurrently() {
+        // Several non-worker threads drive scopes on one pool at once;
+        // all their jobs land in the injector and must all complete.
+        let pool = Arc::new(Pool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    pool.scope(|s| {
+                        for _ in 0..8 {
+                            let total = &*total;
+                            s.spawn(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 8);
     }
 }

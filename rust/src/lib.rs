@@ -9,15 +9,19 @@
 //!
 //! * [`compress`] — block compression codecs (LZ4-style and a
 //!   deflate-style LZ77 + canonical-Huffman codec) behind ROOT-like
-//!   9-byte block headers, plus CRC32 integrity.
+//!   9-byte block headers, plus CRC32 integrity, plus a thread-local /
+//!   shared scratch-buffer pool ([`compress::pool`]) so steady-state
+//!   basket (de)compression performs no heap allocation.
 //! * [`serial`] — schema-driven object streamers: rows of typed values
 //!   split into per-column buffers (ROOT's TBuffer + streamer-info).
 //! * [`format`] — the `RNTF` container file format (TFile/TKey/TDirectory
 //!   analogue): append-only records plus a footer directory.
 //! * [`tree`] — TTree/TBranch/TBasket analogue: columnar trees of typed
 //!   branches, basketised, written/read through [`format`].
-//! * [`imt`] — implicit multi-threading: a global task pool with scoped
-//!   task groups, the engine behind all "IMT on" paths (TBB analogue).
+//! * [`imt`] — implicit multi-threading: a global *work-stealing* task
+//!   pool (per-worker LIFO deques, FIFO stealing, an injector queue,
+//!   condvar parking — no polling) with scoped task groups, the engine
+//!   behind all "IMT on" paths (TBB analogue).
 //! * [`storage`] — storage backends: local files and deterministic
 //!   simulated devices (HDD / SSD / NVMe / tmpfs) for the paper's
 //!   device-comparison experiments.
@@ -30,8 +34,11 @@
 //! * [`framework`] — a CMSSW-like mini framework: N concurrent streams
 //!   generating, processing and writing events (paper §3.1, Figure 3).
 //! * [`coordinator`] — the paper's contribution: parallel column
-//!   reading, parallel basket decompression with interleaved
-//!   processing, and parallel column writing.
+//!   reading at basket granularity (per-(branch, basket) tasks with
+//!   ordered reassembly, scaling as `min(total_baskets, T)` instead of
+//!   `min(branches, T)`), parallel basket decompression with cluster
+//!   splitting and interleaved processing, and parallel column
+//!   writing.
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 

@@ -5,7 +5,7 @@
 //! rootio generate --out <path> [--dataset reco|aod|gensim|xaod]
 //!                 [--entries N] [--codec none|lz4|zlib] [--level L]
 //! rootio inspect <path>
-//! rootio read <path> [--threads N]
+//! rootio read <path> [--threads N] [--granularity basket|branch]
 //! rootio analyze <path> [--threads N]
 //! ```
 //!
@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::coordinator::baskets::{self, PipelineOptions};
-use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::coordinator::read::{read_columns, Granularity, ReadOptions};
 use rootio_par::error::Result;
 use rootio_par::format::reader::FileReader;
 use rootio_par::framework::dataset::DatasetKind;
@@ -67,7 +67,8 @@ fn usage() -> Result<()> {
         "usage:\n  rootio bench <fig1|fig2|fig3|fig6|fig7|hadd|codec|all> [--quick]\n  \
          rootio generate --out <path> [--dataset reco|aod|gensim|xaod] [--entries N] \
          [--codec none|lz4|zlib] [--level L]\n  rootio inspect <path>\n  \
-         rootio read <path> [--threads N]\n  rootio analyze <path> [--threads N]"
+         rootio read <path> [--threads N] [--granularity basket|branch]\n  \
+         rootio analyze <path> [--threads N]"
     );
     Ok(())
 }
@@ -207,16 +208,26 @@ fn read(path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
     if threads > 0 {
         imt::enable(threads);
     }
+    let granularity = match opts.get("granularity").copied().unwrap_or("basket") {
+        "basket" => Granularity::Basket,
+        "branch" => Granularity::Branch,
+        other => {
+            return Err(rootio_par::Error::Coordinator(format!(
+                "unknown granularity '{other}' (basket|branch)"
+            )))
+        }
+    };
     let reader = TreeReader::open_first(file)?;
-    let rep = read_columns(&reader, &ReadOptions::default())?;
+    let rep = read_columns(&reader, &ReadOptions { granularity, ..Default::default() })?;
     println!(
-        "read {} branches / {} entries: {:.1} MB in {:.1} ms ({:.1} MB/s, imt={})",
+        "read {} branches / {} entries: {:.1} MB in {:.1} ms ({:.1} MB/s, imt={}, {:?} tasks)",
         rep.branches_read,
         rep.entries,
         rep.raw_bytes as f64 / 1e6,
         rep.wall.as_secs_f64() * 1e3,
         rep.throughput_mbps(),
         imt::threads(),
+        granularity,
     );
     Ok(())
 }

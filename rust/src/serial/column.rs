@@ -108,9 +108,12 @@ impl ColumnData {
         }
     }
 
-    /// Serialise to the on-wire (big-endian) representation.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.byte_len());
+    /// Serialise to the on-wire (big-endian) representation, appending
+    /// to `out` (typically a pooled scratch buffer — see
+    /// [`crate::compress::pool`] — so steady-state flushes do not
+    /// allocate).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.byte_len());
         match self {
             ColumnData::I32(v) => {
                 for x in v {
@@ -140,6 +143,12 @@ impl ColumnData {
                 }
             }
         }
+    }
+
+    /// Serialise to a fresh on-wire buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        self.encode_into(&mut out);
         out
     }
 

@@ -60,10 +60,13 @@ impl TreeReader {
         self.file.fetch_basket(info)
     }
 
-    /// Decompress + deserialise previously fetched basket bytes.
+    /// Decompress + deserialise previously fetched basket bytes. The
+    /// decompression scratch comes from [`compress::pool`], so this
+    /// allocates nothing per basket beyond the decoded column itself.
     pub fn decode(&self, b: usize, k: usize, raw: &[u8]) -> Result<ColumnData> {
         let info = &self.meta.branches[b].baskets[k];
-        let bytes = compress::decompress(raw)?;
+        let mut bytes = compress::pool::get(info.raw_len as usize);
+        compress::decompress_into(raw, &mut bytes)?;
         if bytes.len() != info.raw_len as usize {
             return Err(Error::Format(format!(
                 "basket ({b},{k}): decompressed to {} bytes, expected {}",
@@ -74,13 +77,23 @@ impl TreeReader {
         ColumnData::decode(self.meta.branches[b].ty, &bytes, info.n_entries as usize)
     }
 
+    /// Fetch + decompress + deserialise one basket — the unit of the
+    /// basket-granularity read pipeline (paper §2.1–§2.2). Both
+    /// scratch buffers (compressed fetch, decompressed wire bytes) are
+    /// pooled; steady-state reads allocate only the decoded column.
+    pub fn read_basket(&self, b: usize, k: usize) -> Result<ColumnData> {
+        let info = &self.meta.branches[b].baskets[k];
+        let mut raw = compress::pool::get(info.comp_len as usize);
+        self.file.fetch_basket_into(info, &mut raw)?;
+        self.decode(b, k, &raw)
+    }
+
     /// Serial read of one whole branch.
     pub fn read_branch(&self, b: usize) -> Result<ColumnData> {
         let branch = &self.meta.branches[b];
         let mut out = ColumnData::new(branch.ty);
         for k in 0..branch.baskets.len() {
-            let raw = self.fetch_raw(b, k)?;
-            out.append(&self.decode(b, k, &raw)?)?;
+            out.append(&self.read_basket(b, k)?)?;
         }
         Ok(out)
     }
@@ -160,6 +173,41 @@ mod tests {
         let col = r.decode(1, 2, &raw).unwrap();
         assert_eq!(col.len(), 100);
         assert_eq!(col.get(0), Some(Value::I64(200)));
+    }
+
+    #[test]
+    fn read_basket_matches_fetch_plus_decode() {
+        let file = build_file(300, 100);
+        let r = TreeReader::open(file, "events").unwrap();
+        let raw = r.fetch_raw(1, 2).unwrap();
+        let via_decode = r.decode(1, 2, &raw).unwrap();
+        let via_read = r.read_basket(1, 2).unwrap();
+        assert_eq!(via_decode, via_read);
+    }
+
+    #[test]
+    fn steady_state_reads_hit_the_buffer_pool() {
+        // Acceptance: scratch buffers on the decompress path come from
+        // the pool. The shelf is thread-local, so concurrent tests can
+        // only *add* hits; this thread's second pass must reuse every
+        // buffer its first pass returned.
+        let file = build_file(1000, 100); // 3 branches x 10 baskets
+        let r = TreeReader::open(file, "events").unwrap();
+        let n_baskets: usize =
+            r.meta().branches.iter().map(|b| b.baskets.len()).sum();
+        let first = r.read_all().unwrap(); // warm the shelf
+        let hits_before = crate::compress::pool::stats().hits;
+        let second = r.read_all().unwrap(); // steady state
+        let hits_after = crate::compress::pool::stats().hits;
+        assert_eq!(first, second);
+        // two pooled buffers per basket: compressed fetch + wire bytes
+        assert!(
+            hits_after - hits_before >= 2 * n_baskets as u64,
+            "steady-state read must draw all scratch from the pool: \
+             {} hits across {} baskets",
+            hits_after - hits_before,
+            n_baskets
+        );
     }
 
     #[test]

@@ -134,7 +134,12 @@ impl<S: BasketSink> TreeWriter<S> {
         let recorder = self.recorder.clone();
 
         let one = |i: usize, col: &ColumnData| -> Result<()> {
-            let (raw, ser_span) = timed(|| col.encode());
+            // Serialisation scratch is pooled; only the compressed
+            // payload (whose ownership passes to the sink) is a fresh
+            // allocation. This is the Riley/Jones fix: per-basket
+            // flush cost no longer includes allocator round-trips.
+            let mut raw = compress::pool::get(col.byte_len());
+            let ((), ser_span) = timed(|| col.encode_into(&mut raw));
             let (payload, cmp_span) = timed(|| compress::compress(settings, &raw));
             if let Some(r) = &recorder {
                 r.push(SpanKind::Serialize, ser_span.0, ser_span.1);

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use common::{property, Gen};
 use rootio_par::compress::{self, Codec, Settings};
-use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::coordinator::read::{read_columns, Granularity, ReadOptions};
 use rootio_par::format::reader::FileReader;
 use rootio_par::format::writer::FileWriter;
 use rootio_par::format::Directory;
@@ -85,11 +85,60 @@ fn prop_parallel_read_equals_serial_read() {
         let (reader, _) = write_rows(&schema, &rows, cfg);
         let tr = TreeReader::open_first(reader).unwrap();
         let serial =
-            read_columns(&tr, &ReadOptions { branches: None, force_serial: true }).unwrap();
+            read_columns(&tr, &ReadOptions { force_serial: true, ..Default::default() })
+                .unwrap();
         rootio_par::imt::enable(g.range(2, 6));
         let parallel = read_columns(&tr, &ReadOptions::default()).unwrap();
         rootio_par::imt::disable();
         assert_eq!(serial.columns, parallel.columns);
+    });
+}
+
+/// Basket-granularity parallel reads must byte-match the serial
+/// baseline across arbitrary schemas and deliberately uneven basket
+/// layouts: trailing partial baskets (row count not a multiple of the
+/// basket size), single-basket branches (basket >= rows), and the
+/// empty tree.
+#[test]
+fn prop_basket_granularity_equals_serial_uneven_baskets() {
+    property(20, |g| {
+        let schema = g.schema(6);
+        let n_rows = match g.range(0, 4) {
+            0 => 0,                    // empty tree
+            1 => g.range(1, 16),       // single (partial) basket
+            _ => g.range(50, 400),     // many baskets, uneven tail
+        };
+        let rows: Vec<Row> = (0..n_rows).map(|_| g.row(&schema)).collect();
+        // Prime-ish basket sizes make the final basket partial almost
+        // always; basket >= rows exercises the single-basket branch.
+        let basket_entries = *g.choose(&[1usize, 3, 7, 13, 64, 500]);
+        let cfg = WriterConfig {
+            basket_entries,
+            compression: *g.choose(&codecs()),
+            parallel_flush: false,
+        };
+        let (reader, _) = write_rows(&schema, &rows, cfg);
+        let tr = TreeReader::open_first(reader).unwrap();
+        let serial =
+            read_columns(&tr, &ReadOptions { force_serial: true, ..Default::default() })
+                .unwrap();
+        rootio_par::imt::enable(g.range(2, 6));
+        let basket = read_columns(
+            &tr,
+            &ReadOptions { granularity: Granularity::Basket, ..Default::default() },
+        )
+        .unwrap();
+        let branch = read_columns(
+            &tr,
+            &ReadOptions { granularity: Granularity::Branch, ..Default::default() },
+        )
+        .unwrap();
+        rootio_par::imt::disable();
+        assert_eq!(serial.columns, basket.columns, "basket granularity diverged");
+        assert_eq!(serial.columns, branch.columns, "branch granularity diverged");
+        assert_eq!(serial.raw_bytes, basket.raw_bytes);
+        // decoded rows reassemble in entry order
+        assert_eq!(tr.rows(&basket.columns).unwrap(), rows);
     });
 }
 
