@@ -19,7 +19,7 @@ use rootio_par::serial::value::Value;
 use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
-use rootio_par::tree::writer::WriterConfig;
+use rootio_par::tree::writer::{FlushMode, WriterConfig};
 
 const N_ENTRIES: usize = 100_000;
 const N_WORKERS: usize = 4;
@@ -36,7 +36,8 @@ fn write_tree_sequential() -> anyhow::Result<BackendRef> {
         WriterConfig {
             basket_entries: 4096,
             compression: Settings::new(Codec::Rzip, 4),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         },
         vec![block],
     )?;
@@ -56,7 +57,9 @@ fn write_tree_parallel() -> anyhow::Result<BackendRef> {
             writer: WriterConfig {
                 basket_entries: 4096,
                 compression: Settings::new(Codec::Rzip, 4),
-                parallel_flush: false,
+                // workers pipeline their flushes when IMT is enabled
+                flush: FlushMode::Pipelined,
+                ..Default::default()
             },
         },
     )?;

@@ -1,0 +1,13 @@
+//! Bench harness for the write-scaling experiment (harness = false;
+//! criterion is unavailable offline — see Cargo.toml). Pass --quick
+//! for a reduced sweep. Emits BENCH_fig3.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::write_scaling(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("write_scaling: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -161,6 +161,22 @@ pub fn compress(settings: Settings, src: &[u8]) -> Vec<u8> {
     out
 }
 
+/// The byte ranges at which [`compress_into`] splits `len` input bytes
+/// into independent blocks — the write pipeline's task-decomposition
+/// boundary. Compressing each range separately (in order) yields a
+/// container byte-identical to compressing the whole buffer at once,
+/// which is what lets the writer fan one basket out as per-block tasks
+/// without changing the stored bytes. `len == 0` yields one empty
+/// range (empty payloads still emit one block).
+pub fn block_ranges(len: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return vec![0..0];
+    }
+    (0..len.div_ceil(MAX_BLOCK))
+        .map(|i| i * MAX_BLOCK..((i + 1) * MAX_BLOCK).min(len))
+        .collect()
+}
+
 /// Parsed view of one block in a container buffer.
 #[derive(Debug, Clone, Copy)]
 pub struct BlockInfo {
@@ -334,6 +350,42 @@ mod tests {
         compress_into(Settings::new(Codec::Lz4r, 3), &data, &mut out);
         assert_eq!(&out[..3], &[0xEE; 3]);
         assert_eq!(decompress(&out[3..]).unwrap(), data);
+    }
+
+    #[test]
+    fn block_ranges_cover_input_exactly() {
+        assert_eq!(block_ranges(0), vec![0..0]);
+        assert_eq!(block_ranges(1), vec![0..1]);
+        assert_eq!(block_ranges(MAX_BLOCK), vec![0..MAX_BLOCK]);
+        let r = block_ranges(2 * MAX_BLOCK + 7);
+        assert_eq!(
+            r,
+            vec![0..MAX_BLOCK, MAX_BLOCK..2 * MAX_BLOCK, 2 * MAX_BLOCK..2 * MAX_BLOCK + 7]
+        );
+    }
+
+    #[test]
+    fn per_range_compression_concat_matches_whole() {
+        // The invariant the pipelined writer's block tasks rely on:
+        // compressing each block range separately and concatenating
+        // equals compressing the whole buffer.
+        let data = sample(MAX_BLOCK + 1000);
+        for codec in [Codec::None, Codec::Lz4r] {
+            let settings = Settings::new(codec, 2);
+            let whole = compress(settings, &data);
+            let mut cat = Vec::new();
+            for r in block_ranges(data.len()) {
+                compress_into(settings, &data[r], &mut cat);
+            }
+            assert_eq!(cat, whole, "{codec:?}");
+        }
+        // empty payload: the single empty range emits the empty block
+        let whole = compress(Settings::new(Codec::Rzip, 3), &[]);
+        let mut cat = Vec::new();
+        for r in block_ranges(0) {
+            compress_into(Settings::new(Codec::Rzip, 3), &data[r], &mut cat);
+        }
+        assert_eq!(cat, whole);
     }
 
     #[test]

@@ -175,6 +175,17 @@ impl Drop for Scratch {
     }
 }
 
+impl From<Vec<u8>> for Scratch {
+    /// Adopt an owned buffer: it joins the pool when the guard drops.
+    /// This is how externally-produced payloads (tests, adapters)
+    /// enter the recycling loop of [`BasketSink`] implementations.
+    ///
+    /// [`BasketSink`]: crate::tree::sink::BasketSink
+    fn from(buf: Vec<u8>) -> Self {
+        Scratch { buf }
+    }
+}
+
 impl std::ops::Deref for Scratch {
     type Target = Vec<u8>;
     fn deref(&self) -> &Vec<u8> {

@@ -201,7 +201,7 @@ mod tests {
     use crate::serial::schema::Schema;
     use crate::storage::mem::MemBackend;
     use crate::tree::sink::FileSink;
-    use crate::tree::writer::{TreeWriter, WriterConfig};
+    use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
     use std::sync::Arc;
 
     fn build(n_branches: usize, entries: usize, basket: usize) -> Arc<FileReader> {
@@ -212,7 +212,8 @@ mod tests {
         let cfg = WriterConfig {
             basket_entries: basket,
             compression: Settings::new(Codec::Lz4r, 3),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let mut w = TreeWriter::new(schema.clone(), sink, cfg);
         let mut remaining = entries;
@@ -224,8 +225,9 @@ mod tests {
             w.fill_columns(&block).unwrap();
             remaining -= n;
         }
-        let (sink, n) = w.close().unwrap();
-        fw.finish(&Directory { trees: vec![sink.into_meta("t".into(), schema, n)] }).unwrap();
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
         Arc::new(FileReader::open(be).unwrap())
     }
 

@@ -143,7 +143,7 @@ mod tests {
     use crate::serial::value::Value;
     use crate::storage::mem::MemBackend;
     use crate::tree::sink::FileSink;
-    use crate::tree::writer::{TreeWriter, WriterConfig};
+    use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
     use std::sync::Arc;
 
     fn build_with_basket(
@@ -158,7 +158,8 @@ mod tests {
         let cfg = WriterConfig {
             basket_entries,
             compression: Settings::new(Codec::Rzip, 2),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let mut w = TreeWriter::new(schema.clone(), sink, cfg);
         for i in 0..entries {
@@ -166,8 +167,9 @@ mod tests {
                 (0..n_branches).map(|b| Value::F32(((i * b) % 97) as f32 * 0.5)).collect();
             w.fill(row).unwrap();
         }
-        let (sink, n) = w.close().unwrap();
-        fw.finish(&Directory { trees: vec![sink.into_meta("t".into(), schema, n)] }).unwrap();
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
         Arc::new(FileReader::open(be).unwrap())
     }
 

@@ -17,6 +17,10 @@ pub enum Error {
     Runtime(String),
     /// Coordinator-level invariant violation (basket index gap, ...).
     Coordinator(String),
+    /// Concurrency failure: a flush task panicked or poisoned a lock.
+    /// Surfaced as an error so a single bad task aborts the write
+    /// cleanly instead of cascading panics through the writer.
+    Sync(String),
 }
 
 impl fmt::Display for Error {
@@ -28,6 +32,7 @@ impl fmt::Display for Error {
             Error::Schema(m) => write!(f, "schema error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Sync(m) => write!(f, "sync error: {m}"),
         }
     }
 }

@@ -11,7 +11,7 @@ use crate::runtime::Engine;
 use crate::serial::column::ColumnData;
 use crate::storage::mem::MemBackend;
 use crate::storage::BackendRef;
-use crate::tree::writer::WriterConfig;
+use crate::tree::writer::{FlushMode, WriterConfig};
 
 /// Simple fixed-width table printer (markdown-flavoured).
 pub struct Table {
@@ -127,7 +127,12 @@ pub fn synthesize_flat_f32(
             )
         })
         .collect();
-    let cfg = WriterConfig { basket_entries, compression, parallel_flush: false };
+    let cfg = WriterConfig {
+        basket_entries,
+        compression,
+        flush: FlushMode::Serial,
+        ..Default::default()
+    };
     write_blocks(be.clone(), schema, "events", cfg, vec![block])?;
     Ok(be)
 }
@@ -169,7 +174,12 @@ pub fn synthesize_dataset(
         idx += 1;
         blocks.push(cols);
     }
-    let cfg = WriterConfig { basket_entries, compression, parallel_flush: false };
+    let cfg = WriterConfig {
+        basket_entries,
+        compression,
+        flush: FlushMode::Serial,
+        ..Default::default()
+    };
     let report = write_blocks(be.clone(), kind.schema(), "events", cfg, blocks)?;
     Ok((be, report))
 }
@@ -204,7 +214,12 @@ pub fn synthesize_physics_file(
         idx += 1;
         blocks.push(cols);
     }
-    let cfg = WriterConfig { basket_entries: block_size, compression, parallel_flush: false };
+    let cfg = WriterConfig {
+        basket_entries: block_size,
+        compression,
+        flush: FlushMode::Serial,
+        ..Default::default()
+    };
     let report = write_blocks(be.clone(), schema, "events", cfg, blocks)?;
     Ok((be, report))
 }

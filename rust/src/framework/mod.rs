@@ -33,7 +33,7 @@ use crate::runtime::Engine;
 use crate::serial::column::ColumnData;
 use crate::storage::BackendRef;
 use crate::tree::sink::FileSink;
-use crate::tree::writer::{TreeWriter, WriterConfig};
+use crate::tree::writer::{FlushMode, TreeWriter, WriteStats, WriterConfig};
 
 use dataset::{DatasetKind, SplitMix};
 
@@ -186,7 +186,8 @@ fn run_serial_output(
     let writer_cfg = WriterConfig {
         basket_entries: cfg.block,
         compression: cfg.compression,
-        parallel_flush: false, // the whole point: single-threaded output
+        flush: FlushMode::Serial, // the whole point: single-threaded output
+        ..Default::default()
     };
     let mut writer = TreeWriter::new(schema.clone(), sink, writer_cfg);
     if let Some(r) = &recorder {
@@ -199,7 +200,7 @@ fn run_serial_output(
 
     std::thread::scope(|s| {
         // Output thread: does ALL serialisation + compression + writes.
-        let out_handle = s.spawn(move || -> Result<(FileSink, u64)> {
+        let out_handle = s.spawn(move || -> Result<(FileSink, u64, WriteStats)> {
             while let Ok(block) = rx.recv() {
                 writer.fill_columns(&block)?;
             }
@@ -238,8 +239,8 @@ fn run_serial_output(
         }
         drop(tx);
         match out_handle.join().map_err(|_| Error::Coordinator("output thread panicked".into())) {
-            Ok(Ok((sink, entries))) => {
-                let meta = sink.into_meta("events".into(), schema.clone(), entries);
+            Ok(Ok((sink, entries, _stats))) => {
+                let meta = sink.into_meta("events".into(), schema.clone(), entries)?;
                 stored.store(
                     meta.branches.iter().map(|b| b.stored_bytes()).sum(),
                     Ordering::Relaxed,
@@ -276,7 +277,10 @@ fn run_imt_merger(
         writer: WriterConfig {
             basket_entries: cfg.block,
             compression: cfg.compression,
-            parallel_flush: true, // per-branch IMT parallelism inside streams
+            // streams keep filling while their baskets compress on the
+            // IMT pool (falls back to inline when IMT is off)
+            flush: FlushMode::Pipelined,
+            ..Default::default()
         },
     };
     let merger = TBufferMerger::create_with_recorder(

@@ -22,9 +22,15 @@
 //! Idle threads park on a condvar (no polling) and are woken
 //! event-count style only when work arrives.
 
+//!
+//! [`TaskGroup`] complements the scope with a submit-now, join-later
+//! primitive: `'static` jobs with a shared completion count, so a
+//! producer (the pipelined tree writer) can enqueue flush tasks, keep
+//! filling, and join — or apply backpressure — whenever it likes.
+
 mod pool;
 
-pub use pool::{Pool, Scope};
+pub use pool::{Pool, Scope, TaskGroup};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};

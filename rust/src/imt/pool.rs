@@ -29,6 +29,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::error::{Error, Result};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Worker identity of the current thread: (shared-state address, index
@@ -199,33 +201,9 @@ impl Pool {
         // loop below before letting the panic continue (otherwise a
         // worker could execute a job against a destroyed stack frame).
         let out = catch_unwind(AssertUnwindSafe(|| f(&scope)));
-        let sh = &self.shared;
-        let me = sh.current_worker();
-        // Help execute queued work until all our jobs have finished.
-        while state.pending.load(Ordering::SeqCst) > 0 {
-            if let Some(job) = sh.find_job(me) {
-                job();
-                continue;
-            }
-            // Nothing runnable: park until a job arrives (it might be
-            // one of ours, stolen back) or our last job completes.
-            let g = sh.sleep_mx.lock().unwrap();
-            sh.sleepers.fetch_add(1, Ordering::SeqCst);
-            if state.pending.load(Ordering::SeqCst) == 0
-                || sh.queued.load(Ordering::SeqCst) > 0
-            {
-                sh.sleepers.fetch_sub(1, Ordering::SeqCst);
-                continue;
-            }
-            let g = sh.work_cv.wait(g).unwrap();
-            sh.sleepers.fetch_sub(1, Ordering::SeqCst);
-            drop(g);
-        }
-        // If a wake meant for a queued job landed on us while our last
-        // job was completing, pass it on so the job is not stranded.
-        if sh.queued.load(Ordering::SeqCst) > 0 {
-            sh.notify_one();
-        }
+        // Help execute queued work until all our jobs have finished
+        // (same help-then-park loop the task groups use).
+        self.wait_pending(&state.pending, 0);
         let out = match out {
             Ok(v) => v,
             Err(payload) => std::panic::resume_unwind(payload),
@@ -282,6 +260,39 @@ impl Pool {
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
             .collect()
+    }
+
+    /// Help execute queued jobs until `pending` drops to `limit` or
+    /// below. Used by [`TaskGroup`] joins and backpressure waits: the
+    /// waiter contributes CPU instead of blocking, and parks on the
+    /// pool condvar when nothing is runnable (no polling).
+    pub(crate) fn wait_pending(&self, pending: &AtomicUsize, limit: usize) {
+        let sh = &self.shared;
+        let me = sh.current_worker();
+        while pending.load(Ordering::SeqCst) > limit {
+            if let Some(job) = sh.find_job(me) {
+                job();
+                continue;
+            }
+            // Nothing runnable: park until some job completes (group
+            // jobs notify on every completion) or new work arrives.
+            let g = sh.sleep_mx.lock().unwrap();
+            sh.sleepers.fetch_add(1, Ordering::SeqCst);
+            if pending.load(Ordering::SeqCst) <= limit
+                || sh.queued.load(Ordering::SeqCst) > 0
+            {
+                sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let g = sh.work_cv.wait(g).unwrap();
+            sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+            drop(g);
+        }
+        // A wake meant for queued work may have landed on us while our
+        // last job completed; pass it on so that job is not stranded.
+        if sh.queued.load(Ordering::SeqCst) > 0 {
+            sh.notify_one();
+        }
     }
 }
 
@@ -368,6 +379,121 @@ impl<'env, 'p> Scope<'env, 'p> {
         // wrapper only touches 'env-borrowed data inside `f`.
         let job: Job = unsafe { std::mem::transmute(job) };
         self.pool.shared.push(job);
+    }
+}
+
+/// A completion-tracked set of `'static` jobs — the submit-now,
+/// join-later primitive behind the pipelined write path (and any other
+/// producer that must keep working while earlier work drains).
+///
+/// Unlike [`Pool::scope`], `spawn` returns immediately and jobs own
+/// their data instead of borrowing the caller's stack; the submitter
+/// joins whenever it likes (possibly after spawning more). Cloning the
+/// group yields another handle to the *same* completion set — jobs use
+/// this to spawn subtasks (e.g. per-block compression inside a basket
+/// flush) that the final join still covers.
+///
+/// The group binds to a pool at construction ([`TaskGroup::with_pool`])
+/// or lazily to the global IMT pool at first spawn; with IMT disabled
+/// jobs run inline, giving callers serial semantics from the same code
+/// path. Job panics are caught, recorded, and surfaced by
+/// [`TaskGroup::join`] as an error — they never unwind across the pool
+/// or hang the joiner.
+#[derive(Clone, Default)]
+pub struct TaskGroup {
+    inner: Arc<GroupInner>,
+}
+
+#[derive(Default)]
+struct GroupInner {
+    /// Bound pool (None until first spawn; stays None — inline
+    /// execution — while IMT is off).
+    pool: Mutex<Option<Arc<Pool>>>,
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+impl TaskGroup {
+    /// Group bound lazily to the global IMT pool (inline when off).
+    pub fn new() -> Self {
+        TaskGroup::default()
+    }
+
+    /// Group bound to a specific pool (dedicated pools, hermetic tests).
+    pub fn with_pool(pool: Arc<Pool>) -> Self {
+        let group = TaskGroup::default();
+        *group.inner.pool.lock().unwrap() = Some(pool);
+        group
+    }
+
+    /// Jobs spawned but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::SeqCst)
+    }
+
+    /// Has any job of this group panicked so far?
+    pub fn panicked(&self) -> bool {
+        self.inner.panicked.load(Ordering::SeqCst)
+    }
+
+    fn bind(&self) -> Option<Arc<Pool>> {
+        let mut g = self.inner.pool.lock().unwrap();
+        if g.is_none() {
+            *g = crate::imt::pool();
+        }
+        g.clone()
+    }
+
+    /// Enqueue one job; returns immediately when a pool is bound, runs
+    /// the job inline otherwise.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        match self.bind() {
+            Some(pool) => {
+                self.inner.pending.fetch_add(1, Ordering::SeqCst);
+                let inner = self.inner.clone();
+                let shared = pool.shared.clone();
+                pool.shared.push(Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                        inner.panicked.store(true, Ordering::SeqCst);
+                    }
+                    inner.pending.fetch_sub(1, Ordering::SeqCst);
+                    // Every completion wakes waiters: a join targets
+                    // pending == 0, backpressure targets a threshold.
+                    shared.notify_all();
+                }));
+            }
+            None => {
+                if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                    self.inner.panicked.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    /// Block — helping execute pool jobs — until at most `limit` jobs
+    /// of this group remain in flight (the write path's backpressure).
+    pub fn wait_below(&self, limit: usize) {
+        if self.inner.pending.load(Ordering::SeqCst) <= limit {
+            return;
+        }
+        let pool = self.inner.pool.lock().unwrap().clone();
+        if let Some(p) = pool {
+            p.wait_pending(&self.inner.pending, limit);
+        }
+    }
+
+    /// Wait for every spawned job; job panics surface here as an
+    /// error. Non-consuming — a group may be joined and reused.
+    pub fn join(&self) -> Result<()> {
+        self.wait_below(0);
+        if self.panicked() {
+            Err(Error::Sync("task in imt group panicked".into()))
+        } else {
+            Ok(())
+        }
     }
 }
 
@@ -558,6 +684,106 @@ mod tests {
             assert_eq!(n.load(Ordering::Relaxed), 128);
             drop(pool);
         }
+    }
+
+    #[test]
+    fn task_group_joins_all_jobs() {
+        let pool = Arc::new(Pool::new(3));
+        let group = TaskGroup::with_pool(pool);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let hits = hits.clone();
+            group.spawn(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        group.join().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+        assert_eq!(group.pending(), 0);
+        // the group is reusable after a join
+        let hits2 = hits.clone();
+        group.spawn(move || {
+            hits2.fetch_add(1, Ordering::Relaxed);
+        });
+        group.join().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 65);
+    }
+
+    #[test]
+    fn task_group_backpressure_wait_below() {
+        let pool = Arc::new(Pool::new(2));
+        let group = TaskGroup::with_pool(pool);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let done = done.clone();
+            group.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        group.wait_below(8);
+        assert!(group.pending() <= 8);
+        assert!(done.load(Ordering::Relaxed) >= 24);
+        group.join().unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn task_group_reports_panics_as_error() {
+        let pool = Arc::new(Pool::new(2));
+        let group = TaskGroup::with_pool(pool);
+        let ok = Arc::new(AtomicUsize::new(0));
+        for i in 0..16 {
+            let ok = ok.clone();
+            group.spawn(move || {
+                if i % 4 == 0 {
+                    panic!("injected task panic");
+                }
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert!(group.join().is_err(), "panicked jobs must surface at join");
+        assert!(group.panicked());
+        assert_eq!(ok.load(Ordering::Relaxed), 12, "healthy jobs still ran");
+    }
+
+    #[test]
+    fn task_group_jobs_can_spawn_subtasks() {
+        // A job fans out subtasks into the same group; the final join
+        // covers them (the per-block compression pattern).
+        let pool = Arc::new(Pool::new(3));
+        let group = TaskGroup::with_pool(pool);
+        let total = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let g = group.clone();
+            let total = total.clone();
+            group.spawn(move || {
+                for _ in 0..4 {
+                    let total = total.clone();
+                    g.spawn(move || {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        group.join().unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn task_group_without_pool_runs_inline() {
+        // No bound pool and (possibly) no global pool: spawn degrades
+        // to inline execution; join still reports panics.
+        let group = TaskGroup::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let hits = hits.clone();
+            group.spawn(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        group.join().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
     }
 
     #[test]

@@ -3,13 +3,16 @@
 //!
 //! Workers obtain a [`MergerFile`] via [`TBufferMerger::get_file`] — an
 //! in-memory tree writer. Filling it serialises and compresses baskets
-//! on the worker thread (in parallel across workers, and across branches
-//! too when IMT is on). Calling [`MergerFile::write`] ships the finished
-//! [`TreeBuffer`] into a bounded queue; a dedicated output thread pops
-//! buffers and *appends their already-compressed baskets* to the output
-//! file, rebasing entry numbers — the cheap part, so a single output
-//! thread keeps up until the device itself saturates (exactly the
-//! regime the paper's Figure 6 explores).
+//! on the worker thread (in parallel across workers; with IMT on, the
+//! default [`WriterConfig`] additionally *pipelines* each worker's
+//! flush, so a worker keeps filling its next cluster while earlier
+//! baskets compress on the pool). Calling [`MergerFile::write`] joins
+//! that pipeline and ships the finished [`TreeBuffer`] into a bounded
+//! queue; a dedicated output thread pops buffers and *appends their
+//! already-compressed baskets* to the output file, rebasing entry
+//! numbers — the cheap part, so a single output thread keeps up until
+//! the device itself saturates (exactly the regime the paper's
+//! Figure 6 explores).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -268,8 +271,8 @@ impl MergerFile {
         let writer = self.writer.take().ok_or_else(|| {
             Error::Coordinator("MergerFile already written (f->Write() is one-shot)".into())
         })?;
-        let (sink, entries) = writer.close()?;
-        let buf = sink.into_buffer(entries);
+        let (sink, entries, _stats) = writer.close()?;
+        let buf = sink.into_buffer(entries)?;
         if buf.is_empty() {
             return Ok(());
         }
@@ -295,6 +298,7 @@ mod tests {
     use crate::serial::value::Value;
     use crate::storage::mem::MemBackend;
     use crate::tree::reader::TreeReader;
+    use crate::tree::writer::FlushMode;
 
     fn schema() -> Schema {
         Schema::new(vec![Field::new("n", ColumnType::I32)])
@@ -307,7 +311,8 @@ mod tests {
             writer: WriterConfig {
                 basket_entries: 64,
                 compression: CSettings::new(Codec::Lz4r, 3),
-                parallel_flush: false,
+                flush: FlushMode::Serial,
+                ..Default::default()
             },
         }
     }
@@ -363,6 +368,46 @@ mod tests {
         for i in 0..500 {
             assert_eq!(cols[0].get(i), Some(Value::I32(i as i32)));
         }
+    }
+
+    #[test]
+    fn pipelined_workers_preserve_entry_multiset() {
+        // Workers fill with the pipelined flush (the default config):
+        // compression overlaps filling on the IMT pool, and the merged
+        // output must hold exactly the same entries.
+        let be = Arc::new(MemBackend::new());
+        let mut cfg = config();
+        cfg.writer.flush = FlushMode::Pipelined;
+        crate::imt::enable(2);
+        let merger = TBufferMerger::create(be.clone(), schema(), cfg).unwrap();
+        std::thread::scope(|s| {
+            for w in 0..3 {
+                let mut f = merger.get_file();
+                s.spawn(move || {
+                    for i in 0..300 {
+                        f.fill(vec![Value::I32(w * 1000 + i)]).unwrap();
+                    }
+                    f.write().unwrap();
+                });
+            }
+        });
+        let stats = merger.close().unwrap();
+        crate::imt::disable();
+        assert_eq!(stats.entries, 900);
+        let file = Arc::new(FileReader::open(be).unwrap());
+        let r = TreeReader::open(file, "mytree").unwrap();
+        let cols = r.read_all().unwrap();
+        let mut vals: Vec<i32> = (0..900)
+            .map(|i| match cols[0].get(i).unwrap() {
+                Value::I32(v) => v,
+                _ => unreachable!(),
+            })
+            .collect();
+        vals.sort();
+        let mut want: Vec<i32> =
+            (0..3).flat_map(|w| (0..300).map(move |i| w * 1000 + i)).collect();
+        want.sort();
+        assert_eq!(vals, want);
     }
 
     #[test]

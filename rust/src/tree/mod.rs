@@ -9,9 +9,13 @@
 //! The writer emits baskets through a [`sink::BasketSink`], which is
 //! either a real file ([`sink::FileSink`]) or an in-memory buffer
 //! ([`buffer::TreeBuffer`] via [`sink::BufferSink`]) — the latter is
-//! what `TBufferMerger` workers produce. Per-branch serialisation +
-//! compression during a flush goes through the IMT pool when implicit
-//! multi-threading is enabled (paper §3.1).
+//! what `TBufferMerger` workers produce. With implicit multi-threading
+//! enabled, flushes run as an asynchronous block-granularity pipeline
+//! on the IMT pool (paper §3.1): the producer keeps filling while
+//! earlier clusters serialise + compress, payload buffers are pooled
+//! end to end, and `FileSink` appends in sequence order so pipelined
+//! output is byte-identical to a serial write — see [`writer`] for the
+//! full ordering and failure model.
 
 pub mod buffer;
 pub mod reader;
@@ -20,5 +24,5 @@ pub mod writer;
 
 pub use buffer::TreeBuffer;
 pub use reader::TreeReader;
-pub use sink::{BasketSink, BufferSink, FileSink};
-pub use writer::{TreeWriter, WriterConfig};
+pub use sink::{BasketMeta, BasketSink, BufferSink, FileSink, PayloadBuf};
+pub use writer::{FlushGranularity, FlushMode, TreeWriter, WriteStats, WriterConfig};

@@ -119,7 +119,7 @@ mod tests {
     use crate::serial::value::Value;
     use crate::storage::mem::MemBackend;
     use crate::tree::sink::FileSink;
-    use crate::tree::writer::{TreeWriter, WriterConfig};
+    use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
 
     fn build_file(n: u64, basket: usize) -> Arc<FileReader> {
         let schema = Schema::new(vec![
@@ -133,7 +133,8 @@ mod tests {
         let cfg = WriterConfig {
             basket_entries: basket,
             compression: Settings::new(Codec::Rzip, 4),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let mut w = TreeWriter::new(schema.clone(), sink, cfg);
         for i in 0..n {
@@ -144,8 +145,8 @@ mod tests {
             ])
             .unwrap();
         }
-        let (sink, entries) = w.close().unwrap();
-        let meta = sink.into_meta("events".into(), schema, entries);
+        let (sink, entries, _) = w.close().unwrap();
+        let meta = sink.into_meta("events".into(), schema, entries).unwrap();
         fw.finish(&Directory { trees: vec![meta] }).unwrap();
         Arc::new(FileReader::open(be).unwrap())
     }

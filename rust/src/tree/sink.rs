@@ -1,8 +1,24 @@
 //! Basket destinations for the tree writer.
+//!
+//! Sinks receive *pooled* payload buffers ([`PayloadBuf`]) tagged with
+//! a global append sequence ([`BasketMeta::seq`]). [`FileSink`] appends
+//! strictly in sequence order — a small reorder stash absorbs
+//! out-of-order completion of pipelined flush tasks — so basket offsets
+//! stay monotonic and a pipelined write is **byte-identical** to a
+//! serial one. The payload buffer returns to
+//! [`crate::compress::pool`] right after the device append
+//! ([`FileSink`]) or the copy into the in-memory tree ([`BufferSink`]),
+//! closing the zero-allocation loop on the write hot path.
+//!
+//! Failure model: a panicked flush task poisons at most one sink lock;
+//! that surfaces as [`Error::Sync`] on the next sink operation instead
+//! of cascading a second panic through the writer.
 
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
 
-use crate::error::Result;
+use crate::compress::pool::Scratch;
+use crate::error::{Error, Result};
 use crate::format::directory::{BasketInfo, BranchMeta, TreeMeta};
 use crate::format::writer::FileWriter;
 use crate::serial::schema::Schema;
@@ -10,70 +26,138 @@ use crate::storage::BackendRef;
 
 use super::buffer::{BasketPayload, TreeBuffer};
 
-/// Receives finished (compressed) baskets. Must be thread-safe: during
-/// an IMT flush all branches land concurrently.
-pub trait BasketSink: Send + Sync {
-    /// Store one basket of `branch`; entries are buffer-relative.
-    fn put_basket(
-        &self,
-        branch: usize,
-        payload: Vec<u8>,
-        raw_len: u32,
-        first_entry: u64,
-        n_entries: u32,
-    ) -> Result<()>;
+/// Pooled compressed-payload buffer handed to a sink; dropping it
+/// returns the allocation to the compression scratch pool.
+pub type PayloadBuf = Scratch;
+
+/// Identity and placement of one finished basket.
+#[derive(Clone, Copy, Debug)]
+pub struct BasketMeta {
+    /// Branch index.
+    pub branch: usize,
+    /// Global append order, cluster-major then branch-minor.
+    /// [`FileSink`] appends baskets in exactly this order; the writer
+    /// assigns it densely from 0.
+    pub seq: u64,
+    /// Uncompressed payload length.
+    pub raw_len: u32,
+    /// First entry covered (buffer-relative).
+    pub first_entry: u64,
+    /// Entries covered.
+    pub n_entries: u32,
 }
 
-/// Sink writing straight into an open [`FileWriter`].
+/// Receives finished (compressed) baskets. Must be thread-safe: during
+/// a pipelined flush baskets land concurrently from many tasks, in
+/// arbitrary completion order.
+pub trait BasketSink: Send + Sync + 'static {
+    /// Store one basket. Ownership of the pooled payload transfers to
+    /// the sink, which recycles it once the bytes are appended/copied.
+    fn put_basket(&self, meta: BasketMeta, payload: PayloadBuf) -> Result<()>;
+}
+
+/// Poison-proof lock: a panicked flush task must surface as an error
+/// on the next sink operation, never as a second panic.
+fn lock<T>(m: &Mutex<T>) -> Result<MutexGuard<'_, T>> {
+    m.lock()
+        .map_err(|_| Error::Sync("basket sink lock poisoned by a panicked flush task".into()))
+}
+
+fn unwrap_lock<T>(m: Mutex<T>) -> Result<T> {
+    m.into_inner()
+        .map_err(|_| Error::Sync("basket sink lock poisoned by a panicked flush task".into()))
+}
+
+/// One basket parked until its turn in the append sequence.
+struct StashedBasket {
+    meta: BasketMeta,
+    payload: PayloadBuf,
+}
+
+/// Reorder state: the next sequence number due, plus early arrivals.
+struct AppendQueue {
+    next_seq: u64,
+    stash: BTreeMap<u64, StashedBasket>,
+}
+
+/// Sink writing straight into an open [`FileWriter`], in basket
+/// sequence order.
 pub struct FileSink {
     file: std::sync::Arc<FileWriter>,
     baskets: Vec<Mutex<Vec<BasketInfo>>>,
+    order: Mutex<AppendQueue>,
 }
 
 impl FileSink {
     pub fn new(file: std::sync::Arc<FileWriter>, n_branches: usize) -> Self {
-        FileSink { file, baskets: (0..n_branches).map(|_| Mutex::new(Vec::new())).collect() }
+        FileSink {
+            file,
+            baskets: (0..n_branches).map(|_| Mutex::new(Vec::new())).collect(),
+            order: Mutex::new(AppendQueue { next_seq: 0, stash: BTreeMap::new() }),
+        }
     }
 
-    /// Drain collected metadata into a [`TreeMeta`].
-    pub fn into_meta(self, name: String, schema: Schema, entries: u64) -> TreeMeta {
-        let branches = self
-            .baskets
-            .into_iter()
-            .zip(&schema.fields)
-            .map(|(m, f)| {
-                let mut baskets = m.into_inner().unwrap();
-                baskets.sort_by_key(|b| b.first_entry);
-                BranchMeta { name: f.name.clone(), ty: f.ty, baskets }
-            })
-            .collect();
-        TreeMeta { name, schema, entries, branches }
-    }
-}
-
-impl BasketSink for FileSink {
-    fn put_basket(
-        &self,
-        branch: usize,
-        payload: Vec<u8>,
-        raw_len: u32,
-        first_entry: u64,
-        n_entries: u32,
-    ) -> Result<()> {
-        let (offset, crc) = self.file.append(&payload)?;
-        self.baskets[branch].lock().unwrap().push(BasketInfo {
+    /// Append one basket whose turn has come and record its metadata.
+    fn append_now(&self, meta: &BasketMeta, payload: &[u8]) -> Result<()> {
+        let (offset, crc) = self.file.append(payload)?;
+        lock(&self.baskets[meta.branch])?.push(BasketInfo {
             offset,
             comp_len: payload.len() as u32,
-            raw_len,
-            first_entry,
-            n_entries,
+            raw_len: meta.raw_len,
+            first_entry: meta.first_entry,
+            n_entries: meta.n_entries,
             crc,
         });
         Ok(())
     }
+
+    /// Drain collected metadata into a [`TreeMeta`]. Errors when a
+    /// sequence number never arrived (its flush task failed) or a lock
+    /// was poisoned.
+    pub fn into_meta(self, name: String, schema: Schema, entries: u64) -> Result<TreeMeta> {
+        let queue = unwrap_lock(self.order)?;
+        if !queue.stash.is_empty() {
+            return Err(Error::Sync(format!(
+                "{} basket(s) missing from the append sequence (a flush task failed)",
+                queue.stash.len()
+            )));
+        }
+        let mut branches = Vec::with_capacity(self.baskets.len());
+        for (m, f) in self.baskets.into_iter().zip(&schema.fields) {
+            let mut baskets = unwrap_lock(m)?;
+            baskets.sort_by_key(|b| b.first_entry);
+            branches.push(BranchMeta { name: f.name.clone(), ty: f.ty, baskets });
+        }
+        Ok(TreeMeta { name, schema, entries, branches })
+    }
 }
 
-/// Sink accumulating into an in-memory [`TreeBuffer`].
+impl BasketSink for FileSink {
+    fn put_basket(&self, meta: BasketMeta, payload: PayloadBuf) -> Result<()> {
+        let mut queue = lock(&self.order)?;
+        if meta.seq != queue.next_seq {
+            // Not our turn yet: park the payload (pool-owned either
+            // way) and let the basket whose turn it is drain us.
+            queue.stash.insert(meta.seq, StashedBasket { meta, payload });
+            return Ok(());
+        }
+        self.append_now(&meta, &payload)?;
+        drop(payload); // recycle before draining successors
+        let mut next = meta.seq + 1;
+        while let Some(s) = queue.stash.remove(&next) {
+            self.append_now(&s.meta, &s.payload)?;
+            next += 1;
+        }
+        queue.next_seq = next;
+        Ok(())
+    }
+}
+
+/// Sink accumulating into an in-memory [`TreeBuffer`]. Payload bytes
+/// are copied out (right-sized, no pool slack) so the pooled buffer
+/// recycles immediately — the tree buffer may sit in a merge queue
+/// arbitrarily long. Arrival order does not matter: baskets are sorted
+/// by entry range when the buffer is taken.
 pub struct BufferSink {
     branches: Vec<Mutex<Vec<BasketPayload>>>,
     schema: Schema,
@@ -85,31 +169,24 @@ impl BufferSink {
         BufferSink { branches: (0..n).map(|_| Mutex::new(Vec::new())).collect(), schema }
     }
 
-    pub fn into_buffer(self, entries: u64) -> TreeBuffer {
+    pub fn into_buffer(self, entries: u64) -> Result<TreeBuffer> {
         let mut buf = TreeBuffer::new(self.schema.clone());
         buf.entries = entries;
         for (dst, src) in buf.branches.iter_mut().zip(self.branches) {
-            dst.baskets = src.into_inner().unwrap();
+            dst.baskets = unwrap_lock(src)?;
             dst.baskets.sort_by_key(|b| b.first_entry);
         }
-        buf
+        Ok(buf)
     }
 }
 
 impl BasketSink for BufferSink {
-    fn put_basket(
-        &self,
-        branch: usize,
-        payload: Vec<u8>,
-        raw_len: u32,
-        first_entry: u64,
-        n_entries: u32,
-    ) -> Result<()> {
-        self.branches[branch].lock().unwrap().push(BasketPayload {
-            bytes: payload,
-            raw_len,
-            first_entry,
-            n_entries,
+    fn put_basket(&self, meta: BasketMeta, payload: PayloadBuf) -> Result<()> {
+        lock(&self.branches[meta.branch])?.push(BasketPayload {
+            bytes: payload.to_vec(),
+            raw_len: meta.raw_len,
+            first_entry: meta.first_entry,
+            n_entries: meta.n_entries,
         });
         Ok(())
     }
@@ -124,6 +201,7 @@ pub fn file_writer(backend: BackendRef) -> Result<std::sync::Arc<FileWriter>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::format::HEADER_LEN;
     use crate::serial::schema::{ColumnType, Field};
     use crate::storage::mem::MemBackend;
     use std::sync::Arc;
@@ -132,27 +210,47 @@ mod tests {
         Schema::new(vec![Field::new("a", ColumnType::F32), Field::new("b", ColumnType::I32)])
     }
 
+    fn bm(branch: usize, seq: u64, raw_len: u32, first_entry: u64, n_entries: u32) -> BasketMeta {
+        BasketMeta { branch, seq, raw_len, first_entry, n_entries }
+    }
+
     #[test]
-    fn file_sink_collects_sorted_meta() {
+    fn file_sink_appends_in_sequence_order() {
         let be = Arc::new(MemBackend::new());
         let fw = Arc::new(FileWriter::create(be).unwrap());
-        let sink = FileSink::new(fw, 2);
-        // out-of-order arrival (parallel flush)
-        sink.put_basket(0, vec![1, 2, 3], 12, 100, 50).unwrap();
-        sink.put_basket(0, vec![4, 5], 8, 0, 100).unwrap();
-        sink.put_basket(1, vec![6], 4, 0, 150).unwrap();
-        let meta = sink.into_meta("t".into(), schema2(), 150);
+        let sink = FileSink::new(fw.clone(), 2);
+        // out-of-order arrival (pipelined flush): seq 1 and 2 stash...
+        sink.put_basket(bm(0, 1, 12, 100, 50), vec![1, 2, 3].into()).unwrap();
+        sink.put_basket(bm(1, 2, 4, 0, 150), vec![6].into()).unwrap();
+        assert_eq!(fw.position(), HEADER_LEN, "nothing appends before seq 0 lands");
+        // ...and seq 0 drains all three in order.
+        sink.put_basket(bm(0, 0, 8, 0, 100), vec![4, 5].into()).unwrap();
+        assert_eq!(fw.position(), HEADER_LEN + 6);
+        let meta = sink.into_meta("t".into(), schema2(), 150).unwrap();
         assert_eq!(meta.branches[0].baskets[0].first_entry, 0);
-        assert_eq!(meta.branches[0].baskets[1].first_entry, 100);
+        assert_eq!(meta.branches[0].baskets[0].offset, HEADER_LEN);
+        assert_eq!(meta.branches[0].baskets[1].offset, HEADER_LEN + 2);
+        assert_eq!(meta.branches[1].baskets[0].offset, HEADER_LEN + 5);
         meta.check().unwrap();
+    }
+
+    #[test]
+    fn file_sink_detects_missing_sequence() {
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be).unwrap());
+        let sink = FileSink::new(fw, 1);
+        sink.put_basket(bm(0, 1, 4, 10, 10), vec![9].into()).unwrap();
+        // seq 0 never arrives (its task failed): close must error, not
+        // silently drop the stashed basket.
+        assert!(sink.into_meta("t".into(), schema2(), 20).is_err());
     }
 
     #[test]
     fn buffer_sink_builds_tree_buffer() {
         let sink = BufferSink::new(schema2());
-        sink.put_basket(0, vec![9; 10], 40, 0, 10).unwrap();
-        sink.put_basket(1, vec![8; 5], 40, 0, 10).unwrap();
-        let buf = sink.into_buffer(10);
+        sink.put_basket(bm(0, 0, 40, 0, 10), vec![9; 10].into()).unwrap();
+        sink.put_basket(bm(1, 1, 40, 0, 10), vec![8; 5].into()).unwrap();
+        let buf = sink.into_buffer(10).unwrap();
         assert_eq!(buf.entries, 10);
         assert_eq!(buf.branches[0].baskets.len(), 1);
         assert_eq!(buf.stored_bytes(), 15);

@@ -1,20 +1,77 @@
 //! Tree writer: accumulates rows (or whole column blocks), cuts aligned
-//! basket clusters, and serialises + compresses each branch's basket —
-//! in parallel across branches when IMT is enabled (paper §3.1).
+//! basket clusters, and serialises + compresses each branch's basket on
+//! the IMT pool.
+//!
+//! The flush is an asynchronous, block-granularity *pipeline* (paper
+//! §3.1; Riley & Jones' multi-threaded CMS output): `flush_chunk`
+//! takes ownership of the drained columns and submits one task per
+//! branch basket — further decomposed into per-[`compress::MAX_BLOCK`]
+//! subtasks under [`FlushGranularity::Block`] — to an
+//! [`imt::TaskGroup`], so [`TreeWriter::fill`] / `fill_columns` keep
+//! accumulating the next cluster while earlier clusters compress in
+//! the background.
+//!
+//! Ordering and failure model:
+//! * every basket carries a global sequence number (cluster-major,
+//!   branch-minor); [`super::sink::FileSink`] appends in exactly that
+//!   order, so a pipelined write is **byte-identical** to the serial
+//!   writer's output;
+//! * task failures land in a shared error slot and surface from the
+//!   next `fill`/`flush`/`close`; task *panics* are caught by the task
+//!   group and reported by `close` as [`Error::Sync`] — a bad basket
+//!   aborts the write cleanly, it never hangs `close()` or cascades;
+//! * [`WriterConfig::max_inflight_clusters`] bounds the clusters in
+//!   flight: when the producer outruns the compressors it blocks (the
+//!   time is accounted as *stall* in [`WriteStats`]) and helps execute
+//!   flush tasks instead of ballooning memory.
+//!
+//! Scratch and payload buffers both come from [`compress::pool`], so a
+//! steady-state flush performs zero allocator round-trips end to end:
+//! serialise into a pooled buffer, compress into a pooled buffer, sink
+//! appends/copies and recycles it.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::compress::{self, Settings};
 use crate::error::{Error, Result};
-use crate::imt;
+use crate::imt::{Pool, TaskGroup};
 use crate::metrics::{Recorder, SpanKind};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::Schema;
 use crate::serial::streamer::Streamer;
 use crate::serial::value::Row;
 
-use super::sink::BasketSink;
+use super::sink::{BasketMeta, BasketSink, PayloadBuf};
+
+/// How `fill` hands a cut cluster to the serialise+compress stage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlushMode {
+    /// Everything inline on the filling thread (baseline; also what
+    /// the other modes degrade to when IMT is off).
+    Serial,
+    /// Fan the cluster out on the IMT pool and *block* until it is
+    /// stored: per-flush parallelism only, the pre-pipeline write path.
+    Parallel,
+    /// Fan out and return: the producer keeps accumulating the next
+    /// cluster while earlier clusters compress (paper §3.1 pipeline).
+    #[default]
+    Pipelined,
+}
+
+/// Task decomposition of one flushed cluster.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlushGranularity {
+    /// One task per branch basket: scales as `min(branches, T)` within
+    /// a flush (kept as the comparison baseline).
+    Branch,
+    /// One subtask per [`compress::MAX_BLOCK`] chunk of each basket,
+    /// so fat baskets split across workers. Stored bytes are identical
+    /// either way (blocks are cut at the same boundaries).
+    #[default]
+    Block,
+}
 
 /// Tuning for a tree writer.
 #[derive(Clone, Debug)]
@@ -23,8 +80,14 @@ pub struct WriterConfig {
     pub basket_entries: usize,
     /// Compression settings applied to every branch.
     pub compression: Settings,
-    /// Use the IMT pool for per-branch serialise+compress during flush.
-    pub parallel_flush: bool,
+    /// Flush scheduling: serial, parallel-blocking, or pipelined.
+    pub flush: FlushMode,
+    /// Task decomposition for parallel/pipelined flushes.
+    pub granularity: FlushGranularity,
+    /// Pipelined mode: clusters allowed in flight before `fill`
+    /// blocks (bounds buffered memory; wait time is accounted as
+    /// stall).
+    pub max_inflight_clusters: usize,
 }
 
 impl Default for WriterConfig {
@@ -32,8 +95,65 @@ impl Default for WriterConfig {
         WriterConfig {
             basket_entries: 4096,
             compression: Settings::default_compressed(),
-            parallel_flush: true,
+            flush: FlushMode::default(),
+            granularity: FlushGranularity::default(),
+            max_inflight_clusters: 4,
         }
+    }
+}
+
+/// Flush-pipeline accounting, returned by [`TreeWriter::close`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WriteStats {
+    /// Total serialisation CPU across all flush tasks.
+    pub serialize: Duration,
+    /// Total compression CPU across all flush tasks.
+    pub compress: Duration,
+    /// Producer stall: wall time `fill`/`flush`/`close` spent blocked
+    /// on flush work (backpressure waits plus the close join).
+    /// Strictly below `compress` means the overlap is real — the
+    /// producer kept working while baskets compressed elsewhere.
+    pub stall: Duration,
+    /// Baskets handed to the sink.
+    pub baskets: u64,
+}
+
+/// Counters shared with flush tasks.
+#[derive(Default)]
+struct TaskCounters {
+    serialize_ns: AtomicU64,
+    compress_ns: AtomicU64,
+    baskets: AtomicU64,
+}
+
+/// First task failure wins; later ones are dropped (one abort reason).
+#[derive(Default)]
+struct ErrorSlot {
+    failed: AtomicBool,
+    first: Mutex<Option<Error>>,
+}
+
+impl ErrorSlot {
+    fn set(&self, e: Error) {
+        // A poisoned slot means a task panicked mid-set; that panic is
+        // reported separately by the task group, so just recover.
+        let mut g = self.first.lock().unwrap_or_else(|p| p.into_inner());
+        if g.is_none() {
+            *g = Some(e);
+        }
+        self.failed.store(true, Ordering::Release);
+    }
+
+    /// Surface (and consume) the first recorded failure. The fast path
+    /// is one atomic load.
+    fn check(&self) -> Result<()> {
+        if !self.failed.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let mut g = self.first.lock().unwrap_or_else(|p| p.into_inner());
+        Err(g
+            .take()
+            .unwrap_or_else(|| Error::Sync("write pipeline already failed".into())))
     }
 }
 
@@ -41,23 +161,50 @@ impl Default for WriterConfig {
 pub struct TreeWriter<S: BasketSink> {
     streamer: Streamer,
     config: WriterConfig,
-    sink: S,
+    sink: Arc<S>,
     columns: Vec<ColumnData>,
     buffered: usize,
     entries: u64,
     recorder: Option<Arc<Recorder>>,
+    group: TaskGroup,
+    counters: Arc<TaskCounters>,
+    errors: Arc<ErrorSlot>,
+    /// Global basket sequence: cluster-major, branch-minor.
+    next_seq: u64,
+    /// Producer-side stall accumulator (only the filling thread adds).
+    stall: Duration,
 }
 
 impl<S: BasketSink> TreeWriter<S> {
     pub fn new(schema: Schema, sink: S, config: WriterConfig) -> Self {
         let streamer = Streamer::new(schema);
         let columns = streamer.make_columns();
-        TreeWriter { streamer, config, sink, columns, buffered: 0, entries: 0, recorder: None }
+        TreeWriter {
+            streamer,
+            config,
+            sink: Arc::new(sink),
+            columns,
+            buffered: 0,
+            entries: 0,
+            recorder: None,
+            group: TaskGroup::new(),
+            counters: Arc::new(TaskCounters::default()),
+            errors: Arc::new(ErrorSlot::default()),
+            next_seq: 0,
+            stall: Duration::ZERO,
+        }
     }
 
     /// Attach a span recorder (Fig 7 instrumentation).
     pub fn with_recorder(mut self, r: Arc<Recorder>) -> Self {
         self.recorder = Some(r);
+        self
+    }
+
+    /// Run flush tasks on a specific pool instead of the global IMT
+    /// pool (dedicated writer pools, hermetic tests).
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.group = TaskGroup::with_pool(pool);
         self
     }
 
@@ -71,6 +218,7 @@ impl<S: BasketSink> TreeWriter<S> {
 
     /// Append one row; may trigger a cluster flush.
     pub fn fill(&mut self, row: Row) -> Result<()> {
+        self.errors.check()?;
         self.streamer.fill(&mut self.columns, row)?;
         self.buffered += 1;
         self.entries += 1;
@@ -84,6 +232,7 @@ impl<S: BasketSink> TreeWriter<S> {
     /// This is the zero-boxing path used when landing PJRT-generated
     /// event blocks.
     pub fn fill_columns(&mut self, block: &[ColumnData]) -> Result<()> {
+        self.errors.check()?;
         if block.len() != self.columns.len() {
             return Err(Error::Schema(format!(
                 "block has {} columns, schema has {}",
@@ -111,7 +260,9 @@ impl<S: BasketSink> TreeWriter<S> {
         Ok(())
     }
 
-    /// Flush everything still buffered (tail baskets included).
+    /// Flush everything still buffered (tail baskets included). In
+    /// pipelined mode this submits the tail and returns; completion is
+    /// awaited by [`TreeWriter::close`].
     pub fn flush(&mut self) -> Result<()> {
         while self.buffered > 0 {
             let chunk = self.buffered.min(self.config.basket_entries);
@@ -120,53 +271,210 @@ impl<S: BasketSink> TreeWriter<S> {
         Ok(())
     }
 
-    /// Serialise + compress + sink the first `chunk` buffered entries.
+    /// Cut the first `chunk` buffered entries into one basket per
+    /// branch and hand them to the flush stage per `config.flush`.
     fn flush_chunk(&mut self, chunk: usize) -> Result<()> {
         if chunk == 0 {
             return Ok(());
         }
+        self.errors.check()?;
         let n_entries = chunk as u32;
         let first_entry = self.entries - self.buffered as u64;
-        let cols: Vec<_> =
-            self.columns.iter_mut().map(|c| c.drain_front(chunk)).collect();
-        let settings = self.config.compression;
-        let sink = &self.sink;
-        let recorder = self.recorder.clone();
-
-        let one = |i: usize, col: &ColumnData| -> Result<()> {
-            // Serialisation scratch is pooled; only the compressed
-            // payload (whose ownership passes to the sink) is a fresh
-            // allocation. This is the Riley/Jones fix: per-basket
-            // flush cost no longer includes allocator round-trips.
-            let mut raw = compress::pool::get(col.byte_len());
-            let ((), ser_span) = timed(|| col.encode_into(&mut raw));
-            let (payload, cmp_span) = timed(|| compress::compress(settings, &raw));
-            if let Some(r) = &recorder {
-                r.push(SpanKind::Serialize, ser_span.0, ser_span.1);
-                r.push(SpanKind::Compress, cmp_span.0, cmp_span.1);
-            }
-            sink.put_basket(i, payload, raw.len() as u32, first_entry, n_entries)
-        };
-
-        if self.config.parallel_flush && imt::is_enabled() {
-            let results: Vec<Result<()>> =
-                imt::parallel_map(cols.len(), |i| one(i, &cols[i]));
-            for r in results {
-                r?;
-            }
-        } else {
-            for (i, col) in cols.iter().enumerate() {
-                one(i, col)?;
+        let n_branches = self.columns.len();
+        for (branch, col) in self.columns.iter_mut().enumerate() {
+            let task = BasketTask {
+                col: col.drain_front(chunk),
+                meta: BasketMeta {
+                    branch,
+                    seq: self.next_seq,
+                    raw_len: 0, // set after serialisation
+                    first_entry,
+                    n_entries,
+                },
+                sink: self.sink.clone(),
+                settings: self.config.compression,
+                granularity: self.config.granularity,
+                recorder: self.recorder.clone(),
+                counters: self.counters.clone(),
+                errors: self.errors.clone(),
+            };
+            self.next_seq += 1;
+            if self.config.flush == FlushMode::Serial {
+                let t0 = Instant::now();
+                task.run(None);
+                self.stall += t0.elapsed();
+            } else {
+                let group = self.group.clone();
+                self.group.spawn(move || task.run(Some(&group)));
             }
         }
         self.buffered -= chunk;
-        Ok(())
+        match self.config.flush {
+            FlushMode::Serial => self.errors.check(),
+            FlushMode::Parallel => {
+                let t0 = Instant::now();
+                let joined = self.group.join();
+                self.stall += t0.elapsed();
+                joined?;
+                self.errors.check()
+            }
+            FlushMode::Pipelined => {
+                // Backpressure: cap in-flight flush tasks (≈ clusters ×
+                // branches; block subtasks briefly exceed, harmlessly).
+                let limit = self.config.max_inflight_clusters.max(1) * n_branches.max(1);
+                if self.group.pending() > limit {
+                    let t0 = Instant::now();
+                    self.group.wait_below(limit);
+                    self.stall += t0.elapsed();
+                }
+                self.errors.check()
+            }
+        }
     }
 
-    /// Flush the tail and hand back the sink (with the final entry count).
-    pub fn close(mut self) -> Result<(S, u64)> {
-        self.flush()?;
-        Ok((self.sink, self.entries))
+    /// Flush the tail, drain the pipeline, and hand back the sink with
+    /// the final entry count and the pipeline accounting.
+    pub fn close(mut self) -> Result<(S, u64, WriteStats)> {
+        let flushed = self.flush();
+        // Always drain the group — even on error — so no task still
+        // holds the sink (and a panicked task is reported, not hung).
+        let t0 = Instant::now();
+        let joined = self.group.join();
+        self.stall += t0.elapsed();
+        flushed?;
+        joined?;
+        self.errors.check()?;
+        let stats = WriteStats {
+            serialize: Duration::from_nanos(self.counters.serialize_ns.load(Ordering::Relaxed)),
+            compress: Duration::from_nanos(self.counters.compress_ns.load(Ordering::Relaxed)),
+            stall: self.stall,
+            baskets: self.counters.baskets.load(Ordering::Relaxed),
+        };
+        let sink = Arc::try_unwrap(self.sink)
+            .map_err(|_| Error::Sync("flush tasks still hold the sink".into()))?;
+        Ok((sink, self.entries, stats))
+    }
+}
+
+/// One branch basket's serialise → compress → store job.
+struct BasketTask<S: BasketSink> {
+    col: ColumnData,
+    meta: BasketMeta,
+    sink: Arc<S>,
+    settings: Settings,
+    granularity: FlushGranularity,
+    recorder: Option<Arc<Recorder>>,
+    counters: Arc<TaskCounters>,
+    errors: Arc<ErrorSlot>,
+}
+
+impl<S: BasketSink> BasketTask<S> {
+    /// Serialise the column, then compress — whole-basket for branch
+    /// granularity or single-block payloads, per-block subtasks on
+    /// `group` otherwise. Infallible by construction: failures go to
+    /// the shared error slot.
+    fn run(mut self, group: Option<&TaskGroup>) {
+        let mut raw = compress::pool::get(self.col.byte_len());
+        let ((), ser) = timed(|| self.col.encode_into(&mut raw));
+        self.counters.serialize_ns.fetch_add(span_ns(ser), Ordering::Relaxed);
+        if let Some(r) = &self.recorder {
+            r.push(SpanKind::Serialize, ser.0, ser.1);
+        }
+        self.meta.raw_len = raw.len() as u32;
+        self.col.clear(); // release entry memory before compression
+        let ranges = compress::block_ranges(raw.len());
+        let split = self.granularity == FlushGranularity::Block && ranges.len() > 1;
+        match group {
+            Some(g) if split => Assembly::fan_out(self, raw, ranges, g),
+            _ => {
+                let mut payload =
+                    compress::pool::get(raw.len() / 2 + compress::HEADER_LEN);
+                let ((), cmp) =
+                    timed(|| compress::compress_into(self.settings, &raw, &mut payload));
+                self.note_compress(cmp);
+                drop(raw);
+                self.store(payload);
+            }
+        }
+    }
+
+    fn note_compress(&self, span: (Duration, Duration)) {
+        self.counters.compress_ns.fetch_add(span_ns(span), Ordering::Relaxed);
+        if let Some(r) = &self.recorder {
+            r.push(SpanKind::Compress, span.0, span.1);
+        }
+    }
+
+    fn store(&self, payload: PayloadBuf) {
+        self.counters.baskets.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = self.sink.put_basket(self.meta, payload) {
+            self.errors.set(e);
+        }
+    }
+}
+
+/// Shared state of one basket whose blocks compress as parallel
+/// subtasks; the last block to finish assembles the container (in
+/// block order, so bytes match the serial writer) and stores it.
+struct Assembly<S: BasketSink> {
+    task: BasketTask<S>,
+    raw: PayloadBuf,
+    ranges: Vec<std::ops::Range<usize>>,
+    slots: Vec<Mutex<Option<PayloadBuf>>>,
+    remaining: AtomicUsize,
+}
+
+impl<S: BasketSink> Assembly<S> {
+    fn fan_out(
+        task: BasketTask<S>,
+        raw: PayloadBuf,
+        ranges: Vec<std::ops::Range<usize>>,
+        group: &TaskGroup,
+    ) {
+        let n = ranges.len();
+        let asm = Arc::new(Assembly {
+            task,
+            raw,
+            ranges,
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            remaining: AtomicUsize::new(n),
+        });
+        for c in 1..n {
+            let asm = asm.clone();
+            group.spawn(move || asm.compress_block(c));
+        }
+        asm.compress_block(0);
+    }
+
+    fn compress_block(&self, c: usize) {
+        let range = self.ranges[c].clone();
+        let chunk = &self.raw[range];
+        let mut out = compress::pool::get(chunk.len() / 2 + compress::HEADER_LEN);
+        let ((), cmp) = timed(|| compress::compress_into(self.task.settings, chunk, &mut out));
+        self.task.note_compress(cmp);
+        *self.slots[c].lock().unwrap_or_else(|p| p.into_inner()) = Some(out);
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.assemble();
+        }
+    }
+
+    fn assemble(&self) {
+        let mut payload = compress::pool::get(
+            self.raw.len() / 2 + self.slots.len() * compress::HEADER_LEN,
+        );
+        for slot in &self.slots {
+            let block = slot.lock().unwrap_or_else(|p| p.into_inner()).take();
+            match block {
+                Some(b) => payload.extend_from_slice(&b),
+                None => {
+                    self.task.errors.set(Error::Sync(
+                        "missing compressed block in basket assembly".into(),
+                    ));
+                    return;
+                }
+            }
+        }
+        self.task.store(payload);
     }
 }
 
@@ -178,6 +486,10 @@ fn timed<R>(f: impl FnOnce() -> R) -> (R, (Duration, Duration)) {
     let out = f();
     let t1 = process_epoch().elapsed();
     (out, (t0, t1))
+}
+
+fn span_ns(span: (Duration, Duration)) -> u64 {
+    span.1.saturating_sub(span.0).as_nanos() as u64
 }
 
 fn process_epoch() -> &'static std::time::Instant {
@@ -201,7 +513,8 @@ mod tests {
         WriterConfig {
             basket_entries: basket,
             compression: Settings::new(Codec::Lz4r, 3),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         }
     }
 
@@ -211,9 +524,10 @@ mod tests {
         for i in 0..250 {
             w.fill(vec![Value::F32(i as f32), Value::I32(i)]).unwrap();
         }
-        let (sink, entries) = w.close().unwrap();
+        let (sink, entries, stats) = w.close().unwrap();
         assert_eq!(entries, 250);
-        let buf = sink.into_buffer(entries);
+        assert_eq!(stats.baskets, 6); // 3 clusters x 2 branches
+        let buf = sink.into_buffer(entries).unwrap();
         // 100 + 100 + 50
         for br in &buf.branches {
             let counts: Vec<u32> = br.baskets.iter().map(|b| b.n_entries).collect();
@@ -232,9 +546,9 @@ mod tests {
         ];
         w.fill_columns(&block).unwrap();
         w.fill_columns(&block).unwrap();
-        let (sink, entries) = w.close().unwrap();
+        let (sink, entries, _) = w.close().unwrap();
         assert_eq!(entries, 200);
-        let buf = sink.into_buffer(entries);
+        let buf = sink.into_buffer(entries).unwrap();
         let total: u32 = buf.branches[0].baskets.iter().map(|b| b.n_entries).sum();
         assert_eq!(total, 200);
     }
@@ -251,8 +565,43 @@ mod tests {
     #[test]
     fn empty_close() {
         let w = TreeWriter::new(schema(), BufferSink::new(schema()), config(10));
-        let (sink, entries) = w.close().unwrap();
+        let (sink, entries, stats) = w.close().unwrap();
         assert_eq!(entries, 0);
-        assert!(sink.into_buffer(0).is_empty());
+        assert_eq!(stats.baskets, 0);
+        assert!(sink.into_buffer(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fat_basket_splits_into_block_subtasks_and_matches_serial() {
+        // A basket whose raw payload exceeds MAX_BLOCK: under block
+        // granularity it compresses as per-block subtasks; the stored
+        // container must byte-match the serial (whole-buffer) path.
+        let n = compress::MAX_BLOCK + 4096;
+        let schema = Schema::new(vec![Field::new("b", ColumnType::U8)]);
+        let col = ColumnData::U8((0..n).map(|i| (i % 251) as u8).collect());
+        let mk = |pool: Option<Arc<Pool>>| {
+            let cfg = WriterConfig {
+                basket_entries: n,
+                compression: Settings::uncompressed(),
+                flush: if pool.is_some() { FlushMode::Pipelined } else { FlushMode::Serial },
+                granularity: FlushGranularity::Block,
+                max_inflight_clusters: 2,
+            };
+            let mut w = TreeWriter::new(schema.clone(), BufferSink::new(schema.clone()), cfg);
+            if let Some(p) = pool {
+                w = w.with_pool(p);
+            }
+            w.fill_columns(std::slice::from_ref(&col)).unwrap();
+            let (sink, entries, _) = w.close().unwrap();
+            sink.into_buffer(entries).unwrap()
+        };
+        let serial = mk(None);
+        let piped = mk(Some(Arc::new(Pool::new(3))));
+        assert_eq!(serial.branches[0].baskets.len(), 1);
+        assert_eq!(
+            piped.branches[0].baskets[0].bytes,
+            serial.branches[0].baskets[0].bytes,
+            "block-subtask container diverged from serial bytes"
+        );
     }
 }

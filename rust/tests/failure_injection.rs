@@ -15,7 +15,7 @@ use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::{Backend, BackendRef};
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::FileSink;
-use rootio_par::tree::writer::{TreeWriter, WriterConfig};
+use rootio_par::tree::writer::{FlushMode, TreeWriter, WriterConfig};
 
 fn build_file(g: &mut Gen) -> BackendRef {
     let schema = g.schema(4);
@@ -29,15 +29,17 @@ fn build_file(g: &mut Gen) -> BackendRef {
         } else {
             Settings::new(Codec::Lz4r, 3)
         },
-        parallel_flush: false,
+        flush: FlushMode::Serial,
+        ..Default::default()
     };
     let mut w = TreeWriter::new(schema.clone(), sink, cfg);
     for _ in 0..g.range(10, 200) {
         let row = g.row(&schema);
         w.fill(row).unwrap();
     }
-    let (sink, entries) = w.close().unwrap();
-    fw.finish(&Directory { trees: vec![sink.into_meta("t".into(), schema, entries)] }).unwrap();
+    let (sink, entries, _) = w.close().unwrap();
+    let meta = sink.into_meta("t".into(), schema, entries).unwrap();
+    fw.finish(&Directory { trees: vec![meta] }).unwrap();
     be
 }
 

@@ -22,7 +22,7 @@ use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::FileSink;
-use rootio_par::tree::writer::{TreeWriter, WriterConfig};
+use rootio_par::tree::writer::{FlushMode, TreeWriter, WriterConfig};
 
 fn codecs() -> [Settings; 4] {
     [
@@ -45,8 +45,8 @@ fn write_rows(
     for row in rows {
         w.fill(row.clone()).unwrap();
     }
-    let (sink, entries) = w.close().unwrap();
-    let meta = sink.into_meta("t".into(), schema.clone(), entries);
+    let (sink, entries, _) = w.close().unwrap();
+    let meta = sink.into_meta("t".into(), schema.clone(), entries).unwrap();
     meta.check().unwrap(); // basket index invariant: gapless + monotone
     fw.finish(&Directory { trees: vec![meta] }).unwrap();
     (Arc::new(FileReader::open(be.clone()).unwrap()), be)
@@ -61,7 +61,8 @@ fn prop_write_read_roundtrip_any_schema() {
         let cfg = WriterConfig {
             basket_entries: g.range(1, 128),
             compression: *g.choose(&codecs()),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let (reader, _) = write_rows(&schema, &rows, cfg);
         let tr = TreeReader::open_first(reader).unwrap();
@@ -80,7 +81,8 @@ fn prop_parallel_read_equals_serial_read() {
         let cfg = WriterConfig {
             basket_entries: g.range(8, 64),
             compression: *g.choose(&codecs()),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let (reader, _) = write_rows(&schema, &rows, cfg);
         let tr = TreeReader::open_first(reader).unwrap();
@@ -115,7 +117,8 @@ fn prop_basket_granularity_equals_serial_uneven_baskets() {
         let cfg = WriterConfig {
             basket_entries,
             compression: *g.choose(&codecs()),
-            parallel_flush: false,
+            flush: FlushMode::Serial,
+            ..Default::default()
         };
         let (reader, _) = write_rows(&schema, &rows, cfg);
         let tr = TreeReader::open_first(reader).unwrap();
@@ -158,7 +161,8 @@ fn prop_merger_preserves_entry_multiset() {
                 writer: WriterConfig {
                     basket_entries: g.range(1, 64),
                     compression: *g.choose(&codecs()),
-                    parallel_flush: false,
+                    flush: FlushMode::Serial,
+                    ..Default::default()
                 },
             },
         )
@@ -211,7 +215,8 @@ fn prop_hadd_parallel_equals_serial() {
                 let cfg = WriterConfig {
                     basket_entries: g.range(4, 64),
                     compression: *g.choose(&codecs()),
-                    parallel_flush: false,
+                    flush: FlushMode::Serial,
+            ..Default::default()
                 };
                 write_rows(&schema, &rows, cfg).1
             })
