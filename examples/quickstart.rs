@@ -1,67 +1,79 @@
-//! Quickstart — the paper's Figure 5 example, ported.
+//! Quickstart — the paper's Figure 5 example, grown to a shared I/O
+//! session.
 //!
-//! Left side of Figure 5 (sequential `TFile`) vs right side
-//! (`TBufferMerger` with worker threads): fill a one-branch tree with
-//! `nEntries` integers, sequentially and in parallel, and verify both
-//! files contain the same data.
+//! Three ways to write the same data:
+//! 1. sequential `TFile` (Figure 5, left);
+//! 2. `TBufferMerger` with worker threads into ONE file (Figure 5,
+//!    right) — the workers' pipelined flushes share the merger's
+//!    session budget;
+//! 3. a shared [`Session`]: N writers, N files (and a two-trees-in-
+//!    one-file variant), all drawing from one pool and one fair-share
+//!    in-flight budget — the multi-output production shape.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
 use rootio_par::compress::{Codec, Settings};
-use rootio_par::coordinator::write::write_blocks;
+use rootio_par::coordinator::write::{write_blocks, write_files, WriteJob};
 use rootio_par::format::reader::FileReader;
+use rootio_par::format::writer::FileWriter;
 use rootio_par::merger::{MergerConfig, TBufferMerger};
 use rootio_par::serial::column::ColumnData;
 use rootio_par::serial::schema::{ColumnType, Field, Schema};
 use rootio_par::serial::value::Value;
+use rootio_par::session::{Session, SessionConfig};
 use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
-use rootio_par::tree::writer::{FlushMode, WriterConfig};
+use rootio_par::tree::sink::FileSink;
+use rootio_par::tree::writer::{FlushMode, TreeWriter, WriterConfig};
 
 const N_ENTRIES: usize = 100_000;
 const N_WORKERS: usize = 4;
 
+fn schema() -> Schema {
+    Schema::new(vec![Field::new("n", ColumnType::I32)])
+}
+
+fn writer_config() -> WriterConfig {
+    WriterConfig {
+        basket_entries: 4096,
+        compression: Settings::new(Codec::Rzip, 4),
+        flush: FlushMode::Pipelined,
+        ..Default::default()
+    }
+}
+
 /// Figure 5, left: sequential usage of TFile.
 fn write_tree_sequential() -> anyhow::Result<BackendRef> {
     let be: BackendRef = Arc::new(MemBackend::new());
-    let schema = Schema::new(vec![Field::new("n", ColumnType::I32)]);
     let block = vec![ColumnData::I32((0..N_ENTRIES as i32).collect())];
     write_blocks(
         be.clone(),
-        schema,
+        schema(),
         "mytree",
-        WriterConfig {
-            basket_entries: 4096,
-            compression: Settings::new(Codec::Rzip, 4),
-            flush: FlushMode::Serial,
-            ..Default::default()
-        },
+        WriterConfig { flush: FlushMode::Serial, ..writer_config() },
         vec![block],
     )?;
     Ok(be)
 }
 
-/// Figure 5, right: parallel usage of TFile with TBufferMerger.
-fn write_tree_parallel() -> anyhow::Result<BackendRef> {
+/// Figure 5, right: parallel usage of TFile with TBufferMerger. The
+/// worker files all attach to the merger's session, so their pipelined
+/// flushes share one pool and one in-flight budget.
+fn write_tree_merger(session: &Session) -> anyhow::Result<BackendRef> {
     let be: BackendRef = Arc::new(MemBackend::new());
-    let schema = Schema::new(vec![Field::new("n", ColumnType::I32)]);
-    let merger = TBufferMerger::create(
+    let merger = TBufferMerger::create_in_session(
         be.clone(),
-        schema,
+        schema(),
         MergerConfig {
             tree_name: "mytree".into(),
             queue_depth: N_WORKERS,
-            writer: WriterConfig {
-                basket_entries: 4096,
-                compression: Settings::new(Codec::Rzip, 4),
-                // workers pipeline their flushes when IMT is enabled
-                flush: FlushMode::Pipelined,
-                ..Default::default()
-            },
+            writer: writer_config(),
         },
+        None,
+        session,
     )?;
     let per_worker = N_ENTRIES / N_WORKERS;
     std::thread::scope(|s| {
@@ -82,8 +94,55 @@ fn write_tree_parallel() -> anyhow::Result<BackendRef> {
     Ok(be)
 }
 
-fn read_sorted(be: BackendRef) -> anyhow::Result<Vec<i32>> {
-    let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+/// The session shape: N writers, N files, one shared budget. Each
+/// output is byte-identical to the same writer run alone — the session
+/// only coordinates scheduling and memory, never bytes.
+fn write_many_files(session: &Session) -> anyhow::Result<Vec<BackendRef>> {
+    let per_worker = N_ENTRIES / N_WORKERS;
+    let backends: Vec<BackendRef> =
+        (0..N_WORKERS).map(|_| Arc::new(MemBackend::new()) as BackendRef).collect();
+    let jobs: Vec<WriteJob> = backends
+        .iter()
+        .enumerate()
+        .map(|(w, be)| WriteJob {
+            backend: be.clone(),
+            schema: schema(),
+            name: "mytree".into(),
+            config: writer_config(),
+            blocks: vec![vec![ColumnData::I32(
+                (0..per_worker as i32).map(|i| (w * per_worker) as i32 + i).collect(),
+            )]],
+        })
+        .collect();
+    write_files(session, jobs)?;
+    Ok(backends)
+}
+
+/// Two trees, one file, written concurrently under the session: each
+/// writer's sink registers its tree as it closes and the file commits
+/// one deterministic (name-sorted) footer.
+fn write_two_trees_one_file(session: &Session) -> anyhow::Result<BackendRef> {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let fw = Arc::new(FileWriter::create(be.clone())?);
+    std::thread::scope(|s| {
+        for name in ["electrons", "muons"] {
+            let sink = FileSink::new(fw.clone(), 1);
+            let mut w = TreeWriter::attached(schema(), sink, writer_config(), session);
+            s.spawn(move || {
+                for i in 0..10_000 {
+                    w.fill(vec![Value::I32(i)]).unwrap();
+                }
+                let (sink, entries, _) = w.close().unwrap();
+                sink.finish_tree(name.into(), schema(), entries).unwrap();
+            });
+        }
+    });
+    fw.finish_registered()?;
+    Ok(be)
+}
+
+fn read_sorted(be: BackendRef, tree: &str) -> anyhow::Result<Vec<i32>> {
+    let reader = TreeReader::open(Arc::new(FileReader::open(be)?), tree)?;
     let cols = reader.read_all()?;
     let mut vals: Vec<i32> = (0..reader.entries() as usize)
         .map(|i| match cols[0].get(i).unwrap() {
@@ -96,25 +155,55 @@ fn read_sorted(be: BackendRef) -> anyhow::Result<Vec<i32>> {
 }
 
 fn main() -> anyhow::Result<()> {
+    rootio_par::imt::enable(N_WORKERS);
+    // ONE session for every output the job opens: merger workers,
+    // standalone writers, multi-tree files — one pool, one budget.
+    let session = Session::new(SessionConfig::for_writers(N_WORKERS, 2));
+
     let t0 = std::time::Instant::now();
     let seq = write_tree_sequential()?;
     let t_seq = t0.elapsed();
 
     let t1 = std::time::Instant::now();
-    let par = write_tree_parallel()?;
-    let t_par = t1.elapsed();
+    let merged = write_tree_merger(&session)?;
+    let t_merger = t1.elapsed();
 
-    let a = read_sorted(seq)?;
-    let b = read_sorted(par)?;
-    assert_eq!(a, b, "sequential and parallel files hold the same entries");
-    assert_eq!(a.len(), N_ENTRIES);
+    let t2 = std::time::Instant::now();
+    let many = write_many_files(&session)?;
+    let t_many = t2.elapsed();
 
+    let two_trees = write_two_trees_one_file(&session)?;
+
+    let expect = read_sorted(seq, "mytree")?;
+    assert_eq!(expect.len(), N_ENTRIES);
+    assert_eq!(read_sorted(merged, "mytree")?, expect, "merger file holds the same entries");
+    let mut union: Vec<i32> = Vec::new();
+    for be in many {
+        union.extend(read_sorted(be, "mytree")?);
+    }
+    union.sort();
+    assert_eq!(union, expect, "session-shared files hold the same entries");
+    for tree in ["electrons", "muons"] {
+        assert_eq!(read_sorted(two_trees.clone(), tree)?.len(), 10_000);
+    }
+
+    let st = session.stats();
     println!("quickstart OK: {N_ENTRIES} entries");
-    println!("  sequential TFile write: {:>8.1} ms", t_seq.as_secs_f64() * 1e3);
+    println!("  sequential TFile write:   {:>8.1} ms", t_seq.as_secs_f64() * 1e3);
     println!(
-        "  TBufferMerger x{N_WORKERS}:      {:>8.1} ms ({:.2}x)",
-        t_par.as_secs_f64() * 1e3,
-        t_seq.as_secs_f64() / t_par.as_secs_f64()
+        "  TBufferMerger x{N_WORKERS}:        {:>8.1} ms ({:.2}x)",
+        t_merger.as_secs_f64() * 1e3,
+        t_seq.as_secs_f64() / t_merger.as_secs_f64()
     );
+    println!(
+        "  session write_files x{N_WORKERS}:  {:>8.1} ms ({:.2}x)",
+        t_many.as_secs_f64() * 1e3,
+        t_seq.as_secs_f64() / t_many.as_secs_f64()
+    );
+    println!(
+        "  session: {} writers opened, {} admissions ({} waited), budget {} clusters",
+        st.writers_opened, st.admissions, st.admission_waits, st.budget_limit
+    );
+    rootio_par::imt::disable();
     Ok(())
 }

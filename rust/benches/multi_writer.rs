@@ -1,0 +1,13 @@
+//! Bench harness for the multi-writer session experiment (harness =
+//! false; criterion is unavailable offline — see Cargo.toml). Pass
+//! --quick for a reduced sweep. Emits BENCH_fig4.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::multi_writer(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("multi_writer: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -21,7 +21,7 @@
 //! [`stats`].
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Buffers above this capacity are dropped instead of pooled, bounding
@@ -37,14 +37,34 @@ const SHELF_MAX: usize = 8;
 /// Max buffers kept in the shared fallback pool.
 const GLOBAL_MAX: usize = 64;
 
-/// Shared (cross-thread) buffer pool: a LIFO stack behind a mutex.
+/// Session sizing of the shared pool (see [`reserve_writer`]): the
+/// baseline resident-byte high-water once any writer is registered...
+const BASE_MAX_BYTES: usize = 128 * 1024 * 1024;
+/// ...plus this much head-room per registered writer,
+const PER_WRITER_BYTES: usize = 16 * 1024 * 1024;
+/// ...and this many extra pooled buffers per registered writer.
+const PER_WRITER_BUFFERS: usize = 8;
+
+/// Shared (cross-thread) buffer pool: a LIFO stack behind a mutex with
+/// a resident-byte high-water. Returning a buffer past the high-water
+/// (or the buffer cap) **evicts the coldest pooled buffers** — the
+/// bottom of the LIFO stack, least recently used — to make room, and
+/// drops the newcomer only when eviction cannot help; both outcomes
+/// are counted ([`PoolStats::evictions`] / [`PoolStats::drops`]) so
+/// many-writer pressure is observable instead of silently unbounded.
 /// Instantiable for tests; the library hot path uses the process-wide
 /// instance via [`get`] / [`stats`].
 pub struct BufferPool {
     stack: Mutex<Vec<Vec<u8>>>,
-    max_buffers: usize,
+    max_buffers: AtomicUsize,
+    /// Resident-byte high-water (capacity sum of pooled buffers).
+    max_bytes: AtomicUsize,
+    /// Current resident bytes (mutated only under the stack lock).
+    resident: AtomicUsize,
     hits: AtomicU64,
     misses: AtomicU64,
+    drops: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// Snapshot of pool effectiveness counters.
@@ -54,6 +74,14 @@ pub struct PoolStats {
     pub hits: u64,
     /// `get` calls that had to allocate a fresh buffer.
     pub misses: u64,
+    /// Returned buffers dropped (oversized, or over the high-water even
+    /// after eviction). A bounded value under steady load means the
+    /// eviction policy is recycling instead of discarding.
+    pub drops: u64,
+    /// Cold pooled buffers evicted to admit warmer returns.
+    pub evictions: u64,
+    /// Capacity bytes currently resident in the shared pool.
+    pub resident_bytes: usize,
 }
 
 impl PoolStats {
@@ -68,12 +96,40 @@ impl PoolStats {
 }
 
 impl BufferPool {
+    /// Pool capped at `max_buffers` with no byte high-water (legacy
+    /// behaviour; sessions install one via [`BufferPool::set_limits`]).
     pub const fn new(max_buffers: usize) -> Self {
+        BufferPool::with_limits(max_buffers, usize::MAX)
+    }
+
+    /// Pool capped at `max_buffers` buffers and `max_bytes` resident
+    /// capacity bytes.
+    pub const fn with_limits(max_buffers: usize, max_bytes: usize) -> Self {
         BufferPool {
             stack: Mutex::new(Vec::new()),
-            max_buffers,
+            max_buffers: AtomicUsize::new(max_buffers),
+            max_bytes: AtomicUsize::new(max_bytes),
+            resident: AtomicUsize::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Retune the pool's high-water marks (session-scoped sizing) and
+    /// evict down to them if the pool is currently over.
+    pub fn set_limits(&self, max_buffers: usize, max_bytes: usize) {
+        self.max_buffers.store(max_buffers, Ordering::SeqCst);
+        self.max_bytes.store(max_bytes, Ordering::SeqCst);
+        let mut stack = self.stack.lock().unwrap();
+        while !stack.is_empty()
+            && (stack.len() > max_buffers
+                || self.resident.load(Ordering::Relaxed) > max_bytes)
+        {
+            let evicted = stack.remove(0);
+            self.resident.fetch_sub(evicted.capacity(), Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -81,7 +137,14 @@ impl BufferPool {
     /// Counted as a hit when a pooled buffer was reused (even if it
     /// had to grow — growth converges to the high-water mark).
     pub fn take(&self, min_capacity: usize) -> Vec<u8> {
-        let reused = self.stack.lock().unwrap().pop();
+        let reused = {
+            let mut stack = self.stack.lock().unwrap();
+            let buf = stack.pop();
+            if let Some(b) = &buf {
+                self.resident.fetch_sub(b.capacity(), Ordering::Relaxed);
+            }
+            buf
+        };
         match reused {
             Some(mut buf) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -98,22 +161,55 @@ impl BufferPool {
         }
     }
 
-    /// Return a buffer to the pool (dropped when full or oversized).
+    /// Return a buffer to the pool. Past the high-water the coldest
+    /// pooled buffers are evicted in its favour (the newcomer is
+    /// cache-warm); the newcomer itself is dropped — and counted —
+    /// only when it is oversized or larger than the whole budget.
     pub fn put(&self, mut buf: Vec<u8>) {
-        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_CAPACITY {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if buf.capacity() > MAX_POOLED_CAPACITY {
+            self.drops.fetch_add(1, Ordering::Relaxed);
             return;
         }
         buf.clear();
+        let cap = buf.capacity();
         let mut stack = self.stack.lock().unwrap();
-        if stack.len() < self.max_buffers {
-            stack.push(buf);
+        let max_buffers = self.max_buffers.load(Ordering::SeqCst);
+        let max_bytes = self.max_bytes.load(Ordering::SeqCst);
+        if cap > max_bytes || max_buffers == 0 {
+            // Infeasible even on an empty pool: drop the newcomer
+            // without sacrificing the resident working set to a
+            // pointless eviction sweep.
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            return;
         }
+        while !stack.is_empty()
+            && (stack.len() >= max_buffers
+                || self.resident.load(Ordering::Relaxed).saturating_add(cap) > max_bytes)
+        {
+            let evicted = stack.remove(0);
+            self.resident.fetch_sub(evicted.capacity(), Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        if stack.len() >= max_buffers
+            || self.resident.load(Ordering::Relaxed).saturating_add(cap) > max_bytes
+        {
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.resident.fetch_add(cap, Ordering::Relaxed);
+        stack.push(buf);
     }
 
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            drops: self.drops.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
         }
     }
 }
@@ -146,6 +242,49 @@ pub fn get(min_capacity: usize) -> Scratch {
 /// Counters of the process-wide pool (thread-local hits included).
 pub fn stats() -> PoolStats {
     GLOBAL.stats()
+}
+
+/// Registered writers (session accounting for the shared pool). A
+/// mutex — not an atomic — so the count update and the matching
+/// `set_limits` apply as one unit: racing registrations can never
+/// leave the pool sized for a stale writer count.
+static WRITERS: Mutex<usize> = Mutex::new(0);
+
+fn apply_writer_limits(n: usize) {
+    if n == 0 {
+        // Back to the unscoped defaults (no byte high-water): the last
+        // session released its reservation.
+        GLOBAL.set_limits(GLOBAL_MAX, usize::MAX);
+    } else {
+        GLOBAL.set_limits(
+            GLOBAL_MAX + n * PER_WRITER_BUFFERS,
+            BASE_MAX_BYTES + n * PER_WRITER_BYTES,
+        );
+    }
+}
+
+/// Session-scoped accounting: an [`crate::session::Session`] registers
+/// each writer it opens, growing the shared pool's high-water marks so
+/// many concurrent writers recycle buffers instead of thrashing the
+/// allocator — and shrinking (evicting) them back when writers close.
+pub fn reserve_writer() {
+    let mut writers = WRITERS.lock().unwrap_or_else(|p| p.into_inner());
+    *writers += 1;
+    apply_writer_limits(*writers);
+}
+
+/// Release one writer's reservation (the pair of [`reserve_writer`]);
+/// evicts the shared pool down to the reduced high-water.
+pub fn release_writer() {
+    let mut writers = WRITERS.lock().unwrap_or_else(|p| p.into_inner());
+    debug_assert!(*writers > 0, "release_writer without reserve_writer");
+    *writers = writers.saturating_sub(1);
+    apply_writer_limits(*writers);
+}
+
+/// Writers currently registered against the shared pool.
+pub fn registered_writers() -> usize {
+    *WRITERS.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// RAII scratch buffer: derefs to `Vec<u8>`, returns itself to the
@@ -248,6 +387,61 @@ mod tests {
             pool.put(Vec::with_capacity(64));
         }
         assert_eq!(pool.stack.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn high_water_evicts_coldest_first() {
+        // Byte high-water of 1000: three 400-capacity buffers exceed
+        // it, so admitting the third evicts the coldest (first-pooled).
+        let pool = BufferPool::with_limits(8, 1000);
+        pool.put(Vec::with_capacity(400));
+        pool.put(Vec::with_capacity(400));
+        assert_eq!(pool.stats().resident_bytes, 800);
+        pool.put(Vec::with_capacity(400));
+        let st = pool.stats();
+        assert_eq!(st.evictions, 1, "coldest buffer evicted for the newcomer");
+        assert_eq!(st.drops, 0);
+        assert_eq!(st.resident_bytes, 800);
+        assert!(st.resident_bytes <= 1000, "resident stays under the high-water");
+    }
+
+    #[test]
+    fn newcomer_larger_than_budget_is_dropped_without_evicting() {
+        let pool = BufferPool::with_limits(8, 100);
+        pool.put(Vec::with_capacity(64));
+        // 200 > the whole byte budget: no amount of eviction could
+        // admit it — dropped upfront, the working set stays resident.
+        pool.put(Vec::with_capacity(200));
+        let st = pool.stats();
+        assert_eq!(st.drops, 1);
+        assert_eq!(st.evictions, 0, "infeasible newcomer must not evict");
+        assert_eq!(st.resident_bytes, 64);
+    }
+
+    #[test]
+    fn set_limits_shrinks_the_pool() {
+        let pool = BufferPool::with_limits(8, usize::MAX);
+        for _ in 0..6 {
+            pool.put(Vec::with_capacity(100));
+        }
+        assert_eq!(pool.stats().resident_bytes, 600);
+        pool.set_limits(8, 250);
+        let st = pool.stats();
+        assert!(st.resident_bytes <= 250, "evicted down to the new high-water");
+        assert_eq!(st.evictions, 4);
+    }
+
+    #[test]
+    fn writer_reservation_scales_and_releases() {
+        // Global counters: other tests may register writers too, so
+        // assert only the delta produced by this balanced pair.
+        let before = registered_writers();
+        reserve_writer();
+        assert!(registered_writers() >= before + 1);
+        release_writer();
+        // take/put still works through a resize
+        let b = GLOBAL.take(1024);
+        GLOBAL.put(b);
     }
 
     #[test]

@@ -1,11 +1,23 @@
-//! Parallel column writing (paper §3.1) — convenience pipeline that
-//! builds a single-tree file from column blocks. Serialisation and
-//! compression run through the tree writer's flush pipeline: with
+//! Parallel column writing (paper §3.1) — convenience pipelines that
+//! build files from column blocks, opened under an I/O [`Session`].
+//!
+//! One writer: [`write_blocks`] builds a single-tree file; with
 //! `FlushMode::Pipelined` the producer keeps landing blocks while
-//! earlier clusters compress on the IMT pool, and the report's
+//! earlier clusters compress on the session's pool, and the report's
 //! `stall` / `compress_time` pair quantifies the overlap (stall
 //! strictly below compress time means the producer was *not* the
 //! bottleneck — the paper's §3.1 goal).
+//!
+//! Many writers: [`write_files`] runs N producer threads, one
+//! [`WriteJob`] each, **all attached to one shared session** — one
+//! pool, one global in-flight cluster budget with per-writer fair
+//! admission. That is the multi-file production shape (Riley & Jones'
+//! concurrent CMS output modules): aggregate throughput scales with
+//! the writer count while buffered memory stays inside the one
+//! session bound, and every output file is byte-identical to the same
+//! writer run alone. Session-shared writing of *several trees into
+//! one file* goes through [`crate::tree::sink::FileSink::finish_tree`]
+//! + [`crate::format::writer::FileWriter::finish_registered`] instead.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -15,6 +27,7 @@ use crate::format::writer::FileWriter;
 use crate::format::Directory;
 use crate::serial::column::ColumnData;
 use crate::serial::schema::Schema;
+use crate::session::Session;
 use crate::storage::BackendRef;
 use crate::tree::sink::FileSink;
 use crate::tree::writer::{TreeWriter, WriterConfig};
@@ -36,8 +49,13 @@ pub struct WriteReport {
 }
 
 impl WriteReport {
-    /// Uncompressed-data ingest bandwidth.
+    /// Uncompressed-data ingest bandwidth. Degenerate runs — nothing
+    /// written, or a wall too short to measure — report 0.0 rather
+    /// than dividing by zero.
     pub fn throughput_mbps(&self) -> f64 {
+        if self.raw_bytes == 0 || self.wall.is_zero() {
+            return 0.0;
+        }
         self.raw_bytes as f64 / 1e6 / self.wall.as_secs_f64()
     }
 
@@ -49,7 +67,9 @@ impl WriteReport {
     }
 
     /// Fraction of compression CPU the producer did *not* wait for
-    /// (0.0 = fully synchronous, → 1.0 = fully overlapped).
+    /// (0.0 = fully synchronous, → 1.0 = fully overlapped). Empty
+    /// runs — no compression work at all — report 0.0 rather than
+    /// dividing by the zero compress time.
     pub fn overlap_fraction(&self) -> f64 {
         if self.compress_time.is_zero() {
             return 0.0;
@@ -61,7 +81,27 @@ impl WriteReport {
 
 /// Write `blocks` (each one `ColumnData` per branch) as tree `name` on
 /// `backend`, then finalise the file. Returns throughput accounting.
+/// The writer runs under a private single-writer session; see
+/// [`write_blocks_in_session`] to share a job-wide one.
 pub fn write_blocks<I>(
+    backend: BackendRef,
+    schema: Schema,
+    name: &str,
+    config: WriterConfig,
+    blocks: I,
+) -> Result<WriteReport>
+where
+    I: IntoIterator<Item = Vec<ColumnData>>,
+{
+    let session = Session::solo(config.max_inflight_clusters);
+    write_blocks_in_session(&session, backend, schema, name, config, blocks)
+}
+
+/// As [`write_blocks`], with the writer attached to `session`: flush
+/// tasks run on the session pool and cluster admission draws from the
+/// session's shared budget alongside the job's other writers.
+pub fn write_blocks_in_session<I>(
+    session: &Session,
     backend: BackendRef,
     schema: Schema,
     name: &str,
@@ -74,7 +114,7 @@ where
     let t0 = Instant::now();
     let fw = Arc::new(FileWriter::create(backend)?);
     let sink = FileSink::new(fw.clone(), schema.len());
-    let mut w = TreeWriter::new(schema.clone(), sink, config);
+    let mut w = TreeWriter::attached(schema.clone(), sink, config, session);
     for block in blocks {
         w.fill_columns(&block)?;
     }
@@ -91,6 +131,47 @@ where
         stall: stats.stall,
         compress_time: stats.compress,
         serialize_time: stats.serialize,
+    })
+}
+
+/// One output file of a multi-writer job: its destination, tree shape
+/// and the blocks its producer will land.
+pub struct WriteJob {
+    pub backend: BackendRef,
+    pub schema: Schema,
+    pub name: String,
+    pub config: WriterConfig,
+    pub blocks: Vec<Vec<ColumnData>>,
+}
+
+/// Write many files concurrently under one shared `session`: one
+/// producer thread per job, every writer drawing from the session's
+/// pool and fair-share in-flight budget. Reports come back in job
+/// order; the first failure wins. Each output is byte-identical to
+/// the same job written alone (ordered appends per file), so
+/// concurrency is purely a throughput property.
+pub fn write_files(session: &Session, jobs: Vec<WriteJob>) -> Result<Vec<WriteReport>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|job| {
+                let session = session.clone();
+                s.spawn(move || {
+                    write_blocks_in_session(
+                        &session,
+                        job.backend,
+                        job.schema,
+                        &job.name,
+                        job.config,
+                        job.blocks,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(std::panic::resume_unwind))
+            .collect()
     })
 }
 
@@ -136,6 +217,116 @@ mod tests {
         assert_eq!(reader.entries(), 4000);
         let cols = reader.read_all().unwrap();
         assert_eq!(cols[0].len(), 4000);
+    }
+
+    #[test]
+    fn degenerate_reports_are_guarded() {
+        // Hand-built empty report: all the rate/ratio accessors must
+        // return finite values instead of dividing by zero.
+        let empty = WriteReport {
+            entries: 0,
+            raw_bytes: 0,
+            stored_bytes: 0,
+            wall: Duration::ZERO,
+            stall: Duration::ZERO,
+            compress_time: Duration::ZERO,
+            serialize_time: Duration::ZERO,
+        };
+        assert_eq!(empty.throughput_mbps(), 0.0);
+        assert_eq!(empty.overlap_fraction(), 0.0);
+        assert_eq!(empty.compression_ratio(), 1.0);
+
+        // Zero wall but non-zero bytes (clock quantisation): still 0.0,
+        // never inf/NaN.
+        let quantised = WriteReport { raw_bytes: 4096, ..empty };
+        assert_eq!(quantised.throughput_mbps(), 0.0);
+        assert!(quantised.throughput_mbps().is_finite());
+
+        // A real empty run through the full pipeline agrees.
+        let be = Arc::new(MemBackend::new());
+        let rep = write_blocks(
+            be,
+            Schema::flat_f32("x", 2),
+            "t",
+            WriterConfig::default(),
+            Vec::<Vec<ColumnData>>::new(),
+        )
+        .unwrap();
+        assert_eq!(rep.entries, 0);
+        assert_eq!(rep.throughput_mbps(), 0.0);
+        assert_eq!(rep.overlap_fraction(), 0.0);
+    }
+
+    #[test]
+    fn write_files_shares_one_session_and_matches_solo_bytes() {
+        use crate::imt::Pool;
+        use crate::session::SessionConfig;
+        let schema = Schema::flat_f32("c", 3);
+        let mk_blocks = |seed: usize| -> Vec<Vec<ColumnData>> {
+            (0..3)
+                .map(|blk| {
+                    (0..3)
+                        .map(|b| {
+                            ColumnData::F32(
+                                (0..400)
+                                    .map(|i| ((seed * 7919 + blk * 131 + b * 17 + i) % 97) as f32)
+                                    .collect(),
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let cfg = WriterConfig {
+            basket_entries: 256,
+            compression: Settings::new(Codec::Rzip, 2),
+            flush: FlushMode::Pipelined,
+            granularity: FlushGranularity::Block,
+            max_inflight_clusters: 2,
+        };
+        // Ground truth: each job alone, serial flush.
+        let solo_bytes: Vec<Vec<u8>> = (0..3)
+            .map(|j| {
+                let be = Arc::new(MemBackend::new());
+                let solo_cfg = WriterConfig { flush: FlushMode::Serial, ..cfg.clone() };
+                write_blocks(be.clone(), schema.clone(), "t", solo_cfg, mk_blocks(j)).unwrap();
+                let mut bytes = vec![0u8; be.len().unwrap() as usize];
+                be.read_at(0, &mut bytes).unwrap();
+                bytes
+            })
+            .collect();
+        // Concurrent: all three under one session on a private pool.
+        let pool = Arc::new(Pool::new(3));
+        let session = crate::session::Session::with_pool(
+            pool,
+            SessionConfig::for_writers(3, 2),
+        );
+        let backends: Vec<Arc<MemBackend>> =
+            (0..3).map(|_| Arc::new(MemBackend::new())).collect();
+        let jobs: Vec<WriteJob> = backends
+            .iter()
+            .enumerate()
+            .map(|(j, be)| WriteJob {
+                backend: be.clone(),
+                schema: schema.clone(),
+                name: "t".into(),
+                config: cfg.clone(),
+                blocks: mk_blocks(j),
+            })
+            .collect();
+        let reports = write_files(&session, jobs).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (j, be) in backends.iter().enumerate() {
+            let mut bytes = vec![0u8; be.len().unwrap() as usize];
+            be.read_at(0, &mut bytes).unwrap();
+            assert_eq!(
+                bytes, solo_bytes[j],
+                "job {j}: session-shared output diverged from its solo bytes"
+            );
+            assert_eq!(reports[j].entries, 3 * 400);
+        }
+        assert_eq!(session.stats().writers_opened, 3);
+        assert_eq!(session.stats().in_flight_clusters, 0);
     }
 
     #[test]

@@ -129,6 +129,23 @@ impl Directory {
         self.trees.iter().find(|t| t.name == name)
     }
 
+    /// Validate the whole directory: tree names must be unique (they
+    /// are the lookup key) and every tree must satisfy its own
+    /// invariants. Concurrent multi-tree writes go through this before
+    /// the footer commits ([`crate::format::writer::FileWriter::finish_registered`]).
+    pub fn check(&self) -> Result<()> {
+        for (i, t) in self.trees.iter().enumerate() {
+            if self.trees[..i].iter().any(|o| o.name == t.name) {
+                return Err(Error::Format(format!(
+                    "duplicate tree name '{}' in directory",
+                    t.name
+                )));
+            }
+            t.check()?;
+        }
+        Ok(())
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut w = WireWriter::new();
         w.put_u32(self.trees.len() as u32);
@@ -253,6 +270,15 @@ mod tests {
         let mut d = sample();
         d.trees[0].entries = 999;
         assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn directory_check_rejects_duplicate_tree_names() {
+        let mut d = sample();
+        d.check().unwrap();
+        let dup = d.trees[0].clone();
+        d.trees.push(dup);
+        assert!(d.check().is_err(), "two trees named 'events' must be rejected");
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::compress::crc32;
 use crate::error::{Error, Result};
 use crate::storage::BackendRef;
 
-use super::directory::Directory;
+use super::directory::{Directory, TreeMeta};
 use super::{HEADER_LEN, MAGIC, VERSION};
 
 /// Writes an `RNTF` file: header, appended payloads, footer.
@@ -15,10 +15,20 @@ use super::{HEADER_LEN, MAGIC, VERSION};
 /// cursor lock and performs the device write outside it, so multiple
 /// compression tasks can land baskets concurrently (the device itself
 /// serialises per its own queue model).
+///
+/// Multi-tree concurrent writing: several tree writers (one sink each)
+/// may share one `FileWriter`; their appends interleave safely, each
+/// sink registers its finished [`TreeMeta`] via [`FileWriter::add_tree`]
+/// as it closes, and [`FileWriter::finish_registered`] commits them all
+/// in one footer — sorted by tree name, so the directory bytes are
+/// deterministic regardless of which writer closed first.
 pub struct FileWriter {
     backend: BackendRef,
     cursor: Mutex<u64>,
     finished: Mutex<bool>,
+    /// Trees registered by concurrently-closing sinks, committed by
+    /// [`FileWriter::finish_registered`].
+    trees: Mutex<Vec<TreeMeta>>,
 }
 
 impl FileWriter {
@@ -34,6 +44,7 @@ impl FileWriter {
             backend,
             cursor: Mutex::new(HEADER_LEN),
             finished: Mutex::new(false),
+            trees: Mutex::new(Vec::new()),
         })
     }
 
@@ -61,6 +72,56 @@ impl FileWriter {
         *self.cursor.lock().unwrap()
     }
 
+    /// Register one finished tree for the footer directory. Called by
+    /// each writer's sink as it closes — trees land in completion
+    /// order here and are sorted at [`FileWriter::finish_registered`].
+    /// The push happens under the finalisation lock: a registration
+    /// either lands before the footer seals (and is committed) or
+    /// errors — it can never be silently lost to a concurrent finish.
+    pub fn add_tree(&self, meta: TreeMeta) -> Result<()> {
+        let finished = self
+            .finished
+            .lock()
+            .map_err(|_| Error::Sync("file writer poisoned by a panicked writer".into()))?;
+        if *finished {
+            return Err(Error::Format("file already finalised".into()));
+        }
+        self.trees
+            .lock()
+            .map_err(|_| Error::Sync("file writer poisoned by a panicked writer".into()))?
+            .push(meta);
+        drop(finished);
+        Ok(())
+    }
+
+    /// Commit every tree registered via [`FileWriter::add_tree`] in one
+    /// footer, sorted by name (deterministic bytes regardless of the
+    /// writers' completion order). Validates the directory — duplicate
+    /// tree names and broken basket indexes are rejected. Seals the
+    /// file before reading the registry, so it cannot race
+    /// [`FileWriter::add_tree`].
+    pub fn finish_registered(&self) -> Result<u64> {
+        let mut trees = {
+            let mut finished = self
+                .finished
+                .lock()
+                .map_err(|_| Error::Sync("file writer poisoned by a panicked writer".into()))?;
+            if *finished {
+                return Err(Error::Format("file already finalised".into()));
+            }
+            *finished = true;
+            std::mem::take(
+                &mut *self.trees.lock().map_err(|_| {
+                    Error::Sync("file writer poisoned by a panicked writer".into())
+                })?,
+            )
+        };
+        trees.sort_by(|a, b| a.name.cmp(&b.name));
+        let dir = Directory { trees };
+        dir.check()?;
+        self.write_footer(&dir)
+    }
+
     /// Commit the footer and finalise the header. Consumes the logical
     /// write session; further appends are an error.
     pub fn finish(&self, dir: &Directory) -> Result<u64> {
@@ -71,6 +132,12 @@ impl FileWriter {
             }
             *fin = true;
         }
+        self.write_footer(dir)
+    }
+
+    /// Encode and append the footer, then patch the header (the file
+    /// must already be sealed by the caller).
+    fn write_footer(&self, dir: &Directory) -> Result<u64> {
         let mut footer = dir.encode();
         let crc = crc32(&footer);
         footer.extend_from_slice(&crc.to_be_bytes());
@@ -114,6 +181,70 @@ mod tests {
         let w = FileWriter::create(be).unwrap();
         w.finish(&Directory::default()).unwrap();
         assert!(w.finish(&Directory::default()).is_err());
+    }
+
+    #[test]
+    fn registered_trees_commit_sorted_and_validated() {
+        use crate::format::directory::TreeMeta;
+        use crate::format::reader::FileReader;
+        use crate::serial::schema::Schema;
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be.clone()).unwrap();
+        let mk = |name: &str| TreeMeta {
+            name: name.into(),
+            schema: Schema::flat_f32("x", 1),
+            entries: 0,
+            branches: vec![crate::format::directory::BranchMeta {
+                name: "x0".into(),
+                ty: crate::serial::schema::ColumnType::F32,
+                baskets: Vec::new(),
+            }],
+        };
+        // registration order b, a — the footer must come out sorted
+        w.add_tree(mk("b")).unwrap();
+        w.add_tree(mk("a")).unwrap();
+        w.finish_registered().unwrap();
+        let r = FileReader::open(be).unwrap();
+        let names: Vec<&str> =
+            r.directory().trees.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn duplicate_registered_tree_names_are_rejected() {
+        use crate::format::directory::TreeMeta;
+        use crate::serial::schema::Schema;
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be).unwrap();
+        let mk = || TreeMeta {
+            name: "t".into(),
+            schema: Schema::flat_f32("x", 1),
+            entries: 0,
+            branches: vec![crate::format::directory::BranchMeta {
+                name: "x0".into(),
+                ty: crate::serial::schema::ColumnType::F32,
+                baskets: Vec::new(),
+            }],
+        };
+        w.add_tree(mk()).unwrap();
+        w.add_tree(mk()).unwrap();
+        assert!(w.finish_registered().is_err());
+    }
+
+    #[test]
+    fn add_tree_after_finish_is_rejected() {
+        use crate::format::directory::TreeMeta;
+        use crate::serial::schema::Schema;
+        let be = Arc::new(MemBackend::new());
+        let w = FileWriter::create(be).unwrap();
+        w.finish(&Directory::default()).unwrap();
+        let meta = TreeMeta {
+            name: "late".into(),
+            schema: Schema::flat_f32("x", 1),
+            entries: 0,
+            branches: Vec::new(),
+        };
+        assert!(w.add_tree(meta).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::merger::{MergerConfig, TBufferMerger};
 use crate::metrics::{Recorder, SpanKind};
 use crate::runtime::Engine;
 use crate::serial::column::ColumnData;
+use crate::session::{Session, SessionConfig};
 use crate::storage::BackendRef;
 use crate::tree::sink::FileSink;
 use crate::tree::writer::{FlushMode, TreeWriter, WriteStats, WriterConfig};
@@ -283,11 +284,20 @@ fn run_imt_merger(
             ..Default::default()
         },
     };
-    let merger = TBufferMerger::create_with_recorder(
+    // One I/O session for the whole run: every stream's writer shares
+    // the pool and a budget sized for the stream count, so N streams
+    // cannot oversubscribe the IMT pool the way N private writer
+    // groups did.
+    let session = Session::new(SessionConfig::for_writers(
+        cfg.streams.max(1),
+        merger_cfg.writer.max_inflight_clusters,
+    ));
+    let merger = TBufferMerger::create_in_session(
         backend,
         schema,
         merger_cfg,
         recorder.clone(),
+        &session,
     )?;
     let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
 

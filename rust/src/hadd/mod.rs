@@ -3,7 +3,9 @@
 //! Fast merge in the ROOT sense: baskets are copied *without*
 //! re-compression; only entry numbers are rebased. The parallel mode
 //! (`hadd -j`) loads and checksum-verifies the input files as
-//! [`imt::TaskGroup`] jobs on the IMT pool — the dominant cost — while
+//! task-group jobs in an I/O [`Session`]'s completion domain (a
+//! private one, or the job-wide session via [`hadd_in_session`]) —
+//! the dominant cost — while
 //! the output side consumes the buffers *in input order as each one
 //! completes*, pipelining device appends with the remaining reads. A
 //! small reorder stash keeps the append order equal to the input
@@ -19,8 +21,8 @@ use crate::error::{Error, Result};
 use crate::format::directory::{BasketInfo, BranchMeta, Directory, TreeMeta};
 use crate::format::reader::FileReader;
 use crate::format::writer::FileWriter;
-use crate::imt;
 use crate::serial::schema::Schema;
+use crate::session::{Session, SessionConfig};
 use crate::storage::BackendRef;
 use crate::tree::buffer::{BasketPayload, TreeBuffer};
 
@@ -138,8 +140,22 @@ impl Appender {
     }
 }
 
-/// Merge `inputs` into a fresh file on `output`.
+/// Merge `inputs` into a fresh file on `output`, under a private
+/// session on the global IMT pool. Jobs that already hold a shared
+/// [`Session`] should call [`hadd_in_session`] so the loader tasks
+/// land in the same pool/completion domain as the job's writers.
 pub fn hadd(output: BackendRef, inputs: &[BackendRef], opts: &HaddOptions) -> Result<HaddReport> {
+    hadd_in_session(output, inputs, opts, &Session::new(SessionConfig::default()))
+}
+
+/// Merge `inputs` into a fresh file on `output`; parallel input loads
+/// run as task-group jobs in `session`'s completion domain.
+pub fn hadd_in_session(
+    output: BackendRef,
+    inputs: &[BackendRef],
+    opts: &HaddOptions,
+    session: &Session,
+) -> Result<HaddReport> {
     if inputs.is_empty() {
         return Err(Error::Coordinator("hadd: no input files".into()));
     }
@@ -147,11 +163,11 @@ pub fn hadd(output: BackendRef, inputs: &[BackendRef], opts: &HaddOptions) -> Re
     let fw = Arc::new(FileWriter::create(output)?);
     let mut appender = Appender::new(fw.clone());
 
-    if opts.parallel && imt::is_enabled() {
+    if opts.parallel && session.is_parallel() {
         // Pipelined -j: loads run as task-group jobs; the appender
         // consumes buffers in input order as they complete, so device
         // appends overlap the remaining reads.
-        let group = imt::TaskGroup::new();
+        let group = session.task_group();
         let (tx, rx) = std::sync::mpsc::channel();
         for (i, input) in inputs.iter().enumerate() {
             let tx = tx.clone();
@@ -291,6 +307,29 @@ mod tests {
         // output is byte-identical, not merely equivalent
         assert_eq!(dump(&serial_out), dump(&par_out));
         assert_eq!(read_first_col(serial_out), read_first_col(par_out));
+    }
+
+    #[test]
+    fn hadd_in_explicit_session_matches_serial_bytes() {
+        // A dedicated-pool session: -j parallelism without touching the
+        // global IMT switch, byte-identical to the serial merge.
+        let inputs: Vec<BackendRef> = (0..4).map(|i| make_input(i * 50, 50)).collect();
+        let serial_out: BackendRef = Arc::new(MemBackend::new());
+        hadd(serial_out.clone(), &inputs, &HaddOptions::default()).unwrap();
+        let pool = Arc::new(crate::imt::Pool::new(3));
+        let session = crate::session::Session::with_pool(
+            pool,
+            crate::session::SessionConfig::default(),
+        );
+        let par_out: BackendRef = Arc::new(MemBackend::new());
+        hadd_in_session(
+            par_out.clone(),
+            &inputs,
+            &HaddOptions { parallel: true, tree: None },
+            &session,
+        )
+        .unwrap();
+        assert_eq!(dump(&serial_out), dump(&par_out));
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Shared in-flight write budget — the admission half of an I/O
+//! session ([`crate::session`]).
+//!
+//! Before this existed every [`crate::tree::writer::TreeWriter`]
+//! bounded only its *own* in-flight clusters, so N concurrent writers
+//! could queue N × `max_inflight_clusters` clusters on one IMT pool:
+//! oversubscription Riley & Jones identify as the scaling killer for
+//! many-output-module jobs. A [`WriteBudget`] is one global cap shared
+//! by every writer of a session, with **per-writer fair admission**:
+//!
+//! * a writer may hold at most `min(its own cap, limit / active)`
+//!   clusters in flight (max-min fair share, never below 1), so a
+//!   fat-basket writer cannot monopolise the budget — narrow writers
+//!   always find their share available;
+//! * the global total never exceeds `limit`, bounding buffered memory
+//!   across the whole session;
+//! * admission waits *help execute pool jobs* (via
+//!   [`Pool::wait_until`]) instead of blocking, so a stalled producer
+//!   still contributes CPU to draining the very backlog it waits on.
+//!
+//! Accounting is RAII: [`WriterBudget::acquire`] returns a
+//! [`ClusterGuard`] that the writer threads through every task of the
+//! cluster; the slot is released when the last task drops its guard —
+//! including on panic, since unwinding drops the closure's captures.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::pool::Pool;
+
+/// Counters of the shared budget, snapshotted by [`WriteBudget::stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BudgetStats {
+    /// Clusters admitted so far (lifetime).
+    pub admissions: u64,
+    /// Admissions that had to wait for capacity (contention signal).
+    pub waits: u64,
+    /// Writers currently registered.
+    pub active_writers: usize,
+    /// Clusters currently in flight across all writers.
+    pub in_flight: usize,
+    /// The global cap.
+    pub limit: usize,
+}
+
+struct BudgetInner {
+    /// Global cap on clusters in flight across all writers.
+    limit: usize,
+    total: AtomicUsize,
+    /// Registered writers (drives each writer's fair share).
+    active: AtomicUsize,
+    /// Pool whose jobs admission waiters help execute and whose condvar
+    /// guard drops notify; `None` falls back to the global IMT pool at
+    /// use time (and to `idle_cv` when IMT is off entirely).
+    explicit_pool: Option<Arc<Pool>>,
+    /// Fallback park for waiters when no pool is reachable.
+    idle_mx: Mutex<()>,
+    idle_cv: Condvar,
+    admissions: AtomicU64,
+    waits: AtomicU64,
+}
+
+impl BudgetInner {
+    fn pool(&self) -> Option<Arc<Pool>> {
+        self.explicit_pool.clone().or_else(crate::imt::pool)
+    }
+
+    /// Wake admission waiters after capacity changed (guard dropped,
+    /// speculative admission rolled back, writer deregistered).
+    fn notify(&self) {
+        if let Some(p) = self.pool() {
+            p.notify_waiters();
+        }
+        let _g = self.idle_mx.lock().unwrap_or_else(|p| p.into_inner());
+        self.idle_cv.notify_all();
+    }
+}
+
+/// The session-wide shared budget. Writers join via
+/// [`WriteBudget::register`].
+pub struct WriteBudget {
+    inner: Arc<BudgetInner>,
+}
+
+impl WriteBudget {
+    /// Budget capped at `limit` clusters in flight (min 1). Waiters
+    /// help execute on `pool` when given, else on the global IMT pool.
+    pub fn new(limit: usize, pool: Option<Arc<Pool>>) -> Self {
+        WriteBudget {
+            inner: Arc::new(BudgetInner {
+                limit: limit.max(1),
+                total: AtomicUsize::new(0),
+                active: AtomicUsize::new(0),
+                explicit_pool: pool,
+                idle_mx: Mutex::new(()),
+                idle_cv: Condvar::new(),
+                admissions: AtomicU64::new(0),
+                waits: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Register one writer. `cap` is the writer's own in-flight limit
+    /// (its `max_inflight_clusters`); effective admission is the
+    /// tighter of `cap` and the current fair share.
+    pub fn register(&self, cap: usize) -> WriterBudget {
+        self.inner.active.fetch_add(1, Ordering::SeqCst);
+        WriterBudget {
+            budget: self.inner.clone(),
+            state: Arc::new(WriterState::default()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// The global in-flight cap.
+    pub fn limit(&self) -> usize {
+        self.inner.limit
+    }
+
+    /// Clusters currently in flight across all writers.
+    pub fn in_flight(&self) -> usize {
+        self.inner.total.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> BudgetStats {
+        BudgetStats {
+            admissions: self.inner.admissions.load(Ordering::Relaxed),
+            waits: self.inner.waits.load(Ordering::Relaxed),
+            active_writers: self.inner.active.load(Ordering::SeqCst),
+            in_flight: self.in_flight(),
+            limit: self.inner.limit,
+        }
+    }
+}
+
+/// Per-writer in-flight accounting.
+#[derive(Default)]
+struct WriterState {
+    inflight: AtomicUsize,
+    /// Highest concurrent in-flight count this writer ever reached —
+    /// the fairness invariant tests assert it never exceeds the share.
+    high_water: AtomicUsize,
+}
+
+/// One writer's handle on the shared budget. Dropping it deregisters
+/// the writer (growing the remaining writers' fair share); guards it
+/// issued stay valid and release capacity as their clusters complete.
+pub struct WriterBudget {
+    budget: Arc<BudgetInner>,
+    state: Arc<WriterState>,
+    cap: usize,
+}
+
+impl WriterBudget {
+    /// This writer's current fair share of the budget:
+    /// `max(1, limit / active_writers)`, additionally clamped to the
+    /// writer's own cap.
+    pub fn fair_share(&self) -> usize {
+        let active = self.budget.active.load(Ordering::SeqCst).max(1);
+        // `cap` is >= 1 by construction, so the clamp bounds are sane.
+        (self.budget.limit / active).clamp(1, self.cap)
+    }
+
+    /// Highest in-flight count this writer ever held.
+    pub fn high_water(&self) -> usize {
+        self.state.high_water.load(Ordering::SeqCst)
+    }
+
+    /// Clusters this writer currently has in flight.
+    pub fn in_flight(&self) -> usize {
+        self.state.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Loose admission check (no side effects) for wait predicates.
+    fn admittable(&self) -> bool {
+        self.state.inflight.load(Ordering::SeqCst) < self.fair_share()
+            && self.budget.total.load(Ordering::SeqCst) < self.budget.limit
+    }
+
+    /// Speculative admission: increment both counters, roll back (and
+    /// notify, so a racer that saw the inflated totals re-checks) when
+    /// either bound is exceeded.
+    fn try_admit(&self) -> Option<ClusterGuard> {
+        let mine = self.state.inflight.fetch_add(1, Ordering::SeqCst);
+        let total = self.budget.total.fetch_add(1, Ordering::SeqCst);
+        if mine >= self.fair_share() || total >= self.budget.limit {
+            self.state.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.budget.total.fetch_sub(1, Ordering::SeqCst);
+            self.budget.notify();
+            return None;
+        }
+        self.state.high_water.fetch_max(mine + 1, Ordering::SeqCst);
+        self.budget.admissions.fetch_add(1, Ordering::Relaxed);
+        Some(ClusterGuard { budget: self.budget.clone(), state: self.state.clone() })
+    }
+
+    /// Non-blocking admission (tests, opportunistic flushes).
+    pub fn try_acquire(&self) -> Option<ClusterGuard> {
+        self.try_admit()
+    }
+
+    /// Admit one cluster, blocking (and helping execute pool jobs)
+    /// until the writer is within both the global budget and its fair
+    /// share. Time spent here is the producer's backpressure stall.
+    pub fn acquire(&self) -> ClusterGuard {
+        if let Some(g) = self.try_admit() {
+            return g;
+        }
+        self.budget.waits.fetch_add(1, Ordering::Relaxed);
+        loop {
+            match self.budget.pool() {
+                Some(p) => p.wait_until(&|| self.admittable()),
+                None => {
+                    // No pool anywhere: tasks run inline, so capacity
+                    // can only be held by *other threads'* writers.
+                    // Park briefly on the budget condvar (guard drops
+                    // notify it) and re-check.
+                    let g = self.budget.idle_mx.lock().unwrap_or_else(|p| p.into_inner());
+                    if !self.admittable() {
+                        let _ = self
+                            .budget
+                            .idle_cv
+                            .wait_timeout(g, std::time::Duration::from_millis(10))
+                            .unwrap_or_else(|p| p.into_inner());
+                    }
+                }
+            }
+            if let Some(g) = self.try_admit() {
+                return g;
+            }
+        }
+    }
+}
+
+impl Drop for WriterBudget {
+    fn drop(&mut self) {
+        self.budget.active.fetch_sub(1, Ordering::SeqCst);
+        // The survivors' fair share just grew: let waiters re-check.
+        self.budget.notify();
+    }
+}
+
+/// RAII admission slot for one in-flight cluster. The writer wraps it
+/// in an `Arc` shared by every task of the cluster; the last task to
+/// finish (or unwind) releases the slot and wakes admission waiters.
+pub struct ClusterGuard {
+    budget: Arc<BudgetInner>,
+    state: Arc<WriterState>,
+}
+
+impl Drop for ClusterGuard {
+    fn drop(&mut self) {
+        self.state.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.budget.total.fetch_sub(1, Ordering::SeqCst);
+        self.budget.notify();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic fairness invariants, no timing involved: a writer
+    /// cannot exceed its fair share while others are registered, and
+    /// the freed capacity of a deregistered writer flows to survivors.
+    #[test]
+    fn fair_share_caps_each_writer() {
+        let budget = WriteBudget::new(4, None);
+        let fat = budget.register(8);
+        let narrow = budget.register(8);
+        assert_eq!(fat.fair_share(), 2, "limit 4 over 2 writers");
+
+        // The fat writer saturates its share, not the whole budget.
+        let f1 = fat.try_acquire().expect("first slot");
+        let f2 = fat.try_acquire().expect("second slot (share = 2)");
+        assert!(fat.try_acquire().is_none(), "share exhausted");
+        assert_eq!(fat.high_water(), 2);
+
+        // The narrow writer's share is untouched.
+        let n1 = narrow.try_acquire().expect("narrow slot 1");
+        let n2 = narrow.try_acquire().expect("narrow slot 2");
+        assert!(narrow.try_acquire().is_none(), "global limit reached");
+        assert_eq!(budget.in_flight(), 4);
+
+        // Releasing a fat slot does not let the narrow writer exceed
+        // its own share...
+        drop(f1);
+        assert!(narrow.try_acquire().is_none(), "narrow share still 2");
+        // ...but the fat writer can re-take it.
+        let f3 = fat.try_acquire().expect("fat re-admission");
+        drop((f2, f3, n1, n2));
+        assert_eq!(budget.in_flight(), 0);
+    }
+
+    #[test]
+    fn deregistration_grows_the_survivors_share() {
+        let budget = WriteBudget::new(4, None);
+        let a = budget.register(8);
+        let b = budget.register(8);
+        assert_eq!(a.fair_share(), 2);
+        drop(b);
+        assert_eq!(a.fair_share(), 4, "sole writer owns the whole budget");
+        let guards: Vec<_> = (0..4).map(|_| a.try_acquire().expect("full budget")).collect();
+        assert!(a.try_acquire().is_none());
+        drop(guards);
+    }
+
+    #[test]
+    fn writer_cap_clamps_below_the_share() {
+        let budget = WriteBudget::new(8, None);
+        let w = budget.register(2); // own cap tighter than share (8)
+        assert_eq!(w.fair_share(), 2);
+        let g1 = w.try_acquire().unwrap();
+        let g2 = w.try_acquire().unwrap();
+        assert!(w.try_acquire().is_none());
+        drop((g1, g2));
+    }
+
+    #[test]
+    fn share_never_below_one() {
+        let budget = WriteBudget::new(2, None);
+        let writers: Vec<_> = (0..5).map(|_| budget.register(4)).collect();
+        for w in &writers {
+            assert_eq!(w.fair_share(), 1, "share floors at 1 even oversubscribed");
+        }
+        // Only `limit` clusters fit globally no matter the writer count.
+        let g1 = writers[0].try_acquire().expect("slot 1");
+        let g2 = writers[1].try_acquire().expect("slot 2");
+        assert!(writers[2].try_acquire().is_none(), "global limit");
+        drop((g1, g2));
+    }
+
+    #[test]
+    fn acquire_blocks_until_capacity_frees() {
+        let budget = WriteBudget::new(1, None);
+        let a = budget.register(4);
+        let b = Arc::new(budget.register(4));
+        let held = a.try_acquire().expect("only slot");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let g = b2.acquire(); // blocks: budget full
+            tx.send(()).unwrap();
+            drop(g);
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "acquire must block while the budget is full"
+        );
+        drop(held);
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("blocked acquire must wake when the slot frees");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stats_track_admissions_and_waits() {
+        let budget = WriteBudget::new(2, None);
+        let w = budget.register(4);
+        let g = w.acquire();
+        let g2 = w.acquire();
+        drop((g, g2));
+        let st = budget.stats();
+        assert_eq!(st.admissions, 2);
+        assert_eq!(st.limit, 2);
+        assert_eq!(st.in_flight, 0);
+        assert_eq!(st.active_writers, 1);
+    }
+}

@@ -28,8 +28,16 @@
 //! producer (the pipelined tree writer) can enqueue flush tasks, keep
 //! filling, and join — or apply backpressure — whenever it likes.
 
+//!
+//! [`WriteBudget`] adds the session dimension: one global in-flight
+//! cluster cap shared by many writers, with per-writer fair admission,
+//! so N pipelined writers on one pool stay within one memory bound and
+//! none of them can starve the others (see [`crate::session`]).
+
+mod budget;
 mod pool;
 
+pub use budget::{BudgetStats, ClusterGuard, WriteBudget, WriterBudget};
 pub use pool::{Pool, Scope, TaskGroup};
 
 use std::sync::atomic::{AtomicUsize, Ordering};

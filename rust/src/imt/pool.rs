@@ -294,6 +294,47 @@ impl Pool {
             sh.notify_one();
         }
     }
+
+    /// Help execute queued jobs until `pred()` holds. This is the
+    /// predicate-shaped sibling of [`Pool::wait_pending`], used by the
+    /// session write budget whose admission condition spans several
+    /// counters (global in-flight, per-writer in-flight, fair share).
+    /// The park carries a short timeout: budget guards may be released
+    /// from outside any job of *this* pool (e.g. after the global pool
+    /// was swapped), and the timeout turns that pathological race into
+    /// a bounded re-check instead of a lost wakeup.
+    pub(crate) fn wait_until(&self, pred: &dyn Fn() -> bool) {
+        let sh = &self.shared;
+        let me = sh.current_worker();
+        while !pred() {
+            if let Some(job) = sh.find_job(me) {
+                job();
+                continue;
+            }
+            let g = sh.sleep_mx.lock().unwrap();
+            sh.sleepers.fetch_add(1, Ordering::SeqCst);
+            if pred() || sh.queued.load(Ordering::SeqCst) > 0 {
+                sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let (g, _) = sh
+                .work_cv
+                .wait_timeout(g, std::time::Duration::from_millis(20))
+                .unwrap();
+            sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+            drop(g);
+        }
+        if sh.queued.load(Ordering::SeqCst) > 0 {
+            sh.notify_one();
+        }
+    }
+
+    /// Wake every thread parked on the pool condvar. Budget guards call
+    /// this when in-flight capacity frees up, so producers blocked in
+    /// admission re-evaluate without polling.
+    pub(crate) fn notify_waiters(&self) {
+        self.shared.notify_all();
+    }
 }
 
 impl Drop for Pool {
@@ -426,9 +467,27 @@ impl TaskGroup {
         group
     }
 
+    /// Group bound to `pool` when one is given, otherwise lazily to the
+    /// global IMT pool — the binding an [`crate::session::Session`]
+    /// hands to every writer it opens.
+    pub fn bound(pool: Option<Arc<Pool>>) -> Self {
+        match pool {
+            Some(p) => TaskGroup::with_pool(p),
+            None => TaskGroup::new(),
+        }
+    }
+
     /// Jobs spawned but not yet finished.
     pub fn pending(&self) -> usize {
         self.inner.pending.load(Ordering::SeqCst)
+    }
+
+    /// Is this the only handle left, with nothing in flight? In-flight
+    /// jobs hold a clone of the group, so an orphaned group can never
+    /// spawn or complete anything again. Sessions use this to prune
+    /// their completion-domain roster as writers close.
+    pub fn is_orphaned(&self) -> bool {
+        Arc::strong_count(&self.inner) == 1 && self.pending() == 0
     }
 
     /// Has any job of this group panicked so far?

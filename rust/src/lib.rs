@@ -39,6 +39,11 @@
 //!   `min(branches, T)`), parallel basket decompression with cluster
 //!   splitting and interleaved processing, and parallel column
 //!   writing.
+//! * [`session`] — the shared I/O session: one pool handle, one
+//!   completion domain and one globally-bounded in-flight budget with
+//!   per-writer fair admission, shared by every `FileWriter` /
+//!   `TreeWriter` / merger a job opens (the multi-tree, multi-file
+//!   write coordinator).
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 
@@ -53,6 +58,7 @@ pub mod merger;
 pub mod metrics;
 pub mod runtime;
 pub mod serial;
+pub mod session;
 pub mod storage;
 pub mod tree;
 

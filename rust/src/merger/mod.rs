@@ -13,9 +13,16 @@
 //! numbers — the cheap part, so a single output thread keeps up until
 //! the device itself saturates (exactly the regime the paper's
 //! Figure 6 explores).
+//!
+//! Worker files attach to one shared [`Session`]: their pipelined
+//! flushes run on the session pool under the session's global
+//! in-flight budget with per-worker fair admission, so many workers
+//! cannot oversubscribe the pool or balloon buffered clusters — pass
+//! a job-wide session to [`TBufferMerger::create_in_session`] to share
+//! that bound with every other output of the job.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -24,6 +31,7 @@ use crate::format::directory::{BasketInfo, BranchMeta, Directory, TreeMeta};
 use crate::format::writer::FileWriter;
 use crate::metrics::{Recorder, SpanKind};
 use crate::serial::schema::Schema;
+use crate::session::{Session, SessionConfig};
 use crate::storage::BackendRef;
 use crate::tree::buffer::TreeBuffer;
 use crate::tree::sink::BufferSink;
@@ -70,6 +78,15 @@ struct OutputState {
     stats: MergeStats,
 }
 
+/// Poison-proof state lock: a panicked merger worker must surface as
+/// [`Error::Sync`] from the next merger operation, never cascade a
+/// second panic through the output thread or `close` (the same
+/// failure model [`crate::tree::sink`] uses).
+fn lock_state(m: &Mutex<OutputState>) -> Result<MutexGuard<'_, OutputState>> {
+    m.lock()
+        .map_err(|_| Error::Sync("merger state lock poisoned by a panicked worker".into()))
+}
+
 /// Queue message: a worker buffer, or the close() sentinel.
 enum MergeMsg {
     Buffer(TreeBuffer),
@@ -84,11 +101,17 @@ pub struct TBufferMerger {
     schema: Schema,
     config: MergerConfig,
     recorder: Option<Arc<Recorder>>,
+    /// The session every worker file attaches to: one pool, one shared
+    /// in-flight budget across all workers' pipelined flushes.
+    session: Session,
     started: Instant,
 }
 
 impl TBufferMerger {
     /// Open the output file on `backend` and start the output thread.
+    /// Worker files share a fresh session sized for up to 8 concurrent
+    /// workers at the configured per-writer in-flight cap; use
+    /// [`TBufferMerger::create_in_session`] to share a job-wide one.
     pub fn create(backend: BackendRef, schema: Schema, config: MergerConfig) -> Result<Self> {
         Self::create_with_recorder(backend, schema, config, None)
     }
@@ -99,6 +122,22 @@ impl TBufferMerger {
         schema: Schema,
         config: MergerConfig,
         recorder: Option<Arc<Recorder>>,
+    ) -> Result<Self> {
+        let session =
+            Session::new(SessionConfig::for_writers(8, config.writer.max_inflight_clusters));
+        Self::create_in_session(backend, schema, config, recorder, &session)
+    }
+
+    /// Open the merger under an existing shared [`Session`]: every
+    /// worker file's flush pipeline draws from that session's pool and
+    /// in-flight budget, alongside whatever other writers the job has
+    /// open.
+    pub fn create_in_session(
+        backend: BackendRef,
+        schema: Schema,
+        config: MergerConfig,
+        recorder: Option<Arc<Recorder>>,
+        session: &Session,
     ) -> Result<Self> {
         let file = Arc::new(FileWriter::create(backend)?);
         let branches = schema
@@ -126,6 +165,7 @@ impl TBufferMerger {
             schema,
             config,
             recorder,
+            session: session.clone(),
             started: Instant::now(),
         })
     }
@@ -135,15 +175,25 @@ impl TBufferMerger {
     }
 
     /// A fresh in-memory file for one worker thread (ROOT's
-    /// `TBufferMerger::GetFile()`).
+    /// `TBufferMerger::GetFile()`), attached to the merger's session.
     pub fn get_file(&self) -> MergerFile {
         let sink = BufferSink::new(self.schema.clone());
-        let writer = TreeWriter::new(self.schema.clone(), sink, self.config.writer.clone());
+        let writer = TreeWriter::attached(
+            self.schema.clone(),
+            sink,
+            self.config.writer.clone(),
+            &self.session,
+        );
         let writer = match &self.recorder {
             Some(r) => writer.with_recorder(r.clone()),
             None => writer,
         };
         MergerFile { writer: Some(writer), tx: self.tx.clone(), recorder: self.recorder.clone() }
+    }
+
+    /// The session worker files attach to.
+    pub fn session(&self) -> &Session {
+        &self.session
     }
 
     /// Drain all buffers queued so far, write the footer, return stats.
@@ -156,7 +206,7 @@ impl TBufferMerger {
         if let Some(h) = self.output.take() {
             h.join().map_err(|_| Error::Coordinator("output thread panicked".into()))??;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state)?;
         let meta = TreeMeta {
             name: self.config.tree_name.clone(),
             schema: self.schema.clone(),
@@ -187,7 +237,7 @@ fn output_loop(
             let end = r.elapsed();
             r.push(SpanKind::Merge, end.saturating_sub(dt), end);
         }
-        let mut st = state.lock().unwrap();
+        let mut st = lock_state(&state)?;
         st.stats.buffers_merged += 1;
         st.stats.entries += buf.entries;
         st.stats.stored_bytes += buf.stored_bytes() as u64;
@@ -203,7 +253,7 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
     // thread mutates branches, so the lock is uncontended; it exists to
     // let `close` read a consistent view.
     let (file, base) = {
-        let st = state.lock().unwrap();
+        let st = lock_state(state)?;
         if st.branches.len() != buf.branches.len() {
             return Err(Error::Coordinator(format!(
                 "buffer has {} branches, output has {}",
@@ -229,7 +279,7 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
         }
         new_infos.push(infos);
     }
-    let mut st = state.lock().unwrap();
+    let mut st = lock_state(state)?;
     for (br, infos) in st.branches.iter_mut().zip(new_infos) {
         br.baskets.extend(infos);
     }
@@ -408,6 +458,35 @@ mod tests {
             (0..3).flat_map(|w| (0..300).map(move |i| w * 1000 + i)).collect();
         want.sort();
         assert_eq!(vals, want);
+    }
+
+    #[test]
+    fn workers_share_the_session_budget() {
+        let be = Arc::new(MemBackend::new());
+        let pool = Arc::new(crate::imt::Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::for_writers(3, 2));
+        let mut cfg = config();
+        cfg.writer.flush = FlushMode::Pipelined;
+        let merger =
+            TBufferMerger::create_in_session(be.clone(), schema(), cfg, None, &session)
+                .unwrap();
+        std::thread::scope(|s| {
+            for w in 0..3 {
+                let mut f = merger.get_file();
+                s.spawn(move || {
+                    for i in 0..256 {
+                        f.fill(vec![Value::I32(w * 1000 + i)]).unwrap();
+                    }
+                    f.write().unwrap();
+                });
+            }
+        });
+        let stats = merger.close().unwrap();
+        assert_eq!(stats.entries, 3 * 256);
+        let st = session.stats();
+        assert_eq!(st.writers_opened, 3, "all worker files registered on the session");
+        assert!(st.admissions >= 3 * 4, "every flushed cluster was admitted");
+        assert_eq!(st.in_flight_clusters, 0, "budget fully released after close");
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Shared I/O session: one pool, one completion domain, one budget —
+//! for *many* writers.
+//!
+//! The pipelined write path (PR 2) scales one writer; real production
+//! workflows (Riley & Jones, "Multi-threaded Output in CMS using
+//! ROOT") run many concurrent output modules. Left to themselves, N
+//! `TreeWriter`s each construct their own task group and bound only
+//! their own in-flight clusters, so together they oversubscribe the
+//! IMT pool and buffer N× the intended memory. A [`Session`] is the
+//! shared substrate they attach to instead:
+//!
+//! * **one pool handle** — every writer's flush tasks land on the same
+//!   [`imt::Pool`] (an explicit pool, or the global IMT pool bound
+//!   lazily like `TaskGroup` always has);
+//! * **one completion domain** — task groups are minted by
+//!   [`Session::task_group`] and tracked, so [`Session::drain`] can
+//!   join every writer's outstanding work at once;
+//! * **one in-flight budget** — a [`imt::WriteBudget`] caps clusters
+//!   in flight *across all writers* with per-writer max-min fair
+//!   admission (`max(1, limit / active_writers)`, clamped by each
+//!   writer's own `max_inflight_clusters`), so a fat-basket writer
+//!   cannot monopolise the slots and narrow writers never starve;
+//! * **scratch-pool sizing** — each registered writer reserves
+//!   head-room in the shared [`compress::pool`]
+//!   ([`compress::pool::reserve_writer`]), whose eviction/high-water
+//!   policy keeps resident scratch bounded under many-writer pressure.
+//!
+//! ```no_run
+//! use rootio_par::session::{Session, SessionConfig};
+//! let session = Session::new(SessionConfig::for_writers(4, 2));
+//! // open every output of the job under `session`:
+//! //   TreeWriter::attached(schema, sink, config, &session)
+//! //   TBufferMerger::create_in_session(..., &session)
+//! //   coordinator::write::write_files(&session, jobs)
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compress;
+use crate::error::Result;
+use crate::imt::{BudgetStats, ClusterGuard, Pool, TaskGroup, WriteBudget, WriterBudget};
+
+/// Session tuning.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Global cap on basket clusters in flight across every writer
+    /// attached to the session (bounds buffered memory; producers that
+    /// outrun the compressors block — helping the pool — and account
+    /// the wait as stall).
+    pub max_inflight_clusters: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { max_inflight_clusters: 16 }
+    }
+}
+
+impl SessionConfig {
+    /// Budget sized for `writers` concurrent writers at `per_writer`
+    /// clusters each — the fair share works out to `per_writer` when
+    /// all of them are attached.
+    pub fn for_writers(writers: usize, per_writer: usize) -> Self {
+        SessionConfig { max_inflight_clusters: (writers * per_writer).max(1) }
+    }
+}
+
+/// Aggregate session counters ([`Session::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Writers ever registered on this session.
+    pub writers_opened: u64,
+    /// Writers currently registered.
+    pub active_writers: usize,
+    /// Clusters currently in flight across all writers.
+    pub in_flight_clusters: usize,
+    /// The global in-flight cap.
+    pub budget_limit: usize,
+    /// Lifetime admissions through the shared budget.
+    pub admissions: u64,
+    /// Admissions that had to wait for capacity.
+    pub admission_waits: u64,
+}
+
+struct SessionInner {
+    config: SessionConfig,
+    /// Explicit pool, or `None` to bind lazily to the global IMT pool
+    /// exactly the way a bare `TaskGroup::new()` does.
+    explicit_pool: Option<Arc<Pool>>,
+    budget: WriteBudget,
+    /// Task groups minted for writers/helpers, joined by [`Session::drain`].
+    groups: Mutex<Vec<TaskGroup>>,
+    writers_opened: AtomicU64,
+}
+
+/// Cloneable handle on one shared I/O session.
+#[derive(Clone)]
+pub struct Session {
+    inner: Arc<SessionInner>,
+}
+
+impl Session {
+    /// Session on the global IMT pool (bound lazily; writers degrade
+    /// to inline/serial execution while IMT is off, exactly like a
+    /// standalone `TreeWriter`).
+    pub fn new(config: SessionConfig) -> Self {
+        Session::build(None, config)
+    }
+
+    /// Session on a dedicated pool (hermetic tests, isolated jobs).
+    pub fn with_pool(pool: Arc<Pool>, config: SessionConfig) -> Self {
+        Session::build(Some(pool), config)
+    }
+
+    /// Private single-writer session: what `TreeWriter::new` wraps
+    /// itself in when no shared session is given, preserving the old
+    /// per-writer `max_inflight_clusters` semantics.
+    pub fn solo(max_inflight_clusters: usize) -> Self {
+        Session::new(SessionConfig { max_inflight_clusters: max_inflight_clusters.max(1) })
+    }
+
+    fn build(pool: Option<Arc<Pool>>, config: SessionConfig) -> Self {
+        let budget = WriteBudget::new(config.max_inflight_clusters, pool.clone());
+        Session {
+            inner: Arc::new(SessionInner {
+                config,
+                explicit_pool: pool,
+                budget,
+                groups: Mutex::new(Vec::new()),
+                writers_opened: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.inner.config
+    }
+
+    /// The pool writers of this session run on right now: the explicit
+    /// pool, else the current global IMT pool (None while IMT is off).
+    pub fn pool(&self) -> Option<Arc<Pool>> {
+        self.inner.explicit_pool.clone().or_else(crate::imt::pool)
+    }
+
+    /// Will flush work actually run concurrently?
+    pub fn is_parallel(&self) -> bool {
+        self.pool().is_some()
+    }
+
+    /// Mint a task group in this session's completion domain: bound to
+    /// the session pool (or lazily to the global pool), tracked so
+    /// [`Session::drain`] covers it.
+    pub fn task_group(&self) -> TaskGroup {
+        let group = TaskGroup::bound(self.inner.explicit_pool.clone());
+        let mut groups = self.inner.groups.lock().unwrap_or_else(|p| p.into_inner());
+        // Bound the roster on long-lived sessions: a group whose only
+        // handle is this roster and whose jobs have all finished can
+        // never spawn again, so it falls off as its writer closes. An
+        // idle group still held by a live writer (between clusters)
+        // stays, preserving the drain contract; panicked groups stay
+        // so `drain` surfaces the failure.
+        groups.retain(|g| !g.is_orphaned() || g.panicked());
+        groups.push(group.clone());
+        group
+    }
+
+    /// Register one writer: it joins the shared budget (with `cap` =
+    /// its own `max_inflight_clusters`) and reserves scratch-pool
+    /// head-room for the session's lifetime accounting.
+    pub fn register_writer(&self, cap: usize) -> WriterRegistration {
+        self.inner.writers_opened.fetch_add(1, Ordering::Relaxed);
+        compress::pool::reserve_writer();
+        WriterRegistration { budget: self.inner.budget.register(cap) }
+    }
+
+    /// The shared budget (diagnostics / tests).
+    pub fn budget(&self) -> &WriteBudget {
+        &self.inner.budget
+    }
+
+    /// Join every task group minted by this session; the first
+    /// panicked group surfaces as an error.
+    pub fn drain(&self) -> Result<()> {
+        let groups: Vec<TaskGroup> = {
+            let g = self.inner.groups.lock().unwrap_or_else(|p| p.into_inner());
+            g.clone()
+        };
+        for group in groups {
+            group.join()?;
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        let b: BudgetStats = self.inner.budget.stats();
+        SessionStats {
+            writers_opened: self.inner.writers_opened.load(Ordering::Relaxed),
+            active_writers: b.active_writers,
+            in_flight_clusters: b.in_flight,
+            budget_limit: b.limit,
+            admissions: b.admissions,
+            admission_waits: b.waits,
+        }
+    }
+}
+
+/// One writer's membership in a session: budget admission plus the
+/// scratch-pool reservation, both released on drop.
+pub struct WriterRegistration {
+    budget: WriterBudget,
+}
+
+impl WriterRegistration {
+    /// Admit one cluster (blocking, helping the pool). See
+    /// [`WriterBudget::acquire`].
+    pub fn acquire(&self) -> ClusterGuard {
+        self.budget.acquire()
+    }
+
+    /// Non-blocking admission.
+    pub fn try_acquire(&self) -> Option<ClusterGuard> {
+        self.budget.try_acquire()
+    }
+
+    /// Highest in-flight cluster count this writer ever held.
+    pub fn high_water(&self) -> usize {
+        self.budget.high_water()
+    }
+
+    /// The writer's current fair share of the session budget.
+    pub fn fair_share(&self) -> usize {
+        self.budget.fair_share()
+    }
+}
+
+impl Drop for WriterRegistration {
+    fn drop(&mut self) {
+        compress::pool::release_writer();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_session_owns_the_whole_budget() {
+        let s = Session::solo(3);
+        let w = s.register_writer(3);
+        assert_eq!(w.fair_share(), 3);
+        let g: Vec<_> = (0..3).map(|_| w.try_acquire().expect("own budget")).collect();
+        assert!(w.try_acquire().is_none());
+        assert_eq!(s.stats().in_flight_clusters, 3);
+        drop(g);
+        assert_eq!(s.stats().in_flight_clusters, 0);
+        assert_eq!(s.stats().writers_opened, 1);
+    }
+
+    #[test]
+    fn shared_budget_splits_across_writers() {
+        let s = Session::new(SessionConfig::for_writers(4, 2));
+        assert_eq!(s.budget().limit(), 8);
+        let writers: Vec<_> = (0..4).map(|_| s.register_writer(8)).collect();
+        for w in &writers {
+            assert_eq!(w.fair_share(), 2);
+        }
+        assert_eq!(s.stats().active_writers, 4);
+        drop(writers);
+        assert_eq!(s.stats().active_writers, 0);
+    }
+
+    #[test]
+    fn task_groups_join_via_drain() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = Arc::new(Pool::new(2));
+        let s = Session::with_pool(pool, SessionConfig::default());
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            let group = s.task_group();
+            for _ in 0..8 {
+                let hits = hits.clone();
+                group.spawn(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        s.drain().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    fn writer_registration_reserves_scratch_headroom() {
+        // Other lib tests register writers concurrently, so only the
+        // balanced register/release pair is asserted (no underflow, no
+        // panic), not an absolute count.
+        let s = Session::solo(2);
+        let w = s.register_writer(2);
+        assert!(compress::pool::registered_writers() >= 1);
+        drop(w);
+    }
+}

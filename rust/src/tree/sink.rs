@@ -111,6 +111,18 @@ impl FileSink {
         Ok(())
     }
 
+    /// Close this sink's tree and register it with the underlying
+    /// [`FileWriter`] for the (possibly multi-tree) footer. Several
+    /// sinks of one session may share a `FileWriter` — their appends
+    /// interleave, each registers its tree as its writer closes, and
+    /// the file is finalised once by
+    /// [`FileWriter::finish_registered`].
+    pub fn finish_tree(self, name: String, schema: Schema, entries: u64) -> Result<()> {
+        let file = self.file.clone();
+        let meta = self.into_meta(name, schema, entries)?;
+        file.add_tree(meta)
+    }
+
     /// Drain collected metadata into a [`TreeMeta`]. Errors when a
     /// sequence number never arrived (its flush task failed) or a lock
     /// was poisoned.
@@ -192,8 +204,11 @@ impl BasketSink for BufferSink {
     }
 }
 
-/// Open a fresh single-tree file writer on `backend` (helper used by
-/// examples and benches).
+/// Open a fresh file writer on `backend` (helper used by examples and
+/// benches). Attach one [`FileSink`] per tree — a session may write
+/// several trees of one file concurrently, each closing with
+/// [`FileSink::finish_tree`], and the file finalises once via
+/// [`FileWriter::finish_registered`].
 pub fn file_writer(backend: BackendRef) -> Result<std::sync::Arc<FileWriter>> {
     Ok(std::sync::Arc::new(FileWriter::create(backend)?))
 }
@@ -243,6 +258,54 @@ mod tests {
         // seq 0 never arrives (its task failed): close must error, not
         // silently drop the stashed basket.
         assert!(sink.into_meta("t".into(), schema2(), 20).is_err());
+    }
+
+    #[test]
+    fn two_trees_one_file_written_concurrently() {
+        use crate::compress::{Codec, Settings};
+        use crate::format::reader::FileReader;
+        use crate::serial::value::Value;
+        use crate::session::{Session, SessionConfig};
+        use crate::tree::reader::TreeReader;
+        use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
+
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let pool = Arc::new(crate::imt::Pool::new(3));
+        let session = Session::with_pool(pool, SessionConfig::for_writers(2, 2));
+        let schema = schema2();
+        let cfg = WriterConfig {
+            basket_entries: 32,
+            compression: Settings::new(Codec::Lz4r, 2),
+            flush: FlushMode::Pipelined,
+            ..Default::default()
+        };
+        std::thread::scope(|s| {
+            for (name, base) in [("alpha", 0i32), ("beta", 1000i32)] {
+                let sink = FileSink::new(fw.clone(), schema.len());
+                let mut w =
+                    TreeWriter::attached(schema.clone(), sink, cfg.clone(), &session);
+                let schema = schema.clone();
+                s.spawn(move || {
+                    for i in 0..100 {
+                        w.fill(vec![Value::F32(i as f32), Value::I32(base + i)]).unwrap();
+                    }
+                    let (sink, entries, _) = w.close().unwrap();
+                    sink.finish_tree(name.into(), schema, entries).unwrap();
+                });
+            }
+        });
+        fw.finish_registered().unwrap();
+
+        let file = Arc::new(FileReader::open(be).unwrap());
+        for (name, base) in [("alpha", 0i32), ("beta", 1000i32)] {
+            let r = TreeReader::open(file.clone(), name).unwrap();
+            assert_eq!(r.entries(), 100);
+            let cols = r.read_all().unwrap();
+            for i in 0..100usize {
+                assert_eq!(cols[1].get(i), Some(Value::I32(base + i as i32)));
+            }
+        }
     }
 
     #[test]

@@ -20,10 +20,17 @@
 //!   next `fill`/`flush`/`close`; task *panics* are caught by the task
 //!   group and reported by `close` as [`Error::Sync`] — a bad basket
 //!   aborts the write cleanly, it never hangs `close()` or cascades;
-//! * [`WriterConfig::max_inflight_clusters`] bounds the clusters in
-//!   flight: when the producer outruns the compressors it blocks (the
-//!   time is accounted as *stall* in [`WriteStats`]) and helps execute
-//!   flush tasks instead of ballooning memory.
+//! * backpressure is *admission*: every pipelined cluster takes one
+//!   slot of its [`crate::session::Session`]'s shared in-flight budget
+//!   before spawning and releases it when its last task completes. A
+//!   standalone writer ([`TreeWriter::new`]) wraps itself in a private
+//!   session whose budget is [`WriterConfig::max_inflight_clusters`];
+//!   a writer opened with [`TreeWriter::attached`] shares the session
+//!   budget with every other writer of the job under per-writer
+//!   fair-share caps, so N writers together stay within one global
+//!   memory bound and none can starve the rest. Either way, a blocked
+//!   producer helps execute flush tasks (the wait is accounted as
+//!   *stall* in [`WriteStats`]) instead of ballooning memory.
 //!
 //! Scratch and payload buffers both come from [`compress::pool`], so a
 //! steady-state flush performs zero allocator round-trips end to end:
@@ -36,8 +43,9 @@ use std::time::{Duration, Instant};
 
 use crate::compress::{self, Settings};
 use crate::error::{Error, Result};
-use crate::imt::{Pool, TaskGroup};
+use crate::imt::{ClusterGuard, Pool, TaskGroup};
 use crate::metrics::{Recorder, SpanKind};
+use crate::session::{Session, WriterRegistration};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::Schema;
 use crate::serial::streamer::Streamer;
@@ -84,9 +92,12 @@ pub struct WriterConfig {
     pub flush: FlushMode,
     /// Task decomposition for parallel/pipelined flushes.
     pub granularity: FlushGranularity,
-    /// Pipelined mode: clusters allowed in flight before `fill`
-    /// blocks (bounds buffered memory; wait time is accounted as
-    /// stall).
+    /// Pipelined mode: this writer's cap on clusters in flight before
+    /// `fill` blocks (bounds buffered memory; wait time is accounted
+    /// as stall). Standalone writers own a budget of exactly this
+    /// size; writers attached to a shared [`crate::session::Session`]
+    /// are additionally clamped to their fair share of the session
+    /// budget.
     pub max_inflight_clusters: usize,
 }
 
@@ -167,6 +178,9 @@ pub struct TreeWriter<S: BasketSink> {
     entries: u64,
     recorder: Option<Arc<Recorder>>,
     group: TaskGroup,
+    /// Membership in the session's shared in-flight budget: every
+    /// pipelined cluster is admitted through it before spawning.
+    admission: WriterRegistration,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
     /// Global basket sequence: cluster-major, branch-minor.
@@ -176,9 +190,23 @@ pub struct TreeWriter<S: BasketSink> {
 }
 
 impl<S: BasketSink> TreeWriter<S> {
+    /// Standalone writer: wraps itself in a private single-writer
+    /// [`Session`] on the global IMT pool, preserving the historical
+    /// per-writer `max_inflight_clusters` semantics.
     pub fn new(schema: Schema, sink: S, config: WriterConfig) -> Self {
+        let session = Session::solo(config.max_inflight_clusters);
+        Self::attached(schema, sink, config, &session)
+    }
+
+    /// Writer attached to a shared [`Session`]: flush tasks run on the
+    /// session's pool and cluster admission draws from the session's
+    /// *shared* budget (fair-share capped), so many writers together
+    /// stay within one global in-flight bound.
+    pub fn attached(schema: Schema, sink: S, config: WriterConfig, session: &Session) -> Self {
         let streamer = Streamer::new(schema);
         let columns = streamer.make_columns();
+        let group = session.task_group();
+        let admission = session.register_writer(config.max_inflight_clusters);
         TreeWriter {
             streamer,
             config,
@@ -187,7 +215,8 @@ impl<S: BasketSink> TreeWriter<S> {
             buffered: 0,
             entries: 0,
             recorder: None,
-            group: TaskGroup::new(),
+            group,
+            admission,
             counters: Arc::new(TaskCounters::default()),
             errors: Arc::new(ErrorSlot::default()),
             next_seq: 0,
@@ -202,10 +231,29 @@ impl<S: BasketSink> TreeWriter<S> {
     }
 
     /// Run flush tasks on a specific pool instead of the global IMT
-    /// pool (dedicated writer pools, hermetic tests).
+    /// pool (dedicated writer pools, hermetic tests). Equivalent to a
+    /// private single-writer session on that pool.
     pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
-        self.group = TaskGroup::with_pool(pool);
+        let session = Session::with_pool(
+            pool,
+            crate::session::SessionConfig {
+                max_inflight_clusters: self.config.max_inflight_clusters.max(1),
+            },
+        );
+        self.group = session.task_group();
+        self.admission = session.register_writer(self.config.max_inflight_clusters);
         self
+    }
+
+    /// Admission diagnostics: the most clusters this writer ever had
+    /// in flight (fairness tests assert it stays within the share).
+    pub fn admission_high_water(&self) -> usize {
+        self.admission.high_water()
+    }
+
+    /// The writer's current fair share of its session's budget.
+    pub fn admission_fair_share(&self) -> usize {
+        self.admission.fair_share()
     }
 
     pub fn schema(&self) -> &Schema {
@@ -278,9 +326,21 @@ impl<S: BasketSink> TreeWriter<S> {
             return Ok(());
         }
         self.errors.check()?;
+        // Backpressure = admission: a pipelined cluster takes one slot
+        // of the session's shared budget *before* spawning, and the
+        // slot frees when the cluster's last task drops its guard. The
+        // wait helps execute pool jobs and is accounted as stall.
+        let admission: Option<Arc<ClusterGuard>> =
+            if self.config.flush == FlushMode::Pipelined {
+                let t0 = Instant::now();
+                let guard = self.admission.acquire();
+                self.stall += t0.elapsed();
+                Some(Arc::new(guard))
+            } else {
+                None
+            };
         let n_entries = chunk as u32;
         let first_entry = self.entries - self.buffered as u64;
-        let n_branches = self.columns.len();
         for (branch, col) in self.columns.iter_mut().enumerate() {
             let task = BasketTask {
                 col: col.drain_front(chunk),
@@ -297,6 +357,7 @@ impl<S: BasketSink> TreeWriter<S> {
                 recorder: self.recorder.clone(),
                 counters: self.counters.clone(),
                 errors: self.errors.clone(),
+                _admission: admission.clone(),
             };
             self.next_seq += 1;
             if self.config.flush == FlushMode::Serial {
@@ -308,6 +369,7 @@ impl<S: BasketSink> TreeWriter<S> {
                 self.group.spawn(move || task.run(Some(&group)));
             }
         }
+        drop(admission); // tasks hold the cluster's slot from here on
         self.buffered -= chunk;
         match self.config.flush {
             FlushMode::Serial => self.errors.check(),
@@ -318,17 +380,7 @@ impl<S: BasketSink> TreeWriter<S> {
                 joined?;
                 self.errors.check()
             }
-            FlushMode::Pipelined => {
-                // Backpressure: cap in-flight flush tasks (≈ clusters ×
-                // branches; block subtasks briefly exceed, harmlessly).
-                let limit = self.config.max_inflight_clusters.max(1) * n_branches.max(1);
-                if self.group.pending() > limit {
-                    let t0 = Instant::now();
-                    self.group.wait_below(limit);
-                    self.stall += t0.elapsed();
-                }
-                self.errors.check()
-            }
+            FlushMode::Pipelined => self.errors.check(),
         }
     }
 
@@ -366,6 +418,10 @@ struct BasketTask<S: BasketSink> {
     recorder: Option<Arc<Recorder>>,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
+    /// The cluster's budget slot: released (waking blocked producers)
+    /// when the last task of the cluster drops its clone — including
+    /// on unwind, so a panicked basket cannot leak admission.
+    _admission: Option<Arc<ClusterGuard>>,
 }
 
 impl<S: BasketSink> BasketTask<S> {

@@ -3,6 +3,11 @@
 //!   **byte-identical** to the serial writer across arbitrary schemas,
 //!   uneven tail baskets, empty trees and every codec (the write-side
 //!   mirror of the read equivalence property);
+//! * N writers sharing one session produce bytes identical to the same
+//!   writers run serially, across codecs;
+//! * the shared budget is fair: a fat-basket writer stays within its
+//!   share and narrow writers are never starved (and the scratch
+//!   pool's drop counter stays bounded under the many-writer load);
 //! * a panicking flush task must surface as an error from `close()`,
 //!   never a hang or a cascading panic;
 //! * the overlap is real: producer stall stays strictly below total
@@ -21,6 +26,7 @@ use rootio_par::format::Directory;
 use rootio_par::imt::Pool;
 use rootio_par::serial::schema::Schema;
 use rootio_par::serial::value::{Row, Value};
+use rootio_par::session::{Session, SessionConfig};
 use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::{Backend, BackendRef};
 use rootio_par::tree::sink::{BasketMeta, BasketSink, FileSink, PayloadBuf};
@@ -38,17 +44,23 @@ fn codecs() -> [Settings; 4] {
 }
 
 /// Write `rows` through a `FileSink` and return the finished file's
-/// raw bytes plus the writer's pipeline stats.
-fn write_file(
+/// raw bytes plus the writer's pipeline stats. The writer attaches to
+/// `session` when one is given (shared budget), else runs standalone
+/// on `pool` / inline.
+fn write_file_with(
     schema: &Schema,
     rows: &[Row],
     cfg: WriterConfig,
     pool: Option<Arc<Pool>>,
+    session: Option<&Session>,
 ) -> (Vec<u8>, WriteStats) {
     let be: BackendRef = Arc::new(MemBackend::new());
     let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
     let sink = FileSink::new(fw.clone(), schema.len());
-    let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+    let mut w = match session {
+        Some(s) => TreeWriter::attached(schema.clone(), sink, cfg, s),
+        None => TreeWriter::new(schema.clone(), sink, cfg),
+    };
     if let Some(p) = pool {
         w = w.with_pool(p);
     }
@@ -63,6 +75,15 @@ fn write_file(
     let mut bytes = vec![0u8; len];
     be.read_at(0, &mut bytes).unwrap();
     (bytes, stats)
+}
+
+fn write_file(
+    schema: &Schema,
+    rows: &[Row],
+    cfg: WriterConfig,
+    pool: Option<Arc<Pool>>,
+) -> (Vec<u8>, WriteStats) {
+    write_file_with(schema, rows, cfg, pool, None)
 }
 
 /// The write-side equivalence property: every parallel flush mode and
@@ -107,6 +128,186 @@ fn prop_pipelined_write_bytes_match_serial() {
             }
         }
     });
+}
+
+/// N writers under one shared session produce bytes identical to the
+/// same writers run serially — across codecs, uneven baskets and
+/// different per-writer schemas. Concurrency (shared pool, shared
+/// fair-share budget) must be purely a scheduling property, never a
+/// bytes property.
+#[test]
+fn shared_session_writers_byte_identical_to_serial_across_codecs() {
+    let pool = Arc::new(Pool::new(4));
+    for settings in codecs() {
+        let mut g = Gen::new(0xC0FFEE ^ settings.level as u64);
+        let writers: Vec<(Schema, Vec<Row>, usize)> = (0..4)
+            .map(|_| {
+                let schema = g.schema(4);
+                let n_rows = g.range(30, 200);
+                let rows: Vec<Row> = (0..n_rows).map(|_| g.row(&schema)).collect();
+                let basket = *g.choose(&[7usize, 32, 100]);
+                (schema, rows, basket)
+            })
+            .collect();
+        // Ground truth: each writer alone, serial flush, no pool.
+        let serial: Vec<Vec<u8>> = writers
+            .iter()
+            .map(|(schema, rows, basket)| {
+                let cfg = WriterConfig {
+                    basket_entries: *basket,
+                    compression: settings,
+                    flush: FlushMode::Serial,
+                    ..Default::default()
+                };
+                write_file(schema, rows, cfg, None).0
+            })
+            .collect();
+        // All four concurrently under one session.
+        let session =
+            Session::with_pool(pool.clone(), SessionConfig::for_writers(4, 2));
+        let shared: Vec<Vec<u8>> = std::thread::scope(|s| {
+            let handles: Vec<_> = writers
+                .iter()
+                .map(|(schema, rows, basket)| {
+                    let session = &session;
+                    let cfg = WriterConfig {
+                        basket_entries: *basket,
+                        compression: settings,
+                        flush: FlushMode::Pipelined,
+                        granularity: FlushGranularity::Block,
+                        max_inflight_clusters: 2,
+                    };
+                    s.spawn(move || {
+                        write_file_with(schema, rows, cfg, None, Some(session)).0
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (w, (a, b)) in serial.iter().zip(&shared).enumerate() {
+            assert_eq!(
+                a, b,
+                "writer {w} under codec {:?} diverged from its serial bytes",
+                settings
+            );
+        }
+        assert_eq!(session.stats().in_flight_clusters, 0);
+    }
+}
+
+/// Fairness under a shared budget: one fat-basket writer and three
+/// narrow writers. The budget's fair share must cap the fat writer's
+/// in-flight clusters (deterministic invariant), no narrow writer may
+/// be starved for the duration of the run, and the scratch pool's
+/// drop counter stays bounded (the eviction/high-water policy recycles
+/// rather than discards).
+#[test]
+fn fat_writer_does_not_starve_narrow_writers_on_shared_budget() {
+    let pool = Arc::new(Pool::new(3));
+    // limit 4 over 4 registered writers -> fair share 1 each.
+    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 4 });
+    let drops_before = rootio_par::compress::pool::stats().drops;
+
+    let fat_schema = Schema::flat_f32("fat", 1);
+    let fat_cfg = WriterConfig {
+        basket_entries: 16_384,
+        compression: Settings::new(Codec::Rzip, 6),
+        flush: FlushMode::Pipelined,
+        granularity: FlushGranularity::Block,
+        max_inflight_clusters: 4,
+    };
+    let narrow_schema = Schema::flat_f32("n", 2);
+    let narrow_cfg = WriterConfig {
+        basket_entries: 256,
+        compression: Settings::new(Codec::Lz4r, 1),
+        flush: FlushMode::Pipelined,
+        granularity: FlushGranularity::Block,
+        max_inflight_clusters: 2,
+    };
+
+    // Register every writer BEFORE any runs, so the fair share is 1
+    // for the whole run (deterministic).
+    let mk_writer = |schema: &Schema, cfg: &WriterConfig| {
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be).unwrap());
+        let sink = FileSink::new(fw, schema.len());
+        TreeWriter::attached(schema.clone(), sink, cfg.clone(), &session)
+    };
+    let mut fat_writer = mk_writer(&fat_schema, &fat_cfg);
+    let mut narrow: Vec<_> =
+        (0..3).map(|_| mk_writer(&narrow_schema, &narrow_cfg)).collect();
+    assert_eq!(fat_writer.admission_fair_share(), 1);
+
+    let t0 = std::time::Instant::now();
+    let mut g = Gen::new(77);
+    let fat_rows: Vec<Row> =
+        (0..6 * 16_384).map(|_| vec![Value::F32(g.f32())]).collect();
+    let narrow_rows: Vec<Row> = (0..4 * 256)
+        .map(|_| vec![Value::F32(g.f32()), Value::F32(g.f32())])
+        .collect();
+
+    let (fat_high_water, fat_stats) = std::thread::scope(|s| {
+        let fat_handle = s.spawn(|| {
+            for row in &fat_rows {
+                fat_writer.fill(row.clone()).unwrap();
+            }
+            let hw = fat_writer.admission_high_water();
+            let (_, entries, stats) = fat_writer.close().unwrap();
+            assert_eq!(entries, 6 * 16_384);
+            (hw, stats)
+        });
+        let narrow_handles: Vec<_> = narrow
+            .iter_mut()
+            .map(|w| {
+                let rows = &narrow_rows;
+                s.spawn(move || {
+                    for row in rows {
+                        w.fill(row.clone()).unwrap();
+                    }
+                    w.flush().unwrap();
+                })
+            })
+            .collect();
+        for h in narrow_handles {
+            h.join().unwrap();
+        }
+        fat_handle.join().unwrap()
+    });
+    let wall = t0.elapsed();
+
+    // Deterministic fairness invariant: with share 1, the fat writer
+    // never held more than one cluster in flight.
+    assert!(
+        fat_high_water <= 1,
+        "fat writer exceeded its fair share: high water {fat_high_water}"
+    );
+    assert!(fat_stats.baskets > 0);
+
+    // Liveness: every narrow writer finished while the fat writer was
+    // still in flight or shortly after — none was starved for the
+    // whole run (a starved writer's stall would approach the wall).
+    let mut narrow_entries = 0u64;
+    for w in narrow.drain(..) {
+        let (_, entries, stats) = w.close().unwrap();
+        narrow_entries += entries;
+        assert!(
+            stats.stall.as_secs_f64() < 0.8 * wall.as_secs_f64() + 0.25,
+            "narrow writer stalled {:?} of a {:?} run — starvation",
+            stats.stall,
+            wall,
+        );
+    }
+    assert_eq!(narrow_entries, 3 * 4 * 256);
+
+    // Scratch pool: the many-writer load must not translate into an
+    // unbounded drop count (eviction recycles instead). The counter is
+    // global, so allow head-room for concurrently-running tests.
+    let drops_after = rootio_par::compress::pool::stats().drops;
+    assert!(
+        drops_after - drops_before < 1024,
+        "scratch pool dropped {} buffers during the run",
+        drops_after - drops_before
+    );
 }
 
 /// A sink whose `put_basket` always panics — the injected fault for
