@@ -1,21 +1,35 @@
 //! Quickstart — the paper's Figure 5 example, grown to a shared I/O
 //! session.
 //!
-//! Three ways to write the same data:
+//! Four ways to write the same data:
 //! 1. sequential `TFile` (Figure 5, left);
 //! 2. `TBufferMerger` with worker threads into ONE file (Figure 5,
 //!    right) — the workers' pipelined flushes share the merger's
 //!    session budget;
 //! 3. a shared [`Session`]: N writers, N files (and a two-trees-in-
 //!    one-file variant), all drawing from one pool and one fair-share
-//!    in-flight budget — the multi-output production shape.
+//!    in-flight budget — the multi-output production shape;
+//! 4. **adaptive cluster sizing**: the same pipelined writer with
+//!    `WriterConfig::sizing = ClusterSizing::Adaptive(..)`, which
+//!    resizes clusters *between* flushes from the measured
+//!    stall/compress ratio and the session's admission-wait feedback.
+//!    Narrow fast producers cut smaller clusters to keep the pool
+//!    fed; compression-bound writers grow clusters to amortise
+//!    per-basket overhead — with hysteresis and min/max clamps, and
+//!    every decision recorded in a replayable trace. Cluster
+//!    boundaries become schedule-dependent, but the decoded data is
+//!    always entry-identical to a fixed-size write (the stress suite
+//!    asserts exactly this); the chosen band is reported through
+//!    `WriteReport::sizing`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
 use rootio_par::compress::{Codec, Settings};
-use rootio_par::coordinator::write::{write_blocks, write_files, WriteJob};
+use rootio_par::coordinator::write::{
+    write_blocks, write_blocks_in_session, write_files, WriteJob,
+};
 use rootio_par::format::reader::FileReader;
 use rootio_par::format::writer::FileWriter;
 use rootio_par::merger::{MergerConfig, TBufferMerger};
@@ -27,6 +41,7 @@ use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::FileSink;
+use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
 use rootio_par::tree::writer::{FlushMode, TreeWriter, WriterConfig};
 
 const N_ENTRIES: usize = 100_000;
@@ -118,6 +133,32 @@ fn write_many_files(session: &Session) -> anyhow::Result<Vec<BackendRef>> {
     Ok(backends)
 }
 
+/// Adaptive cluster sizing: keep the default starting basket size and
+/// let the writer's feedback controller pick the cluster size — the
+/// `WriteReport` comes back with the band it actually used.
+fn write_tree_adaptive(session: &Session) -> anyhow::Result<BackendRef> {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let cfg = WriterConfig {
+        // ×8 clamp band either side of basket_entries; see
+        // AdaptiveConfig for the thresholds/hysteresis knobs.
+        sizing: ClusterSizing::Adaptive(AdaptiveConfig::around(4096)),
+        ..writer_config()
+    };
+    let block = vec![ColumnData::I32((0..N_ENTRIES as i32).collect())];
+    let rep = write_blocks_in_session(session, be.clone(), schema(), "mytree", cfg, vec![block])?;
+    println!(
+        "  adaptive writer: clusters {}..{} entries (last {}, +{} -{} steps, \
+         stall {} ms)",
+        rep.sizing.min_entries,
+        rep.sizing.max_entries,
+        rep.sizing.last_entries,
+        rep.sizing.grows,
+        rep.sizing.shrinks,
+        rep.stall.as_millis(),
+    );
+    Ok(be)
+}
+
 /// Two trees, one file, written concurrently under the session: each
 /// writer's sink registers its tree as it closes and the file commits
 /// one deterministic (name-sorted) footer.
@@ -173,9 +214,15 @@ fn main() -> anyhow::Result<()> {
     let t_many = t2.elapsed();
 
     let two_trees = write_two_trees_one_file(&session)?;
+    let adaptive = write_tree_adaptive(&session)?;
 
     let expect = read_sorted(seq, "mytree")?;
     assert_eq!(expect.len(), N_ENTRIES);
+    assert_eq!(
+        read_sorted(adaptive, "mytree")?,
+        expect,
+        "adaptive cluster sizes never change the data, only the cuts"
+    );
     assert_eq!(read_sorted(merged, "mytree")?, expect, "merger file holds the same entries");
     let mut union: Vec<i32> = Vec::new();
     for be in many {

@@ -1,0 +1,13 @@
+//! Bench harness for the adaptive cluster sizing experiment (harness =
+//! false; criterion is unavailable offline — see Cargo.toml). Pass
+//! --quick for a reduced sweep. Emits BENCH_fig5.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::adaptive_sizing(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("adaptive_sizing: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -55,13 +55,16 @@ fn run() -> Result<()> {
         .collect::<Result<_>>()?;
     let rep = hadd(output, &inputs, &HaddOptions { parallel, tree: None })?;
     println!(
-        "merged {} files -> {}: {} entries, {:.1} MB stored, {:.1} ms ({})",
+        "merged {} files -> {}: {} entries, {:.1} MB stored, {:.1} ms ({}, \
+         baskets {}..{} entries)",
         rep.files,
         args[0],
         rep.entries,
         rep.stored_bytes as f64 / 1e6,
         rep.wall.as_secs_f64() * 1e3,
         if parallel { "parallel" } else { "serial" },
+        rep.cluster_entries_min,
+        rep.cluster_entries_max,
     );
     Ok(())
 }

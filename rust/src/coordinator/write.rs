@@ -30,6 +30,7 @@ use crate::serial::schema::Schema;
 use crate::session::Session;
 use crate::storage::BackendRef;
 use crate::tree::sink::FileSink;
+use crate::tree::sizer::SizerSummary;
 use crate::tree::writer::{TreeWriter, WriterConfig};
 
 /// Accounting from a write pipeline run.
@@ -46,6 +47,10 @@ pub struct WriteReport {
     pub compress_time: Duration,
     /// Total serialisation CPU across flush tasks.
     pub serialize_time: Duration,
+    /// Cluster-size report: the band of cluster sizes the writer cut
+    /// (constant under `ClusterSizing::Fixed`; the adaptive sizer's
+    /// chosen band and step counts under `ClusterSizing::Adaptive`).
+    pub sizing: SizerSummary,
 }
 
 impl WriteReport {
@@ -131,6 +136,7 @@ where
         stall: stats.stall,
         compress_time: stats.compress,
         serialize_time: stats.serialize,
+        sizing: stats.sizing,
     })
 }
 
@@ -231,6 +237,7 @@ mod tests {
             stall: Duration::ZERO,
             compress_time: Duration::ZERO,
             serialize_time: Duration::ZERO,
+            sizing: SizerSummary::default(),
         };
         assert_eq!(empty.throughput_mbps(), 0.0);
         assert_eq!(empty.overlap_fraction(), 0.0);
@@ -283,6 +290,7 @@ mod tests {
             flush: FlushMode::Pipelined,
             granularity: FlushGranularity::Block,
             max_inflight_clusters: 2,
+            ..Default::default()
         };
         // Ground truth: each job alone, serial flush.
         let solo_bytes: Vec<Vec<u8>> = (0..3)
@@ -330,6 +338,55 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_sizing_knob_plumbs_through_the_report() {
+        use crate::imt::Pool;
+        use crate::session::{Session, SessionConfig};
+        use crate::tree::sizer::{AdaptiveConfig, ClusterSizing};
+        let schema = Schema::flat_f32("x", 2);
+        let blocks: Vec<Vec<ColumnData>> = (0..4)
+            .map(|blk| {
+                (0..2)
+                    .map(|b| {
+                        ColumnData::F32(
+                            (0..2048).map(|i| ((blk * 31 + b * 7 + i) % 53) as f32).collect(),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let adaptive = AdaptiveConfig {
+            min_entries: 64,
+            max_entries: 1024,
+            hysteresis: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let cfg = WriterConfig {
+            basket_entries: 256,
+            compression: Settings::new(Codec::Lz4r, 2),
+            flush: FlushMode::Pipelined,
+            granularity: FlushGranularity::Block,
+            max_inflight_clusters: 2,
+            sizing: ClusterSizing::Adaptive(adaptive),
+        };
+        let pool = Arc::new(Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::for_writers(1, 2));
+        let be = Arc::new(MemBackend::new());
+        let rep =
+            write_blocks_in_session(&session, be.clone(), schema, "t", cfg, blocks).unwrap();
+        assert_eq!(rep.entries, 4 * 2048);
+        assert!(rep.sizing.clusters > 0, "adaptive writer must record windows");
+        assert!(rep.sizing.min_entries >= 64 && rep.sizing.max_entries <= 1024);
+        assert!(rep.sizing.last_entries >= 64 && rep.sizing.last_entries <= 1024);
+        // Whatever sizes were chosen, the data must decode intact.
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert_eq!(reader.entries(), 4 * 2048);
+        let cols = reader.read_all().unwrap();
+        assert_eq!(cols[0].len(), 4 * 2048);
+    }
+
+    #[test]
     fn pipelined_write_is_byte_identical_to_serial_write() {
         let schema = Schema::flat_f32("x", 8);
         let blocks: Vec<Vec<ColumnData>> = vec![(0..8)
@@ -343,6 +400,7 @@ mod tests {
                 flush,
                 granularity: FlushGranularity::Block,
                 max_inflight_clusters: 2,
+                ..Default::default()
             };
             let rep =
                 write_blocks(be.clone(), schema.clone(), "t", cfg, blocks.clone()).unwrap();

@@ -48,6 +48,13 @@ pub struct HaddReport {
     pub entries: u64,
     pub stored_bytes: u64,
     pub wall: std::time::Duration,
+    /// Smallest basket (entries) observed across the merged inputs —
+    /// hadd never re-baskets, so this reports the cluster-size spread
+    /// the *writers* chose (0 for an empty merge). Inputs written
+    /// with `ClusterSizing::Adaptive` show up here as a wide band.
+    pub cluster_entries_min: u32,
+    /// Largest basket (entries) observed across the merged inputs.
+    pub cluster_entries_max: u32,
 }
 
 /// Load one input file's tree into an in-memory [`TreeBuffer`]
@@ -89,11 +96,22 @@ struct Appender {
     branches: Vec<BranchMeta>,
     entries: u64,
     stored: u64,
+    /// Basket-size spread (entries) across everything appended.
+    cluster_min: u32,
+    cluster_max: u32,
 }
 
 impl Appender {
     fn new(fw: Arc<FileWriter>) -> Self {
-        Appender { fw, schema: None, branches: Vec::new(), entries: 0, stored: 0 }
+        Appender {
+            fw,
+            schema: None,
+            branches: Vec::new(),
+            entries: 0,
+            stored: 0,
+            cluster_min: 0,
+            cluster_max: 0,
+        }
     }
 
     fn push(&mut self, index: usize, buf: &TreeBuffer) -> Result<()> {
@@ -116,6 +134,14 @@ impl Appender {
             for k in &src.baskets {
                 let (offset, crc) = self.fw.append(&k.bytes)?;
                 self.stored += k.bytes.len() as u64;
+                if k.n_entries > 0 {
+                    self.cluster_min = if self.cluster_min == 0 {
+                        k.n_entries
+                    } else {
+                        self.cluster_min.min(k.n_entries)
+                    };
+                    self.cluster_max = self.cluster_max.max(k.n_entries);
+                }
                 dst.baskets.push(BasketInfo {
                     offset,
                     comp_len: k.bytes.len() as u32,
@@ -130,13 +156,13 @@ impl Appender {
         Ok(())
     }
 
-    fn finish(self, name: String) -> Result<(TreeMeta, u64, u64)> {
+    fn finish(self, name: String) -> Result<(TreeMeta, u64, u64, (u32, u32))> {
         let schema = self
             .schema
             .ok_or_else(|| Error::Coordinator("hadd: no inputs appended".into()))?;
         let meta = TreeMeta { name, schema, entries: self.entries, branches: self.branches };
         meta.check()?;
-        Ok((meta, self.entries, self.stored))
+        Ok((meta, self.entries, self.stored, (self.cluster_min, self.cluster_max)))
     }
 }
 
@@ -231,9 +257,16 @@ pub fn hadd_in_session(
     }
 
     let name = opts.tree.clone().unwrap_or_else(|| "events".into());
-    let (meta, entries, stored) = appender.finish(name)?;
+    let (meta, entries, stored, (cluster_min, cluster_max)) = appender.finish(name)?;
     fw.finish(&Directory { trees: vec![meta] })?;
-    Ok(HaddReport { files: inputs.len(), entries, stored_bytes: stored, wall: t0.elapsed() })
+    Ok(HaddReport {
+        files: inputs.len(),
+        entries,
+        stored_bytes: stored,
+        wall: t0.elapsed(),
+        cluster_entries_min: cluster_min,
+        cluster_entries_max: cluster_max,
+    })
 }
 
 #[cfg(test)]
@@ -289,6 +322,10 @@ mod tests {
         let rep = hadd(out.clone(), &inputs, &HaddOptions::default()).unwrap();
         assert_eq!(rep.files, 3);
         assert_eq!(rep.entries, 250);
+        // inputs were cut at 64-entry clusters with uneven tails: the
+        // reported basket-size spread covers tail..full baskets
+        assert_eq!(rep.cluster_entries_max, 64);
+        assert!(rep.cluster_entries_min >= 1 && rep.cluster_entries_min <= 64);
         let vals = read_first_col(out);
         assert_eq!(vals, (0..250).map(|i| i as f32).collect::<Vec<_>>());
     }

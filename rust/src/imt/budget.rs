@@ -140,6 +140,10 @@ struct WriterState {
     /// Highest concurrent in-flight count this writer ever reached —
     /// the fairness invariant tests assert it never exceeds the share.
     high_water: AtomicUsize,
+    /// Admissions of *this* writer that had to wait for capacity —
+    /// the per-writer admission-pressure signal the adaptive cluster
+    /// sizer ([`crate::tree::sizer`]) feeds on.
+    waits: AtomicU64,
 }
 
 /// One writer's handle on the shared budget. Dropping it deregisters
@@ -169,6 +173,12 @@ impl WriterBudget {
     /// Clusters this writer currently has in flight.
     pub fn in_flight(&self) -> usize {
         self.state.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Admissions of this writer that had to wait for capacity (the
+    /// per-writer slice of [`BudgetStats::waits`]).
+    pub fn waits(&self) -> u64 {
+        self.state.waits.load(Ordering::Relaxed)
     }
 
     /// Loose admission check (no side effects) for wait predicates.
@@ -207,6 +217,7 @@ impl WriterBudget {
             return g;
         }
         self.budget.waits.fetch_add(1, Ordering::Relaxed);
+        self.state.waits.fetch_add(1, Ordering::Relaxed);
         loop {
             match self.budget.pool() {
                 Some(p) => p.wait_until(&|| self.admittable()),
@@ -365,5 +376,63 @@ mod tests {
         assert_eq!(st.limit, 2);
         assert_eq!(st.in_flight, 0);
         assert_eq!(st.active_writers, 1);
+        assert_eq!(w.waits(), 0, "uncontended acquires never count as waits");
+    }
+
+    #[test]
+    fn per_writer_wait_counter_tracks_only_the_waiting_writer() {
+        let budget = WriteBudget::new(1, None);
+        let a = budget.register(4);
+        let b = Arc::new(budget.register(4));
+        let held = a.try_acquire().expect("only slot");
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let g = b2.acquire(); // must wait: budget full
+            drop(g);
+        });
+        // Give the waiter time to register its wait, then release.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(held);
+        h.join().unwrap();
+        assert_eq!(a.waits(), 0, "the holder never waited");
+        assert!(b.waits() >= 1, "the blocked writer's wait must be attributed to it");
+    }
+
+    /// Regression for the adaptive-resize path: a cluster guard
+    /// dropped *mid-unwind* (a flush task panicking while the writer
+    /// is between size steps) must release its slot and wake blocked
+    /// admission waiters — a leaked slot would deadlock every other
+    /// writer of the session.
+    #[test]
+    fn guard_dropped_during_panic_unwind_wakes_blocked_waiters() {
+        let budget = Arc::new(WriteBudget::new(1, None));
+        let a = budget.register(4);
+        let b = Arc::new(budget.register(4));
+
+        // Take the only slot FIRST, then start the waiter.
+        let guard = a.try_acquire().expect("only slot");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || {
+            let g = b2.acquire();
+            tx.send(()).unwrap();
+            drop(g);
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "waiter must block while the slot is held"
+        );
+
+        // Holder panics with the guard captured: the unwind drops it.
+        let holder = std::thread::spawn(move || {
+            let _held = guard;
+            panic!("injected mid-resize panic");
+        });
+        assert!(holder.join().is_err(), "holder must have panicked");
+
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("waiter must wake when the unwinding holder drops its guard");
+        waiter.join().unwrap();
+        assert_eq!(budget.in_flight(), 0, "no slot may leak across the unwind");
     }
 }

@@ -17,7 +17,12 @@
 //! * [`format`] — the `RNTF` container file format (TFile/TKey/TDirectory
 //!   analogue): append-only records plus a footer directory.
 //! * [`tree`] — TTree/TBranch/TBasket analogue: columnar trees of typed
-//!   branches, basketised, written/read through [`format`].
+//!   branches, basketised, written/read through [`format`]. Cluster
+//!   sizes are fixed or *adaptive* ([`tree::sizer`]): a per-writer
+//!   feedback controller resizes clusters between pipelined flushes
+//!   from the stall/compress ratio and the session's admission-wait
+//!   pressure, with hysteresis, clamps and a replayable decision
+//!   trace.
 //! * [`imt`] — implicit multi-threading: a global *work-stealing* task
 //!   pool (per-worker LIFO deques, FIFO stealing, an injector queue,
 //!   condvar parking — no polling) with scoped task groups, the engine

@@ -35,6 +35,7 @@ use crate::session::{Session, SessionConfig};
 use crate::storage::BackendRef;
 use crate::tree::buffer::TreeBuffer;
 use crate::tree::sink::BufferSink;
+use crate::tree::sizer::SizerSummary;
 use crate::tree::writer::{TreeWriter, WriterConfig};
 
 /// Merger configuration.
@@ -69,6 +70,14 @@ pub struct MergeStats {
     pub output_write_time: Duration,
     /// Wall time from construction to close.
     pub wall: Duration,
+    /// Smallest cluster-size *target* any worker file used (0 until a
+    /// non-empty buffer merges; tail baskets may hold fewer entries).
+    pub cluster_entries_min: usize,
+    /// Largest cluster-size target any worker file used.
+    pub cluster_entries_max: usize,
+    /// Total adaptive resize steps across all worker files (0 when
+    /// every worker ran `ClusterSizing::Fixed`).
+    pub resizes: u64,
 }
 
 struct OutputState {
@@ -87,9 +96,10 @@ fn lock_state(m: &Mutex<OutputState>) -> Result<MutexGuard<'_, OutputState>> {
         .map_err(|_| Error::Sync("merger state lock poisoned by a panicked worker".into()))
 }
 
-/// Queue message: a worker buffer, or the close() sentinel.
+/// Queue message: a worker buffer (with its writer's cluster-size
+/// report), or the close() sentinel.
 enum MergeMsg {
-    Buffer(TreeBuffer),
+    Buffer(TreeBuffer, SizerSummary),
     Shutdown,
 }
 
@@ -226,8 +236,8 @@ fn output_loop(
     recorder: Option<Arc<Recorder>>,
 ) -> Result<()> {
     loop {
-        let buf = match rx.recv() {
-            Ok(MergeMsg::Buffer(b)) => b,
+        let (buf, sizing) = match rx.recv() {
+            Ok(MergeMsg::Buffer(b, s)) => (b, s),
             Ok(MergeMsg::Shutdown) | Err(_) => break,
         };
         let t0 = Instant::now();
@@ -243,6 +253,16 @@ fn output_loop(
         st.stats.stored_bytes += buf.stored_bytes() as u64;
         st.stats.raw_bytes += buf.raw_bytes() as u64;
         st.stats.output_write_time += dt;
+        if sizing.max_entries > 0 {
+            st.stats.cluster_entries_min = if st.stats.cluster_entries_min == 0 {
+                sizing.min_entries
+            } else {
+                st.stats.cluster_entries_min.min(sizing.min_entries)
+            };
+            st.stats.cluster_entries_max =
+                st.stats.cluster_entries_max.max(sizing.max_entries);
+        }
+        st.stats.resizes += sizing.resizes();
     }
     Ok(())
 }
@@ -321,14 +341,14 @@ impl MergerFile {
         let writer = self.writer.take().ok_or_else(|| {
             Error::Coordinator("MergerFile already written (f->Write() is one-shot)".into())
         })?;
-        let (sink, entries, _stats) = writer.close()?;
+        let (sink, entries, stats) = writer.close()?;
         let buf = sink.into_buffer(entries)?;
         if buf.is_empty() {
             return Ok(());
         }
         let send = || {
             self.tx
-                .send(MergeMsg::Buffer(buf))
+                .send(MergeMsg::Buffer(buf, stats.sizing))
                 .map_err(|_| Error::Coordinator("merger output thread is gone".into()))
         };
         match &self.recorder {
@@ -487,6 +507,58 @@ mod tests {
         assert_eq!(st.writers_opened, 3, "all worker files registered on the session");
         assert!(st.admissions >= 3 * 4, "every flushed cluster was admitted");
         assert_eq!(st.in_flight_clusters, 0, "budget fully released after close");
+    }
+
+    #[test]
+    fn adaptive_workers_report_cluster_band_and_preserve_entries() {
+        use crate::tree::sizer::{AdaptiveConfig, ClusterSizing};
+        let be = Arc::new(MemBackend::new());
+        let pool = Arc::new(crate::imt::Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::for_writers(2, 2));
+        let mut cfg = config();
+        cfg.writer.flush = FlushMode::Pipelined;
+        cfg.writer.basket_entries = 32;
+        cfg.writer.sizing = ClusterSizing::Adaptive(AdaptiveConfig {
+            min_entries: 16,
+            max_entries: 256,
+            hysteresis: 1,
+            warmup: 0,
+            ..Default::default()
+        });
+        let merger =
+            TBufferMerger::create_in_session(be.clone(), schema(), cfg, None, &session)
+                .unwrap();
+        std::thread::scope(|s| {
+            for w in 0..2 {
+                let mut f = merger.get_file();
+                s.spawn(move || {
+                    for i in 0..500 {
+                        f.fill(vec![Value::I32(w * 10_000 + i)]).unwrap();
+                    }
+                    f.write().unwrap();
+                });
+            }
+        });
+        let stats = merger.close().unwrap();
+        assert_eq!(stats.entries, 1000);
+        assert!(stats.cluster_entries_min >= 16, "band floor respected");
+        assert!(stats.cluster_entries_max <= 256, "band ceiling respected");
+        assert!(stats.cluster_entries_min <= stats.cluster_entries_max);
+        // Entry multiset must survive whatever sizes were chosen.
+        let file = Arc::new(FileReader::open(be).unwrap());
+        let r = TreeReader::open(file, "mytree").unwrap();
+        let cols = r.read_all().unwrap();
+        let mut vals: Vec<i32> = (0..1000)
+            .map(|i| match cols[0].get(i).unwrap() {
+                Value::I32(v) => v,
+                _ => unreachable!(),
+            })
+            .collect();
+        vals.sort();
+        let mut want: Vec<i32> =
+            (0..2).flat_map(|w| (0..500).map(move |i| w * 10_000 + i)).collect();
+        want.sort();
+        assert_eq!(vals, want);
     }
 
     #[test]

@@ -232,6 +232,13 @@ impl WriterRegistration {
     pub fn fair_share(&self) -> usize {
         self.budget.fair_share()
     }
+
+    /// Admissions of this writer that had to wait for capacity — the
+    /// per-writer admission-pressure feedback consumed by the
+    /// adaptive cluster sizer ([`crate::tree::sizer`]).
+    pub fn waits(&self) -> u64 {
+        self.budget.waits()
+    }
 }
 
 impl Drop for WriterRegistration {

@@ -20,9 +20,11 @@
 pub mod buffer;
 pub mod reader;
 pub mod sink;
+pub mod sizer;
 pub mod writer;
 
 pub use buffer::TreeBuffer;
 pub use reader::TreeReader;
 pub use sink::{BasketMeta, BasketSink, BufferSink, FileSink, PayloadBuf};
+pub use sizer::{AdaptiveConfig, ClusterSizer, ClusterSizing, SizerSummary};
 pub use writer::{FlushGranularity, FlushMode, TreeWriter, WriteStats, WriterConfig};

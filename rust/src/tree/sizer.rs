@@ -1,0 +1,475 @@
+//! Adaptive cluster sizing: a per-writer feedback controller that
+//! adjusts the effective `basket_entries` *between* clusters.
+//!
+//! A static cluster size forces one compromise on every workload
+//! (Riley & Jones observe exactly this oscillation between producer
+//! starvation and memory pressure in multi-threaded CMS output): tiny
+//! clusters pay per-basket overhead — task spawn, admission, and the
+//! codec's per-call setup (the rzip LZ77 hash table alone is a fixed
+//! half-megabyte initialisation per compress call) — while huge
+//! clusters starve the pool between flushes and balloon the buffered
+//! tail. The pipelined writer already measures the two signals that
+//! decide which side a writer is on:
+//!
+//! * the **stall / compress ratio** — producer wall time blocked on
+//!   admission versus compression CPU burned in the window
+//!   ([`crate::tree::writer::WriteStats`]); a high ratio means
+//!   compression is the bottleneck and per-basket overhead is worth
+//!   amortising over bigger clusters;
+//! * the writer's **admission-wait feedback** from the session budget
+//!   ([`crate::imt::WriterBudget::waits`]) — every wait is a cluster
+//!   that found the shared in-flight budget full.
+//!
+//! [`ClusterSizer::observe`] consumes cumulative totals of both after
+//! each flushed cluster and classifies the window as [`Signal::Grow`]
+//! (waited, or stalled past `grow_stall_ratio`), [`Signal::Shrink`]
+//! (no wait and the producer essentially never stalled — the pipeline
+//! has slack, so cut smaller clusters and keep the pool fed sooner),
+//! or [`Signal::Hold`]. Steps are ×2 / ÷2 with **hysteresis** (a
+//! signal must repeat `hysteresis` windows in a row) and hard
+//! **min/max clamps**, after a fixed `warmup` of windows that lets the
+//! pipeline fill before the first judgement.
+//!
+//! **Determinism.** The chosen sizes depend on observed timing, so
+//! cluster boundaries are schedule-dependent — but the mapping from
+//! the *decision trace* to the output is pure: the same trace yields
+//! the same cluster cuts and therefore the same bytes, and any trace
+//! yields entry-identical decoded data (the equivalence property the
+//! stress suite asserts). Every decision is recorded
+//! ([`ClusterSizer::trace`]) so a run can be replayed or audited, and
+//! [`SizerSummary`] travels up through `WriteStats` / `WriteReport`.
+
+use std::time::Duration;
+
+/// Cluster-size policy knob in [`crate::tree::writer::WriterConfig`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ClusterSizing {
+    /// Every cluster is `basket_entries` (the historical behaviour).
+    #[default]
+    Fixed,
+    /// Feedback-sized clusters, starting from `basket_entries` and
+    /// adjusted between clusters per [`AdaptiveConfig`]. Only the
+    /// pipelined flush adapts (the serial and parallel-blocking paths
+    /// have no backpressure signal and behave exactly like `Fixed`).
+    Adaptive(AdaptiveConfig),
+}
+
+/// Tuning for [`ClusterSizing::Adaptive`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Hard floor on entries per cluster.
+    pub min_entries: usize,
+    /// Hard ceiling on entries per cluster.
+    pub max_entries: usize,
+    /// Stall/compress ratio above which a window votes Grow (the
+    /// producer is waiting out compression).
+    pub grow_stall_ratio: f64,
+    /// Stall/compress ratio below which a wait-free window votes
+    /// Shrink (the pipeline has slack; smaller clusters feed the pool
+    /// sooner and shrink the buffered tail).
+    pub shrink_stall_ratio: f64,
+    /// Consecutive same-direction windows required before a step —
+    /// damping against one-off scheduling noise. Min 1 (step on every
+    /// decisive window).
+    pub hysteresis: u32,
+    /// Initial windows observed without stepping, so judgements start
+    /// only once the in-flight pipeline is primed.
+    pub warmup: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            min_entries: 256,
+            max_entries: 65_536,
+            grow_stall_ratio: 0.25,
+            shrink_stall_ratio: 0.02,
+            hysteresis: 2,
+            warmup: 2,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Clamp band of ×8 either side of `base` (a writer that keeps the
+    /// default `basket_entries` adapts within an order of magnitude).
+    pub fn around(base: usize) -> Self {
+        let base = base.max(1);
+        AdaptiveConfig {
+            min_entries: (base / 8).max(1),
+            max_entries: base.saturating_mul(8),
+            ..Default::default()
+        }
+    }
+}
+
+/// What one observation window said about the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// Admission waited or the producer stalled past the grow
+    /// threshold: compression is the bottleneck, amortise it.
+    Grow,
+    /// No wait and essentially no stall: slack in the pipeline, cut
+    /// smaller clusters.
+    Shrink,
+    /// In between (or warmup): keep the current size.
+    Hold,
+}
+
+/// One recorded sizing decision — the unit of the replayable trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// Index of the cluster whose window was observed (0-based).
+    pub cluster: u64,
+    /// The window's classification.
+    pub signal: Signal,
+    /// Observed stall/compress ratio in the window (∞ when the window
+    /// stalled but no compression completed).
+    pub stall_ratio: f64,
+    /// Did admission wait during the window?
+    pub waited: bool,
+    /// Target entries for the *next* cluster, after any step.
+    pub entries: usize,
+}
+
+/// Compact sizing report carried in `WriteStats` / `WriteReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SizerSummary {
+    /// Smallest cluster target used.
+    pub min_entries: usize,
+    /// Largest cluster target used.
+    pub max_entries: usize,
+    /// Target in effect when the writer closed.
+    pub last_entries: usize,
+    /// Number of ×2 steps taken.
+    pub grows: u32,
+    /// Number of ÷2 steps taken.
+    pub shrinks: u32,
+    /// Observation windows (flushed clusters) seen.
+    pub clusters: u64,
+}
+
+impl SizerSummary {
+    /// Total resize steps.
+    pub fn resizes(&self) -> u64 {
+        self.grows as u64 + self.shrinks as u64
+    }
+}
+
+/// Stall deltas below this are scheduling noise, not backpressure.
+const MIN_SIGNAL_STALL: Duration = Duration::from_micros(20);
+
+/// Cap on recorded decisions: long-lived writers keep the *earliest*
+/// windows (the ramp — the interesting part of a trace) and only the
+/// counters beyond that, so the trace cannot grow without bound.
+const MAX_TRACE: usize = 4096;
+
+/// The per-writer controller. Constructed from the writer's config;
+/// [`ClusterSizer::target`] is the entries count for the next cluster
+/// cut, [`ClusterSizer::observe`] feeds one window of cumulative
+/// counters back in.
+#[derive(Clone, Debug)]
+pub struct ClusterSizer {
+    mode: ClusterSizing,
+    current: usize,
+    /// Signed streak: positive = consecutive Grow windows, negative =
+    /// consecutive Shrink windows.
+    streak: i32,
+    clusters: u64,
+    grows: u32,
+    shrinks: u32,
+    seen_min: usize,
+    seen_max: usize,
+    last_stall: Duration,
+    last_compress: Duration,
+    last_waits: u64,
+    trace: Vec<Decision>,
+}
+
+impl ClusterSizer {
+    /// Controller starting at `base` entries (clamped into the
+    /// adaptive band when `mode` is adaptive).
+    pub fn new(base: usize, mode: ClusterSizing) -> Self {
+        let base = base.max(1);
+        let current = match mode {
+            ClusterSizing::Fixed => base,
+            ClusterSizing::Adaptive(cfg) => {
+                base.clamp(cfg.min_entries.max(1), cfg.max_entries.max(1))
+            }
+        };
+        ClusterSizer {
+            mode,
+            current,
+            streak: 0,
+            clusters: 0,
+            grows: 0,
+            shrinks: 0,
+            seen_min: current,
+            seen_max: current,
+            last_stall: Duration::ZERO,
+            last_compress: Duration::ZERO,
+            last_waits: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Entries the next cluster should hold.
+    pub fn target(&self) -> usize {
+        self.current
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self.mode, ClusterSizing::Adaptive(_))
+    }
+
+    /// The replayable decision trace (empty under `Fixed`). Bounded:
+    /// only the first `MAX_TRACE` (4096) windows are recorded — the
+    /// ramp — while [`SizerSummary`] keeps counting past the cap.
+    pub fn trace(&self) -> &[Decision] {
+        &self.trace
+    }
+
+    /// Feed one window: *cumulative* producer stall, *cumulative*
+    /// compression CPU and the writer's *cumulative* admission-wait
+    /// count after a flushed cluster. Deltas are taken internally, a
+    /// signal is classified, and the target steps when the signal has
+    /// repeated `hysteresis` windows (after `warmup`). No-op under
+    /// [`ClusterSizing::Fixed`] beyond counting the window.
+    pub fn observe(&mut self, stall: Duration, compress: Duration, waits: u64) {
+        let window = self.clusters;
+        self.clusters += 1;
+        let ClusterSizing::Adaptive(cfg) = self.mode else {
+            return;
+        };
+        let d_stall = stall.saturating_sub(self.last_stall);
+        let d_compress = compress.saturating_sub(self.last_compress);
+        let waited = waits > self.last_waits;
+        self.last_stall = stall;
+        self.last_compress = compress;
+        self.last_waits = waits;
+
+        let stall_real = if d_stall < MIN_SIGNAL_STALL { Duration::ZERO } else { d_stall };
+        let ratio = if d_compress.is_zero() {
+            if stall_real.is_zero() {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            stall_real.as_secs_f64() / d_compress.as_secs_f64()
+        };
+        let signal = if window < cfg.warmup as u64 {
+            Signal::Hold
+        } else if waited || ratio > cfg.grow_stall_ratio {
+            Signal::Grow
+        } else if !d_compress.is_zero() && ratio < cfg.shrink_stall_ratio {
+            Signal::Shrink
+        } else {
+            Signal::Hold
+        };
+
+        match signal {
+            Signal::Grow => self.streak = self.streak.max(0) + 1,
+            Signal::Shrink => self.streak = self.streak.min(0) - 1,
+            Signal::Hold => self.streak = 0,
+        }
+        let h = cfg.hysteresis.max(1) as i32;
+        if self.streak >= h {
+            let next = self.current.saturating_mul(2).min(cfg.max_entries.max(1));
+            if next != self.current {
+                self.grows += 1;
+                self.current = next;
+            }
+            self.streak = 0;
+        } else if self.streak <= -h {
+            let next = (self.current / 2).max(cfg.min_entries.max(1)).max(1);
+            if next != self.current {
+                self.shrinks += 1;
+                self.current = next;
+            }
+            self.streak = 0;
+        }
+        self.seen_min = self.seen_min.min(self.current);
+        self.seen_max = self.seen_max.max(self.current);
+        if self.trace.len() < MAX_TRACE {
+            self.trace.push(Decision {
+                cluster: window,
+                signal,
+                stall_ratio: ratio,
+                waited,
+                entries: self.current,
+            });
+        }
+    }
+
+    pub fn summary(&self) -> SizerSummary {
+        SizerSummary {
+            min_entries: self.seen_min,
+            max_entries: self.seen_max,
+            last_entries: self.current,
+            grows: self.grows,
+            shrinks: self.shrinks,
+            clusters: self.clusters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn adaptive(min: usize, max: usize) -> ClusterSizer {
+        ClusterSizer::new(
+            min,
+            ClusterSizing::Adaptive(AdaptiveConfig {
+                min_entries: min,
+                max_entries: max,
+                hysteresis: 2,
+                warmup: 0,
+                ..Default::default()
+            }),
+        )
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut s = ClusterSizer::new(100, ClusterSizing::Fixed);
+        for i in 0..10u64 {
+            s.observe(ms(50 * (i + 1)), ms(i + 1), i);
+        }
+        assert_eq!(s.target(), 100);
+        assert!(s.trace().is_empty());
+        let sum = s.summary();
+        assert_eq!((sum.min_entries, sum.max_entries, sum.last_entries), (100, 100, 100));
+        assert_eq!(sum.resizes(), 0);
+        assert_eq!(sum.clusters, 10);
+    }
+
+    #[test]
+    fn sustained_waits_grow_with_hysteresis() {
+        let mut s = adaptive(64, 1024);
+        // One wait is not enough (hysteresis 2)...
+        s.observe(ms(10), ms(10), 1);
+        assert_eq!(s.target(), 64);
+        // ...the second consecutive wait steps ×2.
+        s.observe(ms(20), ms(20), 2);
+        assert_eq!(s.target(), 128);
+        // Two more waits: ×2 again.
+        s.observe(ms(30), ms(30), 3);
+        s.observe(ms(40), ms(40), 4);
+        assert_eq!(s.target(), 256);
+        assert_eq!(s.summary().grows, 2);
+        assert_eq!(s.trace().len(), 4);
+        assert!(s.trace().iter().all(|d| d.signal == Signal::Grow && d.waited));
+    }
+
+    #[test]
+    fn growth_clamps_at_max() {
+        let mut s = adaptive(64, 256);
+        for i in 1..20u64 {
+            s.observe(ms(10 * i), ms(10 * i), i);
+        }
+        assert_eq!(s.target(), 256);
+        let sum = s.summary();
+        assert_eq!(sum.max_entries, 256);
+        assert_eq!(sum.grows, 2, "64 -> 128 -> 256, then clamped");
+    }
+
+    #[test]
+    fn idle_producer_shrinks_to_min() {
+        let cfg = AdaptiveConfig {
+            min_entries: 64,
+            max_entries: 4096,
+            hysteresis: 2,
+            warmup: 0,
+            ..Default::default()
+        };
+        let mut s = ClusterSizer::new(1024, ClusterSizing::Adaptive(cfg));
+        for i in 1..20u64 {
+            // No waits, zero stall, real compression: pure slack.
+            s.observe(Duration::ZERO, ms(10 * i), 0);
+        }
+        assert_eq!(s.target(), 64);
+        assert!(s.summary().shrinks >= 4, "1024 -> 512 -> 256 -> 128 -> 64");
+        assert_eq!(s.summary().min_entries, 64);
+    }
+
+    #[test]
+    fn hold_band_is_stable_and_resets_streaks() {
+        let cfg = AdaptiveConfig {
+            min_entries: 64,
+            max_entries: 4096,
+            grow_stall_ratio: 0.5,
+            shrink_stall_ratio: 0.05,
+            hysteresis: 2,
+            warmup: 0,
+        };
+        let mut s = ClusterSizer::new(512, ClusterSizing::Adaptive(cfg));
+        // Ratio 0.2 sits between the thresholds: Hold forever.
+        for i in 1..10u64 {
+            s.observe(ms(2 * i), ms(10 * i), 0);
+        }
+        assert_eq!(s.target(), 512);
+        // A single Grow window between Holds never accumulates a streak.
+        s.observe(ms(18 + 2 * 9), ms(10 * 10), 1);
+        s.observe(ms(18 + 2 * 9 + 2), ms(10 * 11), 1);
+        // (second window: no new wait count change? waits stayed 1 ->
+        // waited=false, ratio low -> Shrink/Hold resets the streak)
+        assert_eq!(s.target(), 512, "no two consecutive grow windows");
+    }
+
+    #[test]
+    fn warmup_windows_never_step() {
+        let cfg = AdaptiveConfig { min_entries: 64, max_entries: 1024, warmup: 3, hysteresis: 1, ..Default::default() };
+        let mut s = ClusterSizer::new(64, ClusterSizing::Adaptive(cfg));
+        for i in 1..=3u64 {
+            s.observe(ms(10 * i), ms(10 * i), i);
+            if i < 4 {
+                // warmup windows are recorded as Hold
+                assert_eq!(s.trace().last().unwrap().signal, Signal::Hold);
+            }
+        }
+        assert_eq!(s.target(), 64);
+        s.observe(ms(40), ms(40), 4);
+        assert_eq!(s.target(), 128, "first post-warmup wait steps (hysteresis 1)");
+    }
+
+    #[test]
+    fn tiny_stall_deltas_are_noise_not_growth() {
+        let mut s = adaptive(64, 1024);
+        for i in 1..10u64 {
+            // 5 µs of stall per window with real compression: below the
+            // noise floor, and no waits -> shrink pressure, not growth.
+            s.observe(Duration::from_micros(5 * i), ms(10 * i), 0);
+        }
+        assert_eq!(s.target(), 64, "already at the floor");
+        assert_eq!(s.summary().grows, 0, "sub-floor stall must never read as backpressure");
+    }
+
+    #[test]
+    fn start_size_clamps_into_band() {
+        let s = ClusterSizer::new(
+            1_000_000,
+            ClusterSizing::Adaptive(AdaptiveConfig { min_entries: 32, max_entries: 2048, ..Default::default() }),
+        );
+        assert_eq!(s.target(), 2048);
+        let s = ClusterSizer::new(
+            1,
+            ClusterSizing::Adaptive(AdaptiveConfig { min_entries: 32, max_entries: 2048, ..Default::default() }),
+        );
+        assert_eq!(s.target(), 32);
+    }
+
+    #[test]
+    fn around_builds_a_band_about_the_base() {
+        let cfg = AdaptiveConfig::around(4096);
+        assert_eq!(cfg.min_entries, 512);
+        assert_eq!(cfg.max_entries, 32_768);
+        let tiny = AdaptiveConfig::around(2);
+        assert_eq!(tiny.min_entries, 1);
+    }
+}

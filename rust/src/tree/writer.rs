@@ -36,6 +36,12 @@
 //! steady-state flush performs zero allocator round-trips end to end:
 //! serialise into a pooled buffer, compress into a pooled buffer, sink
 //! appends/copies and recycles it.
+//!
+//! Cluster sizes are fixed or **adaptive** ([`WriterConfig::sizing`],
+//! [`super::sizer`]): after every pipelined cluster the writer feeds
+//! its stall/compress counters and per-writer admission-wait count to
+//! a [`ClusterSizer`], which may step the next cluster's entry count
+//! ×2/÷2 (hysteresis, warmup, min/max clamps, replayable trace).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -52,6 +58,7 @@ use crate::serial::streamer::Streamer;
 use crate::serial::value::Row;
 
 use super::sink::{BasketMeta, BasketSink, PayloadBuf};
+use super::sizer::{ClusterSizer, ClusterSizing, Decision, SizerSummary};
 
 /// How `fill` hands a cut cluster to the serialise+compress stage.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -84,7 +91,9 @@ pub enum FlushGranularity {
 /// Tuning for a tree writer.
 #[derive(Clone, Debug)]
 pub struct WriterConfig {
-    /// Entries per basket cluster (all branches cut together).
+    /// Entries per basket cluster (all branches cut together). Under
+    /// [`ClusterSizing::Adaptive`] this is the *starting* size; the
+    /// sizer then adjusts between clusters within its clamp band.
     pub basket_entries: usize,
     /// Compression settings applied to every branch.
     pub compression: Settings,
@@ -99,6 +108,12 @@ pub struct WriterConfig {
     /// are additionally clamped to their fair share of the session
     /// budget.
     pub max_inflight_clusters: usize,
+    /// Cluster-size policy: keep `basket_entries` fixed, or let the
+    /// per-writer [`ClusterSizer`] adjust the effective size between
+    /// clusters from the observed stall/compress ratio and the
+    /// session's admission-wait feedback (pipelined flushes only; the
+    /// serial and parallel-blocking paths always behave as `Fixed`).
+    pub sizing: ClusterSizing,
 }
 
 impl Default for WriterConfig {
@@ -109,6 +124,7 @@ impl Default for WriterConfig {
             flush: FlushMode::default(),
             granularity: FlushGranularity::default(),
             max_inflight_clusters: 4,
+            sizing: ClusterSizing::Fixed,
         }
     }
 }
@@ -127,6 +143,9 @@ pub struct WriteStats {
     pub stall: Duration,
     /// Baskets handed to the sink.
     pub baskets: u64,
+    /// Cluster-size report: the band of sizes the writer actually cut
+    /// (min = max = `basket_entries` under [`ClusterSizing::Fixed`]).
+    pub sizing: SizerSummary,
 }
 
 /// Counters shared with flush tasks.
@@ -181,6 +200,9 @@ pub struct TreeWriter<S: BasketSink> {
     /// Membership in the session's shared in-flight budget: every
     /// pipelined cluster is admitted through it before spawning.
     admission: WriterRegistration,
+    /// Per-writer cluster-size controller (a no-op pass-through of
+    /// `basket_entries` under [`ClusterSizing::Fixed`]).
+    sizer: ClusterSizer,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
     /// Global basket sequence: cluster-major, branch-minor.
@@ -207,6 +229,7 @@ impl<S: BasketSink> TreeWriter<S> {
         let columns = streamer.make_columns();
         let group = session.task_group();
         let admission = session.register_writer(config.max_inflight_clusters);
+        let sizer = ClusterSizer::new(config.basket_entries, config.sizing);
         TreeWriter {
             streamer,
             config,
@@ -217,6 +240,7 @@ impl<S: BasketSink> TreeWriter<S> {
             recorder: None,
             group,
             admission,
+            sizer,
             counters: Arc::new(TaskCounters::default()),
             errors: Arc::new(ErrorSlot::default()),
             next_seq: 0,
@@ -256,6 +280,25 @@ impl<S: BasketSink> TreeWriter<S> {
         self.admission.fair_share()
     }
 
+    /// Admissions of this writer that had to wait for budget capacity
+    /// — the session-pressure feedback the adaptive sizer consumes.
+    pub fn admission_waits(&self) -> u64 {
+        self.admission.waits()
+    }
+
+    /// Entries the next cluster will hold (`basket_entries` under
+    /// [`ClusterSizing::Fixed`]; the sizer's current target under
+    /// [`ClusterSizing::Adaptive`]).
+    pub fn cluster_target(&self) -> usize {
+        self.sizer.target()
+    }
+
+    /// The adaptive sizer's replayable decision trace so far (empty
+    /// under [`ClusterSizing::Fixed`]). Snapshot it before `close`.
+    pub fn sizer_trace(&self) -> &[Decision] {
+        self.sizer.trace()
+    }
+
     pub fn schema(&self) -> &Schema {
         self.streamer.schema()
     }
@@ -270,7 +313,7 @@ impl<S: BasketSink> TreeWriter<S> {
         self.streamer.fill(&mut self.columns, row)?;
         self.buffered += 1;
         self.entries += 1;
-        if self.buffered >= self.config.basket_entries {
+        if self.buffered >= self.sizer.target() {
             self.flush()?;
         }
         Ok(())
@@ -299,10 +342,12 @@ impl<S: BasketSink> TreeWriter<S> {
         }
         self.buffered += n;
         self.entries += n as u64;
-        // Chunked flushing: honour basket_entries even for bulk appends
-        // larger than one basket (the granularity Figs 1/2 rely on).
-        while self.buffered >= self.config.basket_entries {
-            let chunk = self.config.basket_entries;
+        // Chunked flushing: honour the cluster target even for bulk
+        // appends larger than one basket (the granularity Figs 1/2
+        // rely on). Re-read the target every iteration — an adaptive
+        // sizer may step between clusters.
+        while self.buffered >= self.sizer.target() {
+            let chunk = self.sizer.target();
             self.flush_chunk(chunk)?;
         }
         Ok(())
@@ -313,7 +358,7 @@ impl<S: BasketSink> TreeWriter<S> {
     /// awaited by [`TreeWriter::close`].
     pub fn flush(&mut self) -> Result<()> {
         while self.buffered > 0 {
-            let chunk = self.buffered.min(self.config.basket_entries);
+            let chunk = self.buffered.min(self.sizer.target());
             self.flush_chunk(chunk)?;
         }
         Ok(())
@@ -371,7 +416,7 @@ impl<S: BasketSink> TreeWriter<S> {
         }
         drop(admission); // tasks hold the cluster's slot from here on
         self.buffered -= chunk;
-        match self.config.flush {
+        let done = match self.config.flush {
             FlushMode::Serial => self.errors.check(),
             FlushMode::Parallel => {
                 let t0 = Instant::now();
@@ -381,7 +426,17 @@ impl<S: BasketSink> TreeWriter<S> {
                 self.errors.check()
             }
             FlushMode::Pipelined => self.errors.check(),
+        };
+        // Feed one observation window back to the adaptive sizer: the
+        // cumulative producer stall, compression CPU completed so far
+        // and this writer's admission-wait count. Only the pipelined
+        // flush has a backpressure signal to read.
+        if self.config.flush == FlushMode::Pipelined && self.sizer.is_adaptive() {
+            let compress =
+                Duration::from_nanos(self.counters.compress_ns.load(Ordering::Relaxed));
+            self.sizer.observe(self.stall, compress, self.admission.waits());
         }
+        done
     }
 
     /// Flush the tail, drain the pipeline, and hand back the sink with
@@ -401,6 +456,7 @@ impl<S: BasketSink> TreeWriter<S> {
             compress: Duration::from_nanos(self.counters.compress_ns.load(Ordering::Relaxed)),
             stall: self.stall,
             baskets: self.counters.baskets.load(Ordering::Relaxed),
+            sizing: self.sizer.summary(),
         };
         let sink = Arc::try_unwrap(self.sink)
             .map_err(|_| Error::Sync("flush tasks still hold the sink".into()))?;
@@ -628,6 +684,34 @@ mod tests {
     }
 
     #[test]
+    fn serial_flush_with_adaptive_knob_behaves_as_fixed() {
+        // The serial path has no backpressure signal: an Adaptive
+        // config must not move the cluster size, and the summary still
+        // reports the (constant) size band through close().
+        use crate::tree::sizer::AdaptiveConfig;
+        let cfg = WriterConfig {
+            sizing: ClusterSizing::Adaptive(AdaptiveConfig::around(100)),
+            ..config(100)
+        };
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), cfg);
+        for i in 0..350 {
+            w.fill(vec![Value::F32(i as f32), Value::I32(i)]).unwrap();
+        }
+        assert_eq!(w.cluster_target(), 100);
+        assert!(w.sizer_trace().is_empty(), "serial flush must not adapt");
+        let (sink, entries, stats) = w.close().unwrap();
+        assert_eq!(entries, 350);
+        assert_eq!(stats.sizing.min_entries, 100);
+        assert_eq!(stats.sizing.max_entries, 100);
+        assert_eq!(stats.sizing.last_entries, 100);
+        assert_eq!(stats.sizing.resizes(), 0);
+        let buf = sink.into_buffer(entries).unwrap();
+        let counts: Vec<u32> =
+            buf.branches[0].baskets.iter().map(|b| b.n_entries).collect();
+        assert_eq!(counts, vec![100, 100, 100, 50]);
+    }
+
+    #[test]
     fn fat_basket_splits_into_block_subtasks_and_matches_serial() {
         // A basket whose raw payload exceeds MAX_BLOCK: under block
         // granularity it compresses as per-block subtasks; the stored
@@ -642,6 +726,7 @@ mod tests {
                 flush: if pool.is_some() { FlushMode::Pipelined } else { FlushMode::Serial },
                 granularity: FlushGranularity::Block,
                 max_inflight_clusters: 2,
+                ..Default::default()
             };
             let mut w = TreeWriter::new(schema.clone(), BufferSink::new(schema.clone()), cfg);
             if let Some(p) = pool {

@@ -1,6 +1,9 @@
 //! Shared test utilities: a minimal property-testing harness (the
-//! environment has no proptest crate — see Cargo.toml) and random data
-//! generators built on the library's own SplitMix PRNG.
+//! environment has no proptest crate — see Cargo.toml), random data
+//! generators built on the library's own SplitMix PRNG, and the seeded
+//! concurrency-stress harness ([`stress`]).
+
+pub mod stress;
 
 use rootio_par::framework::dataset::SplitMix;
 use rootio_par::serial::schema::{ColumnType, Field, Schema};
@@ -81,6 +84,9 @@ impl Gen {
 }
 
 /// Run `f` across `cases` deterministic seeds; failures report the seed.
+/// (Not every test binary uses it — the stress suite has its own
+/// seeded runner — hence the allow.)
+#[allow(dead_code)]
 pub fn property(cases: u64, f: impl Fn(&mut Gen)) {
     for seed in 0..cases {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

@@ -1,0 +1,117 @@
+//! Seeded deterministic concurrency-stress harness.
+//!
+//! Adaptive cluster sizing makes cluster boundaries schedule-dependent,
+//! so the write-equivalence suite can no longer rely on byte-identity
+//! alone — it needs *many* schedules, each reproducible. This harness
+//! perturbs the schedule-shaping knobs (worker count, codec mix,
+//! basket size, in-flight cap, uneven entry tails, adaptive band) from
+//! one seed, runs the property under every seed of a pinned matrix,
+//! and on failure prints the exact reproduction command:
+//!
+//! ```text
+//! STRESS_SEEDS=<seed> cargo test --test stress <test-name>
+//! ```
+//!
+//! The matrix is pinned in CI via the `STRESS_SEEDS` env var (comma
+//! separated); locally it defaults to seeds 0..6. Everything derived
+//! from the seed goes through the library's own SplitMix PRNG (via
+//! [`super::Gen`]), so a plan is a pure function of its seed.
+
+#![allow(dead_code)]
+
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::serial::schema::Schema;
+use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
+
+use super::Gen;
+
+/// One seed's worth of schedule perturbation: every knob that shapes
+/// task interleavings in the write pipeline.
+pub struct StressPlan {
+    pub seed: u64,
+    /// Private pool width for the run (1..=8 — odd widths included on
+    /// purpose, they produce the ugliest steals).
+    pub workers: usize,
+    /// Codec mix: none / fast LZ / slow LZ / deflate-style at two
+    /// levels.
+    pub compression: Settings,
+    /// Starting cluster size (deliberately includes degenerate 1).
+    pub basket_entries: usize,
+    /// Session in-flight cluster cap.
+    pub max_inflight: usize,
+    /// Adaptive band derived from `basket_entries` with randomised
+    /// hysteresis/warmup — always adaptive, so every seed exercises
+    /// the resize path.
+    pub sizing: ClusterSizing,
+    /// Row count with an uneven tail (never a multiple of the basket).
+    pub n_rows: usize,
+    /// Random typed schema (1..=4 branches — narrow trees).
+    pub schema: Schema,
+}
+
+impl StressPlan {
+    /// Derive the plan for `seed` from `g` (which must itself be
+    /// seeded from `seed` — [`stress`] does both).
+    pub fn draw(g: &mut Gen, seed: u64) -> StressPlan {
+        let codecs = [
+            Settings::uncompressed(),
+            Settings::new(Codec::Lz4r, 2),
+            Settings::new(Codec::Lz4r, 7),
+            Settings::new(Codec::Rzip, 3),
+            Settings::new(Codec::Rzip, 6),
+        ];
+        let basket_entries = *g.choose(&[1usize, 3, 13, 64, 257]);
+        let band = 1usize << g.range(1, 4); // x2..x8 either side
+        let sizing = ClusterSizing::Adaptive(AdaptiveConfig {
+            min_entries: (basket_entries / band).max(1),
+            max_entries: basket_entries.saturating_mul(band).max(2),
+            hysteresis: g.range(1, 3) as u32,
+            warmup: g.range(0, 3) as u32,
+            ..Default::default()
+        });
+        // Uneven tail by construction: a prime-ish row count.
+        let n_rows = g.range(40, 400) * 2 + 1;
+        StressPlan {
+            seed,
+            workers: g.range(1, 9),
+            compression: codecs[g.range(0, codecs.len())],
+            basket_entries,
+            max_inflight: g.range(1, 5),
+            sizing,
+            n_rows,
+            schema: g.schema(4),
+        }
+    }
+}
+
+/// The pinned seed matrix: `STRESS_SEEDS="3,17,42"` (CI pins this),
+/// else seeds 0..6.
+pub fn seed_matrix() -> Vec<u64> {
+    if let Ok(s) = std::env::var("STRESS_SEEDS") {
+        let seeds: Vec<u64> = s.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+        if !seeds.is_empty() {
+            return seeds;
+        }
+    }
+    (0..6).collect()
+}
+
+/// Run `f` once per seed of the matrix with that seed's plan and a
+/// generator to draw test data from. A failing seed aborts the test
+/// with the reproduction command in the failure output.
+pub fn stress(label: &str, f: impl Fn(&mut Gen, &StressPlan)) {
+    for seed in seed_matrix() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+            let plan = StressPlan::draw(&mut g, seed);
+            f(&mut g, &plan);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "stress '{label}' failed at seed {seed}; reproduce with:\n  \
+                 STRESS_SEEDS={seed} cargo test --test stress {label}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! Seeded deterministic stress suite (`cargo test --test stress`).
+//!
+//! Adaptive cluster sizing makes cluster boundaries schedule-dependent,
+//! so the invariants here are *semantic*, not byte-level: whatever
+//! sizes the controller picks under whatever interleaving, the decoded
+//! data must be entry-identical to a fixed-size serial write, budget
+//! slots must never leak (even across panics mid-resize), and the
+//! narrow-fast-producer workload must converge to a steady size with a
+//! better stall/compress ratio than the static starting size.
+//!
+//! Every randomised test runs once per seed of the pinned matrix
+//! (`STRESS_SEEDS`, see `tests/common/stress.rs`); failures print the
+//! reproducing seed.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::stress::stress;
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::error::Result;
+use rootio_par::format::reader::FileReader;
+use rootio_par::format::writer::FileWriter;
+use rootio_par::format::Directory;
+use rootio_par::imt::Pool;
+use rootio_par::serial::column::ColumnData;
+use rootio_par::serial::schema::Schema;
+use rootio_par::serial::value::Row;
+use rootio_par::session::{Session, SessionConfig};
+use rootio_par::simsched::{simulate, Graph, Place};
+use rootio_par::storage::mem::MemBackend;
+use rootio_par::storage::BackendRef;
+use rootio_par::tree::reader::TreeReader;
+use rootio_par::tree::sink::{BasketMeta, BasketSink, FileSink, PayloadBuf};
+use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing, Decision};
+use rootio_par::tree::writer::{
+    FlushGranularity, FlushMode, TreeWriter, WriteStats, WriterConfig,
+};
+use rootio_par::metrics::SpanKind;
+
+/// Write `rows` to a file and decode it back: (entries, per-column
+/// encoded bytes). The decoded form is what adaptive sizing must keep
+/// invariant — cluster boundaries may differ, values may not.
+fn write_and_decode(
+    schema: &Schema,
+    rows: &[Row],
+    cfg: WriterConfig,
+    session: Option<&Session>,
+) -> (u64, Vec<Vec<u8>>) {
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+    let sink = FileSink::new(fw.clone(), schema.len());
+    let mut w = match session {
+        Some(s) => TreeWriter::attached(schema.clone(), sink, cfg, s),
+        None => TreeWriter::new(schema.clone(), sink, cfg),
+    };
+    for row in rows {
+        w.fill(row.clone()).unwrap();
+    }
+    let (sink, entries, _) = w.close().unwrap();
+    let meta = sink.into_meta("t".into(), schema.clone(), entries).unwrap();
+    meta.check().unwrap();
+    fw.finish(&Directory { trees: vec![meta] }).unwrap();
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+    assert_eq!(reader.entries(), entries);
+    let cols = reader.read_all().unwrap();
+    (entries, cols.iter().map(|c| c.encode()).collect())
+}
+
+/// Satellite: adaptive-sized writes decode to entry-identical data vs
+/// `ClusterSizing::Fixed` — across the codec mix, random worker
+/// counts, uneven tails, and always including the empty-tree and
+/// single-entry edge cases.
+#[test]
+fn prop_adaptive_writes_decode_identical_to_fixed() {
+    stress("prop_adaptive_writes_decode_identical_to_fixed", |g, plan| {
+        let pool = Arc::new(Pool::new(plan.workers));
+        for n_rows in [0usize, 1, plan.n_rows] {
+            let rows: Vec<Row> = (0..n_rows).map(|_| g.row(&plan.schema)).collect();
+            let fixed_cfg = WriterConfig {
+                basket_entries: plan.basket_entries,
+                compression: plan.compression,
+                flush: FlushMode::Serial,
+                ..Default::default()
+            };
+            let (fixed_entries, fixed) = write_and_decode(&plan.schema, &rows, fixed_cfg, None);
+
+            let session = Session::with_pool(
+                pool.clone(),
+                SessionConfig { max_inflight_clusters: plan.max_inflight },
+            );
+            let adaptive_cfg = WriterConfig {
+                basket_entries: plan.basket_entries,
+                compression: plan.compression,
+                flush: FlushMode::Pipelined,
+                granularity: FlushGranularity::Block,
+                max_inflight_clusters: plan.max_inflight,
+                sizing: plan.sizing,
+            };
+            let (adaptive_entries, adaptive) =
+                write_and_decode(&plan.schema, &rows, adaptive_cfg, Some(&session));
+
+            assert_eq!(fixed_entries, n_rows as u64);
+            assert_eq!(adaptive_entries, fixed_entries, "entry count diverged");
+            assert_eq!(
+                adaptive, fixed,
+                "adaptive decode diverged from fixed (rows={n_rows}, workers={}, \
+                 basket={}, sizing={:?})",
+                plan.workers, plan.basket_entries, plan.sizing,
+            );
+            assert_eq!(session.stats().in_flight_clusters, 0, "budget fully released");
+        }
+    });
+}
+
+/// Narrow-fast-producer workload used by the convergence test:
+/// pre-generated event blocks (production is a memcpy, the PJRT
+/// block-landing shape) against heavy rzip compression, so the run is
+/// compression-bound by construction and the starting cluster size is
+/// deliberately tiny — the regime where per-basket codec setup
+/// dominates and the sizer has real room to move.
+fn narrow_fast_run(
+    pool: &Arc<Pool>,
+    sizing: ClusterSizing,
+) -> (WriteStats, u64, Vec<Decision>) {
+    let n_branches = 2usize;
+    let block = 1024usize;
+    let blocks = 32usize; // 32_768 entries
+    let schema = Schema::flat_f32("v", n_branches);
+    let cfg = WriterConfig {
+        basket_entries: 16,
+        compression: Settings::new(Codec::Rzip, 4),
+        flush: FlushMode::Pipelined,
+        granularity: FlushGranularity::Block,
+        max_inflight_clusters: 4,
+        sizing,
+    };
+    // Produce the blocks up front: the producer's per-cluster cost is
+    // the column append alone (fast), so compression stays the
+    // bottleneck at every cluster size the sizer can pick.
+    let all_blocks: Vec<Vec<ColumnData>> = (0..blocks)
+        .map(|blk| {
+            let mut rng = rootio_par::framework::dataset::SplitMix::new(blk as u64 + 3);
+            (0..n_branches)
+                .map(|b| {
+                    ColumnData::F32(
+                        (0..block)
+                            .map(|i| rng.uniform() * (b + 1) as f32 + (i % 23) as f32)
+                            .collect(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let session = Session::with_pool(pool.clone(), SessionConfig::for_writers(1, 4));
+    let sink = rootio_par::tree::sink::BufferSink::new(schema.clone());
+    let mut w = TreeWriter::attached(schema, sink, cfg, &session);
+    for cols in &all_blocks {
+        w.fill_columns(cols).unwrap();
+    }
+    w.flush().unwrap();
+    let trace: Vec<Decision> = w.sizer_trace().to_vec();
+    let waits = w.admission_waits();
+    let (_, entries, stats) = w.close().unwrap();
+    assert_eq!(entries, (block * blocks) as u64);
+    (stats, waits, trace)
+}
+
+/// Satellite: under `Adaptive`, a narrow fast producer reaches a
+/// steady cluster-size band within the run, its stall/compress ratio
+/// improves over `Fixed` at the same starting size, and its
+/// admission-wait count collapses (fewer, fatter clusters) — on a
+/// private 8-worker pool.
+#[test]
+fn adaptive_converges_and_improves_stall_ratio_for_narrow_fast_producer() {
+    let pool = Arc::new(Pool::new(8));
+    let (fixed_stats, fixed_waits, _) = narrow_fast_run(&pool, ClusterSizing::Fixed);
+    let adaptive = ClusterSizing::Adaptive(AdaptiveConfig {
+        min_entries: 16,
+        max_entries: 2048,
+        hysteresis: 1,
+        warmup: 2,
+        ..Default::default()
+    });
+    let (adaptive_stats, adaptive_waits, trace) = narrow_fast_run(&pool, adaptive);
+
+    // Converged: the size grew away from the starting 64 and the last
+    // quarter of decisions sits in one steady band (at most one step
+    // apart) — no late oscillation.
+    assert!(
+        adaptive_stats.sizing.last_entries >= 256,
+        "expected >= 2 growth steps for a compression-bound narrow producer, got {:?}",
+        adaptive_stats.sizing,
+    );
+    assert!(!trace.is_empty());
+    let tail = &trace[trace.len() - (trace.len() / 4).max(1)..];
+    let tail_min = tail.iter().map(|d| d.entries).min().unwrap();
+    let tail_max = tail.iter().map(|d| d.entries).max().unwrap();
+    assert!(
+        tail_max <= tail_min * 2,
+        "late oscillation wider than one step: {tail_min}..{tail_max} (trace {:?})",
+        trace.iter().map(|d| d.entries).collect::<Vec<_>>(),
+    );
+
+    // The feedback collapsed admission churn: far fewer waiting
+    // admissions than the fixed tiny-cluster run.
+    assert!(
+        adaptive_waits * 4 <= fixed_waits.max(4),
+        "adaptive should wait far less often: {adaptive_waits} vs {fixed_waits} waits",
+    );
+
+    // And the producer's stall per unit of compression CPU improved:
+    // the overhead that made the run compression-bound is gone.
+    let ratio = |s: &WriteStats| {
+        s.stall.as_secs_f64() / s.compress.as_secs_f64().max(1e-9)
+    };
+    assert!(
+        ratio(&adaptive_stats) <= ratio(&fixed_stats),
+        "stall/compress ratio must improve: adaptive {:.3} (stall {:?} / compress {:?}) \
+         vs fixed {:.3} (stall {:?} / compress {:?})",
+        ratio(&adaptive_stats),
+        adaptive_stats.stall,
+        adaptive_stats.compress,
+        ratio(&fixed_stats),
+        fixed_stats.stall,
+        fixed_stats.compress,
+    );
+}
+
+/// A sink whose `put_basket` always panics — the injected fault for
+/// the release-on-panic regression.
+struct PanickingSink;
+
+impl BasketSink for PanickingSink {
+    fn put_basket(&self, _meta: BasketMeta, _payload: PayloadBuf) -> Result<()> {
+        panic!("injected basket failure mid-resize");
+    }
+}
+
+/// Satellite regression: a flush task panicking while an *adaptive*
+/// writer is between size steps must release its budget slot on
+/// unwind — `close()` reports the failure, the session budget drains
+/// to zero, and a subsequent writer admits immediately instead of
+/// deadlocking on leaked slots.
+#[test]
+fn budget_slots_release_when_adaptive_writer_panics_mid_resize() {
+    let pool = Arc::new(Pool::new(2));
+    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 2 });
+    let schema = Schema::flat_f32("x", 2);
+    let cfg = WriterConfig {
+        basket_entries: 8,
+        compression: Settings::new(Codec::Lz4r, 1),
+        flush: FlushMode::Pipelined,
+        granularity: FlushGranularity::Block,
+        max_inflight_clusters: 2,
+        sizing: ClusterSizing::Adaptive(AdaptiveConfig {
+            min_entries: 4,
+            max_entries: 64,
+            hysteresis: 1,
+            warmup: 0,
+            ..Default::default()
+        }),
+    };
+    let mut w = TreeWriter::attached(schema.clone(), PanickingSink, cfg, &session);
+    for i in 0..400 {
+        let row: Row = (0..2).map(|_| rootio_par::serial::value::Value::F32(i as f32)).collect();
+        if w.fill(row).is_err() {
+            break; // failure may surface early; close() must still error
+        }
+    }
+    assert!(w.close().is_err(), "panicked flush tasks must surface from close()");
+
+    // No slot may leak: the budget drains and a fresh writer admits.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while session.stats().in_flight_clusters > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "budget slots leaked after mid-resize panic: {:?}",
+            session.stats(),
+        );
+        std::thread::yield_now();
+    }
+    let reg = session.register_writer(2);
+    let guard = reg.try_acquire();
+    assert!(guard.is_some(), "follow-up writer must admit after the panic released slots");
+    drop(guard);
+}
+
+/// Virtual-time leg of the harness: random task graphs through the
+/// deterministic simulator must respect dependencies, keep exclusive
+/// units serialized, and never beat the critical-path lower bound —
+/// under every seed's perturbation of widths and shapes.
+#[test]
+fn stress_simulated_schedules_respect_dependencies_and_bounds() {
+    stress("stress_simulated_schedules_respect_dependencies_and_bounds", |g, plan| {
+        let n = g.range(5, 60);
+        let mut graph = Graph::new();
+        for id in 0..n {
+            let cost = Duration::from_micros(g.range(1, 5000) as u64);
+            // up to 3 deps on earlier tasks
+            let mut deps = Vec::new();
+            if id > 0 {
+                for _ in 0..g.range(0, 4) {
+                    deps.push(g.range(0, id));
+                }
+                deps.sort_unstable();
+                deps.dedup();
+            }
+            if g.range(0, 4) == 0 {
+                let unit = format!("unit-{}", g.range(0, 3));
+                graph.named(&unit, SpanKind::Write, cost, deps);
+            } else {
+                graph.pool(SpanKind::Compress, cost, deps);
+            }
+        }
+        let r = simulate(&graph, plan.workers);
+        assert_eq!(r.placements.len(), n, "every task placed exactly once");
+
+        // Dependencies: a task starts only after all deps end.
+        let mut end = vec![Duration::ZERO; n];
+        for p in &r.placements {
+            end[p.task] = p.end;
+        }
+        for p in &r.placements {
+            for &d in &graph.tasks[p.task].deps {
+                assert!(
+                    p.start >= end[d],
+                    "task {} started at {:?} before dep {} ended at {:?}",
+                    p.task, p.start, d, end[d],
+                );
+            }
+        }
+
+        // Exclusive units never overlap.
+        let mut by_unit: std::collections::HashMap<&str, Vec<(Duration, Duration)>> =
+            std::collections::HashMap::new();
+        for p in &r.placements {
+            by_unit.entry(p.unit.as_str()).or_default().push((p.start, p.end));
+        }
+        for (unit, spans) in by_unit.iter_mut() {
+            spans.sort();
+            for w in spans.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1,
+                    "unit {unit} overlaps: {:?} then {:?} (seed {})",
+                    w[0], w[1], plan.seed,
+                );
+            }
+        }
+
+        // Makespan lower bounds: critical path and per-unit busy time.
+        let mut path = vec![Duration::ZERO; n];
+        for (id, t) in graph.tasks.iter().enumerate() {
+            let dep_max =
+                t.deps.iter().map(|&d| path[d]).max().unwrap_or(Duration::ZERO);
+            path[id] = dep_max + t.cost;
+        }
+        let critical = path.iter().max().copied().unwrap_or_default();
+        assert!(
+            r.makespan >= critical,
+            "makespan {:?} beats the critical path {:?}",
+            r.makespan, critical,
+        );
+        for t in &graph.tasks {
+            if let Place::Named(name) = &t.place {
+                let busy: Duration = graph
+                    .tasks
+                    .iter()
+                    .filter(|u| matches!(&u.place, Place::Named(m) if m == name))
+                    .map(|u| u.cost)
+                    .sum();
+                assert!(r.makespan >= busy, "exclusive unit {name} overcommitted");
+            }
+        }
+    });
+}

@@ -118,6 +118,7 @@ fn prop_pipelined_write_bytes_match_serial() {
                     flush,
                     granularity,
                     max_inflight_clusters: g.range(1, 4),
+                    ..Default::default()
                 };
                 let (bytes, _) = write_file(&schema, &rows, cfg, Some(pool.clone()));
                 assert_eq!(
@@ -176,6 +177,7 @@ fn shared_session_writers_byte_identical_to_serial_across_codecs() {
                         flush: FlushMode::Pipelined,
                         granularity: FlushGranularity::Block,
                         max_inflight_clusters: 2,
+                        ..Default::default()
                     };
                     s.spawn(move || {
                         write_file_with(schema, rows, cfg, None, Some(session)).0
@@ -215,6 +217,7 @@ fn fat_writer_does_not_starve_narrow_writers_on_shared_budget() {
         flush: FlushMode::Pipelined,
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 4,
+        ..Default::default()
     };
     let narrow_schema = Schema::flat_f32("n", 2);
     let narrow_cfg = WriterConfig {
@@ -223,6 +226,7 @@ fn fat_writer_does_not_starve_narrow_writers_on_shared_budget() {
         flush: FlushMode::Pipelined,
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 2,
+        ..Default::default()
     };
 
     // Register every writer BEFORE any runs, so the fair share is 1
@@ -333,6 +337,7 @@ fn panicking_flush_task_surfaces_as_error_from_close() {
         flush: FlushMode::Pipelined,
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 2,
+        ..Default::default()
     };
     let mut w = TreeWriter::new(schema.clone(), PanickingSink, cfg).with_pool(pool);
     for i in 0..200 {
@@ -366,6 +371,7 @@ fn failing_sink_error_reaches_the_producer() {
         flush: FlushMode::Pipelined,
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 1,
+        ..Default::default()
     };
     let mut w = TreeWriter::new(schema, FailingSink, cfg).with_pool(pool);
     let mut fill_failed = false;
@@ -395,6 +401,7 @@ fn pipelined_write_overlaps_producer_and_compression() {
         flush: FlushMode::Pipelined,
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 4,
+        ..Default::default()
     };
     let mut g = Gen::new(42);
     let rows: Vec<Row> = (0..8192)
