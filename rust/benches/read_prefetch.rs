@@ -1,0 +1,14 @@
+//! Bench harness for the parallel read-ahead cache experiment
+//! (harness = false; criterion is unavailable offline — see
+//! Cargo.toml). Pass --quick for a reduced device sweep. Emits
+//! BENCH_fig6.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::read_prefetch(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("read_prefetch: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Parallel read-ahead cache — the TTreeCache + parallel-unzip
+//! analogue ("Optimizing ROOT IO For Analysis" identifies this pair as
+//! the decisive read-path optimisation).
+//!
+//! The basket-granularity read pipeline ([`crate::coordinator::read`])
+//! parallelises *within* one call, but nothing hides storage latency
+//! between clusters: on seek-dominated devices every per-basket fetch
+//! serialises behind the device queue and the pool starves. This
+//! subsystem adds the missing layer, in three pieces:
+//!
+//! * [`plan`] — the **cluster fetch plan**: per cluster window, the
+//!   baskets of every selected branch and their stored ranges
+//!   **coalesced into single `read_at` fetches** (one vectored read
+//!   per window; the writer lays baskets out cluster-major, so a whole
+//!   cluster is one contiguous range). [`plan::fetch_baskets_coalesced`]
+//!   packages the same merging for bulk loaders ([`crate::hadd`]).
+//! * [`window`] — the **adaptive window controller**: the write-side
+//!   cluster sizer ([`crate::tree::sizer`]) reused as-is (grow/shrink
+//!   ×2/÷2, hysteresis, clamps, replayable trace), fed with consumer
+//!   fetch-stall vs decode throughput. Slow storage grows the
+//!   read-ahead window; fast storage keeps memory flat.
+//! * [`prefetch`] — the **[`ClusterStream`]**: walks the cluster list
+//!   ahead of the consumer, one session read-budget slot per in-flight
+//!   cluster ([`crate::session::Session::register_reader`] — fair-share
+//!   admission across N concurrent readers), per-basket decode tasks
+//!   on the IMT pool so decode overlaps the next window's fetch, and a
+//!   bounded decoded-cluster cache with in-order eviction. Consumption
+//!   is strictly in order: [`ClusterStream::next`] yields
+//!   [`DecodedCluster`]s whose concatenation is entry-identical to a
+//!   serial read.
+//!
+//! Entry points: [`crate::tree::reader::TreeReader::stream`],
+//! `ReadOptions::prefetch` on [`crate::coordinator::read::read_columns`],
+//! and the bounded-memory scan
+//! [`crate::framework::dataset::scan_file`].
+
+pub mod plan;
+pub mod prefetch;
+pub mod window;
+
+pub use plan::{
+    fetch_baskets_coalesced, ClusterPlan, ClusterWindow, FetchRange, PlannedBasket,
+    DEFAULT_COALESCE_GAP, MAX_BULK_FETCH,
+};
+pub use prefetch::{ClusterStream, DecodedCluster, PrefetchOptions, PrefetchStats};
+pub use window::{WindowConfig, WindowController, WindowPolicy};

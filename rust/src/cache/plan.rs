@@ -1,0 +1,403 @@
+//! Cluster fetch plan: which baskets each cluster window needs, and
+//! how to **coalesce** their stored ranges into single device reads.
+//!
+//! ROOT's TTreeCache gains most of its read-path win before any thread
+//! touches a byte: the baskets of one cluster sit adjacent in the file
+//! (the writer appends them cluster-major), so fetching them as one
+//! vectored read replaces `branches × 1` seeking reads with a single
+//! sequential one. [`ClusterPlan::build`] precomputes exactly that:
+//! per cluster window, the planned baskets of every selected branch
+//! and the minimal set of [`FetchRange`]s covering them, merging
+//! ranges separated by at most `coalesce_gap` slack bytes (slack is
+//! read and discarded — on seek-dominated devices that is far cheaper
+//! than a second operation).
+//!
+//! Cluster boundaries come from the *first selected branch*. Trees cut
+//! by [`crate::tree::writer::TreeWriter`] are cluster-aligned, so every
+//! branch contributes exactly one basket per window; a misaligned tree
+//! degrades gracefully — each basket lands in the window containing
+//! its first entry, per-branch order is preserved, and concatenating a
+//! stream's windows still rebuilds every column in entry order.
+
+use crate::error::{Error, Result};
+use crate::format::directory::{BasketInfo, TreeMeta};
+use crate::serial::schema::ColumnType;
+use crate::storage::BackendRef;
+
+/// One basket scheduled inside a cluster window.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannedBasket {
+    /// Index into the stream's *selection* (its output column slot).
+    pub slot: usize,
+    /// Branch index in the tree.
+    pub branch: usize,
+    /// Basket index within the branch.
+    pub basket: usize,
+    /// Decode target type.
+    pub ty: ColumnType,
+    /// Stored location + integrity info.
+    pub info: BasketInfo,
+}
+
+/// One coalesced device fetch: a contiguous stored range covering one
+/// or more baskets (plus any sub-gap slack between them).
+#[derive(Clone, Debug)]
+pub struct FetchRange {
+    pub offset: u64,
+    pub len: usize,
+    /// `(basket index within the window, byte offset within this
+    /// range)` for every basket the range covers.
+    pub parts: Vec<(usize, usize)>,
+}
+
+/// One cluster window: entry range, planned baskets, coalesced reads.
+#[derive(Clone, Debug)]
+pub struct ClusterWindow {
+    pub index: usize,
+    /// First entry of the window (lead-branch cluster cut).
+    pub first_entry: u64,
+    /// Entries the window covers on the lead branch.
+    pub entries: u64,
+    /// Slot-major, basket-ascending — consuming them in order rebuilds
+    /// each selected column's window chunk in entry order.
+    pub baskets: Vec<PlannedBasket>,
+    pub fetches: Vec<FetchRange>,
+}
+
+impl ClusterWindow {
+    /// Stored (compressed) bytes the window's baskets occupy.
+    pub fn stored_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.info.comp_len as u64).sum()
+    }
+}
+
+/// A tree's whole fetch plan for one branch selection.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterPlan {
+    pub windows: Vec<ClusterWindow>,
+    /// Total planned baskets — the device reads a per-basket fetcher
+    /// would issue; [`ClusterPlan::total_fetches`] is what coalescing
+    /// issues instead.
+    pub total_baskets: usize,
+}
+
+impl ClusterPlan {
+    /// Build the plan for `selection` over `meta`, merging stored
+    /// ranges separated by at most `coalesce_gap` bytes.
+    pub fn build(meta: &TreeMeta, selection: &[usize], coalesce_gap: u32) -> Result<ClusterPlan> {
+        for &b in selection {
+            if b >= meta.branches.len() {
+                return Err(Error::Coordinator(format!(
+                    "prefetch: branch index {b} out of range ({} branches)",
+                    meta.branches.len()
+                )));
+            }
+        }
+        let Some(&lead) = selection.first() else {
+            return Ok(ClusterPlan::default());
+        };
+        // Window cuts = the lead branch's basket boundaries (ascending
+        // and gapless per TreeMeta::check).
+        let cuts: Vec<u64> =
+            meta.branches[lead].baskets.iter().map(|k| k.first_entry).collect();
+        if cuts.is_empty() {
+            return Ok(ClusterPlan::default());
+        }
+        let mut windows: Vec<ClusterWindow> = meta.branches[lead]
+            .baskets
+            .iter()
+            .enumerate()
+            .map(|(i, k)| ClusterWindow {
+                index: i,
+                first_entry: k.first_entry,
+                entries: k.n_entries as u64,
+                baskets: Vec::new(),
+                fetches: Vec::new(),
+            })
+            .collect();
+        let mut total = 0usize;
+        for (slot, &b) in selection.iter().enumerate() {
+            let br = &meta.branches[b];
+            for (k, info) in br.baskets.iter().enumerate() {
+                // Window containing this basket's first entry: the
+                // last cut at or before it.
+                let w = match cuts.binary_search(&info.first_entry) {
+                    Ok(i) => i,
+                    Err(0) => 0,
+                    Err(i) => i - 1,
+                };
+                windows[w].baskets.push(PlannedBasket {
+                    slot,
+                    branch: b,
+                    basket: k,
+                    ty: br.ty,
+                    info: *info,
+                });
+                total += 1;
+            }
+        }
+        for w in &mut windows {
+            let spans: Vec<(u64, usize)> = w
+                .baskets
+                .iter()
+                .map(|b| (b.info.offset, b.info.comp_len as usize))
+                .collect();
+            w.fetches = coalesce(&spans, coalesce_gap);
+        }
+        Ok(ClusterPlan { windows, total_baskets: total })
+    }
+
+    /// Coalesced device reads across all windows.
+    pub fn total_fetches(&self) -> usize {
+        self.windows.iter().map(|w| w.fetches.len()).sum()
+    }
+}
+
+/// Default gap (bytes) bridged when merging adjacent stored ranges —
+/// shared by the prefetcher's options and the bulk loader so the
+/// layout assumption lives in one place.
+pub const DEFAULT_COALESCE_GAP: u32 = 256;
+
+/// Merge stored `(offset, len)` spans into the fewest contiguous
+/// reads: sort by offset, extend the open range while the next span
+/// starts within `gap` bytes of its end (or inside it). The `parts`
+/// indices refer to positions in the input slice.
+fn coalesce(spans: &[(u64, usize)], gap: u32) -> Vec<FetchRange> {
+    coalesce_with_cap(spans, gap, usize::MAX)
+}
+
+/// As [`coalesce`], additionally closing a range once admitting the
+/// next span would push it past `max_len` bytes. Window plans are
+/// naturally bounded (one cluster each); the *bulk* loader is not —
+/// a whole file's baskets sit adjacent, so an uncapped merge would
+/// produce one file-sized scratch buffer.
+fn coalesce_with_cap(
+    spans: &[(u64, usize)],
+    gap: u32,
+    max_len: usize,
+) -> Vec<FetchRange> {
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| spans[i].0);
+    let mut out: Vec<FetchRange> = Vec::new();
+    for &i in &order {
+        let (off, len) = spans[i];
+        match out.last_mut() {
+            Some(r)
+                if off <= r.offset + (r.len as u64) + (gap as u64)
+                    && (off - r.offset) as usize + len <= max_len =>
+            {
+                let within = (off - r.offset) as usize;
+                r.len = r.len.max(within + len);
+                r.parts.push((i, within));
+            }
+            _ => out.push(FetchRange { offset: off, len, parts: vec![(i, 0)] }),
+        }
+    }
+    out
+}
+
+/// Cap on one bulk fetch range ([`fetch_baskets_coalesced`]): an
+/// input file's baskets are stored back-to-back, so unbounded merging
+/// would coalesce the whole basket region into a single file-sized
+/// scratch buffer. 8 MiB still amortises a seek over thousands of
+/// baskets while keeping peak scratch flat.
+pub const MAX_BULK_FETCH: usize = 8 * 1024 * 1024;
+
+/// Fetch `infos`' stored bytes through coalesced reads — the same
+/// range merging the prefetcher plans with, packaged for callers that
+/// want owned per-basket bytes (e.g. [`crate::hadd`]'s input loader).
+/// Returns one CRC-verified byte vector per input basket, in input
+/// order; the coalesced buffers are pooled scratch, each capped at
+/// [`MAX_BULK_FETCH`] bytes.
+pub fn fetch_baskets_coalesced(
+    backend: &BackendRef,
+    infos: &[BasketInfo],
+    gap: u32,
+) -> Result<Vec<Vec<u8>>> {
+    let spans: Vec<(u64, usize)> =
+        infos.iter().map(|b| (b.offset, b.comp_len as usize)).collect();
+    let ranges = coalesce_with_cap(&spans, gap, MAX_BULK_FETCH);
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); infos.len()];
+    for r in &ranges {
+        let mut buf = crate::compress::pool::get(r.len);
+        buf.resize(r.len, 0);
+        backend.read_at(r.offset, buf.as_mut_slice())?;
+        for &(i, within) in &r.parts {
+            let info = &infos[i];
+            let bytes = &buf[within..within + info.comp_len as usize];
+            crate::format::reader::verify_basket_crc(info, bytes)?;
+            out[i] = bytes.to_vec();
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::directory::BranchMeta;
+    use crate::serial::schema::{Field, Schema};
+
+    fn info(offset: u64, comp_len: u32, first_entry: u64, n_entries: u32) -> BasketInfo {
+        BasketInfo { offset, comp_len, raw_len: comp_len * 4, first_entry, n_entries, crc: 0 }
+    }
+
+    /// 2 branches × 2 clusters, written cluster-major (the tree
+    /// writer's layout): each cluster's baskets are adjacent.
+    fn aligned_meta() -> TreeMeta {
+        let schema = Schema::new(vec![
+            Field::new("a", ColumnType::F32),
+            Field::new("b", ColumnType::F32),
+        ]);
+        TreeMeta {
+            name: "t".into(),
+            schema,
+            entries: 200,
+            branches: vec![
+                BranchMeta {
+                    name: "a".into(),
+                    ty: ColumnType::F32,
+                    baskets: vec![info(24, 100, 0, 100), info(224, 100, 100, 100)],
+                },
+                BranchMeta {
+                    name: "b".into(),
+                    ty: ColumnType::F32,
+                    baskets: vec![info(124, 100, 0, 100), info(324, 100, 100, 100)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn aligned_tree_coalesces_each_cluster_to_one_read() {
+        let meta = aligned_meta();
+        let plan = ClusterPlan::build(&meta, &[0, 1], 0).unwrap();
+        assert_eq!(plan.windows.len(), 2);
+        assert_eq!(plan.total_baskets, 4);
+        assert_eq!(plan.total_fetches(), 2, "one vectored read per cluster");
+        let w0 = &plan.windows[0];
+        assert_eq!(w0.first_entry, 0);
+        assert_eq!(w0.entries, 100);
+        assert_eq!(w0.baskets.len(), 2);
+        assert_eq!(w0.fetches.len(), 1);
+        assert_eq!(w0.fetches[0].offset, 24);
+        assert_eq!(w0.fetches[0].len, 200);
+        assert_eq!(w0.fetches[0].parts, vec![(0, 0), (1, 100)]);
+        assert_eq!(w0.stored_bytes(), 200);
+    }
+
+    #[test]
+    fn gap_merges_near_ranges_but_not_far_ones() {
+        let mut meta = aligned_meta();
+        // Open a 16-byte hole between cluster 0's two baskets.
+        meta.branches[1].baskets[0].offset = 140;
+        let strict = ClusterPlan::build(&meta, &[0, 1], 0).unwrap();
+        assert_eq!(strict.windows[0].fetches.len(), 2, "hole splits with gap 0");
+        let loose = ClusterPlan::build(&meta, &[0, 1], 16).unwrap();
+        assert_eq!(loose.windows[0].fetches.len(), 1, "gap 16 bridges the hole");
+        assert_eq!(loose.windows[0].fetches[0].len, 216);
+        assert_eq!(loose.windows[0].fetches[0].parts, vec![(0, 0), (1, 116)]);
+    }
+
+    #[test]
+    fn subset_selection_plans_only_selected_branches() {
+        let meta = aligned_meta();
+        let plan = ClusterPlan::build(&meta, &[1], 0).unwrap();
+        assert_eq!(plan.total_baskets, 2);
+        assert_eq!(plan.windows.len(), 2);
+        assert!(plan.windows.iter().all(|w| w.baskets.len() == 1));
+        assert_eq!(plan.windows[0].baskets[0].branch, 1);
+        assert_eq!(plan.windows[0].baskets[0].slot, 0, "slot is selection-relative");
+    }
+
+    #[test]
+    fn misaligned_basket_lands_in_covering_window() {
+        let mut meta = aligned_meta();
+        // Branch 1 cut into 80/120 instead of 100/100: basket 1 starts
+        // at entry 80, inside lead window 0.
+        meta.branches[1].baskets = vec![info(124, 80, 0, 80), info(324, 120, 80, 120)];
+        let plan = ClusterPlan::build(&meta, &[0, 1], 0).unwrap();
+        assert_eq!(plan.windows[0].baskets.len(), 3, "both branch-1 baskets in window 0");
+        assert_eq!(plan.windows[1].baskets.len(), 1);
+        // Per-branch order inside the window stays ascending.
+        let b1: Vec<usize> = plan.windows[0]
+            .baskets
+            .iter()
+            .filter(|p| p.branch == 1)
+            .map(|p| p.basket)
+            .collect();
+        assert_eq!(b1, vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_selection_and_empty_tree_yield_empty_plans() {
+        let meta = aligned_meta();
+        assert_eq!(ClusterPlan::build(&meta, &[], 0).unwrap().windows.len(), 0);
+        let mut empty = aligned_meta();
+        empty.entries = 0;
+        for br in &mut empty.branches {
+            br.baskets.clear();
+        }
+        assert_eq!(ClusterPlan::build(&empty, &[0, 1], 0).unwrap().windows.len(), 0);
+    }
+
+    #[test]
+    fn out_of_range_branch_is_an_error() {
+        let meta = aligned_meta();
+        assert!(ClusterPlan::build(&meta, &[2], 0).is_err());
+    }
+
+    /// The bulk-loader cap closes a range before it outgrows
+    /// `max_len`, even over perfectly contiguous baskets.
+    #[test]
+    fn capped_coalescing_splits_contiguous_runs() {
+        let spans: Vec<(u64, usize)> =
+            (0..6).map(|i| (24 + i as u64 * 100, 100usize)).collect();
+        let uncapped = coalesce_with_cap(&spans, 0, usize::MAX);
+        assert_eq!(uncapped.len(), 1, "contiguous run merges fully without a cap");
+        let capped = coalesce_with_cap(&spans, 0, 250);
+        assert_eq!(capped.len(), 3, "cap 250 admits two 100-byte baskets per range");
+        assert!(capped.iter().all(|r| r.len <= 250));
+        let covered: usize = capped.iter().map(|r| r.parts.len()).sum();
+        assert_eq!(covered, 6, "every basket still covered exactly once");
+        // A basket bigger than the cap still gets its own range.
+        assert_eq!(coalesce_with_cap(&[(24, 1000)], 0, 250).len(), 1);
+    }
+
+    #[test]
+    fn coalesced_fetch_returns_verified_per_basket_bytes() {
+        use crate::compress::crc32;
+        use crate::storage::mem::MemBackend;
+        use crate::storage::Backend;
+        use std::sync::Arc;
+        let be = MemBackend::new();
+        let (a, b) = (vec![1u8; 50], vec![2u8; 70]);
+        be.write_at(100, &a).unwrap();
+        be.write_at(150, &b).unwrap();
+        let infos = [
+            BasketInfo {
+                offset: 100,
+                comp_len: 50,
+                raw_len: 50,
+                first_entry: 0,
+                n_entries: 1,
+                crc: crc32(&a),
+            },
+            BasketInfo {
+                offset: 150,
+                comp_len: 70,
+                raw_len: 70,
+                first_entry: 1,
+                n_entries: 1,
+                crc: crc32(&b),
+            },
+        ];
+        let backend: BackendRef = Arc::new(be);
+        let got = fetch_baskets_coalesced(&backend, &infos, 0).unwrap();
+        assert_eq!(got, vec![a, b]);
+        // Corrupt CRC expectation: the fetch must fail.
+        let mut bad = infos;
+        bad[1].crc ^= 0xFFFF_FFFF;
+        assert!(fetch_baskets_coalesced(&backend, &bad, 0).is_err());
+    }
+}

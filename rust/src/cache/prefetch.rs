@@ -1,0 +1,898 @@
+//! The cluster prefetcher: coalesced window fetches ahead of the
+//! consumer, per-basket decode tasks on the IMT pool, and an in-order
+//! streaming consumption API.
+//!
+//! [`ClusterStream`] walks a tree's cluster list ahead of its
+//! consumer. For every in-flight cluster it holds one slot of the
+//! session's shared **read budget** (fair-share admission across
+//! readers, exactly like writers on the write budget — except that
+//! read admission never parks: read-ahead degrades when the budget is
+//! full, and the consumer-demanded head window proceeds unbudgeted,
+//! since a prefetched slot can only be freed by its own consumer and
+//! parking could deadlock a thread on its sibling streams), issues the
+//! cluster's **coalesced fetches** (one `read_at` per
+//! [`super::plan::FetchRange`] — TTreeCache's one-vectored-read-per-
+//! window), CRC-checks each basket against the directory, and spawns
+//! one **decompress + deserialise task per basket** into the session's
+//! completion domain, so decode of cluster *k* overlaps the fetch of
+//! cluster *k+1..k+w*. Decoded clusters wait in a bounded cache — one
+//! budget slot each — and are handed out strictly **in order** by
+//! [`ClusterStream::next`]; consuming a cluster releases its slot
+//! (in-order eviction), so resident memory never exceeds the window.
+//!
+//! The window `w` is governed by [`super::window::WindowController`] —
+//! the write sizer's grow/shrink/hysteresis/trace controller fed with
+//! consumer fetch-stall vs decode throughput: slow storage grows the
+//! window, fast storage keeps it (and memory) minimal.
+//!
+//! All scratch — coalesced fetch buffers and per-basket decompression
+//! targets — comes from [`crate::compress::pool`]; steady-state
+//! streaming allocates only the decoded columns.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compress;
+use crate::error::{Error, Result};
+use crate::format::reader::FileReader;
+use crate::imt::{ClusterGuard, TaskGroup};
+use crate::serial::column::ColumnData;
+use crate::serial::schema::ColumnType;
+use crate::session::{ReaderRegistration, Session, SessionConfig};
+use crate::tree::reader::TreeReader;
+use crate::tree::sizer::{Decision, SizerSummary};
+
+use super::plan::{ClusterPlan, ClusterWindow, PlannedBasket};
+use super::window::{WindowController, WindowPolicy};
+
+/// Streaming-read options.
+#[derive(Clone, Debug)]
+pub struct PrefetchOptions {
+    /// Branch indices to stream (None = all), selection order = output
+    /// column order.
+    pub branches: Option<Vec<usize>>,
+    /// Read-ahead policy (default: adaptive window).
+    pub window: WindowPolicy,
+    /// Max byte gap between stored baskets merged into one device
+    /// fetch; slack bytes are read and discarded (far cheaper than a
+    /// second seek on the devices that matter).
+    pub coalesce_gap: u32,
+}
+
+impl Default for PrefetchOptions {
+    fn default() -> Self {
+        PrefetchOptions {
+            branches: None,
+            window: WindowPolicy::default(),
+            coalesce_gap: super::plan::DEFAULT_COALESCE_GAP,
+        }
+    }
+}
+
+impl PrefetchOptions {
+    /// Convenience: a fixed window of `k` clusters.
+    pub fn fixed(k: usize) -> Self {
+        PrefetchOptions { window: WindowPolicy::Fixed(k), ..Default::default() }
+    }
+}
+
+/// One decoded cluster, handed out in tree order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodedCluster {
+    /// Cluster index (0-based, consecutive).
+    pub index: usize,
+    /// First entry the cluster covers (lead-branch cut).
+    pub first_entry: u64,
+    /// Entries the cluster covers on the lead branch.
+    pub entries: u64,
+    /// One decoded column chunk per selected branch, in selection
+    /// order. Equal lengths for cluster-aligned trees (everything the
+    /// tree writer produces); concatenating across clusters rebuilds
+    /// every column in entry order either way.
+    pub columns: Vec<ColumnData>,
+}
+
+/// Accounting for one stream ([`ClusterStream::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefetchStats {
+    /// Clusters delivered to the consumer (error slots the cursor
+    /// skipped over are not counted).
+    pub clusters: u64,
+    /// Baskets consumed so far — the device reads a per-basket reader
+    /// would have issued for the same data.
+    pub baskets: u64,
+    /// Coalesced device fetches behind the *consumed* clusters — the
+    /// same windows `baskets` counts, so [`Self::coalescing_factor`]
+    /// is exact at any point mid-stream (read-ahead fetches still in
+    /// flight are not mixed in).
+    pub device_reads: u64,
+    /// Stored (compressed) bytes consumed.
+    pub stored_bytes: u64,
+    /// Consumer wall time spent waiting on a not-yet-ready cluster —
+    /// the exposed storage latency the window exists to hide.
+    pub fetch_stall: Duration,
+    /// Device fetch wall time summed over fetch tasks.
+    pub fetch_time: Duration,
+    /// Decompress + deserialise CPU summed over decode tasks.
+    pub decode_time: Duration,
+    /// Distinct windows whose admission the session budget denied
+    /// (each window counts once, however many pump retries saw the
+    /// budget full; the prefetcher never blocks).
+    pub admission_denials: u64,
+    /// Window-controller band + step counts (units: clusters).
+    pub window: SizerSummary,
+}
+
+impl PrefetchStats {
+    /// Device-read reduction from coalescing (baskets per issued
+    /// fetch); 1.0 when nothing coalesced, 0.0 before any fetch.
+    pub fn coalescing_factor(&self) -> f64 {
+        if self.device_reads == 0 {
+            return 0.0;
+        }
+        self.baskets as f64 / self.device_reads as f64
+    }
+}
+
+/// One in-flight cluster's shared slot: decoded parts land here, the
+/// budget guard is held until the consumer takes the cluster.
+struct SlotState {
+    parts: Vec<Option<ColumnData>>,
+    /// Decode results still outstanding (0 = ready).
+    remaining: usize,
+    err: Option<Error>,
+    /// Read-budget slot, released the moment the consumer takes the
+    /// cluster (or when an abandoned slot drops).
+    guard: Option<ClusterGuard>,
+}
+
+/// State shared between the consumer and the fetch/decode tasks.
+struct Shared {
+    slots: Mutex<HashMap<usize, SlotState>>,
+    fetch_nanos: AtomicU64,
+    decode_nanos: AtomicU64,
+}
+
+impl Shared {
+    fn is_ready(&self, idx: usize) -> bool {
+        let slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        slots.get(&idx).map(|s| s.remaining == 0 || s.err.is_some()).unwrap_or(false)
+    }
+}
+
+/// Record a window-level failure (failed/short fetch, bad checksum):
+/// the slot becomes ready-with-error; decode tasks already in flight
+/// for it become no-ops once the consumer removes the slot.
+fn fail_slot(shared: &Shared, idx: usize, err: Error) {
+    let mut slots = shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(slot) = slots.get_mut(&idx) {
+        if slot.err.is_none() {
+            slot.err = Some(err);
+        }
+    }
+}
+
+/// Land one decoded basket (or its error) in the slot.
+fn finish_part(shared: &Shared, idx: usize, part: usize, result: Result<ColumnData>) {
+    let mut slots = shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(slot) = slots.get_mut(&idx) else { return };
+    match result {
+        Ok(col) => slot.parts[part] = Some(col),
+        Err(e) => {
+            if slot.err.is_none() {
+                slot.err = Some(e);
+            }
+        }
+    }
+    slot.remaining = slot.remaining.saturating_sub(1);
+}
+
+/// The fetch task for one cluster window: issue the coalesced reads,
+/// CRC-check each basket, spawn one decode task per basket into the
+/// same group. Runs on the pool, so window `k+1`'s fetch overlaps
+/// window `k`'s decode.
+fn fetch_window(
+    file: &Arc<FileReader>,
+    window: &ClusterWindow,
+    shared: &Arc<Shared>,
+    group: &TaskGroup,
+    idx: usize,
+) {
+    let backend = file.backend();
+    for range in &window.fetches {
+        let t0 = Instant::now();
+        let mut buf = compress::pool::get(range.len);
+        buf.resize(range.len, 0);
+        if let Err(e) = backend.read_at(range.offset, buf.as_mut_slice()) {
+            fail_slot(shared, idx, e);
+            return;
+        }
+        shared.fetch_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // The coalesced buffer is shared by the range's decode tasks
+        // and returns to the pool when the last of them drops it.
+        let buf = Arc::new(buf);
+        for &(bi, within) in &range.parts {
+            let pb = window.baskets[bi];
+            let end = within + pb.info.comp_len as usize;
+            if let Err(e) =
+                crate::format::reader::verify_basket_crc(&pb.info, &buf[within..end])
+            {
+                fail_slot(shared, idx, e);
+                return;
+            }
+            let shared = shared.clone();
+            let buf = buf.clone();
+            group.spawn(move || {
+                let t0 = Instant::now();
+                let result = crate::tree::reader::decode_basket_bytes(
+                    pb.ty,
+                    &pb.info,
+                    &buf[within..end],
+                );
+                shared.decode_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                finish_part(&shared, idx, bi, result);
+            });
+        }
+    }
+}
+
+/// The streaming reader: prefetched, coalesced, in-order cluster
+/// consumption. Construct via [`TreeReader::stream`] /
+/// [`TreeReader::stream_in_session`] (or [`ClusterStream::open`]).
+pub struct ClusterStream {
+    file: Arc<FileReader>,
+    plan: Arc<ClusterPlan>,
+    slot_types: Vec<ColumnType>,
+    shared: Arc<Shared>,
+    group: TaskGroup,
+    reg: ReaderRegistration,
+    controller: WindowController,
+    /// Next cluster index to submit a fetch for.
+    next_submit: usize,
+    /// Next cluster index the consumer will receive.
+    next_consume: usize,
+    /// Cumulative consumer wait on not-ready clusters.
+    stall: Duration,
+    /// Clusters actually handed to the consumer (`next_consume` also
+    /// advances past error slots and must not be reported).
+    delivered: u64,
+    consumed_baskets: u64,
+    consumed_fetches: u64,
+    consumed_stored: u64,
+    /// Distinct windows whose admission the budget denied (diagnostic;
+    /// see [`PrefetchStats::admission_denials`]).
+    admission_denials: u64,
+    /// Last window index counted as denied — pump() retries the same
+    /// frontier window every call, and a sustained denial must count
+    /// once, not once per retry.
+    last_denied: Option<usize>,
+    /// Fused after the first error: a failed stream keeps failing
+    /// instead of silently yielding clusters past a hole.
+    failed: bool,
+}
+
+impl ClusterStream {
+    /// Stream `reader` through a **private** single-reader session on
+    /// the global IMT pool (serial inline execution while IMT is off).
+    pub fn open(reader: &TreeReader, opts: &PrefetchOptions) -> Result<ClusterStream> {
+        let session = Session::new(SessionConfig {
+            max_inflight_read_windows: opts.window.max_window(),
+            ..Default::default()
+        });
+        ClusterStream::open_in_session(reader, opts, &session)
+    }
+
+    /// Stream `reader` as one member of a shared [`Session`]: fetch
+    /// and decode tasks run in the session's completion domain, and
+    /// read-ahead admission draws from the session's shared read
+    /// budget alongside the job's other streams.
+    pub fn open_in_session(
+        reader: &TreeReader,
+        opts: &PrefetchOptions,
+        session: &Session,
+    ) -> Result<ClusterStream> {
+        let meta = reader.meta();
+        let selection: Vec<usize> = match &opts.branches {
+            Some(v) => v.clone(),
+            None => (0..meta.branches.len()).collect(),
+        };
+        let plan = ClusterPlan::build(meta, &selection, opts.coalesce_gap)?;
+        let slot_types: Vec<ColumnType> =
+            selection.iter().map(|&b| meta.branches[b].ty).collect();
+        let controller = WindowController::new(opts.window);
+        let reg = session.register_reader(controller.max_window());
+        Ok(ClusterStream {
+            file: reader.file().clone(),
+            plan: Arc::new(plan),
+            slot_types,
+            shared: Arc::new(Shared {
+                slots: Mutex::new(HashMap::new()),
+                fetch_nanos: AtomicU64::new(0),
+                decode_nanos: AtomicU64::new(0),
+            }),
+            group: session.task_group(),
+            reg,
+            controller,
+            next_submit: 0,
+            next_consume: 0,
+            stall: Duration::ZERO,
+            delivered: 0,
+            consumed_baskets: 0,
+            consumed_fetches: 0,
+            consumed_stored: 0,
+            admission_denials: 0,
+            last_denied: None,
+            failed: false,
+        })
+    }
+
+    /// Columns each [`DecodedCluster`] carries.
+    pub fn n_columns(&self) -> usize {
+        self.slot_types.len()
+    }
+
+    /// Clusters the stream will yield in total.
+    pub fn n_clusters(&self) -> usize {
+        self.plan.windows.len()
+    }
+
+    /// Submit fetches up to the current window target. Admission is
+    /// **never blocking** on the read path: a prefetched slot can only
+    /// be released by a `next()` call on the stream that holds it, so
+    /// a consumer driving several streams from one thread could
+    /// deadlock on its own siblings if admission parked. Instead,
+    /// read-ahead beyond the head cluster simply degrades (the window
+    /// shrinks to what the fair share admits), and the head cluster —
+    /// which the consumer is synchronously demanding and will
+    /// materialise immediately — proceeds *unbudgeted* when the budget
+    /// is exhausted, bounding memory at `limit + one window per
+    /// stream`.
+    fn pump(&mut self) {
+        let target = self.controller.target().max(1);
+        while self.next_submit < self.plan.windows.len()
+            && self.next_submit - self.next_consume < target
+        {
+            let head = self.next_submit == self.next_consume;
+            let guard = match self.reg.try_acquire() {
+                Some(g) => Some(g),
+                denied => {
+                    if self.last_denied != Some(self.next_submit) {
+                        self.admission_denials += 1;
+                        self.last_denied = Some(self.next_submit);
+                    }
+                    if head {
+                        denied // consumer-demanded: proceed unbudgeted
+                    } else {
+                        break; // read-ahead degrades instead of parking
+                    }
+                }
+            };
+            self.submit(self.next_submit, guard);
+            self.next_submit += 1;
+        }
+    }
+
+    fn submit(&mut self, idx: usize, guard: Option<ClusterGuard>) {
+        let n_baskets = self.plan.windows[idx].baskets.len();
+        {
+            let mut slots = self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots.insert(
+                idx,
+                SlotState {
+                    parts: (0..n_baskets).map(|_| None).collect(),
+                    remaining: n_baskets,
+                    err: None,
+                    guard,
+                },
+            );
+        }
+        if n_baskets == 0 {
+            return; // ready immediately (degenerate empty window)
+        }
+        let shared = self.shared.clone();
+        let file = self.file.clone();
+        let group = self.group.clone();
+        let plan = self.plan.clone();
+        self.group.spawn(move || {
+            fetch_window(&file, &plan.windows[idx], &shared, &group, idx);
+        });
+    }
+
+    /// The next decoded cluster in tree order, or `None` past the end.
+    /// The consumer's wait on a not-yet-ready cluster is accounted as
+    /// fetch stall and fed to the window controller. **Fused on
+    /// error**: after the first `Err`, every subsequent call errors
+    /// too — a stream can never silently resume past a hole in the
+    /// entry range.
+    pub fn next(&mut self) -> Result<Option<DecodedCluster>> {
+        if self.failed {
+            return Err(Error::Sync(
+                "prefetch: stream already failed; clusters past the error are \
+                 unavailable"
+                    .into(),
+            ));
+        }
+        match self.next_inner() {
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+            ok => ok,
+        }
+    }
+
+    fn next_inner(&mut self) -> Result<Option<DecodedCluster>> {
+        let idx = self.next_consume;
+        let mut columns: Vec<ColumnData> =
+            self.slot_types.iter().map(|&ty| ColumnData::new(ty)).collect();
+        if !self.consume_next(|pb, part| {
+            if columns[pb.slot].is_empty() {
+                // Move the first (for aligned trees: the only) part
+                // into its slot instead of copying it in.
+                columns[pb.slot] = part;
+                Ok(())
+            } else {
+                columns[pb.slot].append(&part)
+            }
+        })? {
+            return Ok(None);
+        }
+        let window = &self.plan.windows[idx];
+        Ok(Some(DecodedCluster {
+            index: idx,
+            first_entry: window.first_entry,
+            entries: window.entries,
+            columns,
+        }))
+    }
+
+    /// Consumption core shared by [`ClusterStream::next`] and
+    /// [`ClusterStream::read_all_columns`]: wait for the head cluster,
+    /// release its budget slot, surface its error, then hand each
+    /// decoded basket (with its plan entry) to `sink` exactly once,
+    /// in window order. Returns `false` past the end of the tree.
+    fn consume_next(
+        &mut self,
+        mut sink: impl FnMut(&PlannedBasket, ColumnData) -> Result<()>,
+    ) -> Result<bool> {
+        if self.next_consume >= self.plan.windows.len() {
+            return Ok(false);
+        }
+        self.pump();
+        let idx = self.next_consume;
+        let t0 = Instant::now();
+        if !self.shared.is_ready(idx) {
+            if let Some(pool) = self.group.bound_pool() {
+                // Help execute fetch/decode jobs while waiting; task
+                // completions wake this parked waiter. The *group's*
+                // pool is the one the jobs run on — a lazily-bound
+                // global session could have rebound since open(). A
+                // panicked task can never deliver its basket, so the
+                // wait also ends once the group drained with a panic
+                // recorded — surfaced as Sync below, never a hang.
+                let shared = self.shared.clone();
+                let group = self.group.clone();
+                pool.wait_until(&|| {
+                    shared.is_ready(idx) || (group.panicked() && group.pending() == 0)
+                });
+            }
+            // Without a bound pool, tasks ran inline during pump()
+            // and the slot is necessarily ready.
+        }
+        self.stall += t0.elapsed();
+        if !self.shared.is_ready(idx) {
+            // A task died without delivering: drop the slot (its
+            // budget guard releases) and surface the failure.
+            let mut slots = self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots.remove(&idx);
+            drop(slots);
+            self.next_consume += 1;
+            return Err(Error::Sync(
+                "prefetch: a fetch/decode task panicked without delivering its window"
+                    .into(),
+            ));
+        }
+
+        let mut slot = {
+            let mut slots = self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots.remove(&idx).ok_or_else(|| {
+                Error::Sync("prefetch: ready cluster slot disappeared".into())
+            })?
+        };
+        self.next_consume += 1;
+        // The window is consumed: release its budget slot *now*, not
+        // when the local `slot` drops at the end of this call — the
+        // tail pump() below must see the freed capacity so a cap-1
+        // policy (WindowPolicy::None / Fixed(1)) re-admits its next
+        // window instead of degrading to unbudgeted heads.
+        drop(slot.guard.take());
+        if let Some(e) = slot.err.take() {
+            return Err(e);
+        }
+
+        let plan = self.plan.clone();
+        let window = &plan.windows[idx];
+        for (i, pb) in window.baskets.iter().enumerate() {
+            let part = slot.parts[i].take().ok_or_else(|| {
+                Error::Sync(format!(
+                    "prefetch: decoded basket ({},{}) missing from its window",
+                    pb.branch, pb.basket
+                ))
+            })?;
+            sink(pb, part)?;
+        }
+        self.delivered += 1;
+        self.consumed_baskets += window.baskets.len() as u64;
+        self.consumed_fetches += window.fetches.len() as u64;
+        self.consumed_stored += window.stored_bytes();
+
+        // Feed the controller (cumulative totals, diffed internally)
+        // and refill the window so the next fetches start before the
+        // consumer goes back to work. Only the stall/decode ratio is
+        // fed: admission denials are *not* a grow signal — growing the
+        // window cannot reduce them (one admission per cluster either
+        // way), and under shared-budget contention a denial-per-window
+        // stream would pin itself at max and never shrink. Denials
+        // stay a diagnostic ([`PrefetchStats::admission_denials`]).
+        self.controller.observe(
+            self.stall,
+            Duration::from_nanos(self.shared.decode_nanos.load(Ordering::Relaxed)),
+            0,
+        );
+        self.pump();
+        Ok(true)
+    }
+
+    /// Drain the stream, concatenating every cluster into whole
+    /// columns — the materialising consumption `coordinator::read`
+    /// wires behind [`crate::coordinator::read::ReadOptions`]'s
+    /// `prefetch` knob. Each decoded basket is appended exactly once
+    /// into the output column (parity with the per-basket read path —
+    /// no intermediate per-cluster materialisation), and the stream
+    /// fuses on error exactly like [`ClusterStream::next`].
+    pub fn read_all_columns(&mut self) -> Result<Vec<ColumnData>> {
+        let mut out: Vec<ColumnData> =
+            self.slot_types.iter().map(|&ty| ColumnData::new(ty)).collect();
+        loop {
+            if self.failed {
+                return Err(Error::Sync(
+                    "prefetch: stream already failed; clusters past the error are \
+                     unavailable"
+                        .into(),
+                ));
+            }
+            let more = self.consume_next(|pb, part| {
+                if out[pb.slot].is_empty() {
+                    out[pb.slot] = part;
+                    Ok(())
+                } else {
+                    out[pb.slot].append(&part)
+                }
+            });
+            match more {
+                Ok(true) => {}
+                Ok(false) => return Ok(out),
+                Err(e) => {
+                    self.failed = true;
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        PrefetchStats {
+            clusters: self.delivered,
+            baskets: self.consumed_baskets,
+            device_reads: self.consumed_fetches,
+            stored_bytes: self.consumed_stored,
+            fetch_stall: self.stall,
+            fetch_time: Duration::from_nanos(
+                self.shared.fetch_nanos.load(Ordering::Relaxed),
+            ),
+            decode_time: Duration::from_nanos(
+                self.shared.decode_nanos.load(Ordering::Relaxed),
+            ),
+            admission_denials: self.admission_denials,
+            window: self.controller.summary(),
+        }
+    }
+
+    /// The window controller's replayable decision trace.
+    pub fn window_trace(&self) -> &[Decision] {
+        self.controller.trace()
+    }
+
+    /// The stream's current fair share of the session read budget.
+    pub fn fair_share(&self) -> usize {
+        self.reg.fair_share()
+    }
+
+    /// Highest in-flight window count this stream ever held (fairness
+    /// tests assert it never exceeds the share).
+    pub fn admission_high_water(&self) -> usize {
+        self.reg.high_water()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Codec, Settings};
+    use crate::format::writer::FileWriter;
+    use crate::format::Directory;
+    use crate::imt::Pool;
+    use crate::serial::schema::Schema;
+    use crate::serial::value::Value;
+    use crate::storage::mem::MemBackend;
+    use crate::storage::BackendRef;
+    use crate::tree::sink::FileSink;
+    use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
+    use crate::cache::window::WindowConfig;
+
+    fn build(
+        n_branches: usize,
+        entries: usize,
+        basket_entries: usize,
+        codec: Settings,
+    ) -> Arc<FileReader> {
+        let schema = Schema::flat_f32("c", n_branches);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), n_branches);
+        let cfg = WriterConfig {
+            basket_entries,
+            compression: codec,
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..entries {
+            let row: Vec<Value> =
+                (0..n_branches).map(|b| Value::F32(((i * (b + 3)) % 89) as f32 * 0.25)).collect();
+            w.fill(row).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        Arc::new(FileReader::open(be).unwrap())
+    }
+
+    fn serial_columns(reader: &TreeReader) -> Vec<ColumnData> {
+        reader.read_all().unwrap()
+    }
+
+    #[test]
+    fn stream_matches_serial_read_inline() {
+        // No pool anywhere: tasks run inline, the stream degrades to a
+        // serial — but still coalesced — read.
+        let file = build(3, 1000, 128, Settings::new(Codec::Rzip, 3));
+        let reader = TreeReader::open_first(file).unwrap();
+        let mut stream = ClusterStream::open(&reader, &PrefetchOptions::default()).unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        assert_eq!(cols, serial_columns(&reader));
+        let st = stream.stats();
+        assert_eq!(st.clusters, 8, "1000 entries / 128 per cluster");
+        assert_eq!(st.baskets, 24);
+        assert!(
+            st.device_reads <= 8,
+            "coalescing must not exceed one read per cluster: {}",
+            st.device_reads
+        );
+        assert!(st.coalescing_factor() >= 3.0, "3 baskets per cluster read");
+    }
+
+    #[test]
+    fn stream_matches_serial_read_on_a_pool() {
+        let file = build(4, 2000, 256, Settings::new(Codec::Lz4r, 3));
+        let reader = TreeReader::open_first(file).unwrap();
+        let pool = Arc::new(Pool::new(4));
+        let session = Session::with_pool(pool, SessionConfig::default());
+        for window in [
+            WindowPolicy::None,
+            WindowPolicy::Fixed(3),
+            WindowPolicy::Adaptive(WindowConfig::default()),
+        ] {
+            let opts = PrefetchOptions { window, ..Default::default() };
+            let mut stream =
+                ClusterStream::open_in_session(&reader, &opts, &session).unwrap();
+            let cols = stream.read_all_columns().unwrap();
+            assert_eq!(cols, serial_columns(&reader), "window {window:?}");
+        }
+        assert_eq!(session.stats().in_flight_read_windows, 0, "all slots returned");
+    }
+
+    #[test]
+    fn clusters_arrive_in_order_with_entry_ranges() {
+        let file = build(2, 700, 100, Settings::uncompressed());
+        let reader = TreeReader::open_first(file).unwrap();
+        let mut stream =
+            ClusterStream::open(&reader, &PrefetchOptions::fixed(4)).unwrap();
+        let mut first = 0u64;
+        let mut idx = 0usize;
+        while let Some(c) = stream.next().unwrap() {
+            assert_eq!(c.index, idx);
+            assert_eq!(c.first_entry, first);
+            assert_eq!(c.columns.len(), 2);
+            assert_eq!(c.columns[0].len() as u64, c.entries);
+            first += c.entries;
+            idx += 1;
+        }
+        assert_eq!(first, 700);
+        assert_eq!(idx, 7);
+    }
+
+    #[test]
+    fn branch_selection_streams_a_subset_in_selection_order() {
+        let file = build(5, 600, 128, Settings::new(Codec::Rzip, 2));
+        let reader = TreeReader::open_first(file).unwrap();
+        let opts = PrefetchOptions {
+            branches: Some(vec![3, 1]),
+            ..Default::default()
+        };
+        let mut stream = ClusterStream::open(&reader, &opts).unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        let all = serial_columns(&reader);
+        assert_eq!(cols.len(), 2);
+        assert_eq!(cols[0], all[3]);
+        assert_eq!(cols[1], all[1]);
+    }
+
+    #[test]
+    fn uneven_shapes_stream_identically_to_serial() {
+        // (branches, entries, basket) incl. partial tails, single
+        // basket, empty tree, one-entry baskets.
+        let shapes = [
+            (4, 1000, 256),
+            (3, 100, 100),
+            (5, 7, 1000),
+            (1, 513, 64),
+            (2, 0, 128),
+            (6, 256, 1),
+        ];
+        let pool = Arc::new(Pool::new(3));
+        for (nb, entries, basket) in shapes {
+            let file = build(nb, entries, basket, Settings::new(Codec::Rzip, 3));
+            let reader = TreeReader::open_first(file).unwrap();
+            let session = Session::with_pool(pool.clone(), SessionConfig::default());
+            let mut stream = ClusterStream::open_in_session(
+                &reader,
+                &PrefetchOptions::default(),
+                &session,
+            )
+            .unwrap();
+            let cols = stream.read_all_columns().unwrap();
+            assert_eq!(
+                cols,
+                serial_columns(&reader),
+                "shape ({nb}, {entries}, {basket})"
+            );
+        }
+    }
+
+    #[test]
+    fn two_streams_split_the_read_budget_fairly() {
+        let file = build(2, 1200, 100, Settings::uncompressed());
+        let reader = TreeReader::open_first(file).unwrap();
+        let pool = Arc::new(Pool::new(2));
+        let session = Session::with_pool(
+            pool,
+            SessionConfig { max_inflight_read_windows: 4, ..Default::default() },
+        );
+        let opts = PrefetchOptions::fixed(8); // wants more than its share
+        let mut s1 = ClusterStream::open_in_session(&reader, &opts, &session).unwrap();
+        let mut s2 = ClusterStream::open_in_session(&reader, &opts, &session).unwrap();
+        assert_eq!(s1.fair_share(), 2, "4 slots over 2 readers");
+        let a = s1.read_all_columns().unwrap();
+        let b = s2.read_all_columns().unwrap();
+        assert_eq!(a, b);
+        assert!(
+            s1.admission_high_water() <= 2 && s2.admission_high_water() <= 2,
+            "streams must stay within their fair share: {} / {}",
+            s1.admission_high_water(),
+            s2.admission_high_water()
+        );
+        assert_eq!(session.stats().in_flight_read_windows, 0);
+    }
+
+    #[test]
+    fn corrupt_basket_surfaces_as_error_not_hang() {
+        let schema = Schema::flat_f32("c", 2);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), 2);
+        let cfg = WriterConfig {
+            basket_entries: 64,
+            compression: Settings::new(Codec::Rzip, 3),
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..256 {
+            w.fill(vec![Value::F32(i as f32), Value::F32(i as f32 * 2.0)]).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        // Flip a stored byte of the third cluster's payload region
+        // (XOR so the corruption can never be a no-op).
+        let victim = meta.branches[0].baskets[2].offset;
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        let mut byte = [0u8; 1];
+        be.read_at(victim, &mut byte).unwrap();
+        be.write_at(victim, &[byte[0] ^ 0xFF]).unwrap();
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        let pool = Arc::new(Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::default());
+        let mut stream = ClusterStream::open_in_session(
+            &reader,
+            &PrefetchOptions::fixed(4),
+            &session,
+        )
+        .unwrap();
+        let err = stream.read_all_columns();
+        assert!(err.is_err(), "corruption must surface as an error");
+        // Fused: a failed stream keeps failing rather than silently
+        // yielding clusters past the hole.
+        assert!(stream.next().is_err(), "failed stream must stay failed");
+        assert!(stream.next().is_err());
+        drop(stream);
+        // In-flight windows finish inside the session's completion
+        // domain; only then may the no-leak invariant be asserted.
+        session.drain().unwrap();
+        assert_eq!(
+            session.stats().in_flight_read_windows,
+            0,
+            "no budget slot may leak past a failed stream"
+        );
+    }
+
+    #[test]
+    fn stats_track_window_adaptation() {
+        let file = build(3, 3000, 100, Settings::new(Codec::Lz4r, 2));
+        let reader = TreeReader::open_first(file).unwrap();
+        let pool = Arc::new(Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::default());
+        let mut stream = ClusterStream::open_in_session(
+            &reader,
+            &PrefetchOptions::default(),
+            &session,
+        )
+        .unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        assert_eq!(cols[0].len(), 3000);
+        let st = stream.stats();
+        assert_eq!(st.clusters, 30);
+        assert_eq!(st.baskets, 90);
+        assert!(st.window.clusters == 30, "controller observed every cluster");
+        assert!(st.window.last_entries >= 1);
+        assert!(!stream.window_trace().is_empty(), "adaptive trace recorded");
+    }
+
+    #[test]
+    fn dropping_a_stream_midway_releases_everything() {
+        let file = build(2, 2000, 100, Settings::new(Codec::Rzip, 2));
+        let reader = TreeReader::open_first(file).unwrap();
+        let pool = Arc::new(Pool::new(2));
+        let session = Session::with_pool(pool, SessionConfig::default());
+        {
+            let mut stream = ClusterStream::open_in_session(
+                &reader,
+                &PrefetchOptions::fixed(6),
+                &session,
+            )
+            .unwrap();
+            // Consume only a prefix, leaving prefetched windows live.
+            for _ in 0..3 {
+                stream.next().unwrap().unwrap();
+            }
+        }
+        // Outstanding fetch/decode tasks finish inside the session's
+        // completion domain; afterwards no slot may remain held.
+        session.drain().unwrap();
+        assert_eq!(session.stats().in_flight_read_windows, 0);
+        assert_eq!(session.stats().active_readers, 0);
+    }
+}

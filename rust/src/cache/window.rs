@@ -1,0 +1,246 @@
+//! Adaptive prefetch-window sizing — the read-side twin of the write
+//! path's cluster sizer.
+//!
+//! The window (how many clusters the prefetcher keeps in flight ahead
+//! of the consumer) faces the same tension the write-side cluster size
+//! does: too small and the consumer stalls on storage latency (the
+//! paper's serialised-fetch regime), too large and decoded clusters
+//! pile up in memory for no gain. One signal decides which side a
+//! reader is on: the **fetch-stall / decode ratio** — consumer wall
+//! time spent waiting for a cluster that was not ready versus decode
+//! CPU burned so far. A stalling consumer means storage latency is
+//! exposed, so read further ahead; a stall-free one has slack, so
+//! shrink and keep memory flat. (Budget admission *denials* are
+//! deliberately not fed as pressure: growing the window cannot reduce
+//! them, and under shared-budget contention a denial-per-window
+//! stream would pin itself at max — they are reported through
+//! [`crate::cache::PrefetchStats`] instead. The controller's `waits`
+//! input remains available for callers with a genuine blocking
+//! signal.)
+//!
+//! Rather than re-deriving a controller, [`WindowController`] wraps
+//! the write path's [`ClusterSizer`] *as-is* — grow/shrink steps of
+//! ×2/÷2, hysteresis, warmup, min/max clamps and the replayable
+//! decision trace are identical; only the unit changes ("entries per
+//! cluster" becomes "clusters in the window"). Slow storage grows the
+//! window toward `max_clusters`; fast storage shrinks it to
+//! `min_clusters`, keeping resident memory flat.
+
+use std::time::Duration;
+
+use crate::tree::sizer::{AdaptiveConfig, ClusterSizer, ClusterSizing, Decision, SizerSummary};
+
+/// Read-ahead policy for a [`crate::cache::ClusterStream`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WindowPolicy {
+    /// No read-ahead: each cluster is fetched when the consumer asks
+    /// for it (window pinned at 1 — fetches still coalesce).
+    None,
+    /// Keep `k` clusters in flight ahead of the consumer.
+    Fixed(usize),
+    /// Feedback-sized window per [`WindowConfig`].
+    Adaptive(WindowConfig),
+}
+
+impl Default for WindowPolicy {
+    fn default() -> Self {
+        WindowPolicy::Adaptive(WindowConfig::default())
+    }
+}
+
+impl WindowPolicy {
+    /// The most clusters the policy can ever hold in flight — the cap
+    /// a stream registers with the session read budget.
+    pub fn max_window(&self) -> usize {
+        match *self {
+            WindowPolicy::None => 1,
+            WindowPolicy::Fixed(k) => k.max(1),
+            WindowPolicy::Adaptive(cfg) => cfg.max_clusters.max(cfg.min_clusters.max(1)),
+        }
+    }
+}
+
+/// Tuning for [`WindowPolicy::Adaptive`] — the same knobs as the write
+/// side's [`AdaptiveConfig`], in window-cluster units.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowConfig {
+    /// Hard floor on clusters in flight (>= 1).
+    pub min_clusters: usize,
+    /// Hard ceiling on clusters in flight.
+    pub max_clusters: usize,
+    /// Fetch-stall/decode ratio above which a window votes Grow.
+    pub grow_stall_ratio: f64,
+    /// Ratio below which a wait-free window votes Shrink.
+    pub shrink_stall_ratio: f64,
+    /// Consecutive same-direction windows required before a step.
+    pub hysteresis: u32,
+    /// Initial consumed clusters observed without stepping.
+    pub warmup: u32,
+}
+
+impl Default for WindowConfig {
+    fn default() -> Self {
+        // Storage-latency signals are strong and consistent (a slow
+        // device stalls *every* window), so the read side steps faster
+        // than the write sizer: hysteresis 1, a single warmup window.
+        WindowConfig {
+            min_clusters: 1,
+            max_clusters: 8,
+            grow_stall_ratio: 0.25,
+            shrink_stall_ratio: 0.02,
+            hysteresis: 1,
+            warmup: 1,
+        }
+    }
+}
+
+/// The per-reader controller, wrapping [`ClusterSizer`] verbatim.
+#[derive(Clone, Debug)]
+pub struct WindowController {
+    sizer: ClusterSizer,
+    policy: WindowPolicy,
+}
+
+impl WindowController {
+    pub fn new(policy: WindowPolicy) -> Self {
+        let sizer = match policy {
+            WindowPolicy::None => ClusterSizer::new(1, ClusterSizing::Fixed),
+            WindowPolicy::Fixed(k) => ClusterSizer::new(k.max(1), ClusterSizing::Fixed),
+            WindowPolicy::Adaptive(cfg) => {
+                let min = cfg.min_clusters.max(1);
+                let max = cfg.max_clusters.max(min);
+                ClusterSizer::new(
+                    min,
+                    ClusterSizing::Adaptive(AdaptiveConfig {
+                        min_entries: min,
+                        max_entries: max,
+                        grow_stall_ratio: cfg.grow_stall_ratio,
+                        shrink_stall_ratio: cfg.shrink_stall_ratio,
+                        hysteresis: cfg.hysteresis,
+                        warmup: cfg.warmup,
+                    }),
+                )
+            }
+        };
+        WindowController { sizer, policy }
+    }
+
+    /// Clusters to hold in flight, counting the one the consumer needs
+    /// next.
+    pub fn target(&self) -> usize {
+        self.sizer.target()
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self.policy, WindowPolicy::Adaptive(_))
+    }
+
+    /// The policy's in-flight cap (see [`WindowPolicy::max_window`]).
+    pub fn max_window(&self) -> usize {
+        self.policy.max_window()
+    }
+
+    /// Feed one consumed cluster: *cumulative* consumer fetch-stall,
+    /// *cumulative* decode CPU, and a *cumulative* blocking-wait count
+    /// — the exact observe contract of [`ClusterSizer`]. The built-in
+    /// prefetcher always passes `waits = 0` (it never blocks, and
+    /// admission denials are deliberately not a grow signal — see the
+    /// module docs); the input exists for callers with a genuine
+    /// blocking backpressure signal.
+    pub fn observe(&mut self, fetch_stall: Duration, decode: Duration, waits: u64) {
+        self.sizer.observe(fetch_stall, decode, waits);
+    }
+
+    /// Replayable decision trace (empty for `None`/`Fixed`).
+    pub fn trace(&self) -> &[Decision] {
+        self.sizer.trace()
+    }
+
+    /// Window band + step counts, reported through
+    /// [`crate::cache::PrefetchStats`].
+    pub fn summary(&self) -> SizerSummary {
+        self.sizer.summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn none_and_fixed_never_move() {
+        let mut none = WindowController::new(WindowPolicy::None);
+        let mut fixed = WindowController::new(WindowPolicy::Fixed(4));
+        for i in 1..10u64 {
+            none.observe(ms(50 * i), ms(i), i);
+            fixed.observe(ms(50 * i), ms(i), i);
+        }
+        assert_eq!(none.target(), 1);
+        assert_eq!(none.max_window(), 1);
+        assert_eq!(fixed.target(), 4);
+        assert!(none.trace().is_empty() && fixed.trace().is_empty());
+    }
+
+    #[test]
+    fn sustained_fetch_stall_grows_the_window_to_max() {
+        let cfg = WindowConfig { max_clusters: 8, ..Default::default() };
+        let mut c = WindowController::new(WindowPolicy::Adaptive(cfg));
+        assert_eq!(c.target(), 1, "adaptive starts at the floor");
+        // Slow storage: every consumed cluster stalls far past decode.
+        for i in 1..12u64 {
+            c.observe(ms(20 * i), ms(i), 0);
+        }
+        assert_eq!(c.target(), 8, "stall-dominated reader reads fully ahead");
+        assert_eq!(c.summary().max_entries, 8);
+        assert!(c.summary().grows >= 3, "1 -> 2 -> 4 -> 8");
+    }
+
+    #[test]
+    fn stall_free_reader_shrinks_back_to_min() {
+        let cfg = WindowConfig {
+            min_clusters: 1,
+            max_clusters: 8,
+            hysteresis: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let mut c = WindowController::new(WindowPolicy::Adaptive(cfg));
+        // Grow first...
+        for i in 1..6u64 {
+            c.observe(ms(20 * i), ms(i), 0);
+        }
+        assert!(c.target() > 1);
+        // ...then fast storage: decode keeps accruing, stall stops.
+        let stall = ms(100);
+        for i in 6..16u64 {
+            c.observe(stall, ms(10 * i), 0);
+        }
+        assert_eq!(c.target(), 1, "memory goes flat when storage is fast");
+        assert!(c.summary().shrinks >= 1);
+    }
+
+    /// The `waits` input stays live for callers with a real blocking
+    /// signal (the prefetcher itself always passes 0 — denials must
+    /// not pin the window, see module docs).
+    #[test]
+    fn blocking_waits_input_still_reads_as_pressure() {
+        let cfg = WindowConfig { hysteresis: 1, warmup: 0, ..Default::default() };
+        let mut c = WindowController::new(WindowPolicy::Adaptive(cfg));
+        c.observe(Duration::ZERO, ms(5), 1); // a genuine blocked admission
+        assert_eq!(c.target(), 2, "a waiting window steps like a stalled one");
+        assert!(c.trace()[0].waited);
+    }
+
+    #[test]
+    fn max_window_reflects_the_policy_cap() {
+        assert_eq!(WindowPolicy::None.max_window(), 1);
+        assert_eq!(WindowPolicy::Fixed(0).max_window(), 1);
+        assert_eq!(WindowPolicy::Fixed(5).max_window(), 5);
+        let cfg = WindowConfig { min_clusters: 2, max_clusters: 16, ..Default::default() };
+        assert_eq!(WindowPolicy::Adaptive(cfg).max_window(), 16);
+    }
+}

@@ -282,6 +282,20 @@ pub fn release_writer() {
     apply_writer_limits(*writers);
 }
 
+/// Read-side twin of [`reserve_writer`]: a streaming prefetcher
+/// ([`crate::cache`]) holds pooled scratch for its coalesced fetch
+/// windows, so a session registers each reader against the same
+/// head-room accounting — the pool cannot tell (and need not care)
+/// which direction a registered pipeline moves bytes.
+pub fn reserve_reader() {
+    reserve_writer();
+}
+
+/// Release one reader's reservation (the pair of [`reserve_reader`]).
+pub fn release_reader() {
+    release_writer();
+}
+
 /// Writers currently registered against the shared pool.
 pub fn registered_writers() -> usize {
     *WRITERS.lock().unwrap_or_else(|p| p.into_inner())

@@ -20,7 +20,8 @@
 
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::cache::{PrefetchOptions, PrefetchStats};
+use crate::error::{Error, Result};
 use crate::imt;
 use crate::serial::column::ColumnData;
 use crate::tree::reader::TreeReader;
@@ -44,8 +45,18 @@ pub struct ReadOptions {
     pub branches: Option<Vec<usize>>,
     /// Force serial even when IMT is on (baseline measurements).
     pub force_serial: bool,
-    /// Parallel task decomposition (ignored when serial).
+    /// Parallel task decomposition (ignored when serial or when
+    /// `prefetch` is set).
     pub granularity: Granularity,
+    /// Read through the parallel read-ahead cache ([`crate::cache`]):
+    /// coalesced cluster-window fetches, per-basket decode tasks, and
+    /// a (fixed or adaptive) prefetch window that hides storage
+    /// latency. `None` keeps the direct per-basket paths above;
+    /// ignored under `force_serial`. When both `branches` and the
+    /// prefetch options carry a selection, `branches` wins; with
+    /// `branches: None` the prefetch selection applies (and the
+    /// report's accounting follows it).
+    pub prefetch: Option<PrefetchOptions>,
 }
 
 /// Outcome + accounting of a column read.
@@ -57,19 +68,37 @@ pub struct ReadReport {
     pub stored_bytes: u64,
     pub raw_bytes: u64,
     pub wall: std::time::Duration,
+    /// Prefetcher accounting when the read went through the read-ahead
+    /// cache (`ReadOptions::prefetch`), `None` otherwise.
+    pub prefetch: Option<PrefetchStats>,
 }
 
 impl ReadReport {
-    /// Effective decompressed-data bandwidth.
+    /// Effective decompressed-data bandwidth. Degenerate runs —
+    /// nothing read, or a wall too short to measure — report 0.0
+    /// rather than dividing by zero (the same guard
+    /// `WriteReport::throughput_mbps` carries).
     pub fn throughput_mbps(&self) -> f64 {
+        if self.raw_bytes == 0 || self.wall.is_zero() {
+            return 0.0;
+        }
         self.raw_bytes as f64 / 1e6 / self.wall.as_secs_f64()
     }
 }
 
-/// Basket-granularity parallel read: flatten the selection into
-/// (branch, basket) tasks, decode them all on the pool, then stitch
-/// the results back into per-branch columns in entry order.
-fn read_baskets_parallel(reader: &TreeReader, selection: &[usize]) -> Result<Vec<ColumnData>> {
+/// Basket-granularity read core: flatten the selection into (branch,
+/// basket) tasks, decode them all through `run` (some parallel-map
+/// flavour), then stitch the results back into per-branch columns in
+/// entry order. Shared by the global-IMT path and the explicit-pool
+/// baseline so the reassembly invariant lives in exactly one place.
+fn read_baskets_with(
+    reader: &TreeReader,
+    selection: &[usize],
+    run: impl FnOnce(
+        usize,
+        &(dyn Fn(usize) -> Result<ColumnData> + Sync),
+    ) -> Vec<Result<ColumnData>>,
+) -> Result<Vec<ColumnData>> {
     let meta = reader.meta();
     let mut tasks: Vec<(usize, usize)> = Vec::new();
     for &b in selection {
@@ -77,34 +106,83 @@ fn read_baskets_parallel(reader: &TreeReader, selection: &[usize]) -> Result<Vec
             tasks.push((b, k));
         }
     }
-    let decoded = imt::parallel_map(tasks.len(), |i| {
+    let task = |i: usize| {
         let (b, k) = tasks[i];
         reader.read_basket(b, k)
-    });
+    };
+    let decoded = run(tasks.len(), &task);
     // Ordered reassembly: tasks were emitted branch-major with baskets
     // ascending, so consuming the results sequentially rebuilds each
-    // branch in entry order.
+    // branch in entry order. A missing result means the pool lost a
+    // task — surfaced as a sync error, never a panic mid-reassembly.
     let mut results = decoded.into_iter();
     let mut columns = Vec::with_capacity(selection.len());
     for &b in selection {
         let mut col = ColumnData::new(meta.branches[b].ty);
-        for _ in 0..meta.branches[b].baskets.len() {
-            col.append(&results.next().expect("one result per task")?)?;
+        for k in 0..meta.branches[b].baskets.len() {
+            let part = results.next().ok_or_else(|| {
+                Error::Sync(format!(
+                    "parallel read reassembly lost the result for basket ({b},{k})"
+                ))
+            })??;
+            col.append(&part)?;
         }
         columns.push(col);
     }
     Ok(columns)
 }
 
+/// Basket-granularity parallel read on the global IMT pool (serial
+/// when IMT is off).
+fn read_baskets_parallel(reader: &TreeReader, selection: &[usize]) -> Result<Vec<ColumnData>> {
+    read_baskets_with(reader, selection, |n, f| imt::parallel_map(n, f))
+}
+
+/// Basket-granularity parallel read on an explicit pool — the
+/// hermetic no-prefetch baseline benchmarks measure against, with the
+/// same decomposition and ordered reassembly as [`read_columns`]'s
+/// basket path.
+pub fn read_baskets_on_pool(
+    reader: &TreeReader,
+    selection: &[usize],
+    pool: &crate::imt::Pool,
+) -> Result<Vec<ColumnData>> {
+    read_baskets_with(reader, selection, |n, f| pool.parallel_map(n, &f))
+}
+
 /// Read the selected columns of `reader`, in parallel when IMT is on.
 pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadReport> {
-    let selection: Vec<usize> = match &opts.branches {
-        Some(v) => v.clone(),
-        None => (0..reader.n_branches()).collect(),
+    // Effective selection: the outer `branches` wins, else a selection
+    // carried inside the prefetch options, else every branch — so the
+    // report's accounting always matches what was actually read.
+    let selection: Vec<usize> = match (
+        &opts.branches,
+        opts.prefetch.as_ref().and_then(|p| p.branches.as_ref()),
+    ) {
+        (Some(v), _) => v.clone(),
+        (None, Some(v)) => v.clone(),
+        (None, None) => (0..reader.n_branches()).collect(),
     };
     let t0 = Instant::now();
-    let columns: Vec<ColumnData> = if opts.force_serial || !imt::is_enabled() {
-        selection.iter().map(|&b| reader.read_branch(b)).collect::<Result<_>>()?
+    let mut prefetch_stats: Option<PrefetchStats> = None;
+    let serial = || -> Result<Vec<ColumnData>> {
+        selection.iter().map(|&b| reader.read_branch(b)).collect()
+    };
+    let columns: Vec<ColumnData> = if opts.force_serial {
+        serial()?
+    } else if let Some(pf) = &opts.prefetch {
+        // Stream through the read-ahead cache: coalesced window
+        // fetches + pooled decode tasks (inline while IMT is off, so
+        // the coalescing benefit survives either way).
+        let mut stream = reader.stream(&PrefetchOptions {
+            branches: Some(selection.clone()),
+            ..pf.clone()
+        })?;
+        let cols = stream.read_all_columns()?;
+        prefetch_stats = Some(stream.stats());
+        cols
+    } else if !imt::is_enabled() {
+        serial()?
     } else {
         match opts.granularity {
             Granularity::Basket => read_baskets_parallel(reader, &selection)?,
@@ -129,6 +207,7 @@ pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadRepor
         raw_bytes: raw,
         wall,
         columns,
+        prefetch: prefetch_stats,
     })
 }
 
@@ -233,6 +312,93 @@ mod tests {
         }
     }
 
+    /// Regression (ISSUE 5 satellite): a degenerate read — empty tree
+    /// or an unmeasurably short wall — must report 0.0 MB/s, never a
+    /// division by (near-)zero blowing up to inf/NaN.
+    #[test]
+    fn throughput_guards_zero_wall_and_zero_bytes() {
+        let mk = |raw_bytes: u64, wall: std::time::Duration| ReadReport {
+            columns: Vec::new(),
+            branches_read: 0,
+            entries: 0,
+            stored_bytes: 0,
+            raw_bytes,
+            wall,
+            prefetch: None,
+        };
+        assert_eq!(mk(0, std::time::Duration::from_millis(5)).throughput_mbps(), 0.0);
+        assert_eq!(mk(1_000_000, std::time::Duration::ZERO).throughput_mbps(), 0.0);
+        assert_eq!(mk(0, std::time::Duration::ZERO).throughput_mbps(), 0.0);
+        let ok = mk(2_000_000, std::time::Duration::from_secs(1)).throughput_mbps();
+        assert!((ok - 2.0).abs() < 1e-9, "healthy reads still report, got {ok}");
+    }
+
+    /// The prefetch path must decode identically to the serial
+    /// baseline and report its cache accounting.
+    #[test]
+    fn prefetched_read_matches_serial() {
+        use crate::cache::WindowPolicy;
+        let file = build_with_basket(6, 1500, 128);
+        let reader = TreeReader::open_first(file).unwrap();
+        let serial = read_columns(
+            &reader,
+            &ReadOptions { force_serial: true, ..Default::default() },
+        )
+        .unwrap();
+        for window in [WindowPolicy::None, WindowPolicy::Fixed(4), WindowPolicy::default()]
+        {
+            let rep = read_columns(
+                &reader,
+                &ReadOptions {
+                    prefetch: Some(PrefetchOptions { window, ..Default::default() }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(serial.columns, rep.columns, "window {window:?}");
+            let pf = rep.prefetch.expect("prefetch stats reported");
+            assert_eq!(pf.clusters, 12, "1500 entries / 128 per cluster");
+            assert_eq!(pf.baskets, 72);
+            assert!(
+                pf.device_reads <= pf.baskets / 4,
+                "coalescing must collapse per-basket reads: {} reads for {} baskets",
+                pf.device_reads,
+                pf.baskets
+            );
+        }
+        // Selection order flows through the prefetcher too.
+        let sel = read_columns(
+            &reader,
+            &ReadOptions {
+                branches: Some(vec![5, 0, 2]),
+                prefetch: Some(PrefetchOptions::default()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(sel.columns[0], serial.columns[5]);
+        assert_eq!(sel.columns[1], serial.columns[0]);
+        assert_eq!(sel.columns[2], serial.columns[2]);
+        assert_eq!(sel.branches_read, 3);
+        // A selection carried inside the prefetch options applies when
+        // the outer one is absent — and the accounting follows it.
+        let inner = read_columns(
+            &reader,
+            &ReadOptions {
+                prefetch: Some(PrefetchOptions {
+                    branches: Some(vec![4]),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(inner.branches_read, 1);
+        assert_eq!(inner.columns.len(), 1);
+        assert_eq!(inner.columns[0], serial.columns[4]);
+        assert!(inner.stored_bytes < serial.stored_bytes / 3);
+    }
+
     #[test]
     fn column_selection_reads_subset() {
         let file = build(10, 500);
@@ -255,6 +421,27 @@ mod tests {
         )
         .unwrap();
         assert!(rep.stored_bytes < full.stored_bytes / 3);
+    }
+
+    /// The explicit-pool baseline shares the coordinator's
+    /// decomposition + reassembly: identical output, no global IMT.
+    #[test]
+    fn explicit_pool_basket_read_matches_serial() {
+        let file = build(5, 800);
+        let reader = TreeReader::open_first(file).unwrap();
+        let serial = read_columns(
+            &reader,
+            &ReadOptions { force_serial: true, ..Default::default() },
+        )
+        .unwrap();
+        let pool = crate::imt::Pool::new(3);
+        let selection: Vec<usize> = (0..5).collect();
+        let cols = read_baskets_on_pool(&reader, &selection, &pool).unwrap();
+        assert_eq!(cols, serial.columns);
+        // subset + reordered selection goes through the same core
+        let cols = read_baskets_on_pool(&reader, &[4, 1], &pool).unwrap();
+        assert_eq!(cols[0], serial.columns[4]);
+        assert_eq!(cols[1], serial.columns[1]);
     }
 
     #[test]

@@ -68,13 +68,7 @@ impl FileReader {
         buf.clear();
         buf.resize(b.comp_len as usize, 0);
         self.backend.read_at(b.offset, buf)?;
-        if crc32(buf) != b.crc {
-            return Err(Error::Format(format!(
-                "basket at offset {} failed checksum",
-                b.offset
-            )));
-        }
-        Ok(())
+        verify_basket_crc(b, buf)
     }
 
     /// Fetch the stored bytes of one basket, verifying its CRC.
@@ -83,6 +77,20 @@ impl FileReader {
         self.fetch_basket_into(b, &mut buf)?;
         Ok(buf)
     }
+}
+
+/// Verify stored basket bytes against the directory CRC — the one
+/// integrity check every fetch path applies (direct per-basket
+/// fetches, the bulk coalesced loader, and the prefetcher's window
+/// fetches all funnel through here).
+pub(crate) fn verify_basket_crc(info: &BasketInfo, bytes: &[u8]) -> Result<()> {
+    if crc32(bytes) != info.crc {
+        return Err(Error::Format(format!(
+            "basket at offset {} failed checksum",
+            info.offset
+        )));
+    }
+    Ok(())
 }
 
 #[cfg(test)]

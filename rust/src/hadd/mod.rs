@@ -57,8 +57,16 @@ pub struct HaddReport {
     pub cluster_entries_max: u32,
 }
 
+use crate::cache::plan::DEFAULT_COALESCE_GAP;
+
 /// Load one input file's tree into an in-memory [`TreeBuffer`]
-/// (compressed bytes, CRC-verified).
+/// (compressed bytes, CRC-verified). Fetches are **coalesced**
+/// ([`crate::cache::fetch_baskets_coalesced`]): the writer lays
+/// baskets out back-to-back, so a whole input loads in a handful of
+/// large sequential reads (each capped at
+/// [`crate::cache::plan::MAX_BULK_FETCH`] so scratch stays bounded)
+/// instead of one seeking read per basket — on seek-dominated devices
+/// that is where `hadd`'s input time goes.
 fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
     let reader = FileReader::open(input.clone())?;
     let meta = match tree {
@@ -74,10 +82,18 @@ fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
     };
     let mut buf = TreeBuffer::new(meta.schema.clone());
     buf.entries = meta.entries;
+    let infos: Vec<BasketInfo> =
+        meta.branches.iter().flat_map(|br| br.baskets.iter().copied()).collect();
+    let mut payloads =
+        crate::cache::fetch_baskets_coalesced(input, &infos, DEFAULT_COALESCE_GAP)?
+            .into_iter();
     for (bb, br) in buf.branches.iter_mut().zip(&meta.branches) {
         for k in &br.baskets {
+            let bytes = payloads.next().ok_or_else(|| {
+                Error::Sync("hadd: coalesced fetch lost a basket payload".into())
+            })?;
             bb.baskets.push(BasketPayload {
-                bytes: reader.fetch_basket(k)?,
+                bytes,
                 raw_len: k.raw_len,
                 first_entry: k.first_entry,
                 n_entries: k.n_entries,

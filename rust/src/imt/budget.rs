@@ -1,14 +1,14 @@
-//! Shared in-flight write budget — the admission half of an I/O
+//! Shared in-flight I/O budget — the admission half of an I/O
 //! session ([`crate::session`]).
 //!
 //! Before this existed every [`crate::tree::writer::TreeWriter`]
 //! bounded only its *own* in-flight clusters, so N concurrent writers
 //! could queue N × `max_inflight_clusters` clusters on one IMT pool:
 //! oversubscription Riley & Jones identify as the scaling killer for
-//! many-output-module jobs. A [`WriteBudget`] is one global cap shared
-//! by every writer of a session, with **per-writer fair admission**:
+//! many-output-module jobs. An [`IoBudget`] is one global cap shared
+//! by every member of a session, with **per-member fair admission**:
 //!
-//! * a writer may hold at most `min(its own cap, limit / active)`
+//! * a member may hold at most `min(its own cap, limit / active)`
 //!   clusters in flight (max-min fair share, never below 1), so a
 //!   fat-basket writer cannot monopolise the budget — narrow writers
 //!   always find their share available;
@@ -18,8 +18,18 @@
 //!   [`Pool::wait_until`]) instead of blocking, so a stalled producer
 //!   still contributes CPU to draining the very backlog it waits on.
 //!
-//! Accounting is RAII: [`WriterBudget::acquire`] returns a
-//! [`ClusterGuard`] that the writer threads through every task of the
+//! The budget is direction-agnostic: a "cluster in flight" is any unit
+//! of buffered I/O memory. The write path admits compressing clusters
+//! ([`crate::session::Session::register_writer`]); the read-ahead
+//! cache ([`crate::cache`]) admits prefetched cluster windows through
+//! a second budget instance on the same session
+//! ([`crate::session::Session::register_reader`]), so N streaming
+//! readers cannot oversubscribe the pool or the scratch pool any more
+//! than N writers can. `WriteBudget` / `WriterBudget` remain as
+//! aliases from the budget's write-only era.
+//!
+//! Accounting is RAII: [`MemberBudget::acquire`] returns a
+//! [`ClusterGuard`] that the member threads through every task of the
 //! cluster; the slot is released when the last task drops its guard —
 //! including on panic, since unwinding drops the closure's captures.
 
@@ -28,26 +38,26 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::pool::Pool;
 
-/// Counters of the shared budget, snapshotted by [`WriteBudget::stats`].
+/// Counters of the shared budget, snapshotted by [`IoBudget::stats`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BudgetStats {
     /// Clusters admitted so far (lifetime).
     pub admissions: u64,
     /// Admissions that had to wait for capacity (contention signal).
     pub waits: u64,
-    /// Writers currently registered.
+    /// Members (writers or readers) currently registered.
     pub active_writers: usize,
-    /// Clusters currently in flight across all writers.
+    /// Clusters currently in flight across all members.
     pub in_flight: usize,
     /// The global cap.
     pub limit: usize,
 }
 
 struct BudgetInner {
-    /// Global cap on clusters in flight across all writers.
+    /// Global cap on clusters in flight across all members.
     limit: usize,
     total: AtomicUsize,
-    /// Registered writers (drives each writer's fair share).
+    /// Registered members (drives each member's fair share).
     active: AtomicUsize,
     /// Pool whose jobs admission waiters help execute and whose condvar
     /// guard drops notify; `None` falls back to the global IMT pool at
@@ -66,7 +76,7 @@ impl BudgetInner {
     }
 
     /// Wake admission waiters after capacity changed (guard dropped,
-    /// speculative admission rolled back, writer deregistered).
+    /// speculative admission rolled back, member deregistered).
     fn notify(&self) {
         if let Some(p) = self.pool() {
             p.notify_waiters();
@@ -76,17 +86,21 @@ impl BudgetInner {
     }
 }
 
-/// The session-wide shared budget. Writers join via
-/// [`WriteBudget::register`].
-pub struct WriteBudget {
+/// The session-wide shared budget. Members join via
+/// [`IoBudget::register`].
+pub struct IoBudget {
     inner: Arc<BudgetInner>,
 }
 
-impl WriteBudget {
+/// The budget under its original write-side name ([`IoBudget`] is the
+/// direction-neutral one).
+pub type WriteBudget = IoBudget;
+
+impl IoBudget {
     /// Budget capped at `limit` clusters in flight (min 1). Waiters
     /// help execute on `pool` when given, else on the global IMT pool.
     pub fn new(limit: usize, pool: Option<Arc<Pool>>) -> Self {
-        WriteBudget {
+        IoBudget {
             inner: Arc::new(BudgetInner {
                 limit: limit.max(1),
                 total: AtomicUsize::new(0),
@@ -100,14 +114,15 @@ impl WriteBudget {
         }
     }
 
-    /// Register one writer. `cap` is the writer's own in-flight limit
-    /// (its `max_inflight_clusters`); effective admission is the
-    /// tighter of `cap` and the current fair share.
-    pub fn register(&self, cap: usize) -> WriterBudget {
+    /// Register one member. `cap` is the member's own in-flight limit
+    /// (a writer's `max_inflight_clusters`, a prefetcher's maximum
+    /// window); effective admission is the tighter of `cap` and the
+    /// current fair share.
+    pub fn register(&self, cap: usize) -> MemberBudget {
         self.inner.active.fetch_add(1, Ordering::SeqCst);
-        WriterBudget {
+        MemberBudget {
             budget: self.inner.clone(),
-            state: Arc::new(WriterState::default()),
+            state: Arc::new(MemberState::default()),
             cap: cap.max(1),
         }
     }
@@ -117,7 +132,7 @@ impl WriteBudget {
         self.inner.limit
     }
 
-    /// Clusters currently in flight across all writers.
+    /// Clusters currently in flight across all members.
     pub fn in_flight(&self) -> usize {
         self.inner.total.load(Ordering::SeqCst)
     }
@@ -133,50 +148,55 @@ impl WriteBudget {
     }
 }
 
-/// Per-writer in-flight accounting.
+/// Per-member in-flight accounting.
 #[derive(Default)]
-struct WriterState {
+struct MemberState {
     inflight: AtomicUsize,
-    /// Highest concurrent in-flight count this writer ever reached —
+    /// Highest concurrent in-flight count this member ever reached —
     /// the fairness invariant tests assert it never exceeds the share.
     high_water: AtomicUsize,
-    /// Admissions of *this* writer that had to wait for capacity —
-    /// the per-writer admission-pressure signal the adaptive cluster
-    /// sizer ([`crate::tree::sizer`]) feeds on.
+    /// Admissions of *this* member that had to wait for capacity —
+    /// the per-member admission-pressure signal the adaptive cluster
+    /// sizer ([`crate::tree::sizer`]) and the prefetch window
+    /// controller ([`crate::cache::window`]) feed on.
     waits: AtomicU64,
 }
 
-/// One writer's handle on the shared budget. Dropping it deregisters
-/// the writer (growing the remaining writers' fair share); guards it
+/// One member's handle on the shared budget. Dropping it deregisters
+/// the member (growing the remaining members' fair share); guards it
 /// issued stay valid and release capacity as their clusters complete.
-pub struct WriterBudget {
+pub struct MemberBudget {
     budget: Arc<BudgetInner>,
-    state: Arc<WriterState>,
+    state: Arc<MemberState>,
     cap: usize,
 }
 
-impl WriterBudget {
-    /// This writer's current fair share of the budget:
-    /// `max(1, limit / active_writers)`, additionally clamped to the
-    /// writer's own cap.
+/// The member handle under its original write-side name
+/// ([`MemberBudget`] is the direction-neutral one).
+pub type WriterBudget = MemberBudget;
+
+impl MemberBudget {
+    /// This member's current fair share of the budget:
+    /// `max(1, limit / active_members)`, additionally clamped to the
+    /// member's own cap.
     pub fn fair_share(&self) -> usize {
         let active = self.budget.active.load(Ordering::SeqCst).max(1);
         // `cap` is >= 1 by construction, so the clamp bounds are sane.
         (self.budget.limit / active).clamp(1, self.cap)
     }
 
-    /// Highest in-flight count this writer ever held.
+    /// Highest in-flight count this member ever held.
     pub fn high_water(&self) -> usize {
         self.state.high_water.load(Ordering::SeqCst)
     }
 
-    /// Clusters this writer currently has in flight.
+    /// Clusters this member currently has in flight.
     pub fn in_flight(&self) -> usize {
         self.state.inflight.load(Ordering::SeqCst)
     }
 
-    /// Admissions of this writer that had to wait for capacity (the
-    /// per-writer slice of [`BudgetStats::waits`]).
+    /// Admissions of this member that had to wait for capacity (the
+    /// per-member slice of [`BudgetStats::waits`]).
     pub fn waits(&self) -> u64 {
         self.state.waits.load(Ordering::Relaxed)
     }
@@ -204,13 +224,14 @@ impl WriterBudget {
         Some(ClusterGuard { budget: self.budget.clone(), state: self.state.clone() })
     }
 
-    /// Non-blocking admission (tests, opportunistic flushes).
+    /// Non-blocking admission (tests, opportunistic flushes, and the
+    /// prefetcher's read-ahead beyond the cluster it needs next).
     pub fn try_acquire(&self) -> Option<ClusterGuard> {
         self.try_admit()
     }
 
     /// Admit one cluster, blocking (and helping execute pool jobs)
-    /// until the writer is within both the global budget and its fair
+    /// until the member is within both the global budget and its fair
     /// share. Time spent here is the producer's backpressure stall.
     pub fn acquire(&self) -> ClusterGuard {
         if let Some(g) = self.try_admit() {
@@ -223,7 +244,7 @@ impl WriterBudget {
                 Some(p) => p.wait_until(&|| self.admittable()),
                 None => {
                     // No pool anywhere: tasks run inline, so capacity
-                    // can only be held by *other threads'* writers.
+                    // can only be held by *other threads'* members.
                     // Park briefly on the budget condvar (guard drops
                     // notify it) and re-check.
                     let g = self.budget.idle_mx.lock().unwrap_or_else(|p| p.into_inner());
@@ -243,7 +264,7 @@ impl WriterBudget {
     }
 }
 
-impl Drop for WriterBudget {
+impl Drop for MemberBudget {
     fn drop(&mut self) {
         self.budget.active.fetch_sub(1, Ordering::SeqCst);
         // The survivors' fair share just grew: let waiters re-check.
@@ -251,12 +272,12 @@ impl Drop for WriterBudget {
     }
 }
 
-/// RAII admission slot for one in-flight cluster. The writer wraps it
+/// RAII admission slot for one in-flight cluster. The member wraps it
 /// in an `Arc` shared by every task of the cluster; the last task to
 /// finish (or unwind) releases the slot and wakes admission waiters.
 pub struct ClusterGuard {
     budget: Arc<BudgetInner>,
-    state: Arc<WriterState>,
+    state: Arc<MemberState>,
 }
 
 impl Drop for ClusterGuard {
@@ -271,9 +292,9 @@ impl Drop for ClusterGuard {
 mod tests {
     use super::*;
 
-    /// Deterministic fairness invariants, no timing involved: a writer
+    /// Deterministic fairness invariants, no timing involved: a member
     /// cannot exceed its fair share while others are registered, and
-    /// the freed capacity of a deregistered writer flows to survivors.
+    /// the freed capacity of a deregistered member flows to survivors.
     #[test]
     fn fair_share_caps_each_writer() {
         let budget = WriteBudget::new(4, None);
@@ -434,5 +455,22 @@ mod tests {
             .expect("waiter must wake when the unwinding holder drops its guard");
         waiter.join().unwrap();
         assert_eq!(budget.in_flight(), 0, "no slot may leak across the unwind");
+    }
+
+    /// The same budget type serves the read side: two prefetching
+    /// readers split the read budget max-min fair, exactly like
+    /// writers do.
+    #[test]
+    fn readers_share_a_read_budget_fairly() {
+        let budget = IoBudget::new(4, None);
+        let r1 = budget.register(8);
+        let r2 = budget.register(8);
+        assert_eq!(r1.fair_share(), 2);
+        let g1 = r1.try_acquire().expect("window slot 1");
+        let g2 = r1.try_acquire().expect("window slot 2");
+        assert!(r1.try_acquire().is_none(), "reader capped at its share");
+        let g3 = r2.try_acquire().expect("second reader's share is intact");
+        drop((g1, g2, g3));
+        assert_eq!(budget.in_flight(), 0);
     }
 }

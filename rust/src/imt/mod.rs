@@ -29,15 +29,17 @@
 //! filling, and join — or apply backpressure — whenever it likes.
 
 //!
-//! [`WriteBudget`] adds the session dimension: one global in-flight
-//! cluster cap shared by many writers, with per-writer fair admission,
-//! so N pipelined writers on one pool stay within one memory bound and
-//! none of them can starve the others (see [`crate::session`]).
+//! [`IoBudget`] adds the session dimension: one global in-flight
+//! cluster cap shared by many members, with per-member fair admission,
+//! so N pipelined writers — or N prefetching readers — on one pool
+//! stay within one memory bound and none of them can starve the
+//! others (see [`crate::session`]; `WriteBudget` / `WriterBudget`
+//! remain as write-era aliases).
 
 mod budget;
 mod pool;
 
-pub use budget::{BudgetStats, ClusterGuard, WriteBudget, WriterBudget};
+pub use budget::{BudgetStats, ClusterGuard, IoBudget, MemberBudget, WriteBudget, WriterBudget};
 pub use pool::{Pool, Scope, TaskGroup};
 
 use std::sync::atomic::{AtomicUsize, Ordering};

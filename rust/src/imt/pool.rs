@@ -503,6 +503,15 @@ impl TaskGroup {
         g.clone()
     }
 
+    /// The pool this group is currently bound to: `None` before the
+    /// first spawn binds it, or while IMT is off (jobs ran inline).
+    /// Waiters that poll group-side state (the prefetch consumer) park
+    /// on *this* pool — the one the jobs actually run on — rather than
+    /// whatever the global pool happens to be right now.
+    pub(crate) fn bound_pool(&self) -> Option<Arc<Pool>> {
+        self.inner.pool.lock().unwrap().clone()
+    }
+
     /// Enqueue one job; returns immediately when a pool is bound, runs
     /// the job inline otherwise.
     pub fn spawn<F>(&self, f: F)

@@ -45,13 +45,22 @@
 //!   splitting and interleaved processing, and parallel column
 //!   writing.
 //! * [`session`] — the shared I/O session: one pool handle, one
-//!   completion domain and one globally-bounded in-flight budget with
-//!   per-writer fair admission, shared by every `FileWriter` /
-//!   `TreeWriter` / merger a job opens (the multi-tree, multi-file
-//!   write coordinator).
+//!   completion domain and globally-bounded in-flight budgets (write
+//!   clusters *and* read-ahead windows) with per-member fair
+//!   admission, shared by every `FileWriter` / `TreeWriter` / merger /
+//!   `ClusterStream` a job opens (the multi-tree, multi-file I/O
+//!   coordinator).
+//! * [`cache`] — the parallel read-ahead cache (TTreeCache + parallel
+//!   unzip analogue): a cluster prefetcher that walks the cluster list
+//!   ahead of the consumer, coalesces each window's baskets into one
+//!   vectored `read_at`, decodes per basket on the IMT pool, and
+//!   streams decoded clusters in order through `TreeReader::stream` —
+//!   with the prefetch window sized adaptively by the write sizer's
+//!   controller (fetch-stall vs decode throughput).
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 
+pub mod cache;
 pub mod compress;
 pub mod coordinator;
 pub mod error;

@@ -15,7 +15,7 @@
 //! * **one completion domain** — task groups are minted by
 //!   [`Session::task_group`] and tracked, so [`Session::drain`] can
 //!   join every writer's outstanding work at once;
-//! * **one in-flight budget** — a [`imt::WriteBudget`] caps clusters
+//! * **one in-flight budget** — a [`imt::IoBudget`] caps clusters
 //!   in flight *across all writers* with per-writer max-min fair
 //!   admission (`max(1, limit / active_writers)`, clamped by each
 //!   writer's own `max_inflight_clusters`), so a fat-basket writer
@@ -39,7 +39,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::compress;
 use crate::error::Result;
-use crate::imt::{BudgetStats, ClusterGuard, Pool, TaskGroup, WriteBudget, WriterBudget};
+use crate::imt::{BudgetStats, ClusterGuard, IoBudget, MemberBudget, Pool, TaskGroup};
 
 /// Session tuning.
 #[derive(Clone, Debug)]
@@ -49,11 +49,17 @@ pub struct SessionConfig {
     /// outrun the compressors block — helping the pool — and account
     /// the wait as stall).
     pub max_inflight_clusters: usize,
+    /// Global cap on prefetched cluster windows in flight across every
+    /// streaming reader attached to the session ([`crate::cache`]):
+    /// fetched-or-decoded clusters not yet consumed. Bounds read-ahead
+    /// memory the same way `max_inflight_clusters` bounds write-side
+    /// buffering; readers split it max-min fair.
+    pub max_inflight_read_windows: usize,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { max_inflight_clusters: 16 }
+        SessionConfig { max_inflight_clusters: 16, max_inflight_read_windows: 16 }
     }
 }
 
@@ -62,7 +68,19 @@ impl SessionConfig {
     /// clusters each — the fair share works out to `per_writer` when
     /// all of them are attached.
     pub fn for_writers(writers: usize, per_writer: usize) -> Self {
-        SessionConfig { max_inflight_clusters: (writers * per_writer).max(1) }
+        SessionConfig {
+            max_inflight_clusters: (writers * per_writer).max(1),
+            ..Default::default()
+        }
+    }
+
+    /// Read budget sized for `readers` concurrent streaming readers at
+    /// `per_reader` prefetched clusters each.
+    pub fn for_readers(readers: usize, per_reader: usize) -> Self {
+        SessionConfig {
+            max_inflight_read_windows: (readers * per_reader).max(1),
+            ..Default::default()
+        }
     }
 }
 
@@ -81,6 +99,19 @@ pub struct SessionStats {
     pub admissions: u64,
     /// Admissions that had to wait for capacity.
     pub admission_waits: u64,
+    /// Streaming readers ever registered on this session.
+    pub readers_opened: u64,
+    /// Streaming readers currently registered.
+    pub active_readers: usize,
+    /// Prefetched cluster windows currently in flight across readers.
+    pub in_flight_read_windows: usize,
+    /// The global read-ahead cap.
+    pub read_budget_limit: usize,
+    /// Read-side admissions that *blocked* for capacity (always 0 for
+    /// the built-in prefetcher, which degrades instead of blocking —
+    /// per-stream denial counts live in
+    /// [`crate::cache::PrefetchStats::admission_denials`]).
+    pub read_admission_waits: u64,
 }
 
 struct SessionInner {
@@ -88,10 +119,14 @@ struct SessionInner {
     /// Explicit pool, or `None` to bind lazily to the global IMT pool
     /// exactly the way a bare `TaskGroup::new()` does.
     explicit_pool: Option<Arc<Pool>>,
-    budget: WriteBudget,
+    budget: IoBudget,
+    /// Read-ahead twin of `budget`: prefetched cluster windows in
+    /// flight across every streaming reader of the session.
+    read_budget: IoBudget,
     /// Task groups minted for writers/helpers, joined by [`Session::drain`].
     groups: Mutex<Vec<TaskGroup>>,
     writers_opened: AtomicU64,
+    readers_opened: AtomicU64,
 }
 
 /// Cloneable handle on one shared I/O session.
@@ -117,18 +152,24 @@ impl Session {
     /// itself in when no shared session is given, preserving the old
     /// per-writer `max_inflight_clusters` semantics.
     pub fn solo(max_inflight_clusters: usize) -> Self {
-        Session::new(SessionConfig { max_inflight_clusters: max_inflight_clusters.max(1) })
+        Session::new(SessionConfig {
+            max_inflight_clusters: max_inflight_clusters.max(1),
+            ..Default::default()
+        })
     }
 
     fn build(pool: Option<Arc<Pool>>, config: SessionConfig) -> Self {
-        let budget = WriteBudget::new(config.max_inflight_clusters, pool.clone());
+        let budget = IoBudget::new(config.max_inflight_clusters, pool.clone());
+        let read_budget = IoBudget::new(config.max_inflight_read_windows, pool.clone());
         Session {
             inner: Arc::new(SessionInner {
                 config,
                 explicit_pool: pool,
                 budget,
+                read_budget,
                 groups: Mutex::new(Vec::new()),
                 writers_opened: AtomicU64::new(0),
+                readers_opened: AtomicU64::new(0),
             }),
         }
     }
@@ -174,9 +215,24 @@ impl Session {
         WriterRegistration { budget: self.inner.budget.register(cap) }
     }
 
+    /// Register one streaming reader: it joins the shared *read*
+    /// budget (with `cap` = its own maximum prefetch window) and
+    /// reserves scratch-pool head-room — coalesced fetch windows draw
+    /// their buffers from the same shared pool the writers use.
+    pub fn register_reader(&self, cap: usize) -> ReaderRegistration {
+        self.inner.readers_opened.fetch_add(1, Ordering::Relaxed);
+        compress::pool::reserve_reader();
+        ReaderRegistration { budget: self.inner.read_budget.register(cap) }
+    }
+
     /// The shared budget (diagnostics / tests).
-    pub fn budget(&self) -> &WriteBudget {
+    pub fn budget(&self) -> &IoBudget {
         &self.inner.budget
+    }
+
+    /// The shared read-ahead budget (diagnostics / tests).
+    pub fn read_budget(&self) -> &IoBudget {
+        &self.inner.read_budget
     }
 
     /// Join every task group minted by this session; the first
@@ -194,6 +250,7 @@ impl Session {
 
     pub fn stats(&self) -> SessionStats {
         let b: BudgetStats = self.inner.budget.stats();
+        let r: BudgetStats = self.inner.read_budget.stats();
         SessionStats {
             writers_opened: self.inner.writers_opened.load(Ordering::Relaxed),
             active_writers: b.active_writers,
@@ -201,6 +258,11 @@ impl Session {
             budget_limit: b.limit,
             admissions: b.admissions,
             admission_waits: b.waits,
+            readers_opened: self.inner.readers_opened.load(Ordering::Relaxed),
+            active_readers: r.active_writers,
+            in_flight_read_windows: r.in_flight,
+            read_budget_limit: r.limit,
+            read_admission_waits: r.waits,
         }
     }
 }
@@ -208,12 +270,12 @@ impl Session {
 /// One writer's membership in a session: budget admission plus the
 /// scratch-pool reservation, both released on drop.
 pub struct WriterRegistration {
-    budget: WriterBudget,
+    budget: MemberBudget,
 }
 
 impl WriterRegistration {
     /// Admit one cluster (blocking, helping the pool). See
-    /// [`WriterBudget::acquire`].
+    /// [`MemberBudget::acquire`].
     pub fn acquire(&self) -> ClusterGuard {
         self.budget.acquire()
     }
@@ -244,6 +306,59 @@ impl WriterRegistration {
 impl Drop for WriterRegistration {
     fn drop(&mut self) {
         compress::pool::release_writer();
+    }
+}
+
+/// One streaming reader's membership in a session: read-budget
+/// admission plus the scratch-pool reservation, both released on drop.
+/// Handed to a [`crate::cache::ClusterStream`] by
+/// [`Session::register_reader`].
+pub struct ReaderRegistration {
+    budget: MemberBudget,
+}
+
+impl ReaderRegistration {
+    /// Admit one prefetch window slot (blocking, helping the pool).
+    /// See [`MemberBudget::acquire`]. The built-in prefetcher never
+    /// calls this — prefetched slots are freed only by their own
+    /// consumer, so blocking admission could deadlock a thread on its
+    /// sibling streams; it is kept for callers that manage their own
+    /// window lifecycle.
+    pub fn acquire(&self) -> ClusterGuard {
+        self.budget.acquire()
+    }
+
+    /// Non-blocking admission — what the prefetcher uses throughout:
+    /// a full budget degrades the read-ahead window (and lets the
+    /// consumer-demanded head window proceed unbudgeted) instead of
+    /// blocking progress.
+    pub fn try_acquire(&self) -> Option<ClusterGuard> {
+        self.budget.try_acquire()
+    }
+
+    /// Highest in-flight window count this reader ever held.
+    pub fn high_water(&self) -> usize {
+        self.budget.high_water()
+    }
+
+    /// The reader's current fair share of the session read budget.
+    pub fn fair_share(&self) -> usize {
+        self.budget.fair_share()
+    }
+
+    /// Admissions of this reader that had to *block* for capacity.
+    /// Always 0 for the built-in prefetcher (it never blocks — its
+    /// window controller is fed the stream's own denial counter
+    /// instead, see [`crate::cache::PrefetchStats`]); meaningful only
+    /// for callers using [`ReaderRegistration::acquire`] directly.
+    pub fn waits(&self) -> u64 {
+        self.budget.waits()
+    }
+}
+
+impl Drop for ReaderRegistration {
+    fn drop(&mut self) {
+        compress::pool::release_reader();
     }
 }
 
@@ -294,6 +409,29 @@ mod tests {
         }
         s.drain().unwrap();
         assert_eq!(hits.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    fn readers_attach_to_the_read_budget() {
+        let s = Session::new(SessionConfig::for_readers(2, 2));
+        assert_eq!(s.read_budget().limit(), 4);
+        let r1 = s.register_reader(8);
+        let r2 = s.register_reader(8);
+        assert_eq!(r1.fair_share(), 2);
+        let g1 = r1.try_acquire().expect("window slot");
+        let g2 = r1.try_acquire().expect("fair share of 2");
+        assert!(r1.try_acquire().is_none(), "reader capped at its share");
+        assert!(r2.try_acquire().is_some(), "other reader unaffected");
+        assert_eq!(s.stats().active_readers, 2);
+        assert_eq!(s.stats().in_flight_read_windows, 2);
+        // read admissions never touch the write budget
+        assert_eq!(s.stats().in_flight_clusters, 0);
+        drop((g1, g2));
+        drop((r1, r2));
+        let st = s.stats();
+        assert_eq!(st.active_readers, 0);
+        assert_eq!(st.in_flight_read_windows, 0);
+        assert_eq!(st.readers_opened, 2);
     }
 
     #[test]

@@ -90,16 +90,55 @@ pub struct SimDevice {
     model: DeviceModel,
     time_scale: f64,
     queue: Mutex<QueueState>,
-    stats: Mutex<SimStats>,
+    stats: Mutex<DeviceStats>,
 }
 
-/// Operation counters for experiment reporting.
+/// Operation counters for experiment reporting (the historical
+/// aggregate view; [`SimDevice::device_stats`] splits directions and
+/// adds queueing).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimStats {
     pub bytes_written: u64,
     pub bytes_read: u64,
     pub ops: u64,
     pub seeks: u64,
+}
+
+/// Per-device fetch counters ([`SimDevice::device_stats`]): reads and
+/// writes split out, bytes per direction, seeks, and accumulated
+/// queue wait — enough for the read-prefetch experiment to report the
+/// **coalescing factor** (device reads issued before vs after basket
+/// coalescing) and how backed up the single-issue queue ran.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceStats {
+    /// Read operations issued.
+    pub reads: u64,
+    /// Write operations issued.
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Ops that paid a seek (non-sequential with their predecessor).
+    pub seeks: u64,
+    /// Scaled wall time operations spent queued behind the device's
+    /// single-issue queue before their own service began (zero in
+    /// pure accounting mode, `time_scale` = 0).
+    pub queue_wait: Duration,
+}
+
+impl DeviceStats {
+    /// Counters accumulated since the `earlier` snapshot — how
+    /// experiments isolate one phase (e.g. the read sweep after the
+    /// file was written).
+    pub fn since(&self, earlier: &DeviceStats) -> DeviceStats {
+        DeviceStats {
+            reads: self.reads - earlier.reads,
+            writes: self.writes - earlier.writes,
+            bytes_read: self.bytes_read - earlier.bytes_read,
+            bytes_written: self.bytes_written - earlier.bytes_written,
+            seeks: self.seeks - earlier.seeks,
+            queue_wait: self.queue_wait.saturating_sub(earlier.queue_wait),
+        }
+    }
 }
 
 impl SimDevice {
@@ -115,7 +154,7 @@ impl SimDevice {
                 last_end: u64::MAX,
                 busy: Duration::ZERO,
             }),
-            stats: Mutex::new(SimStats::default()),
+            stats: Mutex::new(DeviceStats::default()),
         }
     }
 
@@ -123,7 +162,20 @@ impl SimDevice {
         &self.model
     }
 
+    /// Aggregate op counters (the historical view).
     pub fn stats(&self) -> SimStats {
+        let d = self.device_stats();
+        SimStats {
+            bytes_written: d.bytes_written,
+            bytes_read: d.bytes_read,
+            ops: d.reads + d.writes,
+            seeks: d.seeks,
+        }
+    }
+
+    /// Direction-split fetch counters incl. queue wait (see
+    /// [`DeviceStats`]).
+    pub fn device_stats(&self) -> DeviceStats {
         *self.stats.lock().unwrap()
     }
 
@@ -140,16 +192,6 @@ impl SimDevice {
             let cost = seek + transfer;
             q.last_end = off + len as u64;
             q.busy += cost;
-            let mut st = self.stats.lock().unwrap();
-            st.ops += 1;
-            if seek > Duration::ZERO {
-                st.seeks += 1;
-            }
-            if is_write {
-                st.bytes_written += len as u64;
-            } else {
-                st.bytes_read += len as u64;
-            }
             // Single-issue queue: ops serialise on the device.
             let scaled = cost.mul_f64(self.time_scale.max(0.0));
             let now = Instant::now();
@@ -159,6 +201,18 @@ impl SimDevice {
             };
             let deadline = start + scaled;
             q.available_at = Some(deadline);
+            let mut st = self.stats.lock().unwrap();
+            if seek > Duration::ZERO {
+                st.seeks += 1;
+            }
+            if is_write {
+                st.writes += 1;
+                st.bytes_written += len as u64;
+            } else {
+                st.reads += 1;
+                st.bytes_read += len as u64;
+            }
+            st.queue_wait += start.saturating_duration_since(now);
             (scaled, deadline)
         };
         if self.time_scale > 0.0 {
@@ -235,6 +289,63 @@ mod tests {
         let r = hdd.busy_time().as_secs_f64() / nvme.busy_time().as_secs_f64();
         // 1400/150 ≈ 9.3, seek adds a bit on top for the hdd
         assert!(r > 8.0 && r < 11.0, "ratio {r}");
+    }
+
+    #[test]
+    fn device_stats_split_directions_and_diff_snapshots() {
+        let d = SimDevice::new(DeviceModel::ssd(), 0.0);
+        d.write_at(0, &[0u8; 100]).unwrap();
+        let mut buf = [0u8; 50];
+        d.read_at(0, &mut buf).unwrap();
+        d.read_at(50, &mut buf).unwrap();
+        let st = d.device_stats();
+        assert_eq!((st.writes, st.reads), (1, 2));
+        assert_eq!((st.bytes_written, st.bytes_read), (100, 100));
+        // the legacy aggregate view stays consistent
+        let legacy = d.stats();
+        assert_eq!(legacy.ops, 3);
+        assert_eq!(legacy.bytes_read, 100);
+        // phase isolation via snapshots
+        let before = d.device_stats();
+        d.read_at(0, &mut buf).unwrap();
+        let delta = d.device_stats().since(&before);
+        assert_eq!((delta.reads, delta.writes, delta.bytes_read), (1, 0, 50));
+        assert_eq!(delta.seeks, 1, "rewind to offset 0 seeks");
+    }
+
+    #[test]
+    fn queue_wait_accumulates_when_ops_pile_up() {
+        use std::sync::{Arc, Barrier};
+        // Four writers released together: the single-issue queue
+        // serialises their ~15 ms ops (1 MB at 150 MB/s + 8 ms seek),
+        // so at least one arrival lands while the device is busy and
+        // its wait is accounted. Spuriously passing zero wait would
+        // require *every* later thread to be descheduled past the
+        // whole backlog ahead of it (>= 15/30/45 ms independently) —
+        // far beyond ordinary CI jitter.
+        let d = Arc::new(SimDevice::new(DeviceModel::hdd(), 1.0));
+        let barrier = Arc::new(Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let d = d.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let buf = vec![0u8; 1_000_000];
+                    barrier.wait();
+                    d.write_at(i * 50_000_000, &buf).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = d.device_stats();
+        assert_eq!(st.writes, 4);
+        assert!(
+            st.queue_wait >= Duration::from_millis(1),
+            "later ops must have queued: waited only {:?}",
+            st.queue_wait
+        );
     }
 
     #[test]

@@ -8,12 +8,14 @@
 
 use std::sync::Arc;
 
+use crate::cache::{ClusterStream, PrefetchOptions};
 use crate::compress;
 use crate::error::{Error, Result};
 use crate::format::directory::TreeMeta;
 use crate::format::reader::FileReader;
 use crate::serial::column::ColumnData;
 use crate::serial::value::Row;
+use crate::session::Session;
 
 /// Read-side handle on one tree of an open file.
 pub struct TreeReader {
@@ -46,6 +48,30 @@ impl TreeReader {
         &self.meta
     }
 
+    /// The open file this reader reads from.
+    pub fn file(&self) -> &Arc<FileReader> {
+        &self.file
+    }
+
+    /// Open a prefetching [`ClusterStream`] over this tree: coalesced
+    /// window fetches ahead of the consumer, per-basket decode on the
+    /// IMT pool, decoded clusters yielded strictly in order (see
+    /// [`crate::cache`]). Runs under a private single-reader session.
+    pub fn stream(&self, opts: &PrefetchOptions) -> Result<ClusterStream> {
+        ClusterStream::open(self, opts)
+    }
+
+    /// As [`TreeReader::stream`], attached to a shared [`Session`]:
+    /// fetch/decode tasks join the session's completion domain and
+    /// read-ahead admission draws from its shared read budget.
+    pub fn stream_in_session(
+        &self,
+        opts: &PrefetchOptions,
+        session: &Session,
+    ) -> Result<ClusterStream> {
+        ClusterStream::open_in_session(self, opts, session)
+    }
+
     pub fn entries(&self) -> u64 {
         self.meta.entries
     }
@@ -64,17 +90,8 @@ impl TreeReader {
     /// decompression scratch comes from [`compress::pool`], so this
     /// allocates nothing per basket beyond the decoded column itself.
     pub fn decode(&self, b: usize, k: usize, raw: &[u8]) -> Result<ColumnData> {
-        let info = &self.meta.branches[b].baskets[k];
-        let mut bytes = compress::pool::get(info.raw_len as usize);
-        compress::decompress_into(raw, &mut bytes)?;
-        if bytes.len() != info.raw_len as usize {
-            return Err(Error::Format(format!(
-                "basket ({b},{k}): decompressed to {} bytes, expected {}",
-                bytes.len(),
-                info.raw_len
-            )));
-        }
-        ColumnData::decode(self.meta.branches[b].ty, &bytes, info.n_entries as usize)
+        let branch = &self.meta.branches[b];
+        decode_basket_bytes(branch.ty, &branch.baskets[k], raw)
     }
 
     /// Fetch + decompress + deserialise one basket — the unit of the
@@ -107,6 +124,28 @@ impl TreeReader {
     pub fn rows(&self, cols: &[ColumnData]) -> Result<Vec<Row>> {
         crate::serial::streamer::Streamer::new(self.meta.schema.clone()).unsplit(cols)
     }
+}
+
+/// Decompress + deserialise one basket's stored bytes into a column —
+/// the single decode-and-verify invariant, shared by
+/// [`TreeReader::decode`] and the prefetcher's per-basket decode
+/// tasks ([`crate::cache`]). The decompression scratch is pooled.
+pub(crate) fn decode_basket_bytes(
+    ty: crate::serial::schema::ColumnType,
+    info: &crate::format::directory::BasketInfo,
+    raw: &[u8],
+) -> Result<ColumnData> {
+    let mut bytes = compress::pool::get(info.raw_len as usize);
+    compress::decompress_into(raw, &mut bytes)?;
+    if bytes.len() != info.raw_len as usize {
+        return Err(Error::Format(format!(
+            "basket at offset {}: decompressed to {} bytes, expected {}",
+            info.offset,
+            bytes.len(),
+            info.raw_len
+        )));
+    }
+    ColumnData::decode(ty, &bytes, info.n_entries as usize)
 }
 
 #[cfg(test)]

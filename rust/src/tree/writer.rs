@@ -262,6 +262,7 @@ impl<S: BasketSink> TreeWriter<S> {
             pool,
             crate::session::SessionConfig {
                 max_inflight_clusters: self.config.max_inflight_clusters.max(1),
+                ..Default::default()
             },
         );
         self.group = session.task_group();

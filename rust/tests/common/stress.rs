@@ -19,6 +19,7 @@
 
 #![allow(dead_code)]
 
+use rootio_par::cache::{WindowConfig, WindowPolicy};
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::serial::schema::Schema;
 use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
@@ -47,6 +48,15 @@ pub struct StressPlan {
     pub n_rows: usize,
     /// Random typed schema (1..=4 branches — narrow trees).
     pub schema: Schema,
+    /// Read-side prefetch window policy drawn per seed (ISSUE 5): the
+    /// streaming re-read of every written file runs under this —
+    /// on-demand, fixed, or an adaptive band with randomised
+    /// hysteresis/warmup — so window resizing is perturbed alongside
+    /// the write-side schedule.
+    pub read_window: WindowPolicy,
+    /// Stored-range gap the prefetcher bridges when coalescing (0
+    /// forces strict adjacency).
+    pub coalesce_gap: u32,
 }
 
 impl StressPlan {
@@ -71,6 +81,17 @@ impl StressPlan {
         });
         // Uneven tail by construction: a prime-ish row count.
         let n_rows = g.range(40, 400) * 2 + 1;
+        let read_window = match g.range(0, 3) {
+            0 => WindowPolicy::None,
+            1 => WindowPolicy::Fixed(g.range(1, 9)),
+            _ => WindowPolicy::Adaptive(WindowConfig {
+                min_clusters: g.range(1, 3),
+                max_clusters: g.range(3, 12),
+                hysteresis: g.range(1, 3) as u32,
+                warmup: g.range(0, 2) as u32,
+                ..Default::default()
+            }),
+        };
         StressPlan {
             seed,
             workers: g.range(1, 9),
@@ -80,6 +101,8 @@ impl StressPlan {
             sizing,
             n_rows,
             schema: g.schema(4),
+            read_window,
+            coalesce_gap: *g.choose(&[0u32, 64, 4096]),
         }
     }
 }

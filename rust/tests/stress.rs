@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use common::stress::stress;
+use rootio_par::cache::PrefetchOptions;
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::error::Result;
 use rootio_par::format::reader::FileReader;
@@ -88,7 +89,7 @@ fn prop_adaptive_writes_decode_identical_to_fixed() {
 
             let session = Session::with_pool(
                 pool.clone(),
-                SessionConfig { max_inflight_clusters: plan.max_inflight },
+                SessionConfig { max_inflight_clusters: plan.max_inflight, ..Default::default() },
             );
             let adaptive_cfg = WriterConfig {
                 basket_entries: plan.basket_entries,
@@ -228,6 +229,109 @@ fn adaptive_converges_and_improves_stall_ratio_for_narrow_fast_producer() {
     );
 }
 
+/// Tentpole property (ISSUE 5): whatever cluster boundaries the
+/// adaptive writer cut under the seed's schedule and whatever window
+/// policy the plan draws (on-demand / fixed / adaptive band, random
+/// coalescing gap), a prefetched streaming read decodes
+/// entry-identical to the serial read — across codecs, worker counts,
+/// uneven tails, and the empty/one-row trees — and every read-budget
+/// slot returns, even for a stream abandoned mid-flight.
+#[test]
+fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
+    stress(
+        "prop_prefetched_stream_decodes_identical_under_window_perturbation",
+        |g, plan| {
+            let pool = Arc::new(Pool::new(plan.workers));
+            for n_rows in [0usize, 1, plan.n_rows] {
+                let rows: Vec<Row> = (0..n_rows).map(|_| g.row(&plan.schema)).collect();
+                // Adaptive pipelined write: cluster cuts are
+                // schedule-dependent under this seed's knobs.
+                let be: BackendRef = Arc::new(MemBackend::new());
+                let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+                let sink = FileSink::new(fw.clone(), plan.schema.len());
+                let session = Session::with_pool(
+                    pool.clone(),
+                    SessionConfig {
+                        max_inflight_clusters: plan.max_inflight,
+                        ..Default::default()
+                    },
+                );
+                let cfg = WriterConfig {
+                    basket_entries: plan.basket_entries,
+                    compression: plan.compression,
+                    flush: FlushMode::Pipelined,
+                    granularity: FlushGranularity::Block,
+                    max_inflight_clusters: plan.max_inflight,
+                    sizing: plan.sizing,
+                };
+                let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
+                for row in &rows {
+                    w.fill(row.clone()).unwrap();
+                }
+                let (sink, entries, _) = w.close().unwrap();
+                let meta =
+                    sink.into_meta("t".into(), plan.schema.clone(), entries).unwrap();
+                fw.finish(&Directory { trees: vec![meta] }).unwrap();
+
+                let reader =
+                    TreeReader::open_first(Arc::new(FileReader::open(be).unwrap()))
+                        .unwrap();
+                let serial = reader.read_all().unwrap();
+                let opts = PrefetchOptions {
+                    window: plan.read_window,
+                    coalesce_gap: plan.coalesce_gap,
+                    ..Default::default()
+                };
+
+                // One stream...
+                let mut s1 = reader.stream_in_session(&opts, &session).unwrap();
+                let cols = s1.read_all_columns().unwrap();
+                assert_eq!(
+                    cols, serial,
+                    "prefetched decode diverged (rows={n_rows}, window={:?}, gap={})",
+                    plan.read_window, plan.coalesce_gap,
+                );
+                drop(s1);
+
+                // ...then two concurrent streams on the shared budget.
+                std::thread::scope(|s| {
+                    let reader = &reader;
+                    let opts = &opts;
+                    let session = &session;
+                    let serial = &serial;
+                    let handles: Vec<_> = (0..2)
+                        .map(|_| {
+                            s.spawn(move || {
+                                let mut st =
+                                    reader.stream_in_session(opts, session).unwrap();
+                                let cols = st.read_all_columns().unwrap();
+                                assert_eq!(&cols, serial, "concurrent stream diverged");
+                            })
+                        })
+                        .collect();
+                    for h in handles {
+                        h.join().unwrap();
+                    }
+                });
+
+                // A stream abandoned mid-flight must not leak slots.
+                if n_rows > 0 {
+                    let mut s3 = reader.stream_in_session(&opts, &session).unwrap();
+                    let _ = s3.next().unwrap();
+                    drop(s3);
+                }
+                session.drain().unwrap();
+                assert_eq!(
+                    session.stats().in_flight_read_windows,
+                    0,
+                    "read budget fully released (seed {})",
+                    plan.seed,
+                );
+            }
+        },
+    );
+}
+
 /// A sink whose `put_basket` always panics — the injected fault for
 /// the release-on-panic regression.
 struct PanickingSink;
@@ -246,7 +350,7 @@ impl BasketSink for PanickingSink {
 #[test]
 fn budget_slots_release_when_adaptive_writer_panics_mid_resize() {
     let pool = Arc::new(Pool::new(2));
-    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 2 });
+    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 2, ..Default::default() });
     let schema = Schema::flat_f32("x", 2);
     let cfg = WriterConfig {
         basket_entries: 8,

@@ -207,7 +207,7 @@ fn shared_session_writers_byte_identical_to_serial_across_codecs() {
 fn fat_writer_does_not_starve_narrow_writers_on_shared_budget() {
     let pool = Arc::new(Pool::new(3));
     // limit 4 over 4 registered writers -> fair share 1 each.
-    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 4 });
+    let session = Session::with_pool(pool, SessionConfig { max_inflight_clusters: 4, ..Default::default() });
     let drops_before = rootio_par::compress::pool::stats().drops;
 
     let fat_schema = Schema::flat_f32("fat", 1);
