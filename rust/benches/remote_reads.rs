@@ -1,0 +1,14 @@
+//! Bench harness for the fault-tolerant remote storage experiment
+//! (harness = false; criterion is unavailable offline — see
+//! Cargo.toml). Pass --quick for a reduced fault-rate sweep. Emits
+//! BENCH_fig7.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::remote_reads(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("remote_reads: {e}");
+            std::process::exit(1);
+        }
+    }
+}

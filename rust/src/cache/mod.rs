@@ -29,6 +29,13 @@
 //!   [`DecodedCluster`]s whose concatenation is entry-identical to a
 //!   serial read.
 //!
+//! On unreliable storage the stream degrades instead of failing:
+//! windows are fetched with head/read-ahead priority hints, a
+//! [`crate::storage::BackendHealth::Degraded`] backend shrinks the
+//! window to head-only, shed read-ahead is refetched inline, and a
+//! backend [`crate::storage::CostHint`] adaptively raises the
+//! coalesce gap ([`plan::adaptive_coalesce_gap`]).
+//!
 //! Entry points: [`crate::tree::reader::TreeReader::stream`],
 //! `ReadOptions::prefetch` on [`crate::coordinator::read::read_columns`],
 //! and the bounded-memory scan
@@ -39,8 +46,8 @@ pub mod prefetch;
 pub mod window;
 
 pub use plan::{
-    fetch_baskets_coalesced, ClusterPlan, ClusterWindow, FetchRange, PlannedBasket,
-    DEFAULT_COALESCE_GAP, MAX_BULK_FETCH,
+    adaptive_coalesce_gap, fetch_baskets_coalesced, ClusterPlan, ClusterWindow,
+    FetchRange, PlannedBasket, DEFAULT_COALESCE_GAP, MAX_ADAPTIVE_GAP, MAX_BULK_FETCH,
 };
 pub use prefetch::{ClusterStream, DecodedCluster, PrefetchOptions, PrefetchStats};
 pub use window::{WindowConfig, WindowController, WindowPolicy};

@@ -155,8 +155,30 @@ impl ClusterPlan {
 
 /// Default gap (bytes) bridged when merging adjacent stored ranges —
 /// shared by the prefetcher's options and the bulk loader so the
-/// layout assumption lives in one place.
+/// layout assumption lives in one place. Also the *floor* of
+/// [`adaptive_coalesce_gap`].
 pub const DEFAULT_COALESCE_GAP: u32 = 256;
+
+/// Ceiling of [`adaptive_coalesce_gap`]: even on a device whose seek
+/// is worth many megabytes of streaming (a WAN object store), slack
+/// reads beyond this stop paying for themselves in scratch memory.
+pub const MAX_ADAPTIVE_GAP: u32 = 4 * 1024 * 1024;
+
+/// Derive a coalesce gap from observed device cost
+/// ([`crate::storage::Backend::cost_hint`]): bridging a gap is worth
+/// it while reading the slack bytes costs less than the seek (or
+/// first-byte round trip) a split range would pay, i.e. up to
+/// `seek_secs × bandwidth` bytes. Clamped to
+/// [`DEFAULT_COALESCE_GAP`]..=[`MAX_ADAPTIVE_GAP`]; devices with no
+/// hint (plain memory, unknown files) keep the default.
+pub fn adaptive_coalesce_gap(hint: Option<crate::storage::CostHint>) -> u32 {
+    let Some(h) = hint else { return DEFAULT_COALESCE_GAP };
+    if !h.seek_secs.is_finite() || !h.read_mbps.is_finite() {
+        return DEFAULT_COALESCE_GAP;
+    }
+    let bytes = h.seek_secs.max(0.0) * h.read_mbps.max(0.0) * 1e6;
+    (bytes as u64).clamp(DEFAULT_COALESCE_GAP as u64, MAX_ADAPTIVE_GAP as u64) as u32
+}
 
 /// Merge stored `(offset, len)` spans into the fewest contiguous
 /// reads: sort by offset, extend the open range while the next span
@@ -362,6 +384,30 @@ mod tests {
         assert_eq!(covered, 6, "every basket still covered exactly once");
         // A basket bigger than the cap still gets its own range.
         assert_eq!(coalesce_with_cap(&[(24, 1000)], 0, 250).len(), 1);
+    }
+
+    #[test]
+    fn adaptive_gap_tracks_device_cost_within_bounds() {
+        use crate::storage::CostHint;
+        // No hint: the fixed default.
+        assert_eq!(adaptive_coalesce_gap(None), DEFAULT_COALESCE_GAP);
+        // NVMe-ish: 20 µs seek at 2500 MB/s = 50 KB worth of slack.
+        let nvme = adaptive_coalesce_gap(Some(CostHint { seek_secs: 20e-6, read_mbps: 2500.0 }));
+        assert_eq!(nvme, 50_000);
+        // Tmpfs-ish: seek worth less than the floor.
+        let tmpfs = adaptive_coalesce_gap(Some(CostHint { seek_secs: 1e-6, read_mbps: 100.0 }));
+        assert_eq!(tmpfs, DEFAULT_COALESCE_GAP);
+        // HDD: 8 ms at 160 MB/s = 1.28 MB.
+        let hdd = adaptive_coalesce_gap(Some(CostHint { seek_secs: 8e-3, read_mbps: 160.0 }));
+        assert_eq!(hdd, 1_280_000);
+        // Remote WAN tail: capped at the ceiling.
+        let wan = adaptive_coalesce_gap(Some(CostHint { seek_secs: 0.5, read_mbps: 1000.0 }));
+        assert_eq!(wan, MAX_ADAPTIVE_GAP);
+        // Degenerate hints stay sane.
+        assert_eq!(
+            adaptive_coalesce_gap(Some(CostHint { seek_secs: f64::NAN, read_mbps: 100.0 })),
+            DEFAULT_COALESCE_GAP
+        );
     }
 
     #[test]

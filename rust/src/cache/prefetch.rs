@@ -28,6 +28,20 @@
 //! All scratch — coalesced fetch buffers and per-basket decompression
 //! targets — comes from [`crate::compress::pool`]; steady-state
 //! streaming allocates only the decoded columns.
+//!
+//! **Unreliable storage** (ISSUE 6): every window is fetched with one
+//! [`crate::storage::Backend::read_scatter`] call carrying
+//! [`crate::storage::IoHints`] — head priority for the window the
+//! consumer is blocked on, read-ahead for speculation — so a
+//! [`crate::storage::resilient::ResilientBackend`] underneath can
+//! retry, hedge, and shed with full knowledge of what is urgent. When
+//! the backend reports [`crate::storage::BackendHealth::Degraded`]
+//! (circuit breaker open), the pump stops speculating and fetches
+//! head-only; a read-ahead window the breaker *shed* mid-flight is
+//! transparently refetched inline at head priority when the consumer
+//! reaches it. Both paths count into
+//! [`PrefetchStats::degraded_windows`] — the stream itself never
+//! surfaces a [`crate::error::Error::Shed`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,6 +55,7 @@ use crate::imt::{ClusterGuard, TaskGroup};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::ColumnType;
 use crate::session::{ReaderRegistration, Session, SessionConfig};
+use crate::storage::{BackendHealth, IoHints, ReadPriority, ResilienceStats};
 use crate::tree::reader::TreeReader;
 use crate::tree::sizer::{Decision, SizerSummary};
 
@@ -57,7 +72,11 @@ pub struct PrefetchOptions {
     pub window: WindowPolicy,
     /// Max byte gap between stored baskets merged into one device
     /// fetch; slack bytes are read and discarded (far cheaper than a
-    /// second seek on the devices that matter).
+    /// second seek on the devices that matter). Acts as a *floor*: a
+    /// backend that reports a [`crate::storage::CostHint`] raises the
+    /// effective gap via [`super::plan::adaptive_coalesce_gap`]
+    /// (seek-dominated devices coalesce more aggressively); backends
+    /// with no cost estimate use this value unchanged.
     pub coalesce_gap: u32,
 }
 
@@ -121,6 +140,24 @@ pub struct PrefetchStats {
     /// (each window counts once, however many pump retries saw the
     /// budget full; the prefetcher never blocks).
     pub admission_denials: u64,
+    /// Backend retry attempts behind this stream's reads — nonzero
+    /// only over a [`crate::storage::resilient::ResilientBackend`].
+    /// Counted as a backend-counter delta since the stream opened, so
+    /// concurrent streams on the *same* backend see each other's
+    /// traffic; isolate the backend to attribute exactly.
+    pub retries: u64,
+    /// Hedged duplicate reads the backend launched (same delta
+    /// semantics as [`PrefetchStats::retries`]).
+    pub hedges: u64,
+    /// Hedges that beat their primary read.
+    pub hedge_wins: u64,
+    /// Read attempts that missed their per-request deadline.
+    pub deadline_misses: u64,
+    /// Windows that degraded: submitted head-only because the backend
+    /// reported itself [`crate::storage::BackendHealth::Degraded`], or
+    /// shed mid-flight by the circuit breaker and refetched inline at
+    /// head priority. Per-stream exact (not a backend delta).
+    pub degraded_windows: u64,
     /// Window-controller band + step counts (units: clusters).
     pub window: SizerSummary,
 }
@@ -146,6 +183,8 @@ struct SlotState {
     /// Read-budget slot, released the moment the consumer takes the
     /// cluster (or when an abandoned slot drops).
     guard: Option<ClusterGuard>,
+    /// When the window was submitted — start of its latency clock.
+    submitted: Instant,
 }
 
 /// State shared between the consumer and the fetch/decode tasks.
@@ -153,6 +192,9 @@ struct Shared {
     slots: Mutex<HashMap<usize, SlotState>>,
     fetch_nanos: AtomicU64,
     decode_nanos: AtomicU64,
+    /// Completed submit→decoded latency per non-empty window, nanos
+    /// (the tail the hedged-read experiment measures).
+    window_nanos: Mutex<Vec<u64>>,
 }
 
 impl Shared {
@@ -174,42 +216,77 @@ fn fail_slot(shared: &Shared, idx: usize, err: Error) {
     }
 }
 
-/// Land one decoded basket (or its error) in the slot.
+/// Land one decoded basket (or its error) in the slot. The last part
+/// to land stamps the window's submit→decoded latency.
 fn finish_part(shared: &Shared, idx: usize, part: usize, result: Result<ColumnData>) {
-    let mut slots = shared.slots.lock().unwrap_or_else(|p| p.into_inner());
-    let Some(slot) = slots.get_mut(&idx) else { return };
-    match result {
-        Ok(col) => slot.parts[part] = Some(col),
-        Err(e) => {
-            if slot.err.is_none() {
-                slot.err = Some(e);
+    let latency = {
+        let mut slots = shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(slot) = slots.get_mut(&idx) else { return };
+        match result {
+            Ok(col) => slot.parts[part] = Some(col),
+            Err(e) => {
+                if slot.err.is_none() {
+                    slot.err = Some(e);
+                }
             }
         }
+        slot.remaining = slot.remaining.saturating_sub(1);
+        if slot.remaining == 0 && slot.err.is_none() {
+            Some(slot.submitted.elapsed())
+        } else {
+            None
+        }
+    };
+    if let Some(lat) = latency {
+        shared
+            .window_nanos
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(lat.as_nanos() as u64);
     }
-    slot.remaining = slot.remaining.saturating_sub(1);
 }
 
-/// The fetch task for one cluster window: issue the coalesced reads,
-/// CRC-check each basket, spawn one decode task per basket into the
-/// same group. Runs on the pool, so window `k+1`'s fetch overlaps
-/// window `k`'s decode.
+/// The fetch task for one cluster window: issue the coalesced reads
+/// as one scatter batch, CRC-check each basket, spawn one decode task
+/// per basket into the same group. Runs on the pool, so window
+/// `k+1`'s fetch overlaps window `k`'s decode.
+///
+/// The whole window travels in a single
+/// [`crate::storage::Backend::read_scatter`] call so the fetch either
+/// lands completely or fails as a unit — in particular, a window the
+/// circuit breaker sheds fails *before any decode task is spawned*,
+/// which is what lets the consumer safely re-arm the slot and refetch
+/// it inline at head priority.
 fn fetch_window(
     file: &Arc<FileReader>,
     window: &ClusterWindow,
     shared: &Arc<Shared>,
     group: &TaskGroup,
     idx: usize,
+    hints: IoHints,
 ) {
     let backend = file.backend();
+    let t0 = Instant::now();
+    let mut bufs = Vec::with_capacity(window.fetches.len());
     for range in &window.fetches {
-        let t0 = Instant::now();
         let mut buf = compress::pool::get(range.len);
         buf.resize(range.len, 0);
-        if let Err(e) = backend.read_at(range.offset, buf.as_mut_slice()) {
+        bufs.push(buf);
+    }
+    {
+        let mut ranges: Vec<(u64, &mut [u8])> = window
+            .fetches
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(r, b)| (r.offset, b.as_mut_slice()))
+            .collect();
+        if let Err(e) = backend.read_scatter(&mut ranges, hints) {
             fail_slot(shared, idx, e);
             return;
         }
-        shared.fetch_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    shared.fetch_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    for (range, buf) in window.fetches.iter().zip(bufs) {
         // The coalesced buffer is shared by the range's decode tasks
         // and returns to the pool when the last of them drops it.
         let buf = Arc::new(buf);
@@ -268,6 +345,12 @@ pub struct ClusterStream {
     /// frontier window every call, and a sustained denial must count
     /// once, not once per retry.
     last_denied: Option<usize>,
+    /// Windows submitted head-only under a degraded backend, plus
+    /// windows shed mid-flight and refetched inline.
+    degraded_windows: u64,
+    /// Backend resilience counters at open — [`ClusterStream::stats`]
+    /// reports the delta.
+    resil0: Option<ResilienceStats>,
     /// Fused after the first error: a failed stream keeps failing
     /// instead of silently yielding clusters past a hole.
     failed: bool,
@@ -298,11 +381,22 @@ impl ClusterStream {
             Some(v) => v.clone(),
             None => (0..meta.branches.len()).collect(),
         };
-        let plan = ClusterPlan::build(meta, &selection, opts.coalesce_gap)?;
+        // Devices that expose a cost model raise the coalesce gap to
+        // their seek-equivalent byte count; the requested gap is the
+        // floor, and cost-blind backends (mem, plain files) use it
+        // unchanged.
+        let gap = match reader.file().backend().cost_hint() {
+            Some(h) => {
+                opts.coalesce_gap.max(super::plan::adaptive_coalesce_gap(Some(h)))
+            }
+            None => opts.coalesce_gap,
+        };
+        let plan = ClusterPlan::build(meta, &selection, gap)?;
         let slot_types: Vec<ColumnType> =
             selection.iter().map(|&b| meta.branches[b].ty).collect();
         let controller = WindowController::new(opts.window);
         let reg = session.register_reader(controller.max_window());
+        let resil0 = reader.file().backend().resilience();
         Ok(ClusterStream {
             file: reader.file().clone(),
             plan: Arc::new(plan),
@@ -311,6 +405,7 @@ impl ClusterStream {
                 slots: Mutex::new(HashMap::new()),
                 fetch_nanos: AtomicU64::new(0),
                 decode_nanos: AtomicU64::new(0),
+                window_nanos: Mutex::new(Vec::new()),
             }),
             group: session.task_group(),
             reg,
@@ -324,6 +419,8 @@ impl ClusterStream {
             consumed_stored: 0,
             admission_denials: 0,
             last_denied: None,
+            degraded_windows: 0,
+            resil0,
             failed: false,
         })
     }
@@ -350,7 +447,13 @@ impl ClusterStream {
     /// is exhausted, bounding memory at `limit + one window per
     /// stream`.
     fn pump(&mut self) {
-        let target = self.controller.target().max(1);
+        // A degraded backend (circuit breaker open / half-open) sheds
+        // read-ahead anyway — stop speculating up front, fetch only
+        // the head window the consumer is blocked on, and count it.
+        // The window re-opens by itself the moment health recovers.
+        let degraded =
+            self.file.backend().health() == BackendHealth::Degraded;
+        let target = if degraded { 1 } else { self.controller.target().max(1) };
         while self.next_submit < self.plan.windows.len()
             && self.next_submit - self.next_consume < target
         {
@@ -369,6 +472,9 @@ impl ClusterStream {
                     }
                 }
             };
+            if degraded {
+                self.degraded_windows += 1;
+            }
             self.submit(self.next_submit, guard);
             self.next_submit += 1;
         }
@@ -385,18 +491,29 @@ impl ClusterStream {
                     remaining: n_baskets,
                     err: None,
                     guard,
+                    submitted: Instant::now(),
                 },
             );
         }
         if n_baskets == 0 {
             return; // ready immediately (degenerate empty window)
         }
+        // The consumer is (about to be) blocked on the head window;
+        // everything past it is speculation the backend may shed.
+        let hints = IoHints {
+            priority: if idx == self.next_consume {
+                ReadPriority::Head
+            } else {
+                ReadPriority::ReadAhead
+            },
+            deadline: None,
+        };
         let shared = self.shared.clone();
         let file = self.file.clone();
         let group = self.group.clone();
         let plan = self.plan.clone();
         self.group.spawn(move || {
-            fetch_window(&file, &plan.windows[idx], &shared, &group, idx);
+            fetch_window(&file, &plan.windows[idx], &shared, &group, idx, hints);
         });
     }
 
@@ -462,44 +579,87 @@ impl ClusterStream {
         }
         self.pump();
         let idx = self.next_consume;
-        let t0 = Instant::now();
-        if !self.shared.is_ready(idx) {
-            if let Some(pool) = self.group.bound_pool() {
-                // Help execute fetch/decode jobs while waiting; task
-                // completions wake this parked waiter. The *group's*
-                // pool is the one the jobs run on — a lazily-bound
-                // global session could have rebound since open(). A
-                // panicked task can never deliver its basket, so the
-                // wait also ends once the group drained with a panic
-                // recorded — surfaced as Sync below, never a hang.
-                let shared = self.shared.clone();
-                let group = self.group.clone();
-                pool.wait_until(&|| {
-                    shared.is_ready(idx) || (group.panicked() && group.pending() == 0)
-                });
+        let mut recovered = false;
+        let mut slot = loop {
+            let t0 = Instant::now();
+            if !self.shared.is_ready(idx) {
+                if let Some(pool) = self.group.bound_pool() {
+                    // Help execute fetch/decode jobs while waiting; task
+                    // completions wake this parked waiter. The *group's*
+                    // pool is the one the jobs run on — a lazily-bound
+                    // global session could have rebound since open(). A
+                    // panicked task can never deliver its basket, so the
+                    // wait also ends once the group drained with a panic
+                    // recorded — surfaced as Sync below, never a hang.
+                    let shared = self.shared.clone();
+                    let group = self.group.clone();
+                    pool.wait_until(&|| {
+                        shared.is_ready(idx) || (group.panicked() && group.pending() == 0)
+                    });
+                }
+                // Without a bound pool, tasks ran inline during pump()
+                // and the slot is necessarily ready.
             }
-            // Without a bound pool, tasks ran inline during pump()
-            // and the slot is necessarily ready.
-        }
-        self.stall += t0.elapsed();
-        if !self.shared.is_ready(idx) {
-            // A task died without delivering: drop the slot (its
-            // budget guard releases) and surface the failure.
-            let mut slots = self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
-            slots.remove(&idx);
-            drop(slots);
-            self.next_consume += 1;
-            return Err(Error::Sync(
-                "prefetch: a fetch/decode task panicked without delivering its window"
-                    .into(),
-            ));
-        }
+            self.stall += t0.elapsed();
+            if !self.shared.is_ready(idx) {
+                // A task died without delivering: drop the slot (its
+                // budget guard releases) and surface the failure.
+                let mut slots =
+                    self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+                slots.remove(&idx);
+                drop(slots);
+                self.next_consume += 1;
+                return Err(Error::Sync(
+                    "prefetch: a fetch/decode task panicked without delivering its \
+                     window"
+                        .into(),
+                ));
+            }
 
-        let mut slot = {
-            let mut slots = self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
-            slots.remove(&idx).ok_or_else(|| {
-                Error::Sync("prefetch: ready cluster slot disappeared".into())
-            })?
+            let mut slot = {
+                let mut slots =
+                    self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+                slots.remove(&idx).ok_or_else(|| {
+                    Error::Sync("prefetch: ready cluster slot disappeared".into())
+                })?
+            };
+            // A shed window is not a failure: the breaker refused the
+            // *speculative* fetch, and now the consumer actually needs
+            // it. Re-arm the slot and refetch inline at head priority
+            // (which the breaker never sheds). Shedding happens at the
+            // scatter call, before any decode task was spawned, so no
+            // stale task can land parts on the re-armed slot. One
+            // recovery per window — a head-priority Shed is a real
+            // backend bug and surfaces as the error it is.
+            if !recovered && matches!(slot.err, Some(Error::Shed(_))) {
+                recovered = true;
+                self.degraded_windows += 1;
+                let n_baskets = self.plan.windows[idx].baskets.len();
+                {
+                    let mut slots =
+                        self.shared.slots.lock().unwrap_or_else(|p| p.into_inner());
+                    slots.insert(
+                        idx,
+                        SlotState {
+                            parts: (0..n_baskets).map(|_| None).collect(),
+                            remaining: n_baskets,
+                            err: None,
+                            guard: slot.guard.take(),
+                            submitted: slot.submitted,
+                        },
+                    );
+                }
+                fetch_window(
+                    &self.file,
+                    &self.plan.windows[idx],
+                    &self.shared,
+                    &self.group,
+                    idx,
+                    IoHints::default(),
+                );
+                continue;
+            }
+            break slot;
         };
         self.next_consume += 1;
         // The window is consumed: release its budget slot *now*, not
@@ -583,6 +743,10 @@ impl ClusterStream {
     }
 
     pub fn stats(&self) -> PrefetchStats {
+        let resil = match (self.file.backend().resilience(), &self.resil0) {
+            (Some(now), Some(base)) => now.since(base),
+            _ => ResilienceStats::default(),
+        };
         PrefetchStats {
             clusters: self.delivered,
             baskets: self.consumed_baskets,
@@ -596,8 +760,27 @@ impl ClusterStream {
                 self.shared.decode_nanos.load(Ordering::Relaxed),
             ),
             admission_denials: self.admission_denials,
+            retries: resil.retries,
+            hedges: resil.hedges,
+            hedge_wins: resil.hedge_wins,
+            deadline_misses: resil.deadline_misses,
+            degraded_windows: self.degraded_windows,
             window: self.controller.summary(),
         }
+    }
+
+    /// Completed submit→fully-decoded wall latency of every non-empty
+    /// window so far, in completion order — the distribution whose
+    /// tail hedged reads compress (see the `remote_reads` experiment's
+    /// p99 column). Windows that errored out record nothing.
+    pub fn window_latencies(&self) -> Vec<Duration> {
+        self.shared
+            .window_nanos
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .map(|&n| Duration::from_nanos(n))
+            .collect()
     }
 
     /// The window controller's replayable decision trace.
@@ -869,6 +1052,108 @@ mod tests {
         assert!(st.window.clusters == 30, "controller observed every cluster");
         assert!(st.window.last_entries >= 1);
         assert!(!stream.window_trace().is_empty(), "adaptive trace recorded");
+    }
+
+    #[test]
+    fn degraded_backend_streams_head_only_and_byte_identical() {
+        use crate::storage::resilient::{ResilientBackend, ResilientConfig};
+        // Re-open the same stored bytes behind a ResilientBackend with
+        // its breaker forced open: the pump must stop speculating
+        // (every window head-only, counted as degraded), the head
+        // windows must pass the breaker's gate, and the stream must
+        // still decode byte-identically.
+        let file = build(3, 1000, 128, Settings::new(Codec::Rzip, 3));
+        let plain = TreeReader::open_first(file.clone()).unwrap();
+        let expect = serial_columns(&plain);
+        let res = Arc::new(ResilientBackend::new(
+            file.backend().clone(),
+            ResilientConfig::default(),
+        ));
+        res.force_breaker(true);
+        let guarded: BackendRef = res.clone();
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(guarded).unwrap())).unwrap();
+        let pool = Arc::new(Pool::new(3));
+        let session = Session::with_pool(pool, SessionConfig::default());
+        let mut stream = ClusterStream::open_in_session(
+            &reader,
+            &PrefetchOptions::fixed(4),
+            &session,
+        )
+        .unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        assert_eq!(cols, expect, "degraded stream must stay byte-identical");
+        let st = stream.stats();
+        assert_eq!(st.clusters, 8);
+        assert_eq!(
+            st.degraded_windows, 8,
+            "every window submitted while the breaker was open counts"
+        );
+        assert_eq!(st.retries, 0, "head reads pass the open breaker first try");
+        assert_eq!(stream.window_latencies().len(), 8);
+        drop(stream);
+        session.drain().unwrap();
+        assert_eq!(session.stats().in_flight_read_windows, 0);
+    }
+
+    #[test]
+    fn shed_read_ahead_window_is_refetched_inline_at_head_priority() {
+        use crate::storage::{IoHints, ReadPriority};
+        /// Sheds every read-ahead request while reporting itself
+        /// healthy — isolates the consumer's inline-recovery path from
+        /// the pump's health-based degradation.
+        struct ShedReadAhead {
+            inner: BackendRef,
+            shed: AtomicU64,
+        }
+        impl crate::storage::Backend for ShedReadAhead {
+            fn read_at(&self, off: u64, buf: &mut [u8]) -> crate::error::Result<()> {
+                self.inner.read_at(off, buf)
+            }
+            fn write_at(&self, off: u64, data: &[u8]) -> crate::error::Result<()> {
+                self.inner.write_at(off, data)
+            }
+            fn len(&self) -> crate::error::Result<u64> {
+                self.inner.len()
+            }
+            fn describe(&self) -> String {
+                "shed-read-ahead".into()
+            }
+            fn read_at_opts(
+                &self,
+                off: u64,
+                buf: &mut [u8],
+                hints: IoHints,
+            ) -> crate::error::Result<()> {
+                if hints.priority == ReadPriority::ReadAhead {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Shed("test: read-ahead refused".into()));
+                }
+                self.inner.read_at(off, buf)
+            }
+        }
+        let file = build(3, 1000, 128, Settings::new(Codec::Rzip, 3));
+        let shed = Arc::new(ShedReadAhead {
+            inner: file.backend().clone(),
+            shed: AtomicU64::new(0),
+        });
+        let guarded: BackendRef = shed.clone();
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(guarded).unwrap())).unwrap();
+        let plain = TreeReader::open_first(file).unwrap();
+        // Inline (no pool): every fetch and every recovery is
+        // synchronous, so the shed/recovery schedule is deterministic.
+        let mut stream =
+            ClusterStream::open(&reader, &PrefetchOptions::fixed(4)).unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        assert_eq!(cols, serial_columns(&plain), "recovery must be lossless");
+        let st = stream.stats();
+        assert_eq!(st.clusters, 8);
+        assert_eq!(
+            st.degraded_windows, 7,
+            "all but the first window were shed as read-ahead and recovered"
+        );
+        assert_eq!(shed.shed.load(Ordering::Relaxed), 7, "one shed per window");
     }
 
     #[test]

@@ -21,6 +21,37 @@ pub enum Error {
     /// Surfaced as an error so a single bad task aborts the write
     /// cleanly instead of cascading panics through the writer.
     Sync(String),
+    /// A request missed its per-request deadline (remote storage).
+    /// Transient: the resilient layer retries or hedges it.
+    Timeout(String),
+    /// Load shedding: the circuit breaker refused a speculative
+    /// (read-ahead) request while the backend is unhealthy. Transient
+    /// by definition — the work is retried once demand becomes real.
+    Shed(String),
+}
+
+impl Error {
+    /// Whether this failure is worth retrying: deadline misses, shed
+    /// speculative work, and the I/O error kinds a remote object store
+    /// surfaces for 5xx-style blips. Corruption (`Format`/`Codec`) and
+    /// logic errors are deliberately *not* transient — retrying them
+    /// would re-read the same bad bytes.
+    pub fn is_transient(&self) -> bool {
+        use std::io::ErrorKind;
+        match self {
+            Error::Timeout(_) | Error::Shed(_) => true,
+            Error::Io(e) => matches!(
+                e.kind(),
+                ErrorKind::Interrupted
+                    | ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::TimedOut
+                    | ErrorKind::WouldBlock
+                    | ErrorKind::BrokenPipe
+            ),
+            _ => false,
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -33,6 +64,8 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Sync(m) => write!(f, "sync error: {m}"),
+            Error::Timeout(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Shed(m) => write!(f, "request shed: {m}"),
         }
     }
 }

@@ -27,9 +27,15 @@
 //!   pool (per-worker LIFO deques, FIFO stealing, an injector queue,
 //!   condvar parking — no polling) with scoped task groups, the engine
 //!   behind all "IMT on" paths (TBB analogue).
-//! * [`storage`] — storage backends: local files and deterministic
+//! * [`storage`] — storage backends: local files, deterministic
 //!   simulated devices (HDD / SSD / NVMe / tmpfs) for the paper's
-//!   device-comparison experiments.
+//!   device-comparison experiments, a seeded remote object-store
+//!   simulation ([`storage::remote`]: heavy-tailed first-byte latency,
+//!   bounded request slots, injectable faults), reusable fault
+//!   injection ([`storage::fault`]), and a resilience wrapper
+//!   ([`storage::resilient`]: deadlines, retry with seeded backoff,
+//!   hedged reads, circuit breaker) that turns flaky devices into
+//!   clean-data-or-one-error backends.
 //! * [`merger`] — `TBufferMerger`: many writer threads, one output
 //!   thread, a bounded queue of in-memory tree files merged into a
 //!   single physical file (paper §3.2, Figures 4–6).
@@ -46,17 +52,20 @@
 //!   writing.
 //! * [`session`] — the shared I/O session: one pool handle, one
 //!   completion domain and globally-bounded in-flight budgets (write
-//!   clusters *and* read-ahead windows) with per-member fair
-//!   admission, shared by every `FileWriter` / `TreeWriter` / merger /
-//!   `ClusterStream` a job opens (the multi-tree, multi-file I/O
-//!   coordinator).
+//!   clusters, read-ahead windows *and* hedged duplicate reads) with
+//!   per-member fair admission, shared by every `FileWriter` /
+//!   `TreeWriter` / merger / `ClusterStream` a job opens (the
+//!   multi-tree, multi-file I/O coordinator).
 //! * [`cache`] — the parallel read-ahead cache (TTreeCache + parallel
 //!   unzip analogue): a cluster prefetcher that walks the cluster list
 //!   ahead of the consumer, coalesces each window's baskets into one
 //!   vectored `read_at`, decodes per basket on the IMT pool, and
 //!   streams decoded clusters in order through `TreeReader::stream` —
 //!   with the prefetch window sized adaptively by the write sizer's
-//!   controller (fetch-stall vs decode throughput).
+//!   controller (fetch-stall vs decode throughput). On unreliable
+//!   storage it degrades instead of failing: priority-tagged fetches,
+//!   head-only windows while the backend reports itself degraded, and
+//!   inline refetch of shed read-ahead.
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 

@@ -1,7 +1,7 @@
 //! `rootio` — CLI for the parallel I/O subsystem reproduction.
 //!
 //! ```text
-//! rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|fig6|fig7|hadd|codec|all> [--quick]
+//! rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|hadd|codec|all> [--quick]
 //! rootio generate --out <path> [--dataset reco|aod|gensim|xaod]
 //!                 [--entries N] [--codec none|lz4|zlib] [--level L]
 //! rootio inspect <path>
@@ -64,7 +64,7 @@ fn parse(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
 
 fn usage() -> Result<()> {
     println!(
-        "usage:\n  rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|fig6|fig7|hadd|codec|all> [--quick]\n  \
+        "usage:\n  rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|hadd|codec|all> [--quick]\n  \
          rootio generate --out <path> [--dataset reco|aod|gensim|xaod] [--entries N] \
          [--codec none|lz4|zlib] [--level L]\n  rootio inspect <path>\n  \
          rootio read <path> [--threads N] [--granularity basket|branch]\n  \
@@ -109,6 +109,9 @@ fn bench(which: &str, opts: &HashMap<&str, &str>) -> Result<()> {
     }
     if all || which == "prefetch" {
         outputs.push(experiments::read_prefetch(quick)?);
+    }
+    if all || which == "remote" {
+        outputs.push(experiments::remote_reads(quick)?);
     }
     if all || which == "fig6" {
         outputs.push(experiments::fig6(quick)?);

@@ -55,11 +55,20 @@ pub struct SessionConfig {
     /// memory the same way `max_inflight_clusters` bounds write-side
     /// buffering; readers split it max-min fair.
     pub max_inflight_read_windows: usize,
+    /// Global cap on *hedged* duplicate reads in flight across every
+    /// [`crate::storage::resilient::ResilientBackend`] attached to the
+    /// session. Hedges are speculative extra device requests; this cap
+    /// keeps a tail-latency spike from doubling device load.
+    pub max_hedged_reads: usize,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { max_inflight_clusters: 16, max_inflight_read_windows: 16 }
+        SessionConfig {
+            max_inflight_clusters: 16,
+            max_inflight_read_windows: 16,
+            max_hedged_reads: 4,
+        }
     }
 }
 
@@ -112,6 +121,10 @@ pub struct SessionStats {
     /// per-stream denial counts live in
     /// [`crate::cache::PrefetchStats::admission_denials`]).
     pub read_admission_waits: u64,
+    /// Hedged duplicate reads currently in flight across the session.
+    pub in_flight_hedges: usize,
+    /// The global hedged-read cap.
+    pub hedge_limit: usize,
 }
 
 struct SessionInner {
@@ -123,6 +136,9 @@ struct SessionInner {
     /// Read-ahead twin of `budget`: prefetched cluster windows in
     /// flight across every streaming reader of the session.
     read_budget: IoBudget,
+    /// Speculative-duplicate twin: hedged reads in flight across every
+    /// resilient backend of the session.
+    hedge_budget: IoBudget,
     /// Task groups minted for writers/helpers, joined by [`Session::drain`].
     groups: Mutex<Vec<TaskGroup>>,
     writers_opened: AtomicU64,
@@ -161,12 +177,14 @@ impl Session {
     fn build(pool: Option<Arc<Pool>>, config: SessionConfig) -> Self {
         let budget = IoBudget::new(config.max_inflight_clusters, pool.clone());
         let read_budget = IoBudget::new(config.max_inflight_read_windows, pool.clone());
+        let hedge_budget = IoBudget::new(config.max_hedged_reads, pool.clone());
         Session {
             inner: Arc::new(SessionInner {
                 config,
                 explicit_pool: pool,
                 budget,
                 read_budget,
+                hedge_budget,
                 groups: Mutex::new(Vec::new()),
                 writers_opened: AtomicU64::new(0),
                 readers_opened: AtomicU64::new(0),
@@ -235,6 +253,19 @@ impl Session {
         &self.inner.read_budget
     }
 
+    /// Register one resilient backend's hedge issuer: it joins the
+    /// shared hedged-read budget with `cap` as its own per-backend
+    /// bound, so speculative duplicates across all backends of the
+    /// session never exceed [`SessionConfig::max_hedged_reads`].
+    pub fn register_hedger(&self, cap: usize) -> MemberBudget {
+        self.inner.hedge_budget.register(cap)
+    }
+
+    /// The shared hedged-read budget (diagnostics / tests).
+    pub fn hedge_budget(&self) -> &IoBudget {
+        &self.inner.hedge_budget
+    }
+
     /// Join every task group minted by this session; the first
     /// panicked group surfaces as an error.
     pub fn drain(&self) -> Result<()> {
@@ -263,6 +294,8 @@ impl Session {
             in_flight_read_windows: r.in_flight,
             read_budget_limit: r.limit,
             read_admission_waits: r.waits,
+            in_flight_hedges: self.inner.hedge_budget.in_flight(),
+            hedge_limit: self.inner.hedge_budget.limit(),
         }
     }
 }

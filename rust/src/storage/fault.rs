@@ -1,0 +1,349 @@
+//! Reusable seeded fault injection for any backend.
+//!
+//! Promoted out of `tests/failure_injection.rs` (the old ad-hoc
+//! `FlakyBackend`) so the test double and the library share one
+//! implementation. A [`FaultyBackend`] wraps an inner [`BackendRef`]
+//! and injects faults according to a deterministic [`FaultPlan`]:
+//!
+//! * [`FaultPlan::AfterN`] — `n` healthy calls, then every later call
+//!   faults (the original mid-stream device-death scenario). Can be
+//!   re-armed after construction via [`FaultyBackend::arm`], e.g. to
+//!   let the open path through before killing the device.
+//! * [`FaultPlan::EveryNth`] — every `n`-th matching request faults,
+//!   counted with a global atomic, so the *number* of faults a test
+//!   sees is a pure function of the number of requests — independent
+//!   of thread interleaving.
+//! * [`FaultPlan::SeededRate`] — a seeded hash of `(offset, len)`
+//!   marks a fraction of ranges as cursed; the *first* attempt on a
+//!   cursed range faults, every retry succeeds. This keeps
+//!   retry-equipped readers deterministic (they always recover) while
+//!   still exercising the fault path at a controlled rate.
+//!
+//! All plans are deterministic: no wall clock, no OS randomness.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+use super::{Backend, BackendHealth, BackendRef, CostHint, IoHints, ResilienceStats};
+
+/// SplitMix64 finalizer — the library's standard cheap determinstic
+/// hash, used here to derive fault decisions from (seed, offset, len).
+pub(crate) fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a uniform f64 in [0, 1).
+pub(crate) fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// What a triggered fault does to the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hard, permanent device error (not transient — retries fail).
+    Hard,
+    /// 5xx-style retryable blip (`ConnectionReset`; satisfies
+    /// [`Error::is_transient`]).
+    Transient,
+    /// The device reports it delivered fewer bytes than asked
+    /// (`Interrupted`, transient — a retry re-reads the range).
+    ShortRead,
+    /// Deliver only half the requested bytes but report success; the
+    /// rest of the buffer keeps its previous contents. Only checksum
+    /// verification can catch this one.
+    SilentShortRead,
+}
+
+/// Which traffic direction the plan applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDirection {
+    Reads,
+    Writes,
+    Both,
+}
+
+enum PlanState {
+    AfterN(AtomicI64),
+    EveryNth { n: u64, counter: AtomicU64 },
+    SeededRate { seed: u64, rate: f64, forgiven: Mutex<HashSet<(u64, usize)>> },
+}
+
+/// Deterministic fault schedule for a [`FaultyBackend`].
+#[derive(Clone, Copy, Debug)]
+pub enum FaultPlan {
+    /// `n` healthy matching calls succeed, all later ones fault.
+    AfterN(i64),
+    /// Every `n`-th matching call faults (1-based: `EveryNth(4)`
+    /// faults calls 4, 8, 12, ...). `n == 0` never faults.
+    EveryNth(u64),
+    /// A seeded fraction `rate` of distinct `(offset, len)` ranges
+    /// fault on their first attempt only.
+    SeededRate { seed: u64, rate: f64 },
+}
+
+/// Backend wrapper injecting deterministic faults per [`FaultPlan`].
+pub struct FaultyBackend {
+    inner: BackendRef,
+    kind: FaultKind,
+    direction: FaultDirection,
+    plan: PlanState,
+    injected: AtomicU64,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: BackendRef, kind: FaultKind, direction: FaultDirection, plan: FaultPlan) -> Self {
+        let plan = match plan {
+            FaultPlan::AfterN(n) => PlanState::AfterN(AtomicI64::new(n)),
+            FaultPlan::EveryNth(n) => PlanState::EveryNth { n, counter: AtomicU64::new(0) },
+            FaultPlan::SeededRate { seed, rate } => {
+                PlanState::SeededRate { seed, rate, forgiven: Mutex::new(HashSet::new()) }
+            }
+        };
+        FaultyBackend { inner, kind, direction, plan, injected: AtomicU64::new(0) }
+    }
+
+    /// Shorthand for the classic mid-stream failure: `n` healthy reads
+    /// then hard errors (or silent short reads).
+    pub fn fail_reads_after(inner: BackendRef, n: i64, silent_short: bool) -> Self {
+        let kind = if silent_short { FaultKind::SilentShortRead } else { FaultKind::Hard };
+        FaultyBackend::new(inner, kind, FaultDirection::Reads, FaultPlan::AfterN(n))
+    }
+
+    /// Re-arm an [`FaultPlan::AfterN`] budget after construction (no
+    /// effect on other plans): lets a test open a file through the
+    /// wrapper, then schedule the fault mid-stream.
+    pub fn arm(&self, n: i64) {
+        if let PlanState::AfterN(budget) = &self.plan {
+            budget.store(n, Ordering::SeqCst);
+        }
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    fn applies(&self, is_write: bool) -> bool {
+        match self.direction {
+            FaultDirection::Both => true,
+            FaultDirection::Reads => !is_write,
+            FaultDirection::Writes => is_write,
+        }
+    }
+
+    /// Decide whether this request faults, advancing plan state.
+    fn trips(&self, off: u64, len: usize, is_write: bool) -> bool {
+        if !self.applies(is_write) {
+            return false;
+        }
+        let hit = match &self.plan {
+            PlanState::AfterN(budget) => budget.fetch_sub(1, Ordering::SeqCst) <= 0,
+            PlanState::EveryNth { n, counter } => {
+                *n > 0 && counter.fetch_add(1, Ordering::SeqCst) % *n == *n - 1
+            }
+            PlanState::SeededRate { seed, rate, forgiven } => {
+                let cursed =
+                    unit(mix(seed ^ mix(off).wrapping_add(mix(len as u64)))) < *rate;
+                if !cursed {
+                    false
+                } else {
+                    // First attempt on a cursed range faults; retries
+                    // are forgiven so recovery always succeeds.
+                    match forgiven.lock() {
+                        Ok(mut seen) => seen.insert((off, len)),
+                        Err(_) => false,
+                    }
+                }
+            }
+        };
+        if hit {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    fn fault_error(&self) -> Error {
+        use std::io::ErrorKind;
+        match self.kind {
+            FaultKind::Hard => Error::Io(std::io::Error::other("injected device failure")),
+            FaultKind::Transient => Error::Io(std::io::Error::new(
+                ErrorKind::ConnectionReset,
+                "injected transient fault",
+            )),
+            FaultKind::ShortRead | FaultKind::SilentShortRead => Error::Io(std::io::Error::new(
+                ErrorKind::Interrupted,
+                "injected short read",
+            )),
+        }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.read_at_opts(off, buf, IoHints::default())
+    }
+
+    fn read_at_opts(&self, off: u64, buf: &mut [u8], hints: IoHints) -> Result<()> {
+        if self.trips(off, buf.len(), false) {
+            if self.kind == FaultKind::SilentShortRead {
+                let half = buf.len() / 2;
+                return self.inner.read_at_opts(off, &mut buf[..half], hints);
+            }
+            return Err(self.fault_error());
+        }
+        self.inner.read_at_opts(off, buf, hints)
+    }
+
+    fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        if self.trips(off, data.len(), true) {
+            // Never a *silent* short write: the point of write faults
+            // is testing retry-to-byte-identity, so the device either
+            // writes everything or reports failure.
+            return Err(self.fault_error());
+        }
+        self.inner.write_at(off, data)
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.inner.len()
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.inner.sync()
+    }
+
+    fn describe(&self) -> String {
+        format!("faulty({})", self.inner.describe())
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.inner.health()
+    }
+
+    fn cost_hint(&self) -> Option<CostHint> {
+        self.inner.cost_hint()
+    }
+
+    fn resilience(&self) -> Option<ResilienceStats> {
+        self.inner.resilience()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemBackend;
+    use std::sync::Arc;
+
+    fn mem_with(data: &[u8]) -> BackendRef {
+        Arc::new(MemBackend::from_vec(data.to_vec()))
+    }
+
+    #[test]
+    fn after_n_lets_n_calls_through_then_fails() {
+        let be = FaultyBackend::new(
+            mem_with(&[7u8; 64]),
+            FaultKind::Hard,
+            FaultDirection::Reads,
+            FaultPlan::AfterN(2),
+        );
+        let mut buf = [0u8; 8];
+        assert!(be.read_at(0, &mut buf).is_ok());
+        assert!(be.read_at(8, &mut buf).is_ok());
+        assert!(be.read_at(16, &mut buf).is_err());
+        assert!(be.read_at(24, &mut buf).is_err(), "AfterN stays failed");
+        assert_eq!(be.injected(), 2);
+        // writes untouched by a Reads-direction plan
+        assert!(be.write_at(0, &[1, 2]).is_ok());
+    }
+
+    #[test]
+    fn every_nth_faults_deterministic_count() {
+        let be = FaultyBackend::new(
+            mem_with(&[0u8; 256]),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::EveryNth(4),
+        );
+        let mut buf = [0u8; 4];
+        let mut errs = 0;
+        for i in 0..20 {
+            if be.read_at(i * 4, &mut buf).is_err() {
+                errs += 1;
+            }
+        }
+        assert_eq!(errs, 5, "exactly every 4th of 20 reads faults");
+        assert_eq!(be.injected(), 5);
+        let e = be.read_at(0, &mut buf).err();
+        assert!(e.is_none(), "21st call (index 20) is healthy");
+    }
+
+    #[test]
+    fn transient_faults_are_transient_hard_are_not() {
+        let t = FaultyBackend::new(
+            mem_with(&[0u8; 8]),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::AfterN(0),
+        );
+        let h = FaultyBackend::new(
+            mem_with(&[0u8; 8]),
+            FaultKind::Hard,
+            FaultDirection::Reads,
+            FaultPlan::AfterN(0),
+        );
+        let mut buf = [0u8; 4];
+        assert!(t.read_at(0, &mut buf).unwrap_err().is_transient());
+        assert!(!h.read_at(0, &mut buf).unwrap_err().is_transient());
+    }
+
+    #[test]
+    fn seeded_rate_faults_first_attempt_only() {
+        let be = FaultyBackend::new(
+            mem_with(&[3u8; 4096]),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::SeededRate { seed: 11, rate: 0.5 },
+        );
+        let mut buf = [0u8; 16];
+        let mut faulted = Vec::new();
+        for i in 0..64u64 {
+            if be.read_at(i * 16, &mut buf).is_err() {
+                faulted.push(i);
+            }
+        }
+        assert!(!faulted.is_empty(), "rate 0.5 over 64 ranges must curse some");
+        assert!(faulted.len() < 64, "...but not all");
+        // every cursed range succeeds on retry
+        for &i in &faulted {
+            assert!(be.read_at(i * 16, &mut buf).is_ok(), "retry of range {i}");
+            assert_eq!(buf, [3u8; 16]);
+        }
+    }
+
+    #[test]
+    fn silent_short_read_truncates_but_reports_ok() {
+        let data: Vec<u8> = (0..32).collect();
+        let be = FaultyBackend::fail_reads_after(mem_with(&data), 0, true);
+        let mut buf = [0xAAu8; 8];
+        be.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf[..4], &[0, 1, 2, 3], "first half delivered");
+        assert_eq!(&buf[4..], &[0xAA; 4], "second half untouched");
+    }
+
+    #[test]
+    fn arm_rearms_after_n_budget() {
+        let be = FaultyBackend::fail_reads_after(mem_with(&[0u8; 32]), i64::MAX, false);
+        let mut buf = [0u8; 4];
+        assert!(be.read_at(0, &mut buf).is_ok());
+        be.arm(1);
+        assert!(be.read_at(0, &mut buf).is_ok());
+        assert!(be.read_at(0, &mut buf).is_err());
+    }
+}

@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::Result;
 
-use super::Backend;
+use super::{Backend, IoHints};
 
 /// A file on the host filesystem, accessed with pread/pwrite so
 /// concurrent readers need no seek coordination.
@@ -44,6 +44,17 @@ impl Backend for LocalFile {
 
     fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
         self.file.write_all_at(data, off)?;
+        Ok(())
+    }
+
+    /// One positional `pread` per coalesced fetch range, straight on
+    /// the shared handle: no seek lock, no per-range dispatch through
+    /// the trait-object default — concurrent windows of a
+    /// [`crate::cache::ClusterStream`] never serialise on each other.
+    fn read_scatter(&self, ranges: &mut [(u64, &mut [u8])], _hints: IoHints) -> Result<()> {
+        for (off, buf) in ranges.iter_mut() {
+            self.file.read_exact_at(buf, *off)?;
+        }
         Ok(())
     }
 

@@ -22,14 +22,16 @@ impl MemBackend {
     }
 
     /// Consume into the underlying buffer (used when shipping a
-    /// TMemFile's contents to the merger queue).
+    /// TMemFile's contents to the merger queue). Tolerates a poisoned
+    /// lock: the bytes themselves are always intact.
     pub fn into_vec(self) -> Vec<u8> {
-        self.data.into_inner().unwrap()
+        self.data.into_inner().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Snapshot of the current contents.
+    /// Snapshot of the current contents (poison-tolerant, like
+    /// [`MemBackend::into_vec`]).
     pub fn to_vec(&self) -> Vec<u8> {
-        self.data.read().unwrap().clone()
+        self.data.read().unwrap_or_else(|p| p.into_inner()).clone()
     }
 }
 
@@ -41,7 +43,8 @@ impl Default for MemBackend {
 
 impl Backend for MemBackend {
     fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
-        let data = self.data.read().unwrap();
+        let data =
+            self.data.read().map_err(|_| Error::Sync("mem backend lock poisoned".into()))?;
         let off = off as usize;
         if off + buf.len() > data.len() {
             return Err(Error::Io(std::io::Error::new(
@@ -54,7 +57,8 @@ impl Backend for MemBackend {
     }
 
     fn write_at(&self, off: u64, src: &[u8]) -> Result<()> {
-        let mut data = self.data.write().unwrap();
+        let mut data =
+            self.data.write().map_err(|_| Error::Sync("mem backend lock poisoned".into()))?;
         let off = off as usize;
         if off + src.len() > data.len() {
             data.resize(off + src.len(), 0);
@@ -64,7 +68,11 @@ impl Backend for MemBackend {
     }
 
     fn len(&self) -> Result<u64> {
-        Ok(self.data.read().unwrap().len() as u64)
+        Ok(self
+            .data
+            .read()
+            .map_err(|_| Error::Sync("mem backend lock poisoned".into()))?
+            .len() as u64)
     }
 
     fn describe(&self) -> String {

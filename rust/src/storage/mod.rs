@@ -9,13 +9,121 @@
 //! The simulation preserves exactly what the experiment measures: which
 //! side — CPU compression or device bandwidth — is the bottleneck at a
 //! given thread count.
+//!
+//! Remote storage (ISSUE 6) layers on top of this: [`remote::RemoteDevice`]
+//! models an object store with heavy-tailed first-byte latency, bounded
+//! request slots, and injectable transient faults, while
+//! [`resilient::ResilientBackend`] wraps any backend with deadlines,
+//! retry-with-backoff, hedged reads, and a circuit breaker. The shared
+//! seeded fault plan lives in [`fault::FaultyBackend`].
 
+pub mod fault;
 pub mod local;
 pub mod mem;
+pub mod remote;
+pub mod resilient;
 pub mod sim;
 
 use crate::error::Result;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Scheduling class of a read: whether a consumer is blocked on it
+/// right now or it is speculative read-ahead. Resilience layers use
+/// this to decide what may be shed when the backend degrades — the
+/// head window is *never* shed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadPriority {
+    /// A consumer is (or is about to be) blocked on this data.
+    #[default]
+    Head,
+    /// Speculative prefetch; may be shed or degraded under faults.
+    ReadAhead,
+}
+
+/// Per-request options threaded through [`Backend::read_at_opts`].
+/// Plain `read_at` is equivalent to default hints (head priority, no
+/// deadline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoHints {
+    pub priority: ReadPriority,
+    /// Cooperative per-request deadline. Devices that model service
+    /// time (e.g. [`remote::RemoteDevice`]) fail the request with
+    /// [`crate::error::Error::Timeout`] when the modelled service time
+    /// exceeds it, *without* sleeping out the full latency.
+    pub deadline: Option<Duration>,
+}
+
+impl IoHints {
+    pub fn read_ahead() -> Self {
+        IoHints { priority: ReadPriority::ReadAhead, deadline: None }
+    }
+}
+
+/// Coarse backend health, surfaced by resilience wrappers so the
+/// prefetcher can shrink its window before errors even reach it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendHealth {
+    #[default]
+    Healthy,
+    /// Error rate spiked (circuit breaker open / half-open): callers
+    /// should stop speculating and fetch only what they need.
+    Degraded,
+}
+
+/// Observed per-request cost, for adaptive coalescing: how expensive
+/// is *starting* a request versus streaming more bytes on one.
+#[derive(Clone, Copy, Debug)]
+pub struct CostHint {
+    /// Fixed cost to begin a request (seek / first byte), seconds.
+    pub seek_secs: f64,
+    /// Sustained read bandwidth, MB/s.
+    pub read_mbps: f64,
+}
+
+/// Counters a [`resilient::ResilientBackend`] maintains; other
+/// backends return `None` from [`Backend::resilience`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResilienceStats {
+    /// Logical requests entering the wrapper.
+    pub requests: u64,
+    /// Physical attempts issued (>= requests; includes hedges).
+    pub attempts: u64,
+    /// Sequential re-attempts after a transient failure.
+    pub retries: u64,
+    /// Hedged duplicates launched.
+    pub hedges: u64,
+    /// Hedges that beat the primary attempt.
+    pub hedge_wins: u64,
+    /// Attempts that failed their per-request deadline.
+    pub deadline_misses: u64,
+    /// Times the circuit breaker transitioned closed -> open.
+    pub breaker_opens: u64,
+    /// Read-ahead requests refused while the breaker was open.
+    pub shed: u64,
+    /// Write attempts retried after a transient fault.
+    pub write_retries: u64,
+    /// Requests that exhausted every attempt and surfaced an error.
+    pub exhausted: u64,
+}
+
+impl ResilienceStats {
+    /// Counters accumulated since the `earlier` snapshot.
+    pub fn since(&self, earlier: &ResilienceStats) -> ResilienceStats {
+        ResilienceStats {
+            requests: self.requests - earlier.requests,
+            attempts: self.attempts - earlier.attempts,
+            retries: self.retries - earlier.retries,
+            hedges: self.hedges - earlier.hedges,
+            hedge_wins: self.hedge_wins - earlier.hedge_wins,
+            deadline_misses: self.deadline_misses - earlier.deadline_misses,
+            breaker_opens: self.breaker_opens - earlier.breaker_opens,
+            shed: self.shed - earlier.shed,
+            write_retries: self.write_retries - earlier.write_retries,
+            exhausted: self.exhausted - earlier.exhausted,
+        }
+    }
+}
 
 /// A byte-addressable storage device. Implementations must be
 /// thread-safe: the merger's output thread and readers may touch the
@@ -33,6 +141,43 @@ pub trait Backend: Send + Sync {
     }
     /// Human-readable description for logs/benches.
     fn describe(&self) -> String;
+
+    /// `read_at` with per-request hints (priority, deadline). The
+    /// default ignores the hints — only devices that model service
+    /// time or shed load override this.
+    fn read_at_opts(&self, off: u64, buf: &mut [u8], hints: IoHints) -> Result<()> {
+        let _ = hints;
+        self.read_at(off, buf)
+    }
+
+    /// Read a batch of coalesced ranges, one positional read each.
+    /// The default loops [`Backend::read_at_opts`]; file-backed
+    /// devices override it to issue one `pread` per range on a shared
+    /// handle with no seek lock (the PR 5 follow-up).
+    fn read_scatter(&self, ranges: &mut [(u64, &mut [u8])], hints: IoHints) -> Result<()> {
+        for (off, buf) in ranges.iter_mut() {
+            self.read_at_opts(*off, &mut **buf, hints)?;
+        }
+        Ok(())
+    }
+
+    /// Coarse health signal (always [`BackendHealth::Healthy`] unless
+    /// a resilience wrapper knows better).
+    fn health(&self) -> BackendHealth {
+        BackendHealth::Healthy
+    }
+
+    /// Observed per-request cost for adaptive coalescing, if the
+    /// device can estimate it.
+    fn cost_hint(&self) -> Option<CostHint> {
+        None
+    }
+
+    /// Retry/hedge/breaker counters, if this backend is (or wraps) a
+    /// [`resilient::ResilientBackend`].
+    fn resilience(&self) -> Option<ResilienceStats> {
+        None
+    }
 }
 
 /// Shared handle alias used throughout the library.
@@ -53,6 +198,9 @@ pub enum DeviceSpec {
     Nvme,
     /// Simulated RAM-backed filesystem.
     Tmpfs,
+    /// Simulated remote object store (default [`remote::RemoteConfig`]:
+    /// WAN-ish latency distribution, no injected faults).
+    Remote,
 }
 
 impl DeviceSpec {
@@ -71,6 +219,9 @@ impl DeviceSpec {
             DeviceSpec::Tmpfs => {
                 Arc::new(sim::SimDevice::new(sim::DeviceModel::tmpfs(), time_scale))
             }
+            DeviceSpec::Remote => {
+                Arc::new(remote::RemoteDevice::new(remote::RemoteConfig::default(), time_scale))
+            }
         })
     }
 
@@ -82,6 +233,7 @@ impl DeviceSpec {
             DeviceSpec::Ssd => "ssd",
             DeviceSpec::Nvme => "nvme",
             DeviceSpec::Tmpfs => "tmpfs",
+            DeviceSpec::Remote => "remote",
         }
     }
 }
@@ -95,6 +247,7 @@ impl std::str::FromStr for DeviceSpec {
             "ssd" => DeviceSpec::Ssd,
             "nvme" => DeviceSpec::Nvme,
             "tmpfs" => DeviceSpec::Tmpfs,
+            "remote" => DeviceSpec::Remote,
             path => DeviceSpec::Local(path.into()),
         })
     }
@@ -122,6 +275,7 @@ mod tests {
             DeviceSpec::Ssd,
             DeviceSpec::Nvme,
             DeviceSpec::Tmpfs,
+            DeviceSpec::Remote,
         ];
         for spec in specs {
             let b = spec.open(0.0).unwrap();

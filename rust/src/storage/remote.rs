@@ -1,0 +1,529 @@
+//! Simulated remote object store with heavy-tailed latency and
+//! injectable transient faults.
+//!
+//! Local devices ([`super::sim::SimDevice`]) model a single command
+//! queue where bandwidth dominates. Remote HEP storage behaves
+//! differently: requests run concurrently up to a connection-pool
+//! bound, every request pays a *first-byte* latency drawn from a
+//! heavy-tailed (lognormal) distribution, and a small fraction of
+//! requests misbehave — they time out, return 5xx-style retryable
+//! errors, deliver short reads, or get *stuck* far beyond p99 (the
+//! case hedged reads rescue). All of it is deterministic from a seed:
+//! latency and fault draws hash the request index, never the wall
+//! clock.
+//!
+//! Two fault schedules:
+//! * `fault_rate` — seeded per-request probability (realistic mix);
+//! * `fault_every_nth` — every n-th request faults, making the fault
+//!   *count* a pure function of the request count, independent of
+//!   thread interleaving. Tests use this to assert exact recovery
+//!   behaviour without flakiness.
+//!
+//! As with `SimDevice`, `time_scale` scales all modelled latencies:
+//! 1.0 sleeps in real time, 0.0 only accounts. Per-request deadlines
+//! ([`IoHints::deadline`]) are compared against the *scaled* service
+//! time: a request that would outlive its deadline sleeps out only the
+//! deadline and fails with [`Error::Timeout`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+use super::fault::{mix, unit};
+use super::mem::MemBackend;
+use super::sim::{lock, DeviceStats};
+use super::{Backend, CostHint, IoHints};
+
+/// Knobs for a [`RemoteDevice`]. Defaults model a reasonably healthy
+/// WAN object store: 8 ms median first byte with a 40 ms p99 tail,
+/// 16 concurrent request slots, no injected faults.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteConfig {
+    pub read_mbps: f64,
+    pub write_mbps: f64,
+    /// Median first-byte latency (lognormal).
+    pub first_byte_p50: Duration,
+    /// 99th-percentile first-byte latency; together with p50 this
+    /// fixes the lognormal's shape.
+    pub first_byte_p99: Duration,
+    /// Bounded concurrent request slots (connection pool). Further
+    /// requests queue, and their wait is recorded in
+    /// [`DeviceStats::queue_wait`].
+    pub request_slots: usize,
+    /// Seed for every latency and fault draw.
+    pub seed: u64,
+    /// Per-request transient fault probability (0 disables).
+    pub fault_rate: f64,
+    /// When > 0, overrides `fault_rate` with a deterministic-count
+    /// schedule: request indices n-1, 2n-1, ... fault.
+    pub fault_every_nth: u64,
+    /// Relative weights of fault flavours (need not sum to 1; the
+    /// remainder after timeout/short/stuck is a 5xx-style retryable
+    /// error).
+    pub timeout_weight: f64,
+    pub short_read_weight: f64,
+    pub stuck_weight: f64,
+    /// A stuck request is served successfully after
+    /// `stuck_factor` × its normal service time.
+    pub stuck_factor: f64,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            read_mbps: 200.0,
+            write_mbps: 120.0,
+            first_byte_p50: Duration::from_millis(8),
+            first_byte_p99: Duration::from_millis(40),
+            request_slots: 16,
+            seed: 0,
+            fault_rate: 0.0,
+            fault_every_nth: 0,
+            timeout_weight: 0.25,
+            short_read_weight: 0.25,
+            stuck_weight: 0.25,
+            stuck_factor: 10.0,
+        }
+    }
+}
+
+enum FaultDraw {
+    None,
+    /// 5xx-style retryable error after a median first byte.
+    Retryable,
+    /// Request never completes: fails `TimedOut` after a long wait
+    /// (or `Error::Timeout` as soon as the caller's deadline cuts it).
+    Timeout,
+    /// Device reports fewer bytes delivered than asked.
+    ShortRead,
+    /// Served correctly, but `stuck_factor` × slower.
+    Stuck,
+}
+
+struct Slots {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// Deterministic, seeded remote object-store simulation.
+pub struct RemoteDevice {
+    mem: MemBackend,
+    cfg: RemoteConfig,
+    time_scale: f64,
+    slots: Slots,
+    requests: AtomicU64,
+    stats: Mutex<DeviceStats>,
+}
+
+impl RemoteDevice {
+    pub fn new(cfg: RemoteConfig, time_scale: f64) -> Self {
+        RemoteDevice {
+            mem: MemBackend::new(),
+            cfg,
+            time_scale,
+            slots: Slots { free: Mutex::new(cfg.request_slots.max(1)), cv: Condvar::new() },
+            requests: AtomicU64::new(0),
+            stats: Mutex::new(DeviceStats::default()),
+        }
+    }
+
+    pub fn config(&self) -> &RemoteConfig {
+        &self.cfg
+    }
+
+    /// Load bytes into the store without charging latency or faults —
+    /// experiments use this to stage a pre-written file remotely.
+    pub fn preload(&self, off: u64, data: &[u8]) -> Result<()> {
+        self.mem.write_at(off, data)
+    }
+
+    /// Per-device counters (same shape as [`super::sim::SimDevice`]),
+    /// with first-byte latency recorded as seek time and fault
+    /// flavours in the fault fields.
+    pub fn device_stats(&self) -> DeviceStats {
+        self.stats.lock().map(|s| *s).unwrap_or_default()
+    }
+
+    /// Lognormal first-byte latency for request `idx`.
+    fn first_byte(&self, idx: u64) -> Duration {
+        let p50 = self.cfg.first_byte_p50.as_secs_f64().max(1e-9);
+        let p99 = self.cfg.first_byte_p99.as_secs_f64().max(p50);
+        let mu = p50.ln();
+        // z(0.99) = 2.3263: p99 = exp(mu + 2.3263 sigma)
+        let sigma = (p99.ln() - mu) / 2.3263;
+        let u1 = unit(mix(self.cfg.seed ^ mix(idx.wrapping_mul(2) + 1))).max(1e-12);
+        let u2 = unit(mix(self.cfg.seed ^ mix(idx.wrapping_mul(2) + 2)));
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        Duration::from_secs_f64((mu + sigma * z).exp().min(p99 * 50.0))
+    }
+
+    /// Deterministic fault decision for request `idx`.
+    fn fault_draw(&self, idx: u64) -> FaultDraw {
+        let fires = if self.cfg.fault_every_nth > 0 {
+            idx % self.cfg.fault_every_nth == self.cfg.fault_every_nth - 1
+        } else if self.cfg.fault_rate > 0.0 {
+            unit(mix(self.cfg.seed ^ mix(idx) ^ 0xFA01)) < self.cfg.fault_rate
+        } else {
+            false
+        };
+        if !fires {
+            return FaultDraw::None;
+        }
+        let total = (self.cfg.timeout_weight
+            + self.cfg.short_read_weight
+            + self.cfg.stuck_weight)
+            .max(1e-9);
+        let scale = total.max(1.0);
+        let u = unit(mix(self.cfg.seed ^ mix(idx) ^ 0xFA02)) * scale;
+        if u < self.cfg.timeout_weight {
+            FaultDraw::Timeout
+        } else if u < self.cfg.timeout_weight + self.cfg.short_read_weight {
+            FaultDraw::ShortRead
+        } else if u < total {
+            FaultDraw::Stuck
+        } else {
+            FaultDraw::Retryable
+        }
+    }
+
+    fn acquire_slot(&self) -> Result<Duration> {
+        let t0 = std::time::Instant::now();
+        let mut free = lock(&self.slots.free)?;
+        while *free == 0 {
+            free = self
+                .slots
+                .cv
+                .wait(free)
+                .map_err(|_| Error::Sync("remote slot lock poisoned".into()))?;
+        }
+        *free -= 1;
+        Ok(t0.elapsed())
+    }
+
+    fn release_slot(&self) {
+        if let Ok(mut free) = self.slots.free.lock() {
+            *free += 1;
+            self.slots.cv.notify_one();
+        }
+    }
+
+    fn sleep_scaled(&self, d: Duration) {
+        if self.time_scale > 0.0 {
+            let scaled = d.mul_f64(self.time_scale);
+            if !scaled.is_zero() {
+                std::thread::sleep(scaled);
+            }
+        }
+    }
+
+    /// Service one request end to end; `is_write` picks bandwidth and
+    /// direction counters. Returns the number of bytes to actually
+    /// move (short reads deliver fewer than asked).
+    fn service(&self, off: u64, len: usize, hints: IoHints, is_write: bool) -> Result<usize> {
+        let waited = self.acquire_slot()?;
+        let result = self.service_in_slot(off, len, hints, is_write, waited);
+        self.release_slot();
+        result
+    }
+
+    fn service_in_slot(
+        &self,
+        off: u64,
+        len: usize,
+        hints: IoHints,
+        is_write: bool,
+        waited: Duration,
+    ) -> Result<usize> {
+        let idx = self.requests.fetch_add(1, Ordering::SeqCst);
+        let first = self.first_byte(idx);
+        let mbps = if is_write { self.cfg.write_mbps } else { self.cfg.read_mbps };
+        let transfer = Duration::from_secs_f64(len as f64 / (mbps * 1e6));
+        let draw = self.fault_draw(idx);
+        {
+            let mut st = lock(&self.stats)?;
+            st.seeks += 1;
+            st.seek_time += first;
+            st.queue_wait += waited;
+            if is_write {
+                st.writes += 1;
+            } else {
+                st.reads += 1;
+            }
+        }
+        // Scaled wall-clock service time, capped by the deadline.
+        let svc = |d: Duration| d.mul_f64(self.time_scale.max(0.0));
+        let deadline_cut = |d: Duration| match hints.deadline {
+            Some(dl) if svc(d) > dl => Some(dl),
+            _ => None,
+        };
+        let fail_deadline = |dl: Duration| -> Error {
+            if let Ok(mut st) = self.stats.lock() {
+                st.timeouts += 1;
+            }
+            Error::Timeout(format!(
+                "remote request {idx} ({len} B at {off}) missed {dl:?} deadline"
+            ))
+        };
+        match draw {
+            FaultDraw::None => {
+                let total = first + transfer;
+                if let Some(dl) = deadline_cut(total) {
+                    self.sleep_scaled(dl.div_f64(self.time_scale.max(1e-12)));
+                    return Err(fail_deadline(dl));
+                }
+                self.sleep_scaled(total);
+                let mut st = lock(&self.stats)?;
+                st.transfer_time += transfer;
+                if is_write {
+                    st.bytes_written += len as u64;
+                } else {
+                    st.bytes_read += len as u64;
+                }
+                Ok(len)
+            }
+            FaultDraw::Retryable => {
+                if let Ok(mut st) = self.stats.lock() {
+                    st.faults += 1;
+                }
+                self.sleep_scaled(first);
+                Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    format!("remote request {idx}: transient 5xx"),
+                )))
+            }
+            FaultDraw::Timeout => {
+                if let Ok(mut st) = self.stats.lock() {
+                    st.faults += 1;
+                }
+                // Never completes on its own: wait out the deadline if
+                // one was given, else a long multiple of p99.
+                let stall = self.cfg.first_byte_p99.mul_f64(self.cfg.stuck_factor.max(2.0));
+                if let Some(dl) = deadline_cut(stall) {
+                    self.sleep_scaled(dl.div_f64(self.time_scale.max(1e-12)));
+                    return Err(fail_deadline(dl));
+                }
+                self.sleep_scaled(stall);
+                if let Ok(mut st) = self.stats.lock() {
+                    st.timeouts += 1;
+                }
+                Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!("remote request {idx}: timed out"),
+                )))
+            }
+            FaultDraw::ShortRead => {
+                if let Ok(mut st) = self.stats.lock() {
+                    st.faults += 1;
+                    st.short_reads += 1;
+                }
+                self.sleep_scaled(first);
+                if is_write {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        format!("remote request {idx}: short write"),
+                    )));
+                }
+                Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    format!("remote request {idx}: short read ({} of {len} B)", len / 2),
+                )))
+            }
+            FaultDraw::Stuck => {
+                if let Ok(mut st) = self.stats.lock() {
+                    st.faults += 1;
+                    st.stuck += 1;
+                }
+                let total = (first + transfer).mul_f64(self.cfg.stuck_factor.max(1.0));
+                if let Some(dl) = deadline_cut(total) {
+                    self.sleep_scaled(dl.div_f64(self.time_scale.max(1e-12)));
+                    return Err(fail_deadline(dl));
+                }
+                self.sleep_scaled(total);
+                let mut st = lock(&self.stats)?;
+                st.transfer_time += transfer;
+                if is_write {
+                    st.bytes_written += len as u64;
+                } else {
+                    st.bytes_read += len as u64;
+                }
+                Ok(len)
+            }
+        }
+    }
+}
+
+impl Backend for RemoteDevice {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.read_at_opts(off, buf, IoHints::default())
+    }
+
+    fn read_at_opts(&self, off: u64, buf: &mut [u8], hints: IoHints) -> Result<()> {
+        self.service(off, buf.len(), hints, false)?;
+        self.mem.read_at(off, buf)
+    }
+
+    fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        self.service(off, data.len(), IoHints::default(), true)?;
+        self.mem.write_at(off, data)
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.mem.len()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "remote (p50 {:?}, p99 {:?}, {} slots, fault {})",
+            self.cfg.first_byte_p50,
+            self.cfg.first_byte_p99,
+            self.cfg.request_slots,
+            if self.cfg.fault_every_nth > 0 {
+                format!("1/{}", self.cfg.fault_every_nth)
+            } else {
+                format!("{:.1}%", self.cfg.fault_rate * 100.0)
+            }
+        )
+    }
+
+    fn cost_hint(&self) -> Option<CostHint> {
+        Some(CostHint {
+            seek_secs: self.cfg.first_byte_p50.as_secs_f64(),
+            read_mbps: self.cfg.read_mbps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(seed: u64) -> RemoteConfig {
+        RemoteConfig { seed, ..RemoteConfig::default() }
+    }
+
+    #[test]
+    fn data_path_is_exact_without_faults() {
+        let d = RemoteDevice::new(quiet(3), 0.0);
+        d.write_at(7, b"remote payload").unwrap();
+        let mut buf = [0u8; 14];
+        d.read_at(7, &mut buf).unwrap();
+        assert_eq!(&buf, b"remote payload");
+        let st = d.device_stats();
+        assert_eq!((st.reads, st.writes), (1, 1));
+        assert_eq!(st.faults, 0);
+    }
+
+    #[test]
+    fn latency_distribution_matches_knobs() {
+        let d = RemoteDevice::new(quiet(9), 0.0);
+        let mut draws: Vec<f64> =
+            (0..2000).map(|i| d.first_byte(i).as_secs_f64()).collect();
+        draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = draws[draws.len() / 2];
+        let p99 = draws[draws.len() * 99 / 100];
+        let want50 = d.cfg.first_byte_p50.as_secs_f64();
+        let want99 = d.cfg.first_byte_p99.as_secs_f64();
+        assert!((p50 / want50 - 1.0).abs() < 0.25, "p50 {p50} vs {want50}");
+        assert!(p99 / want99 > 0.5 && p99 / want99 < 2.0, "p99 {p99} vs {want99}");
+        assert!(p99 > p50 * 2.0, "heavy tail required");
+    }
+
+    #[test]
+    fn every_nth_fault_count_is_exact() {
+        let cfg = RemoteConfig {
+            fault_every_nth: 4,
+            // all faults retryable for a simple count
+            timeout_weight: 0.0,
+            short_read_weight: 0.0,
+            stuck_weight: 0.0,
+            ..quiet(5)
+        };
+        let d = RemoteDevice::new(cfg, 0.0);
+        d.preload(0, &[9u8; 1024]).unwrap();
+        let mut errs = 0;
+        let mut buf = [0u8; 16];
+        for i in 0..40u64 {
+            match d.read_at((i % 8) * 16, &mut buf) {
+                Ok(()) => assert_eq!(buf, [9u8; 16]),
+                Err(e) => {
+                    assert!(e.is_transient(), "retryable fault must be transient: {e}");
+                    errs += 1;
+                }
+            }
+        }
+        assert_eq!(errs, 10, "exactly every 4th of 40 requests faults");
+        assert_eq!(d.device_stats().faults, 10);
+    }
+
+    #[test]
+    fn seeded_rate_faults_are_deterministic() {
+        let run = || {
+            let cfg = RemoteConfig { fault_rate: 0.2, ..quiet(21) };
+            let d = RemoteDevice::new(cfg, 0.0);
+            d.preload(0, &[1u8; 4096]).unwrap();
+            let mut buf = [0u8; 32];
+            (0..100u64).map(|i| d.read_at(i * 32, &mut buf).is_err()).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed, same fault schedule");
+        let n = a.iter().filter(|&&x| x).count();
+        assert!((5..=50).contains(&n), "rate 0.2 over 100 requests, saw {n}");
+    }
+
+    #[test]
+    fn deadline_cuts_slow_requests() {
+        // time_scale 1.0 with tiny latencies: p50 2ms, p99 6ms.
+        let cfg = RemoteConfig {
+            first_byte_p50: Duration::from_millis(2),
+            first_byte_p99: Duration::from_millis(6),
+            ..quiet(13)
+        };
+        let d = RemoteDevice::new(cfg, 1.0);
+        d.preload(0, &[4u8; 64]).unwrap();
+        let mut buf = [0u8; 16];
+        // An impossible deadline: every request misses it.
+        let hints = IoHints { deadline: Some(Duration::from_nanos(1)), ..Default::default() };
+        let err = d.read_at_opts(0, &mut buf, hints).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "got {err}");
+        assert!(err.is_transient());
+        assert_eq!(d.device_stats().timeouts, 1);
+        // Without a deadline the same request succeeds.
+        d.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, [4u8; 16]);
+    }
+
+    #[test]
+    fn slots_bound_concurrency_and_record_wait() {
+        use std::sync::Arc;
+        let cfg = RemoteConfig {
+            request_slots: 1,
+            first_byte_p50: Duration::from_millis(3),
+            first_byte_p99: Duration::from_millis(4),
+            ..quiet(2)
+        };
+        let d = Arc::new(RemoteDevice::new(cfg, 1.0));
+        d.preload(0, &[0u8; 64]).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 16];
+                    d.read_at(0, &mut buf).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = d.device_stats();
+        assert_eq!(st.reads, 4);
+        assert!(
+            st.queue_wait > Duration::ZERO,
+            "single slot must have queued someone: {:?}",
+            st.queue_wait
+        );
+    }
+}

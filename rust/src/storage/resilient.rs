@@ -1,0 +1,796 @@
+//! Resilience wrapper: deadlines, retry with backoff, hedged reads,
+//! and a circuit breaker over any [`BackendRef`].
+//!
+//! Remote storage fails in ways a local disk does not: requests blip
+//! (5xx), time out, or get stuck far beyond p99. A
+//! [`ResilientBackend`] absorbs those faults so the layers above — the
+//! prefetcher, the write sink — see either clean data or one final
+//! error:
+//!
+//! * **Deadlines** — every attempt carries a per-request deadline
+//!   ([`IoHints::deadline`], the tighter of the caller's and the
+//!   configured one); a device that models service time fails the
+//!   attempt with [`Error::Timeout`] instead of stalling the pipeline.
+//! * **Retry with backoff** — transient failures
+//!   ([`Error::is_transient`]) are retried up to
+//!   [`RetryPolicy::max_attempts`] with exponential backoff and
+//!   seeded, deterministic jitter. Permanent errors surface at once.
+//! * **Hedged reads** — when a read has not responded after
+//!   [`HedgePolicy::after`] (set it near the device's p99), a
+//!   duplicate is launched and the first responder wins; the loser's
+//!   slot is released when it finishes. Hedges draw from a bounded
+//!   [`MemberBudget`] (the session's `max_hedged_reads`), so tail
+//!   rescue can never double the device load.
+//! * **Circuit breaker** — a rolling error-rate window; when it trips,
+//!   speculative [`ReadPriority::ReadAhead`] traffic is shed with
+//!   [`Error::Shed`] while consumer-demanded head reads keep flowing
+//!   as half-open probes. The prefetcher reacts to the
+//!   [`BackendHealth::Degraded`] signal by shrinking to head-only
+//!   fetching instead of erroring.
+//!
+//! Everything is deterministic in tests: jitter comes from the seeded
+//! SplitMix hash, never the wall clock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::imt::{IoBudget, MemberBudget};
+use crate::session::Session;
+
+use super::fault::{mix, unit};
+use super::sim::lock;
+use super::{Backend, BackendHealth, BackendRef, CostHint, IoHints, ReadPriority, ResilienceStats};
+
+/// Retry schedule for transient failures.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Jitter fraction in [0, 1]: each backoff is scaled by a seeded
+    /// uniform draw from [1 - jitter, 1].
+    pub jitter: f64,
+    /// Seed for the jitter draws (deterministic in tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            jitter: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+/// Hedged-read policy: duplicate a read that has not responded after
+/// `after` (typically the device's p99 first-byte latency).
+#[derive(Clone, Copy, Debug)]
+pub struct HedgePolicy {
+    /// How long to wait for the primary before hedging.
+    pub after: Duration,
+}
+
+impl HedgePolicy {
+    /// Hedge at the device's p99: by definition ~1% of requests get a
+    /// duplicate, the textbook tail-rescue operating point.
+    pub fn at_p99(p99: Duration) -> Self {
+        HedgePolicy { after: p99 }
+    }
+}
+
+/// Circuit-breaker tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Rolling outcome window length.
+    pub window: usize,
+    /// Minimum outcomes before the breaker may judge.
+    pub min_samples: usize,
+    /// Error fraction (of the window) that opens the breaker.
+    pub open_error_rate: f64,
+    /// How long the breaker stays open before probing (half-open).
+    pub cooldown: Duration,
+    /// Consecutive half-open successes required to close again.
+    pub half_open_probes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            window: 32,
+            min_samples: 8,
+            open_error_rate: 0.5,
+            cooldown: Duration::from_millis(100),
+            half_open_probes: 3,
+        }
+    }
+}
+
+/// Full configuration of a [`ResilientBackend`].
+#[derive(Clone, Copy, Debug)]
+pub struct ResilientConfig {
+    pub retry: RetryPolicy,
+    /// `None` disables hedging (retry-only policy).
+    pub hedge: Option<HedgePolicy>,
+    /// Per-attempt deadline handed to the device; `None` leaves only
+    /// whatever deadline the caller put in its own [`IoHints`].
+    pub deadline: Option<Duration>,
+    pub breaker: BreakerConfig,
+    /// Hedged duplicates this backend may have in flight at once
+    /// (also the standalone hedge-budget size when not attached to a
+    /// session).
+    pub max_hedged_reads: usize,
+}
+
+impl Default for ResilientConfig {
+    fn default() -> Self {
+        ResilientConfig {
+            retry: RetryPolicy::default(),
+            hedge: None,
+            deadline: None,
+            breaker: BreakerConfig::default(),
+            max_hedged_reads: 4,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen { successes: usize },
+}
+
+struct BreakerWindow {
+    state: BreakerState,
+    outcomes: VecDeque<bool>,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    attempts: AtomicU64,
+    retries: AtomicU64,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+    deadline_misses: AtomicU64,
+    breaker_opens: AtomicU64,
+    shed: AtomicU64,
+    write_retries: AtomicU64,
+    exhausted: AtomicU64,
+}
+
+/// The resilience wrapper. Construct standalone ([`ResilientBackend::new`])
+/// or attached to a session's shared hedge budget
+/// ([`ResilientBackend::in_session`]).
+pub struct ResilientBackend {
+    inner: BackendRef,
+    cfg: ResilientConfig,
+    /// Bounded hedged-read slots (session-shared or standalone).
+    hedge_slots: MemberBudget,
+    /// Test/operator override: behave as if the breaker were open.
+    forced_open: AtomicBool,
+    requests: AtomicU64,
+    breaker: Mutex<BreakerWindow>,
+    stats: Counters,
+}
+
+impl ResilientBackend {
+    /// Standalone wrapper with a private hedge budget of
+    /// `cfg.max_hedged_reads` slots.
+    pub fn new(inner: BackendRef, cfg: ResilientConfig) -> Self {
+        let cap = cfg.max_hedged_reads.max(1);
+        // The member handle keeps the budget's inner state alive, so
+        // the wrapper IoBudget can be dropped here.
+        let hedge_slots = IoBudget::new(cap, None).register(cap);
+        ResilientBackend::with_hedge_slots(inner, cfg, hedge_slots)
+    }
+
+    /// Wrapper drawing hedge slots from `session`'s shared hedged-read
+    /// budget ([`crate::session::SessionConfig::max_hedged_reads`]).
+    pub fn in_session(inner: BackendRef, cfg: ResilientConfig, session: &Session) -> Self {
+        let cap = cfg.max_hedged_reads.max(1);
+        ResilientBackend::with_hedge_slots(inner, cfg, session.register_hedger(cap))
+    }
+
+    fn with_hedge_slots(inner: BackendRef, cfg: ResilientConfig, hedge_slots: MemberBudget) -> Self {
+        ResilientBackend {
+            inner,
+            cfg,
+            hedge_slots,
+            forced_open: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            breaker: Mutex::new(BreakerWindow {
+                state: BreakerState::Closed,
+                outcomes: VecDeque::new(),
+            }),
+            stats: Counters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ResilientConfig {
+        &self.cfg
+    }
+
+    /// Force the breaker open (or release the override): lets tests
+    /// and operators exercise the degraded path on demand.
+    pub fn force_breaker(&self, open: bool) {
+        self.forced_open.store(open, Ordering::SeqCst);
+    }
+
+    /// Snapshot of the wrapper's counters.
+    pub fn stats(&self) -> ResilienceStats {
+        ResilienceStats {
+            requests: self.stats.requests.load(Ordering::SeqCst),
+            attempts: self.stats.attempts.load(Ordering::SeqCst),
+            retries: self.stats.retries.load(Ordering::SeqCst),
+            hedges: self.stats.hedges.load(Ordering::SeqCst),
+            hedge_wins: self.stats.hedge_wins.load(Ordering::SeqCst),
+            deadline_misses: self.stats.deadline_misses.load(Ordering::SeqCst),
+            breaker_opens: self.stats.breaker_opens.load(Ordering::SeqCst),
+            shed: self.stats.shed.load(Ordering::SeqCst),
+            write_retries: self.stats.write_retries.load(Ordering::SeqCst),
+            exhausted: self.stats.exhausted.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Tighter of the caller's and the configured per-attempt deadline.
+    fn effective_hints(&self, h: IoHints) -> IoHints {
+        let deadline = match (h.deadline, self.cfg.deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        IoHints { priority: h.priority, deadline }
+    }
+
+    /// Seeded backoff before retry number `attempt` (1-based) of
+    /// logical request `req`.
+    fn backoff(&self, req: u64, attempt: u32) -> Duration {
+        let p = &self.cfg.retry;
+        let exp = p.base_backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(16));
+        let capped = exp.min(p.max_backoff);
+        let u = unit(mix(p.seed ^ mix(req.wrapping_mul(8) + attempt as u64)));
+        capped.mul_f64(1.0 - p.jitter.clamp(0.0, 1.0) * u)
+    }
+
+    /// Breaker admission: sheds only speculative read-ahead; head
+    /// traffic always passes (it doubles as the half-open probe).
+    fn gate(&self, priority: ReadPriority) -> Result<()> {
+        let shed = |stats: &Counters| -> Error {
+            stats.shed.fetch_add(1, Ordering::SeqCst);
+            Error::Shed("circuit breaker open: read-ahead shed".into())
+        };
+        if self.forced_open.load(Ordering::SeqCst) {
+            if priority == ReadPriority::ReadAhead {
+                return Err(shed(&self.stats));
+            }
+            return Ok(());
+        }
+        let mut b = lock(&self.breaker)?;
+        if let BreakerState::Open { until } = b.state {
+            if Instant::now() >= until {
+                b.state = BreakerState::HalfOpen { successes: 0 };
+            }
+        }
+        match b.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open { .. } | BreakerState::HalfOpen { .. } => {
+                if priority == ReadPriority::ReadAhead {
+                    Err(shed(&self.stats))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Record one attempt outcome into the breaker.
+    fn record(&self, ok: bool) {
+        let Ok(mut b) = self.breaker.lock() else { return };
+        let cfg = &self.cfg.breaker;
+        match b.state {
+            BreakerState::HalfOpen { successes } => {
+                if ok {
+                    if successes + 1 >= cfg.half_open_probes.max(1) {
+                        b.state = BreakerState::Closed;
+                        b.outcomes.clear();
+                    } else {
+                        b.state = BreakerState::HalfOpen { successes: successes + 1 };
+                    }
+                } else {
+                    b.state = BreakerState::Open { until: Instant::now() + cfg.cooldown };
+                    self.stats.breaker_opens.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            BreakerState::Open { .. } => {}
+            BreakerState::Closed => {
+                b.outcomes.push_back(ok);
+                while b.outcomes.len() > cfg.window.max(1) {
+                    b.outcomes.pop_front();
+                }
+                if b.outcomes.len() >= cfg.min_samples.max(1) {
+                    let errs = b.outcomes.iter().filter(|&&x| !x).count();
+                    if errs as f64 >= cfg.open_error_rate * b.outcomes.len() as f64 {
+                        b.state = BreakerState::Open { until: Instant::now() + cfg.cooldown };
+                        b.outcomes.clear();
+                        self.stats.breaker_opens.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One read attempt with hedging: the primary runs on a helper
+    /// thread; if it has not responded after `hedge.after`, a duplicate
+    /// is launched (budget permitting) and the first responder wins.
+    /// The loser keeps running detached and releases its hedge slot
+    /// when it finishes — that is the cancellation accounting: slots,
+    /// not threads, are what the budget bounds.
+    fn read_once_hedged(
+        &self,
+        off: u64,
+        len: usize,
+        hints: IoHints,
+        hedge: &HedgePolicy,
+    ) -> Result<Vec<u8>> {
+        let (tx, rx) = mpsc::channel();
+        let spawn_attempt = |tag: u8, slot: Option<crate::imt::ClusterGuard>| {
+            let inner = self.inner.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _slot = slot;
+                let mut buf = vec![0u8; len];
+                let r = inner.read_at_opts(off, &mut buf, hints).map(|_| buf);
+                let _ = tx.send((tag, r));
+            });
+        };
+        self.stats.attempts.fetch_add(1, Ordering::SeqCst);
+        spawn_attempt(0, None);
+        let mut outstanding = 1usize;
+        let mut hedged = false;
+        let mut last_err: Option<Error> = None;
+        loop {
+            let msg = if hedged {
+                rx.recv().ok()
+            } else {
+                match rx.recv_timeout(hedge.after) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        hedged = true;
+                        if let Some(slot) = self.hedge_slots.try_acquire() {
+                            self.stats.hedges.fetch_add(1, Ordering::SeqCst);
+                            self.stats.attempts.fetch_add(1, Ordering::SeqCst);
+                            spawn_attempt(1, Some(slot));
+                            outstanding += 1;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                }
+            };
+            let Some((tag, result)) = msg else {
+                return Err(last_err
+                    .unwrap_or_else(|| Error::Sync("hedged read lost both attempts".into())));
+            };
+            outstanding -= 1;
+            match result {
+                Ok(data) => {
+                    if tag == 1 {
+                        self.stats.hedge_wins.fetch_add(1, Ordering::SeqCst);
+                    }
+                    return Ok(data);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    if outstanding == 0 {
+                        return Err(last_err.take().expect("error just stored"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Backend for ResilientBackend {
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.read_at_opts(off, buf, IoHints::default())
+    }
+
+    fn read_at_opts(&self, off: u64, buf: &mut [u8], hints: IoHints) -> Result<()> {
+        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+        let req = self.requests.fetch_add(1, Ordering::SeqCst);
+        self.gate(hints.priority)?;
+        let hints = self.effective_hints(hints);
+        let mut attempt = 0u32;
+        loop {
+            let result = if let Some(h) = self.cfg.hedge {
+                self.read_once_hedged(off, buf.len(), hints, &h).map(|data| {
+                    buf.copy_from_slice(&data);
+                })
+            } else {
+                self.stats.attempts.fetch_add(1, Ordering::SeqCst);
+                self.inner.read_at_opts(off, buf, hints)
+            };
+            match result {
+                Ok(()) => {
+                    self.record(true);
+                    return Ok(());
+                }
+                Err(e) => {
+                    if matches!(e, Error::Timeout(_)) {
+                        self.stats.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                    }
+                    self.record(false);
+                    attempt += 1;
+                    if !e.is_transient() {
+                        return Err(e);
+                    }
+                    if attempt >= self.cfg.retry.max_attempts.max(1) {
+                        self.stats.exhausted.fetch_add(1, Ordering::SeqCst);
+                        return Err(e);
+                    }
+                    self.stats.retries.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(self.backoff(req, attempt));
+                }
+            }
+        }
+    }
+
+    fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        // Writes are always demanded (never shed) and never hedged —
+        // a duplicate write races its twin for no latency benefit.
+        // Retrying at this layer is what keeps ordered appends
+        // byte-identical: the offset was already reserved above us, so
+        // every attempt lands on the same range.
+        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+        let req = self.requests.fetch_add(1, Ordering::SeqCst);
+        let mut attempt = 0u32;
+        loop {
+            self.stats.attempts.fetch_add(1, Ordering::SeqCst);
+            match self.inner.write_at(off, data) {
+                Ok(()) => {
+                    self.record(true);
+                    return Ok(());
+                }
+                Err(e) => {
+                    if matches!(e, Error::Timeout(_)) {
+                        self.stats.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                    }
+                    self.record(false);
+                    attempt += 1;
+                    if !e.is_transient() {
+                        return Err(e);
+                    }
+                    if attempt >= self.cfg.retry.max_attempts.max(1) {
+                        self.stats.exhausted.fetch_add(1, Ordering::SeqCst);
+                        return Err(e);
+                    }
+                    self.stats.write_retries.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(self.backoff(req, attempt));
+                }
+            }
+        }
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.inner.len()
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.inner.sync()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "resilient({}, attempts {}, hedge {})",
+            self.inner.describe(),
+            self.cfg.retry.max_attempts,
+            match self.cfg.hedge {
+                Some(h) => format!("after {:?}", h.after),
+                None => "off".into(),
+            }
+        )
+    }
+
+    fn health(&self) -> BackendHealth {
+        if self.forced_open.load(Ordering::SeqCst) {
+            return BackendHealth::Degraded;
+        }
+        match self.breaker.lock() {
+            Ok(b) => match b.state {
+                BreakerState::Closed => BackendHealth::Healthy,
+                _ => BackendHealth::Degraded,
+            },
+            Err(_) => BackendHealth::Degraded,
+        }
+    }
+
+    fn cost_hint(&self) -> Option<CostHint> {
+        self.inner.cost_hint()
+    }
+
+    fn resilience(&self) -> Option<ResilienceStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::fault::{FaultDirection, FaultKind, FaultPlan, FaultyBackend};
+    use crate::storage::mem::MemBackend;
+    use crate::storage::remote::{RemoteConfig, RemoteDevice};
+    use std::sync::Arc;
+
+    fn mem_with(pattern: u8, len: usize) -> BackendRef {
+        Arc::new(MemBackend::from_vec(vec![pattern; len]))
+    }
+
+    fn fast_retry() -> RetryPolicy {
+        RetryPolicy {
+            base_backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_micros(200),
+            ..RetryPolicy::default()
+        }
+    }
+
+    #[test]
+    fn retries_recover_transient_faults_byte_identical() {
+        let flaky: BackendRef = Arc::new(FaultyBackend::new(
+            mem_with(0x5A, 4096),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::EveryNth(3),
+        ));
+        let be = ResilientBackend::new(
+            flaky,
+            ResilientConfig { retry: fast_retry(), ..Default::default() },
+        );
+        let mut buf = [0u8; 64];
+        for i in 0..12u64 {
+            be.read_at(i * 64, &mut buf).unwrap();
+            assert_eq!(buf, [0x5A; 64], "range {i}");
+        }
+        let st = be.stats();
+        assert_eq!(st.requests, 12);
+        assert!(st.retries >= 4, "every 3rd inner request faults: {st:?}");
+        assert_eq!(st.exhausted, 0);
+        assert!(st.attempts > st.requests);
+    }
+
+    #[test]
+    fn permanent_errors_surface_without_retry() {
+        let dead: BackendRef = Arc::new(FaultyBackend::new(
+            mem_with(0, 64),
+            FaultKind::Hard,
+            FaultDirection::Reads,
+            FaultPlan::AfterN(0),
+        ));
+        let be = ResilientBackend::new(
+            dead,
+            ResilientConfig { retry: fast_retry(), ..Default::default() },
+        );
+        let mut buf = [0u8; 16];
+        assert!(be.read_at(0, &mut buf).is_err());
+        let st = be.stats();
+        assert_eq!(st.retries, 0, "hard faults must not be retried");
+        assert_eq!(st.attempts, 1);
+    }
+
+    #[test]
+    fn transient_faults_exhaust_after_max_attempts() {
+        let flaky: BackendRef = Arc::new(FaultyBackend::new(
+            mem_with(0, 64),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::EveryNth(1), // every request faults
+        ));
+        let be = ResilientBackend::new(
+            flaky,
+            ResilientConfig {
+                retry: RetryPolicy { max_attempts: 3, ..fast_retry() },
+                ..Default::default()
+            },
+        );
+        let mut buf = [0u8; 16];
+        let err = be.read_at(0, &mut buf).unwrap_err();
+        assert!(err.is_transient());
+        let st = be.stats();
+        assert_eq!(st.attempts, 3);
+        assert_eq!(st.retries, 2);
+        assert_eq!(st.exhausted, 1);
+    }
+
+    #[test]
+    fn hedge_rescues_stuck_requests() {
+        // Every 2nd remote request is stuck at 30x service time; the
+        // hedge launches after ~p99 and wins with a normal draw.
+        let cfg = RemoteConfig {
+            first_byte_p50: Duration::from_millis(1),
+            first_byte_p99: Duration::from_millis(3),
+            fault_every_nth: 2,
+            timeout_weight: 0.0,
+            short_read_weight: 0.0,
+            stuck_weight: 1.0,
+            stuck_factor: 30.0,
+            seed: 7,
+            ..RemoteConfig::default()
+        };
+        let remote = Arc::new(RemoteDevice::new(cfg, 1.0));
+        remote.preload(0, &[0xC3; 1024]).unwrap();
+        let be = ResilientBackend::new(
+            remote.clone() as BackendRef,
+            ResilientConfig {
+                retry: fast_retry(),
+                hedge: Some(HedgePolicy::at_p99(Duration::from_millis(5))),
+                ..Default::default()
+            },
+        );
+        let mut buf = [0u8; 128];
+        for i in 0..4u64 {
+            be.read_at(i * 128, &mut buf).unwrap();
+            assert_eq!(buf, [0xC3; 128]);
+        }
+        let st = be.stats();
+        assert!(st.hedges >= 1, "stuck requests must trigger hedges: {st:?}");
+        assert!(st.hedge_wins >= 1, "a hedge must beat a stuck primary: {st:?}");
+        assert!(remote.device_stats().stuck >= 1);
+    }
+
+    #[test]
+    fn deadline_misses_count_and_retry() {
+        let cfg = RemoteConfig {
+            first_byte_p50: Duration::from_millis(1),
+            first_byte_p99: Duration::from_millis(3),
+            fault_every_nth: 3,
+            timeout_weight: 1.0,
+            short_read_weight: 0.0,
+            stuck_weight: 0.0,
+            seed: 4,
+            ..RemoteConfig::default()
+        };
+        let remote = Arc::new(RemoteDevice::new(cfg, 1.0));
+        remote.preload(0, &[0x11; 1024]).unwrap();
+        let be = ResilientBackend::new(
+            remote as BackendRef,
+            ResilientConfig {
+                retry: fast_retry(),
+                deadline: Some(Duration::from_millis(20)),
+                ..Default::default()
+            },
+        );
+        let mut buf = [0u8; 64];
+        for i in 0..6u64 {
+            be.read_at(i * 64, &mut buf).unwrap();
+            assert_eq!(buf, [0x11; 64]);
+        }
+        let st = be.stats();
+        assert!(st.deadline_misses >= 1, "timeout faults must miss the deadline: {st:?}");
+        assert!(st.retries >= 1);
+    }
+
+    #[test]
+    fn breaker_opens_sheds_read_ahead_and_recovers() {
+        let flaky = Arc::new(FaultyBackend::new(
+            mem_with(0x77, 1024),
+            FaultKind::Transient,
+            FaultDirection::Reads,
+            FaultPlan::AfterN(0), // every read faults until re-armed
+        ));
+        let be = ResilientBackend::new(
+            flaky.clone() as BackendRef,
+            ResilientConfig {
+                retry: RetryPolicy { max_attempts: 1, ..fast_retry() },
+                breaker: BreakerConfig {
+                    window: 8,
+                    min_samples: 4,
+                    open_error_rate: 0.5,
+                    cooldown: Duration::from_millis(5),
+                    half_open_probes: 2,
+                },
+                ..Default::default()
+            },
+        );
+        let mut buf = [0u8; 16];
+        for _ in 0..4 {
+            assert!(be.read_at(0, &mut buf).is_err());
+        }
+        assert_eq!(be.health(), BackendHealth::Degraded, "breaker must open");
+        assert!(be.stats().breaker_opens >= 1);
+        // Read-ahead is shed without touching the device...
+        let inner_before = flaky.injected();
+        let err = be
+            .read_at_opts(0, &mut buf, IoHints::read_ahead())
+            .unwrap_err();
+        assert!(matches!(err, Error::Shed(_)), "got {err}");
+        assert_eq!(flaky.injected(), inner_before, "shed requests never reach the device");
+        assert!(be.stats().shed >= 1);
+        // ...while head reads keep probing. Heal the device, wait out
+        // the cooldown, and the half-open probes close the breaker.
+        flaky.arm(i64::MAX);
+        std::thread::sleep(Duration::from_millis(10));
+        for _ in 0..3 {
+            be.read_at(0, &mut buf).unwrap();
+        }
+        assert_eq!(be.health(), BackendHealth::Healthy, "probes must close the breaker");
+        be.read_at_opts(0, &mut buf, IoHints::read_ahead()).unwrap();
+        assert_eq!(buf, [0x77; 16]);
+    }
+
+    #[test]
+    fn forced_breaker_sheds_only_read_ahead() {
+        let be = ResilientBackend::new(mem_with(0x2B, 256), ResilientConfig::default());
+        be.force_breaker(true);
+        assert_eq!(be.health(), BackendHealth::Degraded);
+        let mut buf = [0u8; 16];
+        assert!(matches!(
+            be.read_at_opts(0, &mut buf, IoHints::read_ahead()),
+            Err(Error::Shed(_))
+        ));
+        be.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, [0x2B; 16], "head reads always pass");
+        be.force_breaker(false);
+        be.read_at_opts(0, &mut buf, IoHints::read_ahead()).unwrap();
+        assert_eq!(be.health(), BackendHealth::Healthy);
+    }
+
+    #[test]
+    fn writes_retry_to_byte_identical_content() {
+        let flaky: BackendRef = Arc::new(FaultyBackend::new(
+            Arc::new(MemBackend::new()),
+            FaultKind::Transient,
+            FaultDirection::Writes,
+            FaultPlan::EveryNth(2),
+        ));
+        let be = ResilientBackend::new(
+            flaky,
+            ResilientConfig { retry: fast_retry(), ..Default::default() },
+        );
+        for i in 0..8u64 {
+            be.write_at(i * 32, &[i as u8; 32]).unwrap();
+        }
+        let st = be.stats();
+        assert!(st.write_retries >= 3, "every 2nd write attempt faults: {st:?}");
+        let mut buf = [0u8; 32];
+        for i in 0..8u64 {
+            be.read_at(i * 32, &mut buf).unwrap();
+            assert_eq!(buf, [i as u8; 32], "write {i} must be byte-identical");
+        }
+    }
+
+    #[test]
+    fn hedge_slots_stay_bounded_and_release() {
+        let session = Session::new(crate::session::SessionConfig::default());
+        let be = ResilientBackend::in_session(
+            mem_with(9, 512),
+            ResilientConfig {
+                hedge: Some(HedgePolicy { after: Duration::from_micros(1) }),
+                ..Default::default()
+            },
+            &session,
+        );
+        let mut buf = [0u8; 32];
+        for i in 0..8u64 {
+            be.read_at(i * 32, &mut buf).unwrap();
+        }
+        // Even with an absurdly eager hedge delay, slots drain back as
+        // the losing duplicates finish (give them a moment to land).
+        for _ in 0..1000 {
+            if session.stats().in_flight_hedges == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(session.stats().in_flight_hedges, 0, "hedge slots must not leak");
+        assert_eq!(session.stats().hedge_limit, 4);
+    }
+}

@@ -23,10 +23,16 @@
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 use super::mem::MemBackend;
-use super::Backend;
+use super::{Backend, CostHint};
+
+/// Lock helper: a poisoned device lock surfaces as [`Error::Sync`]
+/// instead of cascading the panic into every later caller.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> Result<std::sync::MutexGuard<'_, T>> {
+    m.lock().map_err(|_| Error::Sync("storage device lock poisoned".into()))
+}
 
 /// Device timing parameters.
 #[derive(Clone, Copy, Debug)]
@@ -123,6 +129,21 @@ pub struct DeviceStats {
     /// single-issue queue before their own service began (zero in
     /// pure accounting mode, `time_scale` = 0).
     pub queue_wait: Duration,
+    /// Modelled (unscaled) time spent on seeks / first-byte latency.
+    pub seek_time: Duration,
+    /// Modelled (unscaled) time spent streaming bytes.
+    pub transfer_time: Duration,
+    /// Injected transient faults delivered (remote device only):
+    /// 5xx-style retryable errors.
+    pub faults: u64,
+    /// Requests failed because modelled service time exceeded the
+    /// caller's deadline, or an injected timeout fault fired.
+    pub timeouts: u64,
+    /// Injected short reads (fewer bytes than requested delivered).
+    pub short_reads: u64,
+    /// Requests that got stuck (served, but far beyond p99 — the case
+    /// hedging rescues).
+    pub stuck: u64,
 }
 
 impl DeviceStats {
@@ -137,7 +158,27 @@ impl DeviceStats {
             bytes_written: self.bytes_written - earlier.bytes_written,
             seeks: self.seeks - earlier.seeks,
             queue_wait: self.queue_wait.saturating_sub(earlier.queue_wait),
+            seek_time: self.seek_time.saturating_sub(earlier.seek_time),
+            transfer_time: self.transfer_time.saturating_sub(earlier.transfer_time),
+            faults: self.faults - earlier.faults,
+            timeouts: self.timeouts - earlier.timeouts,
+            short_reads: self.short_reads - earlier.short_reads,
+            stuck: self.stuck - earlier.stuck,
         }
+    }
+
+    /// Observed per-request cost: mean seek time over ops that paid
+    /// one, and achieved bandwidth from transfer time. `None` until
+    /// there is at least one seek and one transferred byte.
+    pub fn cost_hint(&self) -> Option<CostHint> {
+        let bytes = self.bytes_read + self.bytes_written;
+        if self.seeks == 0 || bytes == 0 || self.transfer_time.is_zero() {
+            return None;
+        }
+        Some(CostHint {
+            seek_secs: self.seek_time.as_secs_f64() / self.seeks as f64,
+            read_mbps: bytes as f64 / 1e6 / self.transfer_time.as_secs_f64(),
+        })
     }
 }
 
@@ -184,10 +225,10 @@ impl SimDevice {
         self.queue.lock().unwrap().busy
     }
 
-    fn charge(&self, off: u64, len: usize, mbps: f64, is_write: bool) {
+    fn charge(&self, off: u64, len: usize, mbps: f64, is_write: bool) -> Result<()> {
         let transfer = Duration::from_secs_f64(len as f64 / (mbps * 1e6));
         let (cost, _deadline) = {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = lock(&self.queue)?;
             let seek = if q.last_end == off { Duration::ZERO } else { self.model.seek };
             let cost = seek + transfer;
             q.last_end = off + len as u64;
@@ -201,10 +242,12 @@ impl SimDevice {
             };
             let deadline = start + scaled;
             q.available_at = Some(deadline);
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock(&self.stats)?;
             if seek > Duration::ZERO {
                 st.seeks += 1;
+                st.seek_time += seek;
             }
+            st.transfer_time += transfer;
             if is_write {
                 st.writes += 1;
                 st.bytes_written += len as u64;
@@ -219,7 +262,7 @@ impl SimDevice {
             // Sleep outside the lock: concurrent callers pile onto the
             // device queue exactly like blocked writers on one disk.
             let target = {
-                let q = self.queue.lock().unwrap();
+                let q = lock(&self.queue)?;
                 q.available_at
             };
             if let Some(t) = target {
@@ -230,17 +273,18 @@ impl SimDevice {
             }
             let _ = cost;
         }
+        Ok(())
     }
 }
 
 impl Backend for SimDevice {
     fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
-        self.charge(off, buf.len(), self.model.read_mbps, false);
+        self.charge(off, buf.len(), self.model.read_mbps, false)?;
         self.mem.read_at(off, buf)
     }
 
     fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
-        self.charge(off, data.len(), self.model.write_mbps, true);
+        self.charge(off, data.len(), self.model.write_mbps, true)?;
         self.mem.write_at(off, data)
     }
 
@@ -250,6 +294,15 @@ impl Backend for SimDevice {
 
     fn describe(&self) -> String {
         format!("sim:{} ({} MB/s write)", self.model.name, self.model.write_mbps)
+    }
+
+    fn cost_hint(&self) -> Option<CostHint> {
+        // Prefer observed costs; fall back to the model so adaptive
+        // coalescing works before any traffic has flowed.
+        self.device_stats().cost_hint().or(Some(CostHint {
+            seek_secs: self.model.seek.as_secs_f64(),
+            read_mbps: self.model.read_mbps,
+        }))
     }
 }
 

@@ -155,12 +155,24 @@ impl BasketSink for FileSink {
         }
         self.append_now(&meta, &payload)?;
         drop(payload); // recycle before draining successors
-        let mut next = meta.seq + 1;
-        while let Some(s) = queue.stash.remove(&next) {
-            self.append_now(&s.meta, &s.payload)?;
-            next += 1;
+        // Advance the cursor per drained basket, not once at the end:
+        // if an append fails mid-drain (a transient device fault that
+        // exhausted the backend's retries), the queue must keep an
+        // exact record of what landed — the failed basket goes back in
+        // the stash and `next_seq` stays on it, so nothing is silently
+        // lost and nothing can be appended twice. Transient faults
+        // normally never get this far: [`FileWriter::append`] reserves
+        // the offset first, so a resilient backend retries the
+        // write_at against the *same* offset and the file stays
+        // byte-identical (see `storage::resilient`).
+        queue.next_seq = meta.seq + 1;
+        while let Some(s) = queue.stash.remove(&queue.next_seq) {
+            if let Err(e) = self.append_now(&s.meta, &s.payload) {
+                queue.stash.insert(s.meta.seq, s);
+                return Err(e);
+            }
+            queue.next_seq += 1;
         }
-        queue.next_seq = next;
         Ok(())
     }
 }
@@ -258,6 +270,43 @@ mod tests {
         // seq 0 never arrives (its task failed): close must error, not
         // silently drop the stashed basket.
         assert!(sink.into_meta("t".into(), schema2(), 20).is_err());
+    }
+
+    #[test]
+    fn mid_drain_append_failure_keeps_queue_consistent() {
+        use crate::storage::fault::{FaultDirection, FaultKind, FaultPlan, FaultyBackend};
+        use crate::storage::Backend;
+        // Header + two basket appends fit the fault budget; the third
+        // append (draining seq 2) hits a hard device error.
+        let faulty = Arc::new(FaultyBackend::new(
+            Arc::new(MemBackend::new()),
+            FaultKind::Hard,
+            FaultDirection::Writes,
+            FaultPlan::AfterN(3),
+        ));
+        let fw = Arc::new(FileWriter::create(faulty.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), 1);
+        sink.put_basket(bm(0, 1, 4, 10, 10), vec![9, 9].into()).unwrap();
+        sink.put_basket(bm(0, 2, 4, 20, 10), vec![8, 8].into()).unwrap();
+        sink.put_basket(bm(0, 3, 4, 30, 10), vec![7, 7].into()).unwrap();
+        assert_eq!(fw.position(), HEADER_LEN, "everything stashed until seq 0");
+        // seq 0 drains: 0 and 1 append, then seq 2's device write
+        // faults mid-drain and must surface — not vanish.
+        assert!(
+            sink.put_basket(bm(0, 0, 4, 0, 10), vec![6, 6].into()).is_err(),
+            "exhausted fault budget must surface from the drain"
+        );
+        assert_eq!(faulty.injected(), 1);
+        // The two baskets that landed are intact and in order (reads
+        // are not faulted).
+        let mut got = [0u8; 4];
+        faulty.read_at(HEADER_LEN, &mut got).unwrap();
+        assert_eq!(&got, &[6, 6, 9, 9], "seq 0 then seq 1, byte-exact");
+        // The faulted basket went back to the stash with `next_seq`
+        // still pointing at it: close reports the undrained baskets
+        // instead of silently dropping them or appending seq 3 past
+        // the hole.
+        assert!(sink.into_meta("t".into(), schema2(), 40).is_err());
     }
 
     #[test]

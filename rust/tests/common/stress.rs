@@ -57,6 +57,12 @@ pub struct StressPlan {
     /// Stored-range gap the prefetcher bridges when coalescing (0
     /// forces strict adjacency).
     pub coalesce_gap: u32,
+    /// Write-side transient-fault rate (ISSUE 6): the fraction of
+    /// distinct write ranges whose *first* attempt blips
+    /// ([`rootio_par::storage::fault::FaultPlan::SeededRate`] — retries
+    /// always pass, so recovery is deterministic under any schedule).
+    /// 0 keeps the device healthy; half the matrix draws a fault rate.
+    pub write_fault_rate: f64,
 }
 
 impl StressPlan {
@@ -103,6 +109,7 @@ impl StressPlan {
             schema: g.schema(4),
             read_window,
             coalesce_gap: *g.choose(&[0u32, 64, 4096]),
+            write_fault_rate: *g.choose(&[0.0, 0.0, 0.15, 0.35]),
         }
     }
 }

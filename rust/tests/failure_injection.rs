@@ -1,17 +1,35 @@
 //! Failure injection: random corruption of stored files must surface
 //! as errors (checksum/format/codec), never panics or silent bad data.
+//!
+//! Beyond stored-bit corruption, the device itself misbehaves: reads
+//! fail or short out mid-window (ISSUE 5), remote requests blip, stall
+//! far past p99 or die for good (ISSUE 6). The [`FaultyBackend`] /
+//! [`RemoteDevice`] tests below drive the prefetcher, the multi-writer
+//! sink and `hadd` through those faults and require either full
+//! recovery (byte-identical data) or one clean error — never a panic,
+//! a hang, or a leaked session budget slot.
 
 mod common;
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use common::{property, Gen};
+use rootio_par::cache::PrefetchOptions;
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::format::reader::FileReader;
 use rootio_par::format::writer::FileWriter;
 use rootio_par::format::Directory;
+use rootio_par::imt::Pool;
+use rootio_par::serial::schema::Schema;
 use rootio_par::serial::value::Value;
+use rootio_par::session::{Session, SessionConfig};
+use rootio_par::storage::fault::{FaultDirection, FaultKind, FaultPlan, FaultyBackend};
 use rootio_par::storage::mem::MemBackend;
+use rootio_par::storage::remote::{RemoteConfig, RemoteDevice};
+use rootio_par::storage::resilient::{
+    HedgePolicy, ResilientBackend, ResilientConfig, RetryPolicy,
+};
 use rootio_par::storage::{Backend, BackendRef};
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::FileSink;
@@ -126,59 +144,11 @@ fn header_corruption_is_rejected() {
     }
 }
 
-/// Backend wrapper that fails — or short-reads — `read_at` once its
-/// healthy-call budget runs out: the mid-window device fault the
-/// prefetcher must surface cleanly (ISSUE 5).
-struct FlakyBackend {
-    inner: BackendRef,
-    remaining: std::sync::atomic::AtomicI64,
-    /// `true`: deliver only half the requested range (the rest stays
-    /// zeroed) so CRC verification has to catch it; `false`: a hard
-    /// `Err` from the device.
-    short: bool,
-}
-
-impl Backend for FlakyBackend {
-    fn read_at(&self, off: u64, buf: &mut [u8]) -> rootio_par::error::Result<()> {
-        use std::sync::atomic::Ordering;
-        if self.remaining.fetch_sub(1, Ordering::SeqCst) <= 0 {
-            if self.short {
-                let half = buf.len() / 2;
-                return self.inner.read_at(off, &mut buf[..half]);
-            }
-            return Err(rootio_par::error::Error::Io(std::io::Error::other(
-                "injected device failure",
-            )));
-        }
-        self.inner.read_at(off, buf)
-    }
-
-    fn write_at(&self, off: u64, data: &[u8]) -> rootio_par::error::Result<()> {
-        self.inner.write_at(off, data)
-    }
-
-    fn len(&self) -> rootio_par::error::Result<u64> {
-        self.inner.len()
-    }
-
-    fn describe(&self) -> String {
-        format!("flaky({})", self.inner.describe())
-    }
-}
-
-/// Satellite (ISSUE 5): a failing or short `read_at` mid-window must
-/// propagate as an error through the prefetcher — no hang, no leaked
-/// read-budget slot, the session still drains cleanly.
-#[test]
-fn prefetcher_surfaces_device_faults_without_hang_or_leaked_slots() {
-    use rootio_par::cache::PrefetchOptions;
-    use rootio_par::imt::Pool;
-    use rootio_par::serial::schema::Schema;
-    use rootio_par::session::{Session, SessionConfig};
-
-    // Healthy 8-cluster file: 2 branches × 512 rows at 64 per basket.
+/// Healthy streaming fixture shared by the device-fault tests below:
+/// 2 F32 branches × `rows` rows at 64 per basket (one cluster per 64
+/// rows), written through `inner`.
+fn build_stream_file(inner: &BackendRef, rows: usize) {
     let schema = Schema::flat_f32("c", 2);
-    let inner: BackendRef = Arc::new(MemBackend::new());
     let fw = Arc::new(FileWriter::create(inner.clone()).unwrap());
     let sink = FileSink::new(fw.clone(), 2);
     let cfg = WriterConfig {
@@ -188,12 +158,24 @@ fn prefetcher_surfaces_device_faults_without_hang_or_leaked_slots() {
         ..Default::default()
     };
     let mut w = TreeWriter::new(schema.clone(), sink, cfg);
-    for i in 0..512 {
+    for i in 0..rows {
         w.fill(vec![Value::F32(i as f32), Value::F32(i as f32 * 0.5)]).unwrap();
     }
     let (sink, entries, _) = w.close().unwrap();
     let meta = sink.into_meta("t".into(), schema, entries).unwrap();
     fw.finish(&Directory { trees: vec![meta] }).unwrap();
+}
+
+/// Satellite (ISSUE 5, re-pointed at the promoted
+/// [`rootio_par::storage::fault::FaultyBackend`] in ISSUE 6): a
+/// failing or silently-short read mid-window must propagate as an
+/// error through the prefetcher — no hang, no leaked read-budget
+/// slot, the session still drains cleanly.
+#[test]
+fn prefetcher_surfaces_device_faults_without_hang_or_leaked_slots() {
+    // Healthy 8-cluster file: 2 branches × 512 rows at 64 per basket.
+    let inner: BackendRef = Arc::new(MemBackend::new());
+    build_stream_file(&inner, 512);
 
     let pool = Arc::new(Pool::new(3));
     for short in [false, true] {
@@ -201,15 +183,11 @@ fn prefetcher_surfaces_device_faults_without_hang_or_leaked_slots() {
         // path needs), then arm the fault: 3 healthy window fetches,
         // a later window's fetch fails mid-stream while earlier
         // clusters are being consumed.
-        let flaky = Arc::new(FlakyBackend {
-            inner: inner.clone(),
-            remaining: std::sync::atomic::AtomicI64::new(i64::MAX),
-            short,
-        });
+        let flaky = Arc::new(FaultyBackend::fail_reads_after(inner.clone(), i64::MAX, short));
         let be: BackendRef = flaky.clone();
         let reader =
             TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
-        flaky.remaining.store(3, std::sync::atomic::Ordering::SeqCst);
+        flaky.arm(3);
         let session = Session::with_pool(pool.clone(), SessionConfig::default());
         let mut stream = reader
             .stream_in_session(&PrefetchOptions::fixed(2), &session)
@@ -238,4 +216,368 @@ fn prefetcher_surfaces_device_faults_without_hang_or_leaked_slots() {
             "no read-budget slot may leak across a device fault (short={short})"
         );
     }
+}
+
+/// Tentpole acceptance (ISSUE 6): a seeded fault-injected remote
+/// object store — heavy-tailed first-byte latency, every 6th request
+/// faulting (a ~16% fault rate, well above the required 2%) — behind
+/// retry + hedged reads must decode byte-identical to a fault-free
+/// serial read, while the stream holds at least 8 read-ahead windows
+/// in flight from an 8-thread pool.
+#[test]
+fn remote_faults_recover_byte_identical_under_deep_read_ahead() {
+    // Stage the file on a clean backend and capture the ground truth.
+    let clean: BackendRef = Arc::new(MemBackend::new());
+    build_stream_file(&clean, 2048); // 32 clusters
+    let expect = {
+        let r = TreeReader::open_first(Arc::new(FileReader::open(clean.clone()).unwrap()))
+            .unwrap();
+        r.read_all().unwrap()
+    };
+    let len = clean.len().unwrap() as usize;
+    let mut bytes = vec![0u8; len];
+    clean.read_at(0, &mut bytes).unwrap();
+
+    // Every 6th request stalls far past the deadline (timeout flavour):
+    // the fault *count* is deterministic, and consecutive request
+    // indices can never both fault, so a retry or hedge always lands
+    // on a healthy draw.
+    let remote = Arc::new(RemoteDevice::new(
+        RemoteConfig {
+            first_byte_p50: Duration::from_millis(1),
+            first_byte_p99: Duration::from_millis(3),
+            request_slots: 16,
+            seed: 21,
+            fault_every_nth: 6,
+            timeout_weight: 1.0,
+            short_read_weight: 0.0,
+            stuck_weight: 0.0,
+            ..RemoteConfig::default()
+        },
+        1.0,
+    ));
+    remote.preload(0, &bytes).unwrap();
+
+    let pool = Arc::new(Pool::new(8));
+    let session = Session::with_pool(
+        pool,
+        SessionConfig { max_inflight_read_windows: 16, ..Default::default() },
+    );
+    let res = Arc::new(ResilientBackend::in_session(
+        remote.clone() as BackendRef,
+        ResilientConfig {
+            retry: RetryPolicy {
+                max_attempts: 6,
+                base_backoff: Duration::from_micros(100),
+                max_backoff: Duration::from_millis(2),
+                ..RetryPolicy::default()
+            },
+            hedge: Some(HedgePolicy::at_p99(Duration::from_millis(5))),
+            deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        },
+        &session,
+    ));
+    let reader = TreeReader::open_first(Arc::new(
+        FileReader::open(res.clone() as BackendRef).unwrap(),
+    ))
+    .unwrap();
+    let mut stream =
+        reader.stream_in_session(&PrefetchOptions::fixed(16), &session).unwrap();
+    let cols = stream.read_all_columns().unwrap();
+    assert_eq!(cols, expect, "decode through remote faults must be byte-identical");
+    let st = stream.stats();
+    assert_eq!(st.clusters, 32);
+    assert!(
+        stream.admission_high_water() >= 8,
+        "deep read-ahead must hold >= 8 windows in flight, got {}",
+        stream.admission_high_water()
+    );
+    assert!(remote.device_stats().faults >= 1, "the device must actually fault");
+    let rs = res.stats();
+    assert!(
+        rs.retries + rs.hedges >= 1,
+        "stalled requests must exercise the resilience layer: {rs:?}"
+    );
+    assert_eq!(rs.exhausted, 0, "no request may exhaust its retry budget: {rs:?}");
+    drop(stream);
+    session.drain().unwrap();
+    assert_eq!(session.stats().in_flight_read_windows, 0, "no leaked read-budget slot");
+    // Hedge losers finish detached; their slots must drain back.
+    for _ in 0..2000 {
+        if session.stats().in_flight_hedges == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(session.stats().in_flight_hedges, 0, "no leaked hedge slot");
+}
+
+/// Tentpole acceptance (ISSUE 6): with the circuit breaker forced
+/// open the stream must not fail — it degrades to head-only fetching
+/// (no speculative read-ahead past the consumer) and still decodes
+/// every cluster byte-identically.
+#[test]
+fn forced_open_breaker_completes_head_only() {
+    let clean: BackendRef = Arc::new(MemBackend::new());
+    build_stream_file(&clean, 1024); // 16 clusters
+    let expect = {
+        let r = TreeReader::open_first(Arc::new(FileReader::open(clean.clone()).unwrap()))
+            .unwrap();
+        r.read_all().unwrap()
+    };
+    let len = clean.len().unwrap() as usize;
+    let mut bytes = vec![0u8; len];
+    clean.read_at(0, &mut bytes).unwrap();
+
+    // Fault-free remote in accounting-only mode (time_scale 0): the
+    // degradation under test comes from the breaker, not the device.
+    let remote = Arc::new(RemoteDevice::new(RemoteConfig::default(), 0.0));
+    remote.preload(0, &bytes).unwrap();
+
+    let pool = Arc::new(Pool::new(4));
+    let session = Session::with_pool(pool, SessionConfig::default());
+    let res = Arc::new(ResilientBackend::in_session(
+        remote as BackendRef,
+        ResilientConfig::default(),
+        &session,
+    ));
+    res.force_breaker(true);
+    let reader = TreeReader::open_first(Arc::new(
+        FileReader::open(res.clone() as BackendRef).unwrap(),
+    ))
+    .unwrap();
+    let mut stream =
+        reader.stream_in_session(&PrefetchOptions::fixed(8), &session).unwrap();
+    let cols = stream.read_all_columns().unwrap();
+    assert_eq!(cols, expect, "a degraded stream must still decode correctly");
+    let st = stream.stats();
+    assert_eq!(st.clusters, 16);
+    assert_eq!(
+        st.degraded_windows, 16,
+        "every window must have been fetched head-only: {st:?}"
+    );
+    drop(stream);
+    session.drain().unwrap();
+    assert_eq!(session.stats().in_flight_read_windows, 0);
+}
+
+/// Satellite (ISSUE 6): two writers on one file under a shared
+/// session, with a seeded fraction of `write_at` ranges blipping on
+/// first attempt — the resilient layer retries at the already-reserved
+/// offset, so the file reads back exactly as if the device had been
+/// healthy, and no cluster budget slot leaks.
+#[test]
+fn multi_writer_recovers_transient_write_faults() {
+    let flaky = Arc::new(FaultyBackend::new(
+        Arc::new(MemBackend::new()),
+        FaultKind::Transient,
+        FaultDirection::Writes,
+        // First attempt on ~30% of ranges faults, retries always pass:
+        // deterministic recovery regardless of thread interleaving.
+        FaultPlan::SeededRate { seed: 9, rate: 0.3 },
+    ));
+    let res = Arc::new(ResilientBackend::new(
+        flaky.clone() as BackendRef,
+        ResilientConfig {
+            retry: RetryPolicy {
+                base_backoff: Duration::from_micros(50),
+                max_backoff: Duration::from_micros(400),
+                ..RetryPolicy::default()
+            },
+            ..Default::default()
+        },
+    ));
+    let be: BackendRef = res.clone();
+    let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+    let pool = Arc::new(Pool::new(3));
+    let session = Session::with_pool(pool, SessionConfig::for_writers(2, 2));
+    let schema = Schema::flat_f32("c", 2);
+    let cfg = WriterConfig {
+        basket_entries: 32,
+        compression: Settings::new(Codec::Lz4r, 2),
+        flush: FlushMode::Pipelined,
+        ..Default::default()
+    };
+    std::thread::scope(|s| {
+        for (name, base) in [("alpha", 0.0f32), ("beta", 1000.0f32)] {
+            let sink = FileSink::new(fw.clone(), 2);
+            let mut w = TreeWriter::attached(schema.clone(), sink, cfg.clone(), &session);
+            let schema = schema.clone();
+            s.spawn(move || {
+                for i in 0..200 {
+                    w.fill(vec![Value::F32(base + i as f32), Value::F32(i as f32 * 0.5)])
+                        .unwrap();
+                }
+                let (sink, entries, _) = w.close().unwrap();
+                sink.finish_tree(name.into(), schema, entries).unwrap();
+            });
+        }
+    });
+    fw.finish_registered().unwrap();
+    session.drain().unwrap();
+    assert_eq!(session.stats().in_flight_clusters, 0, "no leaked cluster slot");
+    assert!(flaky.injected() >= 1, "the device must actually fault");
+    assert!(
+        res.stats().write_retries >= 1,
+        "faulted appends must be retried: {:?}",
+        res.stats()
+    );
+
+    // Reads are unaffected by the write-direction plan: the recovered
+    // file must be complete and value-identical to what was filled.
+    let file = Arc::new(FileReader::open(be).unwrap());
+    for (name, base) in [("alpha", 0.0f32), ("beta", 1000.0f32)] {
+        let r = TreeReader::open(file.clone(), name).unwrap();
+        assert_eq!(r.entries(), 200);
+        let cols = r.read_all().unwrap();
+        for i in 0..200usize {
+            assert_eq!(cols[0].get(i), Some(Value::F32(base + i as f32)), "{name}[{i}]");
+        }
+    }
+}
+
+/// Satellite (ISSUE 6): a device that dies for good mid-write must
+/// surface as clean errors from the writers — no panic, no hang, no
+/// retry of a permanent fault, no leaked cluster slot.
+#[test]
+fn multi_writer_hard_fault_surfaces_cleanly_without_leaks() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let flaky = Arc::new(FaultyBackend::new(
+        Arc::new(MemBackend::new()),
+        FaultKind::Hard,
+        FaultDirection::Writes,
+        // Header + a few appends land, then the device is gone.
+        FaultPlan::AfterN(6),
+    ));
+    let res = Arc::new(ResilientBackend::new(
+        flaky.clone() as BackendRef,
+        ResilientConfig::default(),
+    ));
+    let be: BackendRef = res.clone();
+    let fw = Arc::new(FileWriter::create(be).unwrap());
+    let pool = Arc::new(Pool::new(3));
+    let session = Session::with_pool(pool, SessionConfig::for_writers(2, 2));
+    let schema = Schema::flat_f32("c", 2);
+    let cfg = WriterConfig {
+        basket_entries: 16,
+        compression: Settings::new(Codec::Lz4r, 2),
+        flush: FlushMode::Pipelined,
+        ..Default::default()
+    };
+    let failures = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for name in ["alpha", "beta"] {
+            let sink = FileSink::new(fw.clone(), 2);
+            let mut w = TreeWriter::attached(schema.clone(), sink, cfg.clone(), &session);
+            let schema = schema.clone();
+            let failures = &failures;
+            s.spawn(move || {
+                let mut failed = false;
+                for i in 0..400 {
+                    if w.fill(vec![Value::F32(i as f32), Value::F32(i as f32)]).is_err() {
+                        failed = true;
+                        break;
+                    }
+                }
+                // close() always drains its task group, error or not.
+                match w.close() {
+                    Ok((sink, entries, _)) => {
+                        if sink.finish_tree(name.into(), schema, entries).is_err() {
+                            failed = true;
+                        }
+                    }
+                    Err(_) => failed = true,
+                }
+                if failed {
+                    failures.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+    });
+    assert!(
+        failures.load(Ordering::SeqCst) >= 1,
+        "a dead device must fail at least one writer"
+    );
+    // Must return (success or error), never hang.
+    let _ = fw.finish_registered();
+    session.drain().unwrap();
+    assert_eq!(session.stats().in_flight_clusters, 0, "no leaked cluster slot");
+    assert_eq!(
+        res.stats().write_retries,
+        0,
+        "permanent faults must not be retried: {:?}",
+        res.stats()
+    );
+    assert!(flaky.injected() >= 1);
+}
+
+/// Satellite (ISSUE 6): `hadd` merging through a blippy output device
+/// retries to a byte-identical merged file. Serial merge + every-3rd
+/// write faulting makes both the fault count and the recovery fully
+/// deterministic (the retry is never the 3rd-next call).
+#[test]
+fn hadd_through_transient_output_faults_is_byte_identical() {
+    use rootio_par::hadd::{hadd, HaddOptions};
+
+    let mk_input = |base: f32| -> BackendRef {
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let schema = Schema::flat_f32("c", 2);
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), 2);
+        let cfg = WriterConfig {
+            basket_entries: 32,
+            compression: Settings::new(Codec::Lz4r, 2),
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..100 {
+            w.fill(vec![Value::F32(base + i as f32), Value::F32(i as f32)]).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        be
+    };
+    let inputs = [mk_input(0.0), mk_input(500.0)];
+    let opts = HaddOptions { parallel: false, ..Default::default() };
+
+    let clean_out: BackendRef = Arc::new(MemBackend::new());
+    hadd(clean_out.clone(), &inputs, &opts).unwrap();
+
+    let flaky = Arc::new(FaultyBackend::new(
+        Arc::new(MemBackend::new()),
+        FaultKind::Transient,
+        FaultDirection::Writes,
+        FaultPlan::EveryNth(3),
+    ));
+    let res = Arc::new(ResilientBackend::new(
+        flaky.clone() as BackendRef,
+        ResilientConfig {
+            retry: RetryPolicy {
+                base_backoff: Duration::from_micros(50),
+                max_backoff: Duration::from_micros(400),
+                ..RetryPolicy::default()
+            },
+            ..Default::default()
+        },
+    ));
+    let faulty_out: BackendRef = res.clone();
+    hadd(faulty_out.clone(), &inputs, &opts).unwrap();
+
+    let len = clean_out.len().unwrap();
+    assert_eq!(len, faulty_out.len().unwrap(), "merged files must be the same size");
+    let mut a = vec![0u8; len as usize];
+    let mut b = vec![0u8; len as usize];
+    clean_out.read_at(0, &mut a).unwrap();
+    faulty_out.read_at(0, &mut b).unwrap();
+    assert_eq!(a, b, "retried writes must land byte-identical");
+    assert!(
+        res.stats().write_retries >= 1,
+        "every 3rd output write faults: {:?}",
+        res.stats()
+    );
+    assert!(flaky.injected() >= 1);
 }

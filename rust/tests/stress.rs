@@ -30,7 +30,9 @@ use rootio_par::serial::schema::Schema;
 use rootio_par::serial::value::Row;
 use rootio_par::session::{Session, SessionConfig};
 use rootio_par::simsched::{simulate, Graph, Place};
+use rootio_par::storage::fault::{FaultDirection, FaultKind, FaultPlan, FaultyBackend};
 use rootio_par::storage::mem::MemBackend;
+use rootio_par::storage::resilient::{ResilientBackend, ResilientConfig, RetryPolicy};
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::{BasketMeta, BasketSink, FileSink, PayloadBuf};
@@ -330,6 +332,94 @@ fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
             }
         },
     );
+}
+
+/// Satellite property (ISSUE 6): a seeded fraction of write ranges
+/// blipping on their first attempt must be invisible after retry —
+/// the pipelined adaptive write through a
+/// `ResilientBackend(FaultyBackend(...))` stack decodes
+/// entry-identical to a clean serial write under every schedule the
+/// seed matrix perturbs, every injected fault is retried, and the
+/// session budget drains with no leaked cluster slot.
+#[test]
+fn prop_write_faults_recover_to_identical_decode() {
+    stress("prop_write_faults_recover_to_identical_decode", |g, plan| {
+        let pool = Arc::new(Pool::new(plan.workers));
+        let rows: Vec<Row> = (0..plan.n_rows).map(|_| g.row(&plan.schema)).collect();
+        let clean_cfg = WriterConfig {
+            basket_entries: plan.basket_entries,
+            compression: plan.compression,
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let (clean_entries, clean) = write_and_decode(&plan.schema, &rows, clean_cfg, None);
+
+        let flaky = Arc::new(FaultyBackend::new(
+            Arc::new(MemBackend::new()),
+            FaultKind::Transient,
+            FaultDirection::Writes,
+            FaultPlan::SeededRate { seed: plan.seed, rate: plan.write_fault_rate },
+        ));
+        let res = Arc::new(ResilientBackend::new(
+            flaky.clone() as BackendRef,
+            ResilientConfig {
+                retry: RetryPolicy {
+                    base_backoff: Duration::from_micros(20),
+                    max_backoff: Duration::from_micros(200),
+                    seed: plan.seed,
+                    ..RetryPolicy::default()
+                },
+                ..Default::default()
+            },
+        ));
+        let be: BackendRef = res.clone();
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), plan.schema.len());
+        let session = Session::with_pool(
+            pool,
+            SessionConfig { max_inflight_clusters: plan.max_inflight, ..Default::default() },
+        );
+        let cfg = WriterConfig {
+            basket_entries: plan.basket_entries,
+            compression: plan.compression,
+            flush: FlushMode::Pipelined,
+            granularity: FlushGranularity::Block,
+            max_inflight_clusters: plan.max_inflight,
+            sizing: plan.sizing,
+        };
+        let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
+        for row in &rows {
+            w.fill(row.clone()).unwrap();
+        }
+        let (sink, entries, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), plan.schema.clone(), entries).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        session.drain().unwrap();
+        assert_eq!(
+            session.stats().in_flight_clusters,
+            0,
+            "budget fully released (seed {})",
+            plan.seed,
+        );
+
+        assert_eq!(entries, clean_entries);
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        let cols = reader.read_all().unwrap();
+        let got: Vec<Vec<u8>> = cols.iter().map(|c| c.encode()).collect();
+        assert_eq!(
+            got, clean,
+            "faulted write decode diverged (seed {}, rate {})",
+            plan.seed, plan.write_fault_rate,
+        );
+        if flaky.injected() > 0 {
+            assert!(
+                res.stats().write_retries >= flaky.injected(),
+                "every transient write fault must be retried: {:?}",
+                res.stats(),
+            );
+        }
+    });
 }
 
 /// A sink whose `put_basket` always panics — the injected fault for
