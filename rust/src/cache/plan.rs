@@ -261,7 +261,15 @@ mod tests {
     use crate::serial::schema::{Field, Schema};
 
     fn info(offset: u64, comp_len: u32, first_entry: u64, n_entries: u32) -> BasketInfo {
-        BasketInfo { offset, comp_len, raw_len: comp_len * 4, first_entry, n_entries, crc: 0 }
+        BasketInfo {
+            offset,
+            comp_len,
+            raw_len: comp_len * 4,
+            first_entry,
+            n_entries,
+            crc: 0,
+            settings: crate::compress::Settings::default_compressed(),
+        }
     }
 
     /// 2 branches × 2 clusters, written cluster-major (the tree
@@ -428,6 +436,7 @@ mod tests {
                 first_entry: 0,
                 n_entries: 1,
                 crc: crc32(&a),
+                settings: crate::compress::Settings::uncompressed(),
             },
             BasketInfo {
                 offset: 150,
@@ -436,6 +445,7 @@ mod tests {
                 first_entry: 1,
                 n_entries: 1,
                 crc: crc32(&b),
+                settings: crate::compress::Settings::uncompressed(),
             },
         ];
         let backend: BackendRef = Arc::new(be);

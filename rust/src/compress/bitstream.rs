@@ -62,8 +62,12 @@ impl<'a> BitReader<'a> {
         BitReader { data, pos: 0, acc: 0, nbits: 0 }
     }
 
+    /// Top up the accumulator to ≥ 56 buffered bits (fewer only near
+    /// the end of the data). Public so batched decoders can pay for
+    /// one refill and then consume several symbols against
+    /// [`BitReader::buffered`] / [`BitReader::peek_buffered`].
     #[inline]
-    fn refill(&mut self) {
+    pub fn refill(&mut self) {
         // Fast path (EXPERIMENTS.md §Perf, L3 iteration 3): absorb up
         // to 7 bytes with one unaligned u64 load instead of a per-byte
         // loop — the refill sits under every decoded symbol.
@@ -104,6 +108,22 @@ impl<'a> BitReader<'a> {
         if self.nbits < n {
             self.refill();
         }
+        let mask = if n == 32 { u64::MAX } else { (1u64 << n) - 1 };
+        (self.acc & mask) as u32
+    }
+
+    /// Bits currently buffered in the accumulator.
+    #[inline]
+    pub fn buffered(&self) -> u32 {
+        self.nbits
+    }
+
+    /// Peek `n` bits **without** the refill check: the caller must have
+    /// established `buffered() >= n` (after a [`BitReader::refill`]).
+    /// This removes the per-symbol branch from batched decode loops.
+    #[inline]
+    pub fn peek_buffered(&self, n: u32) -> u32 {
+        debug_assert!(self.nbits >= n);
         let mask = if n == 32 { u64::MAX } else { (1u64 << n) - 1 };
         (self.acc & mask) as u32
     }

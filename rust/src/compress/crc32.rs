@@ -2,17 +2,29 @@
 //!
 //! ROOT protects each key payload with a checksum; we do the same for
 //! every `RNTF` record. Built from scratch — no external crates.
+//!
+//! Two table-driven widths share one table set:
+//! * **slicing-by-8** (the default on 64-bit targets): one 8-byte load
+//!   per iteration folded through eight 256-entry tables — two
+//!   independent 4-table XOR trees per word, so the CPU overlaps them;
+//! * **slicing-by-4** ([`crc32_update_scalar`], also the fallback on
+//!   narrow targets): the previous implementation, kept `pub` as the
+//!   differential reference for tests and the fig8 microbenchmark.
+//!
+//! Both produce bit-identical CRCs (it is the same polynomial walked in
+//! different strides); the differential tests pin that.
 
-/// Slicing-by-four tables, generated at first use.
+/// Slicing-by-eight tables, generated at first use. The first four
+/// are exactly the slicing-by-4 tables, so the scalar path reuses them.
 struct Tables {
-    t: [[u32; 256]; 4],
+    t: [[u32; 256]; 8],
 }
 
 static TABLES: std::sync::OnceLock<Tables> = std::sync::OnceLock::new();
 
 fn tables() -> &'static Tables {
     TABLES.get_or_init(|| {
-        let mut t = [[0u32; 256]; 4];
+        let mut t = [[0u32; 256]; 8];
         for i in 0..256u32 {
             let mut c = i;
             for _ in 0..8 {
@@ -20,10 +32,10 @@ fn tables() -> &'static Tables {
             }
             t[0][i as usize] = c;
         }
-        for i in 0..256 {
-            t[1][i] = (t[0][i] >> 8) ^ t[0][(t[0][i] & 0xFF) as usize];
-            t[2][i] = (t[1][i] >> 8) ^ t[0][(t[1][i] & 0xFF) as usize];
-            t[3][i] = (t[2][i] >> 8) ^ t[0][(t[2][i] & 0xFF) as usize];
+        for k in 1..8 {
+            for i in 0..256 {
+                t[k][i] = (t[k - 1][i] >> 8) ^ t[0][(t[k - 1][i] & 0xFF) as usize];
+            }
         }
         Tables { t }
     })
@@ -35,7 +47,48 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 /// Streaming update; feed `state = 0xFFFFFFFF` first, xor at the end.
-pub fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
+/// Dispatches to slicing-by-8 on 64-bit targets.
+pub fn crc32_update(state: u32, data: &[u8]) -> u32 {
+    #[cfg(target_pointer_width = "64")]
+    {
+        crc32_update_by8(state, data)
+    }
+    #[cfg(not(target_pointer_width = "64"))]
+    {
+        crc32_update_scalar(state, data)
+    }
+}
+
+/// Slicing-by-8: fold one little-endian `u64` per iteration. The low
+/// word (state-xored) walks tables 7..4, the high word tables 3..0 —
+/// two independent dependency chains the CPU executes in parallel.
+#[cfg(target_pointer_width = "64")]
+pub fn crc32_update_by8(mut state: u32, data: &[u8]) -> u32 {
+    let t = &tables().t;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        let lo = (w as u32) ^ state;
+        let hi = (w >> 32) as u32;
+        state = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        state = t[0][((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// Slicing-by-4 reference implementation (the pre-vectorised update),
+/// kept public so differential tests and the fig8 microbenchmark can
+/// pin the wide path against it.
+pub fn crc32_update_scalar(mut state: u32, data: &[u8]) -> u32 {
     let t = &tables().t;
     let mut chunks = data.chunks_exact(4);
     for c in &mut chunks {
@@ -76,21 +129,35 @@ mod tests {
     }
 
     #[test]
+    fn by8_matches_scalar_every_length_and_phase() {
+        // Differential: the slicing-by-8 path must equal the by-4
+        // reference for every tail length (0..=23 covers all phases of
+        // both strides) and from varied starting states.
+        let mut x = 0x2545_F491u32;
+        let data: Vec<u8> = (0..1024)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        for n in (0..24).chain([63, 64, 65, 255, 1024]) {
+            for seed in [0u32, 0xFFFF_FFFF, 0xDEAD_BEEF] {
+                assert_eq!(
+                    crc32_update(seed, &data[..n]),
+                    crc32_update_scalar(seed, &data[..n]),
+                    "len {n} seed {seed:#x}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn unaligned_tails() {
         for n in 0..16 {
             let data: Vec<u8> = (0..n).map(|i| i as u8).collect();
-            // consistency against bytewise reference
-            let mut c = 0xFFFF_FFFFu32;
-            for &b in &data {
-                c = {
-                    let mut x = c ^ b as u32;
-                    for _ in 0..8 {
-                        x = if x & 1 != 0 { 0xEDB8_8320 ^ (x >> 1) } else { x >> 1 };
-                    }
-                    (c >> 8) ^ x
-                };
-            }
-            // the loop above is a bitwise reference impl of one table step
+            // bytewise reference implementation
             let want = {
                 let mut st = 0xFFFF_FFFFu32;
                 for &b in &data {

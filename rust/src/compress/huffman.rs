@@ -205,6 +205,29 @@ impl Decoder {
         r.skip(entry >> 16);
         Ok((entry & 0xFFFF) as usize)
     }
+
+    /// Bits one table lookup consumes at most — the budget a batched
+    /// caller must have buffered before [`Decoder::read_buffered`].
+    #[inline]
+    pub fn peek_bits(&self) -> u32 {
+        self.peek_bits
+    }
+
+    /// Decode one symbol without the refill check: the caller
+    /// guarantees `r.buffered() >= self.peek_bits()` (one
+    /// [`BitReader::refill`] covers several ≤15-bit codes, the batched
+    /// multi-symbol fast path of the rzip decoder). Byte-identical to
+    /// [`Decoder::read`] — only the refill bookkeeping differs.
+    #[inline]
+    pub fn read_buffered(&self, r: &mut BitReader<'_>) -> Result<usize> {
+        let bits = r.peek_buffered(self.peek_bits);
+        let entry = self.table[bits as usize];
+        if entry == u32::MAX {
+            return Err(Error::Codec("invalid huffman code".into()));
+        }
+        r.skip(entry >> 16);
+        Ok((entry & 0xFFFF) as usize)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,141 @@
+//! Word-wide (SWAR) inner-loop kernels shared by the codecs.
+//!
+//! The LZ match-extension loop is the single hottest scalar loop in
+//! both [`super::lz4r`] and [`super::rzip`]: every candidate probe
+//! compares the source against its back-reference byte by byte. Here
+//! it runs slice-at-a-time — one unaligned `u64` load per side, XOR,
+//! and `trailing_zeros` to locate the first differing byte — which is
+//! 4–8× fewer loads and branches on typical match lengths.
+//!
+//! Every wide kernel keeps its scalar twin `pub` so differential tests
+//! (and the fig8 microbenchmark) can pin **byte-identical** results:
+//! the wide path must return exactly the same length for every input,
+//! therefore the same token stream, therefore the same stored bytes.
+//! On targets without cheap unaligned 64-bit loads
+//! (`target_pointer_width != "64"`) the dispatching entry point simply
+//! is the scalar path.
+
+/// Length of the common prefix of `src[a..]` and `src[b..]`, scanning
+/// while `b + len < end`. Callers pass `a < b <= end <= src.len()`.
+/// Scalar reference implementation — the semantics the wide kernel
+/// must reproduce exactly.
+#[inline]
+pub fn common_prefix_scalar(src: &[u8], a: usize, b: usize, end: usize) -> usize {
+    let mut len = 0usize;
+    while b + len < end && src[a + len] == src[b + len] {
+        len += 1;
+    }
+    len
+}
+
+/// Word-wide common-prefix scan: compare 8 bytes per iteration with
+/// one XOR; `trailing_zeros() / 8` finds the first mismatching byte
+/// (the loads are little-endian, so low bytes are earlier positions).
+/// Returns exactly what [`common_prefix_scalar`] returns.
+#[cfg(target_pointer_width = "64")]
+#[inline]
+pub fn common_prefix_wide(src: &[u8], a: usize, b: usize, end: usize) -> usize {
+    let mut len = 0usize;
+    // Both loads must stay in bounds: the `a` side needs a+len+8 <= end
+    // too (a < b, so the b bound is the tighter one only for b).
+    while b + len + 8 <= end {
+        let wa = u64::from_le_bytes(src[a + len..a + len + 8].try_into().unwrap());
+        let wb = u64::from_le_bytes(src[b + len..b + len + 8].try_into().unwrap());
+        let x = wa ^ wb;
+        if x != 0 {
+            return len + (x.trailing_zeros() / 8) as usize;
+        }
+        len += 8;
+    }
+    while b + len < end && src[a + len] == src[b + len] {
+        len += 1;
+    }
+    len
+}
+
+/// Dispatching entry point: wide on 64-bit targets, scalar elsewhere.
+#[inline]
+pub fn common_prefix(src: &[u8], a: usize, b: usize, end: usize) -> usize {
+    #[cfg(target_pointer_width = "64")]
+    {
+        common_prefix_wide(src, a, b, end)
+    }
+    #[cfg(not(target_pointer_width = "64"))]
+    {
+        common_prefix_scalar(src, a, b, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift_bytes(n: usize, mut x: u32) -> Vec<u8> {
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect()
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn wide_matches_scalar_on_random_pairs() {
+        let mut data = xorshift_bytes(4096, 0xC0FFEE);
+        // Plant long repeats so matches of every length class occur.
+        for rep in [3usize, 7, 8, 9, 15, 16, 17, 31, 64, 200] {
+            let start = rep * 37 % 2000;
+            let (head, tail) = data.split_at_mut(start + rep);
+            tail[..rep].copy_from_slice(&head[start..start + rep]);
+        }
+        let n = data.len();
+        let mut x = 0x1234_5678u32;
+        for _ in 0..20_000 {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            let a = (x as usize) % (n - 1);
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            let b = a + 1 + (x as usize) % (n - a - 1);
+            assert_eq!(
+                common_prefix_wide(&data, a, b, n),
+                common_prefix_scalar(&data, a, b, n),
+                "a={a} b={b}"
+            );
+        }
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn wide_matches_scalar_at_boundaries() {
+        // Identical halves: the match runs into `end` at every length
+        // around the 8-byte stride, including len 0 and len = end - b.
+        for total in [2usize, 7, 8, 9, 15, 16, 17, 24, 31, 40] {
+            let half: Vec<u8> = (0..total).map(|i| (i * 11 + 3) as u8).collect();
+            let mut data = half.clone();
+            data.extend_from_slice(&half);
+            for end in total..=data.len() {
+                assert_eq!(
+                    common_prefix_wide(&data, 0, total, end),
+                    common_prefix_scalar(&data, 0, total, end),
+                    "total={total} end={end}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_ranges_agree() {
+        // a and b overlap (b - a < match length): the RLE case.
+        let data = vec![9u8; 300];
+        for b in 1..40 {
+            assert_eq!(common_prefix(&data, 0, b, data.len()), data.len() - b);
+            assert_eq!(common_prefix_scalar(&data, 0, b, data.len()), data.len() - b);
+        }
+    }
+}

@@ -18,6 +18,8 @@
 
 use crate::error::{Error, Result};
 
+use super::kernels;
+
 const MIN_MATCH: usize = 4;
 const HASH_LOG: usize = 14;
 const HASH_SHIFT: u32 = 32 - HASH_LOG as u32;
@@ -40,7 +42,20 @@ fn write_len(out: &mut Vec<u8>, mut extra: usize) {
 
 /// Compress `src`. `effort` (1..=9) scales the match-search step
 /// acceleration: higher effort = denser probing = better ratio.
+/// Match extension runs word-wide (SWAR) on 64-bit targets; the token
+/// stream is byte-identical to [`compress_scalar`] either way.
 pub fn compress(src: &[u8], effort: u8) -> Vec<u8> {
+    compress_impl::<true>(src, effort)
+}
+
+/// Scalar reference compressor: byte-at-a-time match extension. Kept
+/// public so differential tests and the fig8 microbenchmark can pin
+/// byte-identical output against the wide path.
+pub fn compress_scalar(src: &[u8], effort: u8) -> Vec<u8> {
+    compress_impl::<false>(src, effort)
+}
+
+fn compress_impl<const WIDE: bool>(src: &[u8], effort: u8) -> Vec<u8> {
     let mut out = Vec::with_capacity(src.len() / 2 + 16);
     let n = src.len();
     if n < MIN_MATCH + 1 {
@@ -66,11 +81,13 @@ pub fn compress(src: &[u8], effort: u8) -> Vec<u8> {
             let cpos = cand - 1;
             let off = pos - cpos;
             if off <= MAX_OFFSET && src[cpos..cpos + MIN_MATCH] == src[pos..pos + MIN_MATCH] {
-                // Extend forward.
-                let mut len = MIN_MATCH;
-                while pos + len < n && src[cpos + len] == src[pos + len] {
-                    len += 1;
-                }
+                // Extend forward past the verified MIN_MATCH prefix.
+                let ext = if WIDE {
+                    kernels::common_prefix(src, cpos + MIN_MATCH, pos + MIN_MATCH, n)
+                } else {
+                    kernels::common_prefix_scalar(src, cpos + MIN_MATCH, pos + MIN_MATCH, n)
+                };
+                let len = MIN_MATCH + ext;
                 emit_sequence(&mut out, &src[lit_start..pos], Some((off, len)));
                 pos += len;
                 lit_start = pos;
@@ -111,7 +128,24 @@ fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], m: Option<(usize, usize)>) 
 /// Decompress exactly `dst_len` bytes, appending to `out`. Match
 /// offsets are resolved relative to the start of this block's output
 /// (`out` may already hold earlier blocks — the pooled-buffer path).
+/// Overlapping matches copy word-wide (a doubling `extend_from_within`
+/// cascade) instead of byte-at-a-time; output is byte-identical to
+/// [`decompress_into_scalar`].
 pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    decompress_impl::<true>(src, dst_len, out)
+}
+
+/// Scalar reference decoder (byte-loop overlap copies), kept public
+/// for differential tests and the fig8 microbenchmark.
+pub fn decompress_into_scalar(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    decompress_impl::<false>(src, dst_len, out)
+}
+
+fn decompress_impl<const WIDE: bool>(
+    src: &[u8],
+    dst_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let base = out.len();
     out.reserve(dst_len);
     let mut pos = 0usize;
@@ -168,6 +202,20 @@ pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<
         if off >= mlen {
             // non-overlapping: one memcpy (§Perf L3 iteration 4)
             out.extend_from_within(start..start + mlen);
+        } else if WIDE {
+            // Overlapping (off < mlen): doubling cascade. Each round
+            // copies the whole span available so far from `start`; the
+            // copied region is periodic with period `off` and every
+            // round starts at a multiple of the period, so the result
+            // is byte-identical to the scalar byte loop in O(log)
+            // memcpys instead of `mlen` single-byte pushes.
+            let mut remaining = mlen;
+            while remaining > 0 {
+                let avail = out.len() - start;
+                let k = avail.min(remaining);
+                out.extend_from_within(start..start + k);
+                remaining -= k;
+            }
         } else {
             // overlapping copy (off < mlen), byte-by-byte semantics
             for i in 0..mlen {
@@ -272,6 +320,51 @@ mod tests {
         assert!(decompress(&[], 10).is_err());
         // bad offset: token demanding a match with no history
         assert!(decompress(&[0x01, b'x', 0xFF, 0xFF, 0x00], 100).is_err());
+    }
+
+    #[test]
+    fn wide_paths_are_byte_identical_to_scalar() {
+        // Differential: SWAR match extension must emit the exact token
+        // stream of the scalar reference, and the doubling overlap
+        // copy must decode to the exact bytes of the byte loop —
+        // across adversarial shapes (empty, tiny, incompressible,
+        // highly repetitive, mixed).
+        let mut x = 0xA5A5_0001u32;
+        let random: Vec<u8> = (0..20_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        let mut mixed = b"header".to_vec();
+        mixed.extend(vec![7u8; 3000]); // RLE: offset-1 overlap copies
+        mixed.extend_from_slice(&random[..2000]);
+        mixed.extend(b"abcdefgh".repeat(400)); // period-8 overlap
+        mixed.extend_from_slice(&mixed.clone()[..4000]); // far back-refs
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"abcd".to_vec(),
+            vec![0u8; 65_000],
+            random.clone(),
+            b"the quick brown fox ".repeat(800).to_vec(),
+            mixed,
+        ];
+        for (i, data) in cases.iter().enumerate() {
+            for effort in [1u8, 5, 9] {
+                let wide = compress(data, effort);
+                let scalar = compress_scalar(data, effort);
+                assert_eq!(wide, scalar, "case {i} effort {effort}: tokens diverged");
+                let mut dw = Vec::new();
+                decompress_into(&wide, data.len(), &mut dw).unwrap();
+                let mut ds = Vec::new();
+                decompress_into_scalar(&wide, data.len(), &mut ds).unwrap();
+                assert_eq!(dw, ds, "case {i}: decode diverged");
+                assert_eq!(&dw, data, "case {i}: roundtrip broke");
+            }
+        }
     }
 
     #[test]

@@ -19,9 +19,11 @@
 pub mod bitstream;
 pub mod crc32;
 pub mod huffman;
+pub mod kernels;
 pub mod lz4r;
 pub mod pool;
 pub mod rzip;
+pub mod select;
 
 use crate::error::{Error, Result};
 
@@ -66,6 +68,27 @@ impl Codec {
             Codec::None => "none",
             Codec::Lz4r => "lz4r",
             Codec::Rzip => "rzip",
+        }
+    }
+
+    /// Single-byte wire code for directory metadata (format VERSION 2:
+    /// each basket entry records its own codec + level so per-column
+    /// selection survives into the file).
+    pub fn code(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Lz4r => 1,
+            Codec::Rzip => 2,
+        }
+    }
+
+    /// Inverse of [`Codec::code`].
+    pub fn from_code(code: u8) -> Result<Self> {
+        match code {
+            0 => Ok(Codec::None),
+            1 => Ok(Codec::Lz4r),
+            2 => Ok(Codec::Rzip),
+            other => Err(Error::Codec(format!("unknown codec code {other}"))),
         }
     }
 }

@@ -352,6 +352,104 @@ impl std::ops::DerefMut for Scratch {
     }
 }
 
+/// `u32` buffers above this length are dropped instead of pooled
+/// (16 MB resident), mirroring [`MAX_POOLED_CAPACITY`] for the typed
+/// pool below.
+pub const MAX_POOLED_U32_LEN: usize = 4 * 1024 * 1024;
+
+/// Max `u32` buffers kept per thread-local shelf. The rzip tokeniser
+/// holds exactly two at once (`head` + `prev` chains), so a shelf of
+/// four absorbs nesting with room to spare.
+const U32_SHELF_MAX: usize = 4;
+
+/// Max `u32` buffers kept in the shared fallback pool.
+const U32_GLOBAL_MAX: usize = 16;
+
+thread_local! {
+    static U32_SHELF: RefCell<Vec<Vec<u32>>> = const { RefCell::new(Vec::new()) };
+}
+
+static U32_GLOBAL: Mutex<Vec<Vec<u32>>> = Mutex::new(Vec::new());
+static U32_HITS: AtomicU64 = AtomicU64::new(0);
+static U32_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Borrow a `u32` scratch buffer holding exactly `len` copies of
+/// `fill`, recycled through the same two-tier (thread-local shelf +
+/// shared fallback) scheme as the byte pool.
+///
+/// This exists for the rzip tokeniser's hash tables: before pooling,
+/// every `compress` call allocated (and the allocator zeroed) a fresh
+/// 512 KB `head` array — a fixed tax that dominated tiny-basket
+/// compression. A recycled buffer only pays the `fill` memset over
+/// warm pages.
+pub fn get_u32(len: usize, fill: u32) -> ScratchU32 {
+    let reused = U32_SHELF
+        .with(|s| s.borrow_mut().pop())
+        .or_else(|| U32_GLOBAL.lock().unwrap_or_else(|p| p.into_inner()).pop());
+    let mut buf = match reused {
+        Some(b) => {
+            U32_HITS.fetch_add(1, Ordering::Relaxed);
+            b
+        }
+        None => {
+            U32_MISSES.fetch_add(1, Ordering::Relaxed);
+            Vec::new()
+        }
+    };
+    buf.clear();
+    buf.resize(len, fill);
+    ScratchU32 { buf }
+}
+
+/// `(hits, misses)` of the typed `u32` pool — lets tests pin the
+/// steady-state zero-allocation property.
+pub fn u32_stats() -> (u64, u64) {
+    (U32_HITS.load(Ordering::Relaxed), U32_MISSES.load(Ordering::Relaxed))
+}
+
+/// RAII `u32` scratch buffer: derefs to `Vec<u32>`, returns itself to
+/// the current thread's shelf (overflow: the shared pool) on drop.
+pub struct ScratchU32 {
+    buf: Vec<u32>,
+}
+
+impl Drop for ScratchU32 {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_U32_LEN {
+            return;
+        }
+        let overflow = U32_SHELF.with(|s| {
+            let mut shelf = s.borrow_mut();
+            if shelf.len() < U32_SHELF_MAX {
+                shelf.push(buf);
+                None
+            } else {
+                Some(buf)
+            }
+        });
+        if let Some(buf) = overflow {
+            let mut global = U32_GLOBAL.lock().unwrap_or_else(|p| p.into_inner());
+            if global.len() < U32_GLOBAL_MAX {
+                global.push(buf);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for ScratchU32 {
+    type Target = Vec<u32>;
+    fn deref(&self) -> &Vec<u32> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for ScratchU32 {
+    fn deref_mut(&mut self) -> &mut Vec<u32> {
+        &mut self.buf
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -479,6 +577,31 @@ mod tests {
             "expected >= 100 shelf hits, got {}",
             after - before
         );
+    }
+
+    #[test]
+    fn u32_pool_reuses_buffers_and_refills() {
+        // Warm the shelf, then every get must be a hit (the shelf is
+        // per-thread so concurrent tests cannot steal our buffers),
+        // and the returned contents must be exactly len × fill even
+        // after a larger previous use left stale entries behind.
+        {
+            let _warm = pool_pair();
+        }
+        let (h0, _) = u32_stats();
+        for round in 0..20 {
+            let a = get_u32(1 << 10, u32::MAX);
+            assert_eq!(a.len(), 1 << 10);
+            assert!(a.iter().all(|&v| v == u32::MAX), "round {round}");
+            let b = get_u32(100, 7);
+            assert_eq!(&b[..], &[7u32; 100][..]);
+        }
+        let (h1, _) = u32_stats();
+        assert!(h1 - h0 >= 40, "expected >= 40 shelf hits, got {}", h1 - h0);
+    }
+
+    fn pool_pair() -> (ScratchU32, ScratchU32) {
+        (get_u32(1 << 12, u32::MAX), get_u32(1 << 12, u32::MAX))
     }
 
     #[test]

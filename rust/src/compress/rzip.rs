@@ -22,6 +22,7 @@ use crate::error::{Error, Result};
 
 use super::bitstream::{BitReader, BitWriter};
 use super::huffman::{Decoder, Encoder};
+use super::{kernels, pool};
 
 pub const MIN_MATCH: usize = 4;
 const MAX_DIST: usize = (1 << 22) - 1;
@@ -29,7 +30,22 @@ const EOB: usize = 256;
 /// 256 literals + EOB + up to 48 length-bucket codes.
 const LIT_ALPHABET: usize = 256 + 1 + 48;
 const DIST_ALPHABET: usize = 48;
-const HASH_LOG: usize = 17;
+/// Ceiling on the hash-table size; actual size adapts to the input
+/// (see [`hash_log_for`]).
+const MAX_HASH_LOG: u32 = 17;
+const MIN_HASH_LOG: u32 = 10;
+
+/// Hash-table size for an `n`-byte input: roughly the next power of two
+/// above `n`, clamped to `[2^10, 2^17]` entries. A pure function of the
+/// input length, so the wide and scalar compressors — and repeated runs
+/// — always walk identical chains (determinism). Before this, every
+/// call paid for a fixed 512 KB (`1 << 17` entries) table; a 4 KB
+/// basket now touches a 4 KB table instead.
+#[inline]
+fn hash_log_for(n: usize) -> u32 {
+    let bits = usize::BITS - n.max(1).leading_zeros();
+    bits.clamp(MIN_HASH_LOG, MAX_HASH_LOG)
+}
 
 /// value -> (bucket code, number of extra bits, extra bits payload)
 #[inline]
@@ -90,13 +106,16 @@ fn chain_depth(level: u8) -> usize {
 }
 
 #[inline]
-fn hash4(data: &[u8], pos: usize) -> usize {
+fn hash4(data: &[u8], pos: usize, shift: u32) -> usize {
     let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
-    (v.wrapping_mul(2_654_435_761) >> (32 - HASH_LOG as u32)) as usize
+    (v.wrapping_mul(2_654_435_761) >> shift) as usize
 }
 
-/// LZ77 tokenisation with hash chains.
-fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
+/// LZ77 tokenisation with hash chains. `WIDE` selects the SWAR
+/// match-length kernel; both variants emit identical token streams
+/// (the kernel is byte-identical to the scalar loop, pinned by
+/// differential tests here and in `kernels`).
+fn tokenize<const WIDE: bool>(src: &[u8], level: u8) -> Vec<Token> {
     let n = src.len();
     let mut tokens = Vec::with_capacity(n / 3 + 8);
     if n < MIN_MATCH + 1 {
@@ -116,8 +135,14 @@ fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
         _ => 64,
     };
     let mut misses = 0usize;
-    let mut head = vec![u32::MAX; 1 << HASH_LOG];
-    let mut prev = vec![u32::MAX; n];
+    let hash_log = hash_log_for(n);
+    let shift = 32 - hash_log;
+    // Pooled hash tables: recycled across calls so tiny baskets stop
+    // paying a fixed allocation tax for the chain arrays.
+    let mut head_scratch = pool::get_u32(1usize << hash_log, u32::MAX);
+    let mut prev_scratch = pool::get_u32(n, u32::MAX);
+    let head = &mut head_scratch[..];
+    let prev = &mut prev_scratch[..];
     let limit = n - MIN_MATCH;
     let mut pos = 0usize;
 
@@ -127,7 +152,7 @@ fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
             pos += 1;
             continue;
         }
-        let h = hash4(src, pos);
+        let h = hash4(src, pos, shift);
         let mut best_len = 0usize;
         let mut best_dist = 0usize;
         let mut cand = head[h];
@@ -140,10 +165,11 @@ fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
             }
             // Quick reject: match must beat best_len.
             if best_len == 0 || src.get(cpos + best_len) == src.get(pos + best_len) {
-                let mut len = 0usize;
-                while pos + len < n && src[cpos + len] == src[pos + len] {
-                    len += 1;
-                }
+                let len = if WIDE {
+                    kernels::common_prefix(src, cpos, pos, n)
+                } else {
+                    kernels::common_prefix_scalar(src, cpos, pos, n)
+                };
                 if len >= MIN_MATCH && len > best_len {
                     best_len = len;
                     best_dist = dist;
@@ -163,7 +189,7 @@ fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
             let insert_end = (pos + best_len).min(limit + 1).min(pos + 64);
             let mut p = pos;
             while p < insert_end {
-                let hh = hash4(src, p);
+                let hh = hash4(src, p, shift);
                 prev[p] = head[hh];
                 head[hh] = p as u32;
                 p += 1;
@@ -186,7 +212,19 @@ fn tokenize(src: &[u8], level: u8) -> Vec<Token> {
 
 /// Compress `src` at `level` (1..=9).
 pub fn compress(src: &[u8], level: u8) -> Vec<u8> {
-    let tokens = tokenize(src, level);
+    compress_impl::<true>(src, level)
+}
+
+/// Scalar reference compressor — the pre-vectorised match loop, kept
+/// public so differential tests and the fig8 microbenchmark can pin
+/// the wide path against it. Output is byte-identical to
+/// [`compress`].
+pub fn compress_scalar(src: &[u8], level: u8) -> Vec<u8> {
+    compress_impl::<false>(src, level)
+}
+
+fn compress_impl<const WIDE: bool>(src: &[u8], level: u8) -> Vec<u8> {
+    let tokens = tokenize::<WIDE>(src, level);
 
     // Count symbol frequencies.
     let mut lit_freq = vec![0u64; LIT_ALPHABET];
@@ -240,6 +278,22 @@ pub fn compress(src: &[u8], level: u8) -> Vec<u8> {
 /// distances are resolved relative to the start of this block's output
 /// (`out` may already hold earlier blocks — the pooled-buffer path).
 pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    decompress_impl::<true>(src, dst_len, out)
+}
+
+/// Scalar reference decoder — per-symbol refills and byte-at-a-time
+/// overlap copies, kept public as the differential baseline for the
+/// batched wide path. Output is byte-identical to
+/// [`decompress_into`].
+pub fn decompress_into_scalar(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    decompress_impl::<false>(src, dst_len, out)
+}
+
+fn decompress_impl<const WIDE: bool>(
+    src: &[u8],
+    dst_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let err = |m: &str| Error::Codec(format!("rzip: {m}"));
     if src.len() < 4 {
         return Err(err("truncated header"));
@@ -255,17 +309,40 @@ pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<
     }
     let lit_dec = Decoder::from_lengths(&src[4..4 + n_lit])?;
     let dist_dec = Decoder::from_lengths(&src[4 + n_lit..tbl_end])?;
+    let lit_peek = lit_dec.peek_bits();
 
     let base = out.len();
     out.reserve(dst_len);
     let mut r = BitReader::new(&src[tbl_end..]);
-    loop {
-        let sym = lit_dec.read(&mut r)?;
-        if sym < 256 {
-            out.push(sym as u8);
-        } else if sym == EOB {
-            break;
-        } else {
+    // Batched decode (WIDE): one `refill` tops the accumulator up to
+    // ≥ 56 bits, which covers ⌊56/15⌋ = 3+ worst-case literal codes —
+    // the inner loop then decodes literals with `read_buffered` (no
+    // per-symbol refill branch) until the budget runs out. Extra
+    // refills never change which bits each symbol consumes, so the
+    // decoded stream is trivially identical to the scalar path.
+    'outer: loop {
+        if WIDE {
+            r.refill();
+        }
+        loop {
+            let sym = if WIDE && r.buffered() >= lit_peek {
+                lit_dec.read_buffered(&mut r)?
+            } else {
+                lit_dec.read(&mut r)?
+            };
+            if sym < 256 {
+                out.push(sym as u8);
+                if out.len() - base > dst_len {
+                    return Err(err("output overrun"));
+                }
+                if WIDE && r.buffered() < lit_peek {
+                    continue 'outer;
+                }
+                continue;
+            }
+            if sym == EOB {
+                break 'outer;
+            }
             let lc = sym - 257;
             let lx = r.get(bucket_bits(lc));
             let mlen = unbucket(lc, lx) as usize + MIN_MATCH;
@@ -279,15 +356,31 @@ pub fn decompress_into(src: &[u8], dst_len: usize, out: &mut Vec<u8>) -> Result<
             if dist >= mlen {
                 // non-overlapping: one memcpy (§Perf L3 iteration 4)
                 out.extend_from_within(start..start + mlen);
+            } else if WIDE {
+                // Overlapping RLE-style match: double the copied span
+                // each round (everything already appended is a valid
+                // period-`dist` continuation), turning the byte loop
+                // into O(log(mlen/dist)) memcpys. Byte-identical to
+                // the scalar loop below.
+                let mut remaining = mlen;
+                while remaining > 0 {
+                    let avail = out.len() - start;
+                    let k = avail.min(remaining);
+                    out.extend_from_within(start..start + k);
+                    remaining -= k;
+                }
             } else {
                 for i in 0..mlen {
                     let b = out[start + i];
                     out.push(b);
                 }
             }
-        }
-        if out.len() - base > dst_len {
-            return Err(err("output overrun"));
+            if out.len() - base > dst_len {
+                return Err(err("output overrun"));
+            }
+            if WIDE {
+                continue 'outer;
+            }
         }
     }
     if out.len() - base != dst_len {
@@ -381,6 +474,85 @@ mod tests {
         let mut data = vec![b'z'; 70_000];
         data.extend_from_slice(b"tail");
         roundtrip(&data, 6);
+    }
+
+    #[test]
+    fn wide_paths_are_byte_identical_to_scalar() {
+        // Differential pin: the SWAR tokeniser must emit the exact
+        // same compressed bytes as the scalar reference, and both
+        // decoders must reproduce the input from either stream.
+        let mut x = 0x1234_5678u32;
+        let mut rnd = |n: usize| -> Vec<u8> {
+            (0..n)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 17;
+                    x ^= x << 5;
+                    x as u8
+                })
+                .collect()
+        };
+        let mut mixed = b"header ".to_vec();
+        mixed.extend(vec![0u8; 700]); // RLE (overlap dist 1)
+        mixed.extend(rnd(900)); // incompressible
+        mixed.extend(b"abcdefgh".repeat(300)); // period-8 overlap
+        mixed.extend(mixed.clone()); // far back-reference
+        let cases: Vec<Vec<u8>> = vec![
+            Vec::new(),
+            b"a".to_vec(),
+            b"abcd".to_vec(),
+            vec![0u8; 65_000],
+            rnd(20_000),
+            b"the quick brown fox jumps over the lazy dog. ".repeat(400),
+            mixed,
+        ];
+        for (i, data) in cases.iter().enumerate() {
+            for level in [1u8, 5, 9] {
+                let wide = compress(data, level);
+                let scalar = compress_scalar(data, level);
+                assert_eq!(wide, scalar, "case {i} level {level}: compressed bytes differ");
+                let mut d_wide = Vec::new();
+                decompress_into(&wide, data.len(), &mut d_wide).unwrap();
+                let mut d_scalar = Vec::new();
+                decompress_into_scalar(&wide, data.len(), &mut d_scalar).unwrap();
+                assert_eq!(d_wide, *data, "case {i} level {level}: wide decode");
+                assert_eq!(d_scalar, *data, "case {i} level {level}: scalar decode");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_hash_sizes_roundtrip() {
+        // Sizes straddling the hash_log_for breakpoints (2^10..2^17):
+        // every size must roundtrip and stay wide==scalar.
+        let mut x = 0x9E37_79B9u32;
+        for n in [0usize, 1, 5, 16, 100, 1023, 1024, 1025, 5000, 70_000, 200_000] {
+            let data: Vec<u8> = (0..n)
+                .map(|i| {
+                    x ^= x << 13;
+                    x ^= x >> 17;
+                    x ^= x << 5;
+                    if i % 3 == 0 { (i % 251) as u8 } else { x as u8 }
+                })
+                .collect();
+            let c = compress(&data, 6);
+            assert_eq!(c, compress_scalar(&data, 6), "n={n}");
+            assert_eq!(decompress(&c, n).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hash_table_pool_is_reused() {
+        // Two compressions on the same thread: the second must draw
+        // its chain arrays from the shelf, not the allocator.
+        // (Counters are process-global and other tests compress
+        // concurrently, so assert only the hits we must have added.)
+        let data = b"pool warmup payload ".repeat(100);
+        let _ = compress(&data, 3);
+        let (h0, _) = crate::compress::pool::u32_stats();
+        let _ = compress(&data, 3);
+        let (h1, _) = crate::compress::pool::u32_stats();
+        assert!(h1 - h0 >= 2, "expected pooled head+prev hits, got {}", h1 - h0);
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Per-column adaptive codec selection.
+//!
+//! The paper's Figure 8 premise: no single codec sits on the
+//! throughput × size frontier for every column. Floating-point noise
+//! barely compresses (any CPU spent is wasted — store raw), small-range
+//! integers deflate well under a fast LZ (`lz4r`), and text-like
+//! payloads reward the dense entropy coder (`rzip`). A global
+//! `WriterConfig::compression` forces one point of that trade-off onto
+//! every branch; this module instead samples each column's early
+//! baskets across a candidate set and commits per column.
+//!
+//! ## Protocol
+//!
+//! The controller mirrors [`crate::tree::sizer`]: decisions are made on
+//! the producer thread (one [`ColumnSelector::next_settings`] call per
+//! basket, before the basket fans out to compression workers), and
+//! measurements flow back asynchronously as [`Observation`]s. Because
+//! observations may lag by however many baskets are in flight, the
+//! selector issues its probe round-robin by *issue count* and commits
+//! from whatever observations have arrived — a late probe result can
+//! only improve the next re-probe, never corrupt the stream.
+//!
+//! * **Probe** — the first `candidates.len() × probe_baskets` baskets
+//!   cycle through the candidate list round-robin.
+//! * **Commit** — once probing is exhausted, each observed candidate is
+//!   scored `ratio × throughput_mbps ^ speed_weight` (ratio =
+//!   raw/compressed; throughput = raw MB per CPU-second of compression)
+//!   and the best observed score wins. If no observations have arrived
+//!   yet the writer's global fallback is used and the commit retried on
+//!   the next basket.
+//! * **Re-probe** — after `reprobe_interval` committed baskets, or
+//!   earlier if the committed codec's recent compression ratio drifts
+//!   from its commit-time ratio by more than `drift_ratio`
+//!   (fractional), the selector forgets its per-candidate stats and
+//!   probes again.
+//!
+//! ## Determinism
+//!
+//! Scores depend on measured wall time, so two runs may commit
+//! different codecs — the same determinism model as the adaptive
+//! cluster sizer: every basket records its own [`Settings`] in the
+//! file metadata (a codec-code byte and a level byte per basket entry,
+//! format `VERSION` 2) and each compressed block is self-describing,
+//! so readers decode *any* selection trace to identical data and need
+//! no knowledge of the selection policy.
+
+use super::{Codec, Settings};
+
+/// Decisions kept per column for inspection; beyond this the trace
+/// stops growing (the summary counters keep counting).
+const MAX_TRACE: usize = 4096;
+
+/// Observations in the committed-phase drift window before the drift
+/// test is applied — too few baskets and one odd payload would trigger
+/// spurious re-probes.
+const DRIFT_WINDOW: u32 = 8;
+
+/// How a [`crate::tree::writer::TreeWriter`] picks basket compression
+/// settings.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum CodecSelection {
+    /// Every basket uses `WriterConfig::compression` (historical
+    /// behaviour, and the default).
+    #[default]
+    Global,
+    /// Each column samples its early baskets across
+    /// [`SelectConfig::candidates`] and commits to the winner.
+    PerColumn(SelectConfig),
+}
+
+/// Knobs for per-column selection. The defaults probe two baskets per
+/// candidate over a five-point candidate ladder (raw storage, fast and
+/// thorough `lz4r`, light and dense `rzip`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectConfig {
+    /// Codec × level points to sample. Empty = always use the fallback.
+    pub candidates: Vec<Settings>,
+    /// Baskets probed per candidate before committing.
+    pub probe_baskets: u32,
+    /// Exponent weighting compression throughput against ratio in the
+    /// score `ratio × mbps^speed_weight`. `0.0` ranks purely by ratio;
+    /// `1.0` treats a 2× throughput gain like a 2× size win.
+    pub speed_weight: f64,
+    /// Committed baskets between scheduled re-probes (`0` = never).
+    pub reprobe_interval: u32,
+    /// Fractional drift of the committed codec's recent ratio (vs its
+    /// commit-time ratio) that forces an early re-probe.
+    pub drift_ratio: f64,
+}
+
+impl Default for SelectConfig {
+    fn default() -> Self {
+        SelectConfig {
+            candidates: vec![
+                Settings::uncompressed(),
+                Settings { codec: Codec::Lz4r, level: 1 },
+                Settings { codec: Codec::Lz4r, level: 6 },
+                Settings { codec: Codec::Rzip, level: 2 },
+                Settings { codec: Codec::Rzip, level: 6 },
+            ],
+            probe_baskets: 2,
+            speed_weight: 0.3,
+            reprobe_interval: 64,
+            drift_ratio: 0.2,
+        }
+    }
+}
+
+/// One basket's measured compression outcome, reported back to the
+/// selector that issued it.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    /// The settings the basket was compressed with.
+    pub settings: Settings,
+    /// Uncompressed payload bytes.
+    pub raw_len: u64,
+    /// Stored (compressed container) bytes.
+    pub comp_len: u64,
+    /// CPU nanoseconds spent compressing.
+    pub nanos: u64,
+}
+
+/// One issued decision, for the per-column trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// Basket ordinal within the column (0-based issue order).
+    pub basket: u64,
+    /// Settings issued for that basket.
+    pub settings: Settings,
+    /// Whether the basket was a probe (`true`) or committed/fallback.
+    pub probing: bool,
+}
+
+/// Compact, `Copy` roll-up of selection activity — aggregated across
+/// columns into `WriteStats` so the report stays `Copy`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SelectSummary {
+    /// Columns driven by per-column selection.
+    pub columns: u32,
+    /// Columns currently in the committed phase.
+    pub committed: u32,
+    /// Probe baskets issued (across all probe rounds).
+    pub probes: u64,
+    /// Re-probe rounds triggered (interval or drift).
+    pub reprobes: u32,
+}
+
+impl SelectSummary {
+    /// Fold another column's summary into this one.
+    pub fn absorb(&mut self, other: SelectSummary) {
+        self.columns += other.columns;
+        self.committed += other.committed;
+        self.probes += other.probes;
+        self.reprobes += other.reprobes;
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct CandStats {
+    raw: u64,
+    comp: u64,
+    nanos: u64,
+    baskets: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Phase {
+    Probing,
+    Committed { choice: usize },
+}
+
+/// Per-column selection state machine. Owned by the writer; all calls
+/// happen on the producer thread (observations are relayed there by
+/// the writer's inbox), so no interior locking is needed.
+pub struct ColumnSelector {
+    cfg: SelectConfig,
+    fallback: Settings,
+    phase: Phase,
+    /// Baskets issued in the current probe round.
+    probe_issued: u64,
+    /// Baskets issued overall (trace ordinal).
+    issued: u64,
+    stats: Vec<CandStats>,
+    /// Ratio at commit time, the drift reference.
+    commit_ratio: f64,
+    committed_baskets: u32,
+    window_raw: u64,
+    window_comp: u64,
+    window_baskets: u32,
+    want_reprobe: bool,
+    probes: u64,
+    reprobes: u32,
+    trace: Vec<Decision>,
+}
+
+impl ColumnSelector {
+    pub fn new(cfg: SelectConfig, fallback: Settings) -> Self {
+        let n = cfg.candidates.len();
+        ColumnSelector {
+            cfg,
+            fallback,
+            phase: Phase::Probing,
+            probe_issued: 0,
+            issued: 0,
+            stats: vec![CandStats::default(); n],
+            commit_ratio: 0.0,
+            committed_baskets: 0,
+            window_raw: 0,
+            window_comp: 0,
+            window_baskets: 0,
+            want_reprobe: false,
+            probes: 0,
+            reprobes: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Settings for the next basket of this column. Called exactly once
+    /// per basket, in issue order, on the producer thread.
+    pub fn next_settings(&mut self) -> Settings {
+        let n = self.cfg.candidates.len();
+        if n == 0 {
+            return self.record(self.fallback, false);
+        }
+        if self.want_reprobe {
+            self.begin_reprobe();
+        }
+        match self.phase {
+            Phase::Probing => {
+                let total = n as u64 * self.cfg.probe_baskets as u64;
+                if self.probe_issued < total {
+                    let idx = (self.probe_issued % n as u64) as usize;
+                    self.probe_issued += 1;
+                    self.probes += 1;
+                    self.record(self.cfg.candidates[idx], true)
+                } else if let Some((idx, ratio)) = self.best_observed() {
+                    self.phase = Phase::Committed { choice: idx };
+                    self.commit_ratio = ratio;
+                    self.committed_baskets = 1;
+                    self.window_raw = 0;
+                    self.window_comp = 0;
+                    self.window_baskets = 0;
+                    self.record(self.cfg.candidates[idx], false)
+                } else {
+                    // Probes issued but no measurements back yet: stay
+                    // on the fallback and retry the commit next basket.
+                    self.record(self.fallback, false)
+                }
+            }
+            Phase::Committed { choice } => {
+                self.committed_baskets += 1;
+                if self.cfg.reprobe_interval > 0
+                    && self.committed_baskets >= self.cfg.reprobe_interval
+                {
+                    self.want_reprobe = true;
+                }
+                self.record(self.cfg.candidates[choice], false)
+            }
+        }
+    }
+
+    /// Report one basket's measured outcome. Arrival order and lag do
+    /// not matter; late probe results feed the next (re-)commit.
+    pub fn observe(&mut self, obs: Observation) {
+        if let Some(idx) =
+            self.cfg.candidates.iter().position(|c| *c == obs.settings)
+        {
+            let s = &mut self.stats[idx];
+            s.raw += obs.raw_len;
+            s.comp += obs.comp_len;
+            s.nanos += obs.nanos;
+            s.baskets += 1;
+        }
+        if let Phase::Committed { choice } = self.phase {
+            if self.cfg.candidates[choice] == obs.settings {
+                self.window_raw += obs.raw_len;
+                self.window_comp += obs.comp_len;
+                self.window_baskets += 1;
+                if self.window_baskets >= DRIFT_WINDOW && self.commit_ratio > 0.0 {
+                    let recent = ratio_of(self.window_raw, self.window_comp);
+                    let drift = (recent - self.commit_ratio).abs() / self.commit_ratio;
+                    if drift > self.cfg.drift_ratio {
+                        self.want_reprobe = true;
+                    } else {
+                        // Sliding restart: keep watching in windows.
+                        self.window_raw = 0;
+                        self.window_comp = 0;
+                        self.window_baskets = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The committed settings, if the column has committed.
+    pub fn current_choice(&self) -> Option<Settings> {
+        match self.phase {
+            Phase::Committed { choice } => Some(self.cfg.candidates[choice]),
+            Phase::Probing => None,
+        }
+    }
+
+    /// Issued decisions, capped at [`MAX_TRACE`].
+    pub fn trace(&self) -> &[Decision] {
+        &self.trace
+    }
+
+    /// This column's contribution to the tree-wide [`SelectSummary`].
+    pub fn summary(&self) -> SelectSummary {
+        SelectSummary {
+            columns: 1,
+            committed: matches!(self.phase, Phase::Committed { .. }) as u32,
+            probes: self.probes,
+            reprobes: self.reprobes,
+        }
+    }
+
+    fn begin_reprobe(&mut self) {
+        self.want_reprobe = false;
+        self.phase = Phase::Probing;
+        self.probe_issued = 0;
+        self.stats.iter_mut().for_each(|s| *s = CandStats::default());
+        self.commit_ratio = 0.0;
+        self.window_raw = 0;
+        self.window_comp = 0;
+        self.window_baskets = 0;
+        self.reprobes += 1;
+    }
+
+    /// Best-scoring candidate among those with at least one observed
+    /// basket, with its observed ratio.
+    fn best_observed(&self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (idx, s) in self.stats.iter().enumerate() {
+            if s.baskets == 0 {
+                continue;
+            }
+            let ratio = ratio_of(s.raw, s.comp);
+            let secs = (s.nanos.max(1)) as f64 * 1e-9;
+            let mbps = (s.raw as f64 / (1024.0 * 1024.0)) / secs;
+            let score = ratio * mbps.max(f64::MIN_POSITIVE).powf(self.cfg.speed_weight);
+            let better = match best {
+                None => true,
+                Some((_, best_score, _)) => score > best_score,
+            };
+            if better {
+                best = Some((idx, score, ratio));
+            }
+        }
+        best.map(|(idx, _, ratio)| (idx, ratio))
+    }
+
+    fn record(&mut self, settings: Settings, probing: bool) -> Settings {
+        if self.trace.len() < MAX_TRACE {
+            self.trace.push(Decision { basket: self.issued, settings, probing });
+        }
+        self.issued += 1;
+        settings
+    }
+}
+
+fn ratio_of(raw: u64, comp: u64) -> f64 {
+    raw as f64 / comp.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SelectConfig {
+        SelectConfig::default()
+    }
+
+    fn obs(settings: Settings, raw: u64, comp: u64, nanos: u64) -> Observation {
+        Observation { settings, raw_len: raw, comp_len: comp, nanos }
+    }
+
+    #[test]
+    fn probing_cycles_all_candidates_round_robin() {
+        let c = cfg();
+        let n = c.candidates.len();
+        let per = c.probe_baskets as usize;
+        let mut sel = ColumnSelector::new(c.clone(), Settings::default_compressed());
+        let mut counts = vec![0usize; n];
+        for _ in 0..n * per {
+            let s = sel.next_settings();
+            let idx = c.candidates.iter().position(|x| *x == s).unwrap();
+            counts[idx] += 1;
+        }
+        assert!(counts.iter().all(|&k| k == per), "uneven probe: {counts:?}");
+        assert_eq!(sel.summary().probes, (n * per) as u64);
+        assert!(sel.trace().iter().all(|d| d.probing));
+    }
+
+    #[test]
+    fn falls_back_until_observations_arrive_then_commits() {
+        let c = cfg();
+        let n = c.candidates.len() * c.probe_baskets as usize;
+        let fallback = Settings::default_compressed();
+        let mut sel = ColumnSelector::new(c.clone(), fallback);
+        for _ in 0..n {
+            sel.next_settings();
+        }
+        // All probes issued, nothing measured yet: fallback, uncommitted.
+        assert_eq!(sel.next_settings(), fallback);
+        assert!(sel.current_choice().is_none());
+        // One observation is enough to commit (to the only observed).
+        let lz4 = Settings { codec: Codec::Lz4r, level: 1 };
+        sel.observe(obs(lz4, 1 << 20, 1 << 18, 2_000_000));
+        assert_eq!(sel.next_settings(), lz4);
+        assert_eq!(sel.current_choice(), Some(lz4));
+        assert_eq!(sel.summary().committed, 1);
+    }
+
+    #[test]
+    fn commits_to_ratio_speed_winner() {
+        let c = cfg();
+        let mut sel = ColumnSelector::new(c.clone(), Settings::default_compressed());
+        let probes = c.candidates.len() * c.probe_baskets as usize;
+        for _ in 0..probes {
+            sel.next_settings();
+        }
+        // lz4-1: ratio 3 at ~500 MB/s. rzip-6: ratio 3.3 at ~20 MB/s.
+        // score(lz4) = 3 * 500^0.3 ≈ 19.4 > score(rzip) = 3.3 * 20^0.3 ≈ 8.1.
+        let lz4 = Settings { codec: Codec::Lz4r, level: 1 };
+        let rzip = Settings { codec: Codec::Rzip, level: 6 };
+        let mib = 1u64 << 20;
+        sel.observe(obs(lz4, 100 * mib, 100 * mib / 3, 200_000_000));
+        sel.observe(obs(rzip, 100 * mib, 30 * mib, 5_000_000_000));
+        sel.observe(obs(Settings::uncompressed(), 100 * mib, 100 * mib, 10_000_000));
+        assert_eq!(sel.next_settings(), lz4);
+    }
+
+    #[test]
+    fn pure_ratio_weighting_prefers_denser_codec() {
+        let mut c = cfg();
+        c.speed_weight = 0.0;
+        let mut sel = ColumnSelector::new(c.clone(), Settings::default_compressed());
+        for _ in 0..c.candidates.len() * c.probe_baskets as usize {
+            sel.next_settings();
+        }
+        let lz4 = Settings { codec: Codec::Lz4r, level: 1 };
+        let rzip = Settings { codec: Codec::Rzip, level: 6 };
+        let mib = 1u64 << 20;
+        sel.observe(obs(lz4, 100 * mib, 100 * mib / 3, 200_000_000));
+        sel.observe(obs(rzip, 100 * mib, 30 * mib, 5_000_000_000));
+        assert_eq!(sel.next_settings(), rzip);
+    }
+
+    #[test]
+    fn drift_triggers_reprobe() {
+        let c = cfg();
+        let mut sel = ColumnSelector::new(c.clone(), Settings::default_compressed());
+        for _ in 0..c.candidates.len() * c.probe_baskets as usize {
+            sel.next_settings();
+        }
+        let lz4 = Settings { codec: Codec::Lz4r, level: 1 };
+        let mib = 1u64 << 20;
+        sel.observe(obs(lz4, 10 * mib, 2 * mib, 1_000_000)); // ratio 5
+        assert_eq!(sel.next_settings(), lz4);
+        // Data distribution changes: ratio collapses to ~1.
+        for _ in 0..DRIFT_WINDOW {
+            sel.observe(obs(lz4, mib, mib, 1_000_000));
+        }
+        let s = sel.next_settings();
+        assert!(sel.summary().reprobes >= 1, "drift should force a re-probe");
+        assert_eq!(s, c.candidates[0], "re-probe restarts the round-robin");
+    }
+
+    #[test]
+    fn scheduled_reprobe_after_interval() {
+        let mut c = cfg();
+        c.reprobe_interval = 4;
+        c.drift_ratio = f64::INFINITY; // isolate the interval trigger
+        let mut sel = ColumnSelector::new(c.clone(), Settings::default_compressed());
+        for _ in 0..c.candidates.len() * c.probe_baskets as usize {
+            sel.next_settings();
+        }
+        let lz4 = Settings { codec: Codec::Lz4r, level: 1 };
+        sel.observe(obs(lz4, 1 << 20, 1 << 18, 1_000_000));
+        for _ in 0..c.reprobe_interval + 1 {
+            sel.next_settings();
+        }
+        assert!(sel.summary().reprobes >= 1);
+    }
+
+    #[test]
+    fn empty_candidates_always_fall_back() {
+        let c = SelectConfig { candidates: Vec::new(), ..cfg() };
+        let fallback = Settings::default_compressed();
+        let mut sel = ColumnSelector::new(c, fallback);
+        for _ in 0..10 {
+            assert_eq!(sel.next_settings(), fallback);
+        }
+        assert_eq!(sel.summary().probes, 0);
+    }
+
+    #[test]
+    fn summary_absorb_accumulates() {
+        let mut total = SelectSummary::default();
+        total.absorb(SelectSummary { columns: 1, committed: 1, probes: 10, reprobes: 0 });
+        total.absorb(SelectSummary { columns: 1, committed: 0, probes: 5, reprobes: 2 });
+        assert_eq!(
+            total,
+            SelectSummary { columns: 2, committed: 1, probes: 15, reprobes: 2 }
+        );
+    }
+}

@@ -30,6 +30,7 @@ use crate::serial::schema::Schema;
 use crate::session::Session;
 use crate::storage::BackendRef;
 use crate::tree::sink::FileSink;
+use crate::compress::select::SelectSummary;
 use crate::tree::sizer::SizerSummary;
 use crate::tree::writer::{TreeWriter, WriterConfig};
 
@@ -51,6 +52,9 @@ pub struct WriteReport {
     /// (constant under `ClusterSizing::Fixed`; the adaptive sizer's
     /// chosen band and step counts under `ClusterSizing::Adaptive`).
     pub sizing: SizerSummary,
+    /// Per-column codec-selection report (all-zero under
+    /// `CodecSelection::Global`).
+    pub selection: SelectSummary,
 }
 
 impl WriteReport {
@@ -137,6 +141,7 @@ where
         compress_time: stats.compress,
         serialize_time: stats.serialize,
         sizing: stats.sizing,
+        selection: stats.selection,
     })
 }
 
@@ -238,6 +243,7 @@ mod tests {
             compress_time: Duration::ZERO,
             serialize_time: Duration::ZERO,
             sizing: SizerSummary::default(),
+            selection: SelectSummary::default(),
         };
         assert_eq!(empty.throughput_mbps(), 0.0);
         assert_eq!(empty.overlap_fraction(), 0.0);
@@ -368,6 +374,7 @@ mod tests {
             granularity: FlushGranularity::Block,
             max_inflight_clusters: 2,
             sizing: ClusterSizing::Adaptive(adaptive),
+            ..Default::default()
         };
         let pool = Arc::new(Pool::new(2));
         let session = Session::with_pool(pool, SessionConfig::for_writers(1, 2));

@@ -2,6 +2,7 @@
 //! metadata analogue). Lists every tree, its schema, and the location,
 //! sizes, entry range and checksum of every basket of every branch.
 
+use crate::compress::{Codec, Settings};
 use crate::error::{Error, Result};
 use crate::serial::schema::{ColumnType, Schema};
 
@@ -22,6 +23,11 @@ pub struct BasketInfo {
     pub n_entries: u32,
     /// CRC-32 of the stored bytes.
     pub crc: u32,
+    /// Compression settings the basket was written with. The block
+    /// container is self-describing, so readers never *need* this to
+    /// decode — it records the writer's (possibly per-column adaptive)
+    /// choice for inspection and tooling.
+    pub settings: Settings,
 }
 
 /// Per-branch metadata.
@@ -165,6 +171,8 @@ impl Directory {
                     w.put_u64(b.first_entry);
                     w.put_u32(b.n_entries);
                     w.put_u32(b.crc);
+                    w.put_u8(b.settings.codec.code());
+                    w.put_u8(b.settings.level);
                 }
             }
         }
@@ -194,6 +202,10 @@ impl Directory {
                         first_entry: r.get_u64()?,
                         n_entries: r.get_u32()?,
                         crc: r.get_u32()?,
+                        settings: Settings {
+                            codec: Codec::from_code(r.get_u8()?)?,
+                            level: r.get_u8()?,
+                        },
                     });
                 }
                 branches.push(BranchMeta { name: bname, ty, baskets });
@@ -225,6 +237,7 @@ mod tests {
                     first_entry: 0,
                     n_entries: 100,
                     crc: 0xABCD,
+                    settings: Settings::default_compressed(),
                 },
                 BasketInfo {
                     offset: 124,
@@ -233,6 +246,7 @@ mod tests {
                     first_entry: 100,
                     n_entries: 100,
                     crc: 0x1234,
+                    settings: Settings::new(Codec::Lz4r, 3),
                 },
             ],
         };

@@ -24,5 +24,8 @@ pub use reader::FileReader;
 pub use writer::FileWriter;
 
 pub const MAGIC: &[u8; 4] = b"RNTF";
-pub const VERSION: u32 = 1;
+/// Format version. 2: every basket directory entry records its own
+/// codec + level (per-column adaptive selection), one byte each after
+/// the CRC.
+pub const VERSION: u32 = 2;
 pub const HEADER_LEN: u64 = 24;

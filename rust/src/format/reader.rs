@@ -123,6 +123,7 @@ mod tests {
                         first_entry: 0,
                         n_entries: 24,
                         crc,
+                        settings: crate::compress::Settings::uncompressed(),
                     }],
                 }],
             }],

@@ -97,6 +97,7 @@ fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
                 raw_len: k.raw_len,
                 first_entry: k.first_entry,
                 n_entries: k.n_entries,
+                settings: k.settings,
             });
         }
     }
@@ -165,6 +166,7 @@ impl Appender {
                     first_entry: self.entries + k.first_entry,
                     n_entries: k.n_entries,
                     crc,
+                    settings: k.settings,
                 });
             }
         }

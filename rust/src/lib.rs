@@ -11,7 +11,15 @@
 //!   deflate-style LZ77 + canonical-Huffman codec) behind ROOT-like
 //!   9-byte block headers, plus CRC32 integrity, plus a thread-local /
 //!   shared scratch-buffer pool ([`compress::pool`]) so steady-state
-//!   basket (de)compression performs no heap allocation.
+//!   basket (de)compression performs no heap allocation. The inner
+//!   loops are vectorised word-at-a-time (SWAR match probing in the LZ
+//!   codecs, slicing-by-8 CRC32, batched multi-symbol Huffman decode),
+//!   each behind a `#[cfg]`-gated portable scalar twin that pins
+//!   byte-identical output. [`compress::select`] adds per-column
+//!   adaptive codec selection: a per-branch controller probes
+//!   codec×level candidates on a column's early baskets, commits the
+//!   ratio×throughput winner, and re-probes on drift — every basket
+//!   records its own codec, so readers stay oblivious.
 //! * [`serial`] — schema-driven object streamers: rows of typed values
 //!   split into per-column buffers (ROOT's TBuffer + streamer-info).
 //! * [`format`] — the `RNTF` container file format (TFile/TKey/TDirectory

@@ -295,6 +295,7 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
                 first_entry: base + k.first_entry,
                 n_entries: k.n_entries,
                 crc,
+                settings: k.settings,
             });
         }
         new_infos.push(infos);

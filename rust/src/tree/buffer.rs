@@ -18,6 +18,9 @@ pub struct BasketPayload {
     /// Entries covered, relative to the start of this buffer.
     pub first_entry: u64,
     pub n_entries: u32,
+    /// Compression settings the basket was written with; carried into
+    /// the output directory when the buffer is merged.
+    pub settings: crate::compress::Settings,
 }
 
 /// Per-branch basket list.
@@ -74,6 +77,7 @@ mod tests {
             raw_len: 400,
             first_entry: 0,
             n_entries: 100,
+            settings: crate::compress::Settings::default_compressed(),
         });
         b.entries = 100;
         assert_eq!(b.stored_bytes(), 50);

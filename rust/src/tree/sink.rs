@@ -45,6 +45,9 @@ pub struct BasketMeta {
     pub first_entry: u64,
     /// Entries covered.
     pub n_entries: u32,
+    /// Compression settings this basket was written with (recorded in
+    /// the directory; per-column selection makes this vary by branch).
+    pub settings: crate::compress::Settings,
 }
 
 /// Receives finished (compressed) baskets. Must be thread-safe: during
@@ -107,6 +110,7 @@ impl FileSink {
             first_entry: meta.first_entry,
             n_entries: meta.n_entries,
             crc,
+            settings: meta.settings,
         });
         Ok(())
     }
@@ -211,6 +215,7 @@ impl BasketSink for BufferSink {
             raw_len: meta.raw_len,
             first_entry: meta.first_entry,
             n_entries: meta.n_entries,
+            settings: meta.settings,
         });
         Ok(())
     }
@@ -238,7 +243,14 @@ mod tests {
     }
 
     fn bm(branch: usize, seq: u64, raw_len: u32, first_entry: u64, n_entries: u32) -> BasketMeta {
-        BasketMeta { branch, seq, raw_len, first_entry, n_entries }
+        BasketMeta {
+            branch,
+            seq,
+            raw_len,
+            first_entry,
+            n_entries,
+            settings: crate::compress::Settings::uncompressed(),
+        }
     }
 
     #[test]

@@ -47,6 +47,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::compress::select::{CodecSelection, ColumnSelector, Observation, SelectSummary};
 use crate::compress::{self, Settings};
 use crate::error::{Error, Result};
 use crate::imt::{ClusterGuard, Pool, TaskGroup};
@@ -114,6 +115,13 @@ pub struct WriterConfig {
     /// session's admission-wait feedback (pipelined flushes only; the
     /// serial and parallel-blocking paths always behave as `Fixed`).
     pub sizing: ClusterSizing,
+    /// Codec policy: apply `compression` globally, or let a per-column
+    /// [`ColumnSelector`] probe each branch's early baskets across a
+    /// candidate ladder and commit the best ratio × throughput point
+    /// per branch (`compression` stays the fallback until a column
+    /// commits). Works under every flush mode; each basket records its
+    /// own settings in the directory.
+    pub selection: CodecSelection,
 }
 
 impl Default for WriterConfig {
@@ -125,6 +133,7 @@ impl Default for WriterConfig {
             granularity: FlushGranularity::default(),
             max_inflight_clusters: 4,
             sizing: ClusterSizing::Fixed,
+            selection: CodecSelection::Global,
         }
     }
 }
@@ -146,6 +155,9 @@ pub struct WriteStats {
     /// Cluster-size report: the band of sizes the writer actually cut
     /// (min = max = `basket_entries` under [`ClusterSizing::Fixed`]).
     pub sizing: SizerSummary,
+    /// Per-column codec-selection report (all-zero under
+    /// [`CodecSelection::Global`]).
+    pub selection: SelectSummary,
 }
 
 /// Counters shared with flush tasks.
@@ -203,6 +215,14 @@ pub struct TreeWriter<S: BasketSink> {
     /// Per-writer cluster-size controller (a no-op pass-through of
     /// `basket_entries` under [`ClusterSizing::Fixed`]).
     sizer: ClusterSizer,
+    /// Per-column codec selectors (empty under
+    /// [`CodecSelection::Global`]). Owned by the producer thread, like
+    /// the sizer — flush tasks never touch them directly.
+    selectors: Vec<ColumnSelector>,
+    /// Observations flowing back from flush tasks to the selectors:
+    /// each stored basket pushes one `(branch, Observation)`; the
+    /// producer drains the inbox at the start of every flush.
+    select_inbox: Arc<Mutex<Vec<(usize, Observation)>>>,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
     /// Global basket sequence: cluster-major, branch-minor.
@@ -230,6 +250,12 @@ impl<S: BasketSink> TreeWriter<S> {
         let group = session.task_group();
         let admission = session.register_writer(config.max_inflight_clusters);
         let sizer = ClusterSizer::new(config.basket_entries, config.sizing);
+        let selectors = match &config.selection {
+            CodecSelection::Global => Vec::new(),
+            CodecSelection::PerColumn(sc) => (0..columns.len())
+                .map(|_| ColumnSelector::new(sc.clone(), config.compression))
+                .collect(),
+        };
         TreeWriter {
             streamer,
             config,
@@ -241,6 +267,8 @@ impl<S: BasketSink> TreeWriter<S> {
             group,
             admission,
             sizer,
+            selectors,
+            select_inbox: Arc::new(Mutex::new(Vec::new())),
             counters: Arc::new(TaskCounters::default()),
             errors: Arc::new(ErrorSlot::default()),
             next_seq: 0,
@@ -298,6 +326,21 @@ impl<S: BasketSink> TreeWriter<S> {
     /// under [`ClusterSizing::Fixed`]). Snapshot it before `close`.
     pub fn sizer_trace(&self) -> &[Decision] {
         self.sizer.trace()
+    }
+
+    /// One column's codec-selection decision trace so far (empty under
+    /// [`CodecSelection::Global`]). Snapshot it before `close`.
+    pub fn selector_trace(&self, branch: usize) -> &[compress::select::Decision] {
+        match self.selectors.get(branch) {
+            Some(s) => s.trace(),
+            None => &[],
+        }
+    }
+
+    /// The codec a column's selector has committed to, if any (`None`
+    /// while probing or under [`CodecSelection::Global`]).
+    pub fn selector_choice(&self, branch: usize) -> Option<Settings> {
+        self.selectors.get(branch).and_then(|s| s.current_choice())
     }
 
     pub fn schema(&self) -> &Schema {
@@ -372,6 +415,7 @@ impl<S: BasketSink> TreeWriter<S> {
             return Ok(());
         }
         self.errors.check()?;
+        self.drain_observations();
         // Backpressure = admission: a pipelined cluster takes one slot
         // of the session's shared budget *before* spawning, and the
         // slot frees when the cluster's last task drops its guard. The
@@ -388,6 +432,10 @@ impl<S: BasketSink> TreeWriter<S> {
         let n_entries = chunk as u32;
         let first_entry = self.entries - self.buffered as u64;
         for (branch, col) in self.columns.iter_mut().enumerate() {
+            let settings = match self.selectors.get_mut(branch) {
+                Some(sel) => sel.next_settings(),
+                None => self.config.compression,
+            };
             let task = BasketTask {
                 col: col.drain_front(chunk),
                 meta: BasketMeta {
@@ -396,13 +444,16 @@ impl<S: BasketSink> TreeWriter<S> {
                     raw_len: 0, // set after serialisation
                     first_entry,
                     n_entries,
+                    settings,
                 },
                 sink: self.sink.clone(),
-                settings: self.config.compression,
+                settings,
                 granularity: self.config.granularity,
                 recorder: self.recorder.clone(),
                 counters: self.counters.clone(),
                 errors: self.errors.clone(),
+                obs: (!self.selectors.is_empty()).then(|| self.select_inbox.clone()),
+                obs_compress_ns: AtomicU64::new(0),
                 _admission: admission.clone(),
             };
             self.next_seq += 1;
@@ -440,6 +491,23 @@ impl<S: BasketSink> TreeWriter<S> {
         done
     }
 
+    /// Relay completed-basket measurements from the flush-task inbox to
+    /// the per-column selectors. Producer thread only, so the selectors
+    /// themselves need no locking.
+    fn drain_observations(&mut self) {
+        if self.selectors.is_empty() {
+            return;
+        }
+        let drained = std::mem::take(
+            &mut *self.select_inbox.lock().unwrap_or_else(|p| p.into_inner()),
+        );
+        for (branch, obs) in drained {
+            if let Some(sel) = self.selectors.get_mut(branch) {
+                sel.observe(obs);
+            }
+        }
+    }
+
     /// Flush the tail, drain the pipeline, and hand back the sink with
     /// the final entry count and the pipeline accounting.
     pub fn close(mut self) -> Result<(S, u64, WriteStats)> {
@@ -452,12 +520,20 @@ impl<S: BasketSink> TreeWriter<S> {
         flushed?;
         joined?;
         self.errors.check()?;
+        // Absorb the last in-flight measurements so the selection
+        // summary reflects every basket that was written.
+        self.drain_observations();
+        let mut selection = SelectSummary::default();
+        for sel in &self.selectors {
+            selection.absorb(sel.summary());
+        }
         let stats = WriteStats {
             serialize: Duration::from_nanos(self.counters.serialize_ns.load(Ordering::Relaxed)),
             compress: Duration::from_nanos(self.counters.compress_ns.load(Ordering::Relaxed)),
             stall: self.stall,
             baskets: self.counters.baskets.load(Ordering::Relaxed),
             sizing: self.sizer.summary(),
+            selection,
         };
         let sink = Arc::try_unwrap(self.sink)
             .map_err(|_| Error::Sync("flush tasks still hold the sink".into()))?;
@@ -475,6 +551,13 @@ struct BasketTask<S: BasketSink> {
     recorder: Option<Arc<Recorder>>,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
+    /// Selection inbox: when per-column selection is active the stored
+    /// basket reports one `(branch, Observation)` here for the producer
+    /// to relay at its next flush.
+    obs: Option<Arc<Mutex<Vec<(usize, Observation)>>>>,
+    /// This basket's compression CPU, accumulated across block subtasks
+    /// so the observation covers the whole basket.
+    obs_compress_ns: AtomicU64,
     /// The cluster's budget slot: released (waking blocked producers)
     /// when the last task of the cluster drops its clone — including
     /// on unwind, so a panicked basket cannot leak admission.
@@ -512,7 +595,9 @@ impl<S: BasketSink> BasketTask<S> {
     }
 
     fn note_compress(&self, span: (Duration, Duration)) {
-        self.counters.compress_ns.fetch_add(span_ns(span), Ordering::Relaxed);
+        let ns = span_ns(span);
+        self.counters.compress_ns.fetch_add(ns, Ordering::Relaxed);
+        self.obs_compress_ns.fetch_add(ns, Ordering::Relaxed);
         if let Some(r) = &self.recorder {
             r.push(SpanKind::Compress, span.0, span.1);
         }
@@ -520,6 +605,18 @@ impl<S: BasketSink> BasketTask<S> {
 
     fn store(&self, payload: PayloadBuf) {
         self.counters.baskets.fetch_add(1, Ordering::Relaxed);
+        if let Some(inbox) = &self.obs {
+            let obs = Observation {
+                settings: self.settings,
+                raw_len: self.meta.raw_len as u64,
+                comp_len: payload.len() as u64,
+                nanos: self.obs_compress_ns.load(Ordering::Relaxed),
+            };
+            inbox
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push((self.meta.branch, obs));
+        }
         if let Err(e) = self.sink.put_basket(self.meta, payload) {
             self.errors.set(e);
         }
@@ -745,5 +842,85 @@ mod tests {
             serial.branches[0].baskets[0].bytes,
             "block-subtask container diverged from serial bytes"
         );
+    }
+
+    #[test]
+    fn per_column_selection_probes_commits_and_records_settings() {
+        use crate::compress::select::SelectConfig;
+        let select = SelectConfig::default();
+        let probe_span = select.candidates.len() * select.probe_baskets as usize;
+        let cfg = WriterConfig {
+            selection: CodecSelection::PerColumn(select.clone()),
+            ..config(64)
+        };
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), cfg);
+        let clusters = 30usize;
+        for i in 0..(64 * clusters) as i32 {
+            w.fill(vec![Value::F32((i % 7) as f32), Value::I32(i % 5)]).unwrap();
+        }
+        // Serial flush: every observation is back before the next
+        // basket is issued, so both columns must have committed.
+        for branch in 0..2 {
+            assert!(
+                w.selector_choice(branch).is_some(),
+                "column {branch} did not commit after {clusters} baskets"
+            );
+            let trace = w.selector_trace(branch);
+            assert_eq!(trace.len(), clusters);
+            assert_eq!(
+                trace.iter().filter(|d| d.probing).count(),
+                probe_span,
+                "probe round should cover every candidate"
+            );
+        }
+        let (sink, entries, stats) = w.close().unwrap();
+        assert_eq!(stats.selection.columns, 2);
+        assert_eq!(stats.selection.committed, 2);
+        assert_eq!(stats.selection.probes, 2 * probe_span as u64);
+        // Every basket records the settings it was written with, and
+        // after the probe window each branch rides its committed choice.
+        let buf = sink.into_buffer(entries).unwrap();
+        for br in &buf.branches {
+            assert_eq!(br.baskets.len(), clusters);
+            let committed = br.baskets.last().unwrap().settings;
+            assert!(br.baskets[probe_span + 1..]
+                .iter()
+                .all(|k| k.settings == committed));
+        }
+    }
+
+    #[test]
+    fn selection_output_decodes_identically_to_global() {
+        use crate::compress::select::SelectConfig;
+        // Whatever trace the selector takes, the decoded tree must
+        // match a globally-compressed write of the same rows.
+        let rows: Vec<Row> = (0..1000)
+            .map(|i| vec![Value::F32((i as f32).sin()), Value::I32(i % 11)])
+            .collect();
+        let write = |selection: CodecSelection| {
+            let cfg = WriterConfig { selection, ..config(64) };
+            let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), cfg);
+            for r in &rows {
+                w.fill(r.clone()).unwrap();
+            }
+            let (sink, entries, _) = w.close().unwrap();
+            sink.into_buffer(entries).unwrap()
+        };
+        let global = write(CodecSelection::Global);
+        let selected = write(CodecSelection::PerColumn(SelectConfig::default()));
+        assert_eq!(global.entries, selected.entries);
+        for (bg, bs) in global.branches.iter().zip(&selected.branches) {
+            let raw_g: Vec<u8> = bg
+                .baskets
+                .iter()
+                .flat_map(|k| compress::decompress(&k.bytes).unwrap())
+                .collect();
+            let raw_s: Vec<u8> = bs
+                .baskets
+                .iter()
+                .flat_map(|k| compress::decompress(&k.bytes).unwrap())
+                .collect();
+            assert_eq!(raw_g, raw_s, "per-column selection changed decoded bytes");
+        }
     }
 }

@@ -20,6 +20,7 @@
 #![allow(dead_code)]
 
 use rootio_par::cache::{WindowConfig, WindowPolicy};
+use rootio_par::compress::select::{CodecSelection, SelectConfig};
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::serial::schema::Schema;
 use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
@@ -57,6 +58,13 @@ pub struct StressPlan {
     /// Stored-range gap the prefetcher bridges when coalescing (0
     /// forces strict adjacency).
     pub coalesce_gap: u32,
+    /// Codec-mix dimension (ISSUE 7): half the matrix writes with
+    /// per-column adaptive codec selection (randomised probe length
+    /// and re-probe interval), so every decoded-identity property also
+    /// covers trees whose branches mix codecs basket by basket; the
+    /// other half keeps the global `compression` for the historical
+    /// path.
+    pub selection: CodecSelection,
     /// Write-side transient-fault rate (ISSUE 6): the fraction of
     /// distinct write ranges whose *first* attempt blips
     /// ([`rootio_par::storage::fault::FaultPlan::SeededRate`] — retries
@@ -98,6 +106,15 @@ impl StressPlan {
                 ..Default::default()
             }),
         };
+        let selection = if g.range(0, 2) == 0 {
+            CodecSelection::Global
+        } else {
+            CodecSelection::PerColumn(SelectConfig {
+                probe_baskets: g.range(1, 3) as u32,
+                reprobe_interval: *g.choose(&[0u32, 8, 64]),
+                ..Default::default()
+            })
+        };
         StressPlan {
             seed,
             workers: g.range(1, 9),
@@ -109,6 +126,7 @@ impl StressPlan {
             schema: g.schema(4),
             read_window,
             coalesce_gap: *g.choose(&[0u32, 64, 4096]),
+            selection,
             write_fault_rate: *g.choose(&[0.0, 0.0, 0.15, 0.35]),
         }
     }

@@ -100,6 +100,7 @@ fn prop_adaptive_writes_decode_identical_to_fixed() {
                 granularity: FlushGranularity::Block,
                 max_inflight_clusters: plan.max_inflight,
                 sizing: plan.sizing,
+                selection: plan.selection.clone(),
             };
             let (adaptive_entries, adaptive) =
                 write_and_decode(&plan.schema, &rows, adaptive_cfg, Some(&session));
@@ -138,6 +139,7 @@ fn narrow_fast_run(
         granularity: FlushGranularity::Block,
         max_inflight_clusters: 4,
         sizing,
+        ..Default::default()
     };
     // Produce the blocks up front: the producer's per-cluster cost is
     // the column append alone (fast), so compression stays the
@@ -265,6 +267,7 @@ fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
                     granularity: FlushGranularity::Block,
                     max_inflight_clusters: plan.max_inflight,
                     sizing: plan.sizing,
+                    selection: plan.selection.clone(),
                 };
                 let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
                 for row in &rows {
@@ -386,6 +389,7 @@ fn prop_write_faults_recover_to_identical_decode() {
             granularity: FlushGranularity::Block,
             max_inflight_clusters: plan.max_inflight,
             sizing: plan.sizing,
+            selection: plan.selection.clone(),
         };
         let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
         for row in &rows {
@@ -455,6 +459,7 @@ fn budget_slots_release_when_adaptive_writer_panics_mid_resize() {
             warmup: 0,
             ..Default::default()
         }),
+        ..Default::default()
     };
     let mut w = TreeWriter::attached(schema.clone(), PanickingSink, cfg, &session);
     for i in 0..400 {
