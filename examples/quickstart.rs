@@ -56,6 +56,16 @@
 //!    `WriteReport::selection` summary counts columns committed,
 //!    probes and re-probes, and `TreeWriter::selector_trace` replays
 //!    the per-branch decisions.
+//! 8. **paged columnar layout (wire v3) + projection pushdown**: set
+//!    `WriterConfig::layout = Layout::paged()` and each cluster is
+//!    stored column-major as independently compressed per-column
+//!    pages, with variable-length branches (`ColumnType::ListF32`)
+//!    split into offset/element page pairs. A projected read
+//!    (`ReadOptions::branches`) then fetches only the selected
+//!    columns' page ranges — the `ReadReport` comes back with
+//!    `bytes_selected`/`bytes_skipped` showing what the pushdown
+//!    avoided reading; on the classic layout the same selection still
+//!    decodes only the chosen branches but must fetch whole clusters.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -83,7 +93,8 @@ use rootio_par::storage::{Backend, BackendRef};
 use rootio_par::tree::reader::TreeReader;
 use rootio_par::tree::sink::FileSink;
 use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
-use rootio_par::tree::writer::{FlushMode, TreeWriter, WriterConfig};
+use rootio_par::coordinator::read::{read_columns, ReadOptions};
+use rootio_par::tree::writer::{FlushMode, Layout, TreeWriter, WriterConfig};
 
 const N_ENTRIES: usize = 100_000;
 const N_WORKERS: usize = 4;
@@ -352,6 +363,68 @@ fn stream_remote_resilient(local: BackendRef, session: &Session) -> anyhow::Resu
     Ok(())
 }
 
+/// Paged layout + projection pushdown: an event tree with a
+/// variable-length branch, written as per-column pages (wire v3), then
+/// scanned twice — whole-tree and projected to two branches. The
+/// projected scan's fetch plan only covers the selected columns'
+/// pages; the report's byte split shows what pushdown skipped.
+fn write_paged_and_project(session: &Session) -> anyhow::Result<BackendRef> {
+    let events = Schema::new(vec![
+        Field::new("pt", ColumnType::F32),
+        Field::new("eta", ColumnType::F32),
+        Field::new("ntrk", ColumnType::I32),
+        // Variable-length: stored as an offset-page/element-page pair
+        // per cluster chunk, so nested data pages like flat data.
+        Field::new("hit_e", ColumnType::ListF32),
+    ]);
+    let be: BackendRef = Arc::new(MemBackend::new());
+    let fw = Arc::new(FileWriter::create(be.clone())?);
+    let sink = FileSink::new(fw.clone(), events.len());
+    let cfg = WriterConfig {
+        layout: Layout::paged(), // or Layout::Paged { page_entries: .. }
+        ..writer_config()
+    };
+    let mut w = TreeWriter::attached(events.clone(), sink, cfg, session);
+    for i in 0..N_ENTRIES {
+        let hits: Vec<f32> = (0..i % 7).map(|k| (i + k) as f32 * 0.5).collect();
+        w.fill(vec![
+            Value::F32(i as f32 * 0.1),
+            Value::F32((i % 50) as f32 * 0.01 - 0.25),
+            Value::I32((i % 9) as i32),
+            Value::ListF32(hits),
+        ])?;
+    }
+    let (sink, entries, _) = w.close()?;
+    let meta = sink.into_meta("events".into(), events, entries)?;
+    fw.finish(&rootio_par::format::Directory { trees: vec![meta] })?;
+
+    let reader = TreeReader::open(Arc::new(FileReader::open(be.clone())?), "events")?;
+    let full = read_columns(
+        &reader,
+        &ReadOptions { prefetch: Some(PrefetchOptions::default()), ..Default::default() },
+    )?;
+    // Projection pushdown: fetch + decode only `pt` and `hit_e`.
+    let projected = read_columns(
+        &reader,
+        &ReadOptions {
+            branches: Some(vec![0, 3]),
+            prefetch: Some(PrefetchOptions::default()),
+            ..Default::default()
+        },
+    )?;
+    assert_eq!(projected.columns.len(), 2);
+    assert_eq!(projected.columns[0], full.columns[0]);
+    assert_eq!(projected.columns[1], full.columns[3]);
+    println!(
+        "  paged projected scan: 2/4 branches, {} of {} stored KB selected \
+         ({} KB skipped by pushdown)",
+        projected.bytes_selected / 1024,
+        (projected.bytes_selected + projected.bytes_skipped) / 1024,
+        projected.bytes_skipped / 1024,
+    );
+    Ok(be)
+}
+
 fn read_sorted(be: BackendRef, tree: &str) -> anyhow::Result<Vec<i32>> {
     let reader = TreeReader::open(Arc::new(FileReader::open(be)?), tree)?;
     let cols = reader.read_all()?;
@@ -392,6 +465,10 @@ fn main() -> anyhow::Result<()> {
     let mixed_reader = TreeReader::open(Arc::new(FileReader::open(mixed)?), "mixed")?;
     assert_eq!(mixed_reader.entries(), N_ENTRIES as u64);
     assert_eq!(mixed_reader.read_all()?.len(), 3);
+
+    // Paged v3 layout with a variable-length branch: projected scans
+    // fetch only the selected columns' pages.
+    write_paged_and_project(&session)?;
 
     // Streaming scan of the sequential file through the read-ahead
     // cache: bounded memory, coalesced fetches, in-order clusters.

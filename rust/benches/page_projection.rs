@@ -1,0 +1,14 @@
+//! Bench harness for the paged-layout projection-pushdown experiment
+//! (harness = false; criterion is unavailable offline — see
+//! Cargo.toml). Pass --quick for the reduced dataset. Emits
+//! BENCH_fig9.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::page_projection(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("page_projection: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -24,7 +24,7 @@ use crate::format::directory::{BasketInfo, TreeMeta};
 use crate::serial::schema::ColumnType;
 use crate::storage::BackendRef;
 
-/// One basket scheduled inside a cluster window.
+/// One basket (or page pair) scheduled inside a cluster window.
 #[derive(Clone, Copy, Debug)]
 pub struct PlannedBasket {
     /// Index into the stream's *selection* (its output column slot).
@@ -37,6 +37,18 @@ pub struct PlannedBasket {
     pub ty: ColumnType,
     /// Stored location + integrity info.
     pub info: BasketInfo,
+    /// Paged variable-length branch: the paired element page, stored
+    /// directly after `info` (the v3 adjacency invariant), so one
+    /// contiguous span of `info.comp_len + elem.comp_len` bytes covers
+    /// the pair.
+    pub elem: Option<BasketInfo>,
+}
+
+impl PlannedBasket {
+    /// Stored bytes this planned unit fetches (offset + element page).
+    pub fn stored_len(&self) -> u64 {
+        self.info.comp_len as u64 + self.elem.map_or(0, |e| e.comp_len as u64)
+    }
 }
 
 /// One coalesced device fetch: a contiguous stored range covering one
@@ -65,9 +77,10 @@ pub struct ClusterWindow {
 }
 
 impl ClusterWindow {
-    /// Stored (compressed) bytes the window's baskets occupy.
+    /// Stored (compressed) bytes the window's baskets occupy
+    /// (element pages of paged branches included).
     pub fn stored_bytes(&self) -> u64 {
-        self.baskets.iter().map(|b| b.info.comp_len as u64).sum()
+        self.baskets.iter().map(|b| b.stored_len()).sum()
     }
 }
 
@@ -79,6 +92,13 @@ pub struct ClusterPlan {
     /// would issue; [`ClusterPlan::total_fetches`] is what coalescing
     /// issues instead.
     pub total_baskets: usize,
+    /// Stored bytes the selection will actually fetch (projection
+    /// pushdown's numerator).
+    pub bytes_selected: u64,
+    /// Stored bytes of the tree's *other* branches that the projection
+    /// never touches — what a full-cluster decode would have read on
+    /// top of `bytes_selected`.
+    pub bytes_skipped: u64,
 }
 
 impl ClusterPlan {
@@ -96,28 +116,39 @@ impl ClusterPlan {
         let Some(&lead) = selection.first() else {
             return Ok(ClusterPlan::default());
         };
-        // Window cuts = the lead branch's basket boundaries (ascending
-        // and gapless per TreeMeta::check).
-        let cuts: Vec<u64> =
-            meta.branches[lead].baskets.iter().map(|k| k.first_entry).collect();
-        if cuts.is_empty() {
+        // Window cuts: the tree's recorded cluster spans (paged v3
+        // trees — the lead branch holds many pages per cluster there),
+        // else the lead branch's basket boundaries (ascending and
+        // gapless per TreeMeta::check).
+        let spans: Vec<(u64, u64)> = if meta.clusters.is_empty() {
+            meta.branches[lead]
+                .baskets
+                .iter()
+                .map(|k| (k.first_entry, k.n_entries as u64))
+                .collect()
+        } else {
+            meta.clusters.iter().map(|c| (c.first_entry, c.n_entries)).collect()
+        };
+        if spans.is_empty() {
             return Ok(ClusterPlan::default());
         }
-        let mut windows: Vec<ClusterWindow> = meta.branches[lead]
-            .baskets
+        let cuts: Vec<u64> = spans.iter().map(|&(f, _)| f).collect();
+        let mut windows: Vec<ClusterWindow> = spans
             .iter()
             .enumerate()
-            .map(|(i, k)| ClusterWindow {
+            .map(|(i, &(first_entry, entries))| ClusterWindow {
                 index: i,
-                first_entry: k.first_entry,
-                entries: k.n_entries as u64,
+                first_entry,
+                entries,
                 baskets: Vec::new(),
                 fetches: Vec::new(),
             })
             .collect();
         let mut total = 0usize;
+        let mut bytes_selected = 0u64;
         for (slot, &b) in selection.iter().enumerate() {
             let br = &meta.branches[b];
+            let paged_list = br.is_paged_list();
             for (k, info) in br.baskets.iter().enumerate() {
                 // Window containing this basket's first entry: the
                 // last cut at or before it.
@@ -126,13 +157,16 @@ impl ClusterPlan {
                     Err(0) => 0,
                     Err(i) => i - 1,
                 };
-                windows[w].baskets.push(PlannedBasket {
+                let planned = PlannedBasket {
                     slot,
                     branch: b,
                     basket: k,
                     ty: br.ty,
                     info: *info,
-                });
+                    elem: paged_list.then(|| br.elems[k]),
+                };
+                bytes_selected += planned.stored_len();
+                windows[w].baskets.push(planned);
                 total += 1;
             }
         }
@@ -140,11 +174,17 @@ impl ClusterPlan {
             let spans: Vec<(u64, usize)> = w
                 .baskets
                 .iter()
-                .map(|b| (b.info.offset, b.info.comp_len as usize))
+                .map(|b| (b.info.offset, b.stored_len() as usize))
                 .collect();
             w.fetches = coalesce(&spans, coalesce_gap);
         }
-        Ok(ClusterPlan { windows, total_baskets: total })
+        let tree_bytes: u64 = meta.branches.iter().map(|br| br.stored_bytes()).sum();
+        Ok(ClusterPlan {
+            windows,
+            total_baskets: total,
+            bytes_selected,
+            bytes_skipped: tree_bytes.saturating_sub(bytes_selected),
+        })
     }
 
     /// Coalesced device reads across all windows.
@@ -279,23 +319,96 @@ mod tests {
             Field::new("a", ColumnType::F32),
             Field::new("b", ColumnType::F32),
         ]);
+        TreeMeta::classic(
+            "t".into(),
+            schema,
+            200,
+            vec![
+                BranchMeta::simple(
+                    "a".into(),
+                    ColumnType::F32,
+                    vec![info(24, 100, 0, 100), info(224, 100, 100, 100)],
+                ),
+                BranchMeta::simple(
+                    "b".into(),
+                    ColumnType::F32,
+                    vec![info(124, 100, 0, 100), info(324, 100, 100, 100)],
+                ),
+            ],
+        )
+    }
+
+    /// A v3 paged tree: 2 clusters × (2 f32 pages + 1 list page pair),
+    /// column-major per cluster, element pages adjacent to their
+    /// offset pages.
+    fn paged_meta() -> TreeMeta {
+        let schema = Schema::new(vec![
+            Field::new("a", ColumnType::F32),
+            Field::new("j", ColumnType::ListF32),
+        ]);
         TreeMeta {
             name: "t".into(),
             schema,
             entries: 200,
             branches: vec![
+                BranchMeta::simple(
+                    "a".into(),
+                    ColumnType::F32,
+                    vec![
+                        info(24, 50, 0, 50),
+                        info(74, 50, 50, 50),
+                        info(224, 50, 100, 50),
+                        info(274, 50, 150, 50),
+                    ],
+                ),
                 BranchMeta {
-                    name: "a".into(),
-                    ty: ColumnType::F32,
-                    baskets: vec![info(24, 100, 0, 100), info(224, 100, 100, 100)],
-                },
-                BranchMeta {
-                    name: "b".into(),
-                    ty: ColumnType::F32,
-                    baskets: vec![info(124, 100, 0, 100), info(324, 100, 100, 100)],
+                    name: "j".into(),
+                    ty: ColumnType::ListF32,
+                    baskets: vec![info(124, 40, 0, 100), info(324, 40, 100, 100)],
+                    elems: vec![info(164, 60, 0, 300), info(364, 60, 300, 300)],
                 },
             ],
+            clusters: vec![
+                crate::format::directory::ClusterSpan { first_entry: 0, n_entries: 100 },
+                crate::format::directory::ClusterSpan { first_entry: 100, n_entries: 100 },
+            ],
         }
+    }
+
+    #[test]
+    fn paged_tree_windows_follow_cluster_spans_and_pair_element_pages() {
+        let meta = paged_meta();
+        meta.check().unwrap();
+        let plan = ClusterPlan::build(&meta, &[0, 1], 0).unwrap();
+        assert_eq!(plan.windows.len(), 2, "windows come from cluster spans, not lead pages");
+        assert_eq!(plan.total_baskets, 6);
+        let w0 = &plan.windows[0];
+        assert_eq!((w0.first_entry, w0.entries), (0, 100));
+        assert_eq!(w0.baskets.len(), 3);
+        let pair = w0.baskets.iter().find(|b| b.branch == 1).unwrap();
+        assert_eq!(pair.elem.unwrap().offset, 164, "list page carries its element page");
+        assert_eq!(pair.stored_len(), 100);
+        assert!(w0.baskets.iter().filter(|b| b.branch == 0).all(|b| b.elem.is_none()));
+        // The cluster's pages are contiguous: one vectored read covers
+        // both columns including the offset/element pair.
+        assert_eq!(w0.fetches.len(), 1);
+        assert_eq!(w0.fetches[0].offset, 24);
+        assert_eq!(w0.fetches[0].len, 200);
+        assert_eq!(plan.bytes_selected, 400);
+        assert_eq!(plan.bytes_skipped, 0);
+    }
+
+    #[test]
+    fn paged_projection_reports_selected_and_skipped_bytes() {
+        let meta = paged_meta();
+        let plan = ClusterPlan::build(&meta, &[1], 0).unwrap();
+        assert_eq!(plan.total_baskets, 2);
+        assert_eq!(plan.bytes_selected, 200, "offset + element pages of the list branch");
+        assert_eq!(plan.bytes_skipped, 200, "the unselected f32 pages stay on disk");
+        // Each window fetches exactly its pair span, nothing else.
+        assert_eq!(plan.windows[0].fetches.len(), 1);
+        assert_eq!(plan.windows[0].fetches[0].offset, 124);
+        assert_eq!(plan.windows[0].fetches[0].len, 100);
     }
 
     #[test]

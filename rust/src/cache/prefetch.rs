@@ -129,6 +129,12 @@ pub struct PrefetchStats {
     pub device_reads: u64,
     /// Stored (compressed) bytes consumed.
     pub stored_bytes: u64,
+    /// Stored bytes the whole plan selects — what this stream will
+    /// fetch end to end under its branch projection.
+    pub bytes_selected: u64,
+    /// Stored bytes of unselected branches the projection never
+    /// fetches (projection pushdown's saving over a full read).
+    pub bytes_skipped: u64,
     /// Consumer wall time spent waiting on a not-yet-ready cluster —
     /// the exposed storage latency the window exists to hide.
     pub fetch_stall: Duration,
@@ -298,6 +304,35 @@ fn fetch_window(
             {
                 fail_slot(shared, idx, e);
                 return;
+            }
+            // Paged list branch: the paired element page sits directly
+            // after the offset page inside the same coalesced span
+            // (the v3 adjacency invariant) — verify it here too, then
+            // decode the pair as one task.
+            if let Some(el) = pb.elem {
+                let el_end = end + el.comp_len as usize;
+                if let Err(e) =
+                    crate::format::reader::verify_basket_crc(&el, &buf[end..el_end])
+                {
+                    fail_slot(shared, idx, e);
+                    return;
+                }
+                let shared = shared.clone();
+                let buf = buf.clone();
+                group.spawn(move || {
+                    let t0 = Instant::now();
+                    let result = crate::tree::reader::decode_page_pair(
+                        &pb.info,
+                        &buf[within..end],
+                        &el,
+                        &buf[end..el_end],
+                    );
+                    shared
+                        .decode_nanos
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    finish_part(&shared, idx, bi, result);
+                });
+                continue;
             }
             let shared = shared.clone();
             let buf = buf.clone();
@@ -752,6 +787,8 @@ impl ClusterStream {
             baskets: self.consumed_baskets,
             device_reads: self.consumed_fetches,
             stored_bytes: self.consumed_stored,
+            bytes_selected: self.plan.bytes_selected,
+            bytes_skipped: self.plan.bytes_skipped,
             fetch_stall: self.stall,
             fetch_time: Duration::from_nanos(
                 self.shared.fetch_nanos.load(Ordering::Relaxed),

@@ -67,6 +67,14 @@ pub struct ReadReport {
     pub entries: u64,
     pub stored_bytes: u64,
     pub raw_bytes: u64,
+    /// Stored bytes the effective selection covers (equals
+    /// `stored_bytes`; kept distinct so projection accounting reads
+    /// the same on every path, prefetched or not).
+    pub bytes_selected: u64,
+    /// Stored bytes of the tree's unselected branches — what a
+    /// whole-tree read would have fetched on top of `bytes_selected`
+    /// (projection pushdown's saving).
+    pub bytes_skipped: u64,
     pub wall: std::time::Duration,
     /// Prefetcher accounting when the read went through the read-ahead
     /// cache (`ReadOptions::prefetch`), `None` otherwise.
@@ -200,11 +208,14 @@ pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadRepor
         stored += meta.branches[b].stored_bytes();
         raw += meta.branches[b].raw_bytes();
     }
+    let tree_stored: u64 = meta.branches.iter().map(|br| br.stored_bytes()).sum();
     Ok(ReadReport {
         branches_read: selection.len(),
         entries: reader.entries(),
         stored_bytes: stored,
         raw_bytes: raw,
+        bytes_selected: stored,
+        bytes_skipped: tree_stored.saturating_sub(stored),
         wall,
         columns,
         prefetch: prefetch_stats,
@@ -323,6 +334,8 @@ mod tests {
             entries: 0,
             stored_bytes: 0,
             raw_bytes,
+            bytes_selected: 0,
+            bytes_skipped: 0,
             wall,
             prefetch: None,
         };
@@ -399,6 +412,73 @@ mod tests {
         assert!(inner.stored_bytes < serial.stored_bytes / 3);
     }
 
+    /// Regression (ISSUE 8 satellite): when BOTH `ReadOptions::branches`
+    /// and the prefetch options carry a selection, the outer one wins —
+    /// columns, branch count, and byte accounting all follow it. The
+    /// None-falls-through half lives in `prefetched_read_matches_serial`.
+    #[test]
+    fn outer_selection_overrides_prefetch_selection() {
+        let file = build_with_basket(8, 900, 128);
+        let reader = TreeReader::open_first(file).unwrap();
+        let serial =
+            read_columns(&reader, &ReadOptions { force_serial: true, ..Default::default() })
+                .unwrap();
+        let rep = read_columns(
+            &reader,
+            &ReadOptions {
+                branches: Some(vec![6, 1]),
+                prefetch: Some(PrefetchOptions {
+                    branches: Some(vec![0, 2, 3, 4]), // must lose
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.branches_read, 2, "outer selection must win");
+        assert_eq!(rep.columns.len(), 2);
+        assert_eq!(rep.columns[0], serial.columns[6]);
+        assert_eq!(rep.columns[1], serial.columns[1]);
+        let meta = reader.meta();
+        let want: u64 =
+            [6usize, 1].iter().map(|&b| meta.branches[b].stored_bytes()).sum();
+        let total: u64 = meta.branches.iter().map(|b| b.stored_bytes()).sum();
+        assert_eq!(rep.stored_bytes, want, "accounting follows the outer selection");
+        assert_eq!(rep.bytes_selected, want);
+        assert_eq!(rep.bytes_skipped, total - want);
+        // The prefetcher itself saw the winning selection too.
+        let pf = rep.prefetch.expect("prefetch stats reported");
+        assert_eq!(pf.bytes_selected, want);
+        assert_eq!(pf.bytes_skipped, total - want);
+    }
+
+    /// Projection accounting on the plain (non-prefetch) paths: selected
+    /// + skipped always partition the tree's stored bytes.
+    #[test]
+    fn byte_accounting_partitions_tree_bytes() {
+        let file = build(6, 400);
+        let reader = TreeReader::open_first(file).unwrap();
+        let meta_total: u64 =
+            reader.meta().branches.iter().map(|b| b.stored_bytes()).sum();
+        let full =
+            read_columns(&reader, &ReadOptions { force_serial: true, ..Default::default() })
+                .unwrap();
+        assert_eq!(full.bytes_selected, meta_total);
+        assert_eq!(full.bytes_skipped, 0);
+        let part = read_columns(
+            &reader,
+            &ReadOptions {
+                branches: Some(vec![1, 4]),
+                force_serial: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(part.bytes_selected, part.stored_bytes);
+        assert_eq!(part.bytes_selected + part.bytes_skipped, meta_total);
+        assert!(part.bytes_skipped > 0);
+    }
+
     #[test]
     fn column_selection_reads_subset() {
         let file = build(10, 500);
@@ -421,6 +501,77 @@ mod tests {
         )
         .unwrap();
         assert!(rep.stored_bytes < full.stored_bytes / 3);
+    }
+
+    /// Paged v3 files flow through every read path — serial,
+    /// basket-granularity parallel, and the prefetching cache with a
+    /// projection — and decode identically on each, with the
+    /// projection's byte accounting partitioning the tree.
+    #[test]
+    fn paged_v3_reads_match_across_paths() {
+        use crate::tree::writer::Layout;
+        let n_branches = 6usize;
+        let schema = Schema::flat_f32("c", n_branches);
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), n_branches);
+        let cfg = WriterConfig {
+            basket_entries: 256,
+            compression: Settings::new(Codec::Lz4r, 2),
+            flush: FlushMode::Serial,
+            layout: Layout::Paged { page_entries: 64 },
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..1500usize {
+            let row: Vec<Value> =
+                (0..n_branches).map(|b| Value::F32(((i * (b + 2)) % 89) as f32 * 0.25)).collect();
+            w.fill(row).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        assert!(!reader.meta().clusters.is_empty(), "paged tree records cluster spans");
+
+        let serial = read_columns(
+            &reader,
+            &ReadOptions { force_serial: true, ..Default::default() },
+        )
+        .unwrap();
+        crate::imt::enable(4);
+        let parallel = read_columns(&reader, &ReadOptions::default()).unwrap();
+        crate::imt::disable();
+        assert_eq!(serial.columns, parallel.columns);
+
+        let prefetched = read_columns(
+            &reader,
+            &ReadOptions { prefetch: Some(PrefetchOptions::default()), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(serial.columns, prefetched.columns);
+        assert_eq!(prefetched.bytes_skipped, 0);
+
+        let projected = read_columns(
+            &reader,
+            &ReadOptions {
+                branches: Some(vec![4, 1]),
+                prefetch: Some(PrefetchOptions::default()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(projected.columns[0], serial.columns[4]);
+        assert_eq!(projected.columns[1], serial.columns[1]);
+        assert_eq!(
+            projected.bytes_selected + projected.bytes_skipped,
+            serial.bytes_selected,
+            "projection accounting partitions the paged tree's bytes"
+        );
+        assert!(projected.bytes_skipped > 0);
+        let pf = projected.prefetch.expect("prefetch stats reported");
+        assert_eq!(pf.bytes_selected, projected.bytes_selected);
     }
 
     /// The explicit-pool baseline shares the coordinator's

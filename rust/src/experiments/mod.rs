@@ -2358,6 +2358,193 @@ pub fn remote_reads(quick: bool) -> Result<String> {
     ))
 }
 
+/// Build the projection-pushdown comparison pair: the same 64-column
+/// f32 dataset written twice — classic layout on the v1 wire (one
+/// basket per branch per cluster) and the paged layout on the v3 wire
+/// (per-column pages grouped column-major). Returns the two files'
+/// bytes plus the schema. Shared by the fig9 harness and its
+/// acceptance test so both measure exactly the same files.
+fn build_projection_files(
+    n_branches: usize,
+    entries: usize,
+    cluster: usize,
+    page: usize,
+    settings: Settings,
+) -> Result<(Vec<u8>, Vec<u8>, Schema)> {
+    use crate::format::writer::FileWriter;
+    use crate::format::Directory;
+    use crate::tree::sink::FileSink;
+    use crate::tree::writer::{Layout, TreeWriter};
+
+    let schema = Schema::flat_f32("c", n_branches);
+    let blocks: Vec<Vec<ColumnData>> = (0..entries.div_ceil(cluster))
+        .map(|blk| {
+            let mut rng = dataset::SplitMix::new(blk as u64 + 1);
+            (0..n_branches)
+                .map(|b| {
+                    ColumnData::F32(
+                        (0..cluster.min(entries - blk * cluster))
+                            .map(|i| {
+                                dataset::quantize(
+                                    rng.uniform() * (b + 1) as f32 + (i % 31) as f32,
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    let build = |version: u32, layout: Layout| -> Result<Vec<u8>> {
+        use crate::storage::Backend;
+        let be = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create_versioned(be.clone(), version)?);
+        let sink = FileSink::new(fw.clone(), schema.len());
+        let cfg = WriterConfig {
+            basket_entries: cluster,
+            compression: settings,
+            flush: FlushMode::Serial,
+            layout,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for block in &blocks {
+            w.fill_columns(block)?;
+        }
+        let (sink, n, _) = w.close()?;
+        let meta = sink.into_meta("events".into(), schema.clone(), n)?;
+        fw.finish(&Directory { trees: vec![meta] })?;
+        let mut bytes = vec![0u8; be.len()? as usize];
+        be.read_at(0, &mut bytes)?;
+        Ok(bytes)
+    };
+    let v1 = build(1, Layout::Classic)?;
+    let v3 = build(3, Layout::Paged { page_entries: page })?;
+    Ok((v1, v3, schema))
+}
+
+/// One measured fig9 cell: stage `file_bytes` on a zero-latency
+/// simulated device, open it, then read `selection` (None = every
+/// branch) through the prefetching read path. Returns the decoded
+/// columns, the wall, the device bytes the *scan itself* read (the
+/// one-time open/footer fetch is excluded — stats are snapshotted
+/// after open) and the scan's device read count.
+fn projection_scan(
+    file_bytes: &[u8],
+    selection: Option<Vec<usize>>,
+) -> Result<(Vec<ColumnData>, Duration, u64, u64)> {
+    use crate::coordinator::read::{read_columns, ReadOptions};
+    let sim = Arc::new(SimDevice::new(DeviceModel::tmpfs(), 0.0));
+    let be: BackendRef = sim.clone();
+    be.write_at(0, file_bytes)?;
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+    let before = sim.device_stats();
+    let t0 = Instant::now();
+    let rep = read_columns(
+        &reader,
+        &ReadOptions {
+            branches: selection,
+            prefetch: Some(PrefetchOptions::default()),
+            ..Default::default()
+        },
+    )?;
+    let wall = t0.elapsed();
+    let delta = sim.device_stats().since(&before);
+    Ok((rep.columns, wall, delta.bytes_read, delta.reads))
+}
+
+/// Figure 9 (BENCH_fig9.json) — projection pushdown on the paged v3
+/// columnar layout: a 3-of-64-column scan on per-column pages versus
+/// the v1 classic full-cluster decode.
+///
+/// Both files hold the same data. Every cell is a real prefetched read
+/// on a zero-latency simulated device, so the wall is decode-bound and
+/// the byte column is the fetch plan's actual device traffic
+/// ([`DeviceStats`]-isolated, open/footer excluded). The paper-shaped
+/// claim: on v3 the unselected 61 columns' pages never leave the
+/// device, so the projected scan reads a few percent of the bytes and
+/// decodes only what the analysis asked for; v1's classic layout also
+/// stores columns separately, but its full decode — what a
+/// whole-event analysis pays — anchors the comparison.
+pub fn page_projection(quick: bool) -> Result<String> {
+    let n_branches = 64usize;
+    let entries: usize = if quick { 8_192 } else { 32_768 };
+    let cluster = 2048usize;
+    let page = 512usize;
+    let settings = Settings::new(Codec::Lz4r, 3);
+    let projection = vec![5usize, 17, 42];
+
+    let (v1, v3, _schema) =
+        build_projection_files(n_branches, entries, cluster, page, settings)?;
+    let raw_selected = (entries * projection.len() * 4) as u64;
+    let raw_full = (entries * n_branches * 4) as u64;
+
+    let mut table = Table::new(&[
+        "file", "scan", "wall_ms", "device_KB", "device_reads", "decode_MBps", "vs_v1_full",
+    ]);
+    let mut bench_rows: Vec<BenchRow> = Vec::new();
+    let cells: Vec<(&str, &Vec<u8>, Option<Vec<usize>>, u64)> = vec![
+        ("v1-classic", &v1, None, raw_full),
+        ("v1-classic", &v1, Some(projection.clone()), raw_selected),
+        ("v3-paged", &v3, None, raw_full),
+        ("v3-paged", &v3, Some(projection.clone()), raw_selected),
+    ];
+    let mut baseline: Option<(Vec<ColumnData>, Duration, u64)> = None;
+    for (file, bytes, sel, raw) in cells {
+        let (cols, wall, dev_bytes, dev_reads) = projection_scan(bytes, sel.clone())?;
+        // Decode identity across layouts and selections: each selected
+        // column must match the v1 full decode, entry for entry.
+        match (&baseline, &sel) {
+            (None, _) => baseline = Some((cols, wall, dev_bytes)),
+            (Some((base, _, _)), sel) => {
+                let picks: Vec<usize> =
+                    sel.clone().unwrap_or_else(|| (0..n_branches).collect());
+                for (i, &b) in picks.iter().enumerate() {
+                    if cols[i] != base[b] {
+                        return Err(Error::Coordinator(format!(
+                            "page_projection: {file} column {b} diverged from the \
+                             v1 full decode"
+                        )));
+                    }
+                }
+            }
+        }
+        let (_, base_wall, base_bytes) = baseline.as_ref().expect("baseline set");
+        let scan = if sel.is_some() { format!("projected-{}", projection.len()) } else { "full".into() };
+        let mbps = raw as f64 / 1e6 / wall.as_secs_f64().max(1e-9);
+        table.row(vec![
+            file.into(),
+            scan.clone(),
+            ms(wall),
+            format!("{:.1}", dev_bytes as f64 / 1e3),
+            dev_reads.to_string(),
+            format!("{mbps:.1}"),
+            format!(
+                "{:.2}x wall, {:.1}% bytes",
+                base_wall.as_secs_f64() / wall.as_secs_f64().max(1e-9),
+                dev_bytes as f64 * 100.0 / *base_bytes as f64
+            ),
+        ]);
+        bench_rows.push(BenchRow {
+            label: format!("{file}/{scan}"),
+            threads: 1,
+            wall_ms: wall.as_secs_f64() * 1e3,
+            mbps,
+        });
+    }
+    save_csv("fig9_page_projection", &table);
+    save_bench_json("fig9", &bench_rows);
+    Ok(format!(
+        "## Figure 9 — projection pushdown on the paged columnar layout (format v3)\n\
+         (real prefetched reads on a zero-latency simulated device: wall is \
+         decode-bound, device bytes/reads are the fetch plan's actual traffic with \
+         the one-time footer fetch excluded; decode identity asserted against the \
+         v1 full decode)\n\n{}",
+        table.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2479,6 +2666,46 @@ mod tests {
             "expected >= 1.5x from basket granularity: branch {:.3} ms vs basket {:.3} ms",
             branch * 1e3,
             basket * 1e3,
+        );
+    }
+
+    #[test]
+    fn fig9_smoke() {
+        let s = page_projection(true).unwrap();
+        assert!(s.contains("v3-paged") && s.contains("projected-3"), "{s}");
+    }
+
+    /// Acceptance (ISSUE 8 tentpole): a projected 3-of-64-column scan
+    /// on the paged v3 layout completes >= 3x faster than the v1
+    /// classic full-cluster decode and reads <= 10% of its device
+    /// bytes. Decode identity across the two layouts is asserted
+    /// column for column. The wall margin is huge by construction (3
+    /// vs 64 columns decoded on a zero-latency device), so the >= 3x
+    /// bound holds under timing jitter; the byte bound is
+    /// deterministic (DeviceStats counts the fetch plan's traffic).
+    #[test]
+    fn projected_v3_scan_beats_v1_full_decode() {
+        let (v1, v3, _) =
+            build_projection_files(64, 8_192, 2_048, 512, Settings::new(Codec::Lz4r, 3))
+                .unwrap();
+        let projection = vec![5usize, 17, 42];
+        let (full_cols, full_wall, full_bytes, _) = projection_scan(&v1, None).unwrap();
+        let (proj_cols, proj_wall, proj_bytes, _) =
+            projection_scan(&v3, Some(projection.clone())).unwrap();
+        for (i, &b) in projection.iter().enumerate() {
+            assert_eq!(proj_cols[i], full_cols[b], "column {b} must decode identically");
+        }
+        assert!(
+            proj_bytes * 10 <= full_bytes,
+            "projected v3 scan must read <= 10% of the v1 full decode's bytes: \
+             {proj_bytes} vs {full_bytes}"
+        );
+        assert!(
+            full_wall.as_secs_f64() >= 3.0 * proj_wall.as_secs_f64(),
+            "projected v3 scan must be >= 3x faster than the v1 full decode: \
+             {:.3} ms vs {:.3} ms",
+            proj_wall.as_secs_f64() * 1e3,
+            full_wall.as_secs_f64() * 1e3,
         );
     }
 

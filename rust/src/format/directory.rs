@@ -1,6 +1,7 @@
 //! Footer directory: the file's table of contents (TDirectory/TKey
 //! metadata analogue). Lists every tree, its schema, and the location,
-//! sizes, entry range and checksum of every basket of every branch.
+//! sizes, entry range and checksum of every basket (classic layout) or
+//! page (paged v3 layout) of every branch.
 
 use crate::compress::{Codec, Settings};
 use crate::error::{Error, Result};
@@ -8,7 +9,8 @@ use crate::serial::schema::{ColumnType, Schema};
 
 use super::wire::{WireReader, WireWriter};
 
-/// Location + integrity info for one stored basket.
+/// Location + integrity info for one stored basket (classic layout) or
+/// one stored page (paged v3 layout — pages reuse the basket record).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BasketInfo {
     /// Absolute file offset of the compressed container bytes.
@@ -17,9 +19,10 @@ pub struct BasketInfo {
     pub comp_len: u32,
     /// Decompressed payload length.
     pub raw_len: u32,
-    /// First entry number covered by this basket.
+    /// First entry number covered by this basket. For element pages
+    /// ([`BranchMeta::elems`]) this counts *elements*, not rows.
     pub first_entry: u64,
-    /// Number of entries in this basket.
+    /// Number of entries in this basket (elements, for element pages).
     pub n_entries: u32,
     /// CRC-32 of the stored bytes.
     pub crc: u32,
@@ -30,28 +33,59 @@ pub struct BasketInfo {
     pub settings: Settings,
 }
 
+/// One cluster's entry span (v3 paged layout): the row range the
+/// writer committed as a unit. Classic-layout trees leave the list
+/// empty — their cluster cuts are the lead branch's basket cuts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterSpan {
+    pub first_entry: u64,
+    pub n_entries: u64,
+}
+
 /// Per-branch metadata.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BranchMeta {
     pub name: String,
     pub ty: ColumnType,
+    /// Row-coordinate baskets (classic) or pages (v3). For a paged
+    /// variable-length branch these are the *offset* pages: one
+    /// page-relative end-offset per row, decoded against the paired
+    /// element page.
     pub baskets: Vec<BasketInfo>,
+    /// Element pages of a paged variable-length branch, paired 1:1
+    /// with `baskets` (empty for fixed-width and classic branches).
+    /// `elems[i]` holds exactly the elements of the rows in
+    /// `baskets[i]`, is stored immediately after it on disk, and its
+    /// `first_entry` counts global *elements*, not rows.
+    pub elems: Vec<BasketInfo>,
 }
 
 impl BranchMeta {
+    /// A classic (non-paged-list) branch with no element pages.
+    pub fn simple(name: String, ty: ColumnType, baskets: Vec<BasketInfo>) -> Self {
+        BranchMeta { name, ty, baskets, elems: Vec::new() }
+    }
+
+    /// Does this branch use the paged offset+element pair layout?
+    pub fn is_paged_list(&self) -> bool {
+        !self.elems.is_empty()
+    }
+
     /// Total entries across baskets.
     pub fn entries(&self) -> u64 {
         self.baskets.iter().map(|b| b.n_entries as u64).sum()
     }
 
-    /// Stored bytes across baskets.
+    /// Stored bytes across baskets (including element pages).
     pub fn stored_bytes(&self) -> u64 {
-        self.baskets.iter().map(|b| b.comp_len as u64).sum()
+        self.baskets.iter().map(|b| b.comp_len as u64).sum::<u64>()
+            + self.elems.iter().map(|b| b.comp_len as u64).sum::<u64>()
     }
 
-    /// Uncompressed bytes across baskets.
+    /// Uncompressed bytes across baskets (including element pages).
     pub fn raw_bytes(&self) -> u64 {
-        self.baskets.iter().map(|b| b.raw_len as u64).sum()
+        self.baskets.iter().map(|b| b.raw_len as u64).sum::<u64>()
+            + self.elems.iter().map(|b| b.raw_len as u64).sum::<u64>()
     }
 
     /// Find the basket covering `entry`.
@@ -61,7 +95,10 @@ impl BranchMeta {
             .position(|b| entry >= b.first_entry && entry < b.first_entry + b.n_entries as u64)
     }
 
-    /// Validate the basket index: contiguous, gapless entry ranges.
+    /// Validate the basket index: contiguous, gapless entry ranges,
+    /// and — for paged variable-length branches — a 1:1 offset/element
+    /// page pairing with element pages stored directly after their
+    /// offset page and gapless in global element coordinates.
     pub fn check_index(&self) -> Result<()> {
         let mut next = 0u64;
         for (i, b) in self.baskets.iter().enumerate() {
@@ -72,6 +109,38 @@ impl BranchMeta {
                 )));
             }
             next += b.n_entries as u64;
+        }
+        if self.elems.is_empty() {
+            return Ok(());
+        }
+        if self.elems.len() != self.baskets.len() {
+            return Err(Error::Format(format!(
+                "branch '{}': {} element pages vs {} offset pages",
+                self.name,
+                self.elems.len(),
+                self.baskets.len()
+            )));
+        }
+        let mut next_elem = 0u64;
+        for (i, (off, el)) in self.baskets.iter().zip(&self.elems).enumerate() {
+            if el.first_entry != next_elem {
+                return Err(Error::Format(format!(
+                    "branch '{}': element page {i} starts at {} expected {next_elem}",
+                    self.name, el.first_entry
+                )));
+            }
+            next_elem += el.n_entries as u64;
+            // Fetch plans rely on each offset/element pair being one
+            // contiguous device range.
+            if el.offset != off.offset + off.comp_len as u64 {
+                return Err(Error::Format(format!(
+                    "branch '{}': element page {i} at {} not adjacent to its offset page \
+                     (expected {})",
+                    self.name,
+                    el.offset,
+                    off.offset + off.comp_len as u64
+                )));
+            }
         }
         Ok(())
     }
@@ -84,15 +153,22 @@ pub struct TreeMeta {
     pub schema: Schema,
     pub entries: u64,
     pub branches: Vec<BranchMeta>,
+    /// Cluster cuts of a v3 paged tree (empty for classic layouts).
+    pub clusters: Vec<ClusterSpan>,
 }
 
 impl TreeMeta {
+    /// A tree with no recorded cluster cuts (classic layout).
+    pub fn classic(name: String, schema: Schema, entries: u64, branches: Vec<BranchMeta>) -> Self {
+        TreeMeta { name, schema, entries, branches, clusters: Vec::new() }
+    }
+
     pub fn branch(&self, name: &str) -> Option<&BranchMeta> {
         self.branches.iter().find(|b| b.name == name)
     }
 
     /// Validate invariants: one branch per schema field, consistent
-    /// entry counts, gapless basket indexes.
+    /// entry counts, gapless basket indexes, gapless cluster spans.
     pub fn check(&self) -> Result<()> {
         if self.branches.len() != self.schema.len() {
             return Err(Error::Format(format!(
@@ -109,6 +185,12 @@ impl TreeMeta {
                     self.name, br.name, f.name
                 )));
             }
+            if br.is_paged_list() && br.ty.width().is_some() {
+                return Err(Error::Format(format!(
+                    "tree '{}': fixed-width branch '{}' has element pages",
+                    self.name, br.name
+                )));
+            }
             br.check_index()?;
             if br.entries() != self.entries {
                 return Err(Error::Format(format!(
@@ -120,6 +202,22 @@ impl TreeMeta {
                 )));
             }
         }
+        let mut next = 0u64;
+        for (i, c) in self.clusters.iter().enumerate() {
+            if c.first_entry != next {
+                return Err(Error::Format(format!(
+                    "tree '{}': cluster {i} starts at {} expected {next}",
+                    self.name, c.first_entry
+                )));
+            }
+            next += c.n_entries;
+        }
+        if !self.clusters.is_empty() && next != self.entries {
+            return Err(Error::Format(format!(
+                "tree '{}': clusters cover {next} entries, tree has {}",
+                self.name, self.entries
+            )));
+        }
         Ok(())
     }
 }
@@ -128,6 +226,38 @@ impl TreeMeta {
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct Directory {
     pub trees: Vec<TreeMeta>,
+}
+
+fn put_basket(w: &mut WireWriter, b: &BasketInfo, version: u32) {
+    w.put_u64(b.offset);
+    w.put_u32(b.comp_len);
+    w.put_u32(b.raw_len);
+    w.put_u64(b.first_entry);
+    w.put_u32(b.n_entries);
+    w.put_u32(b.crc);
+    if version >= 2 {
+        w.put_u8(b.settings.codec.code());
+        w.put_u8(b.settings.level);
+    }
+}
+
+fn get_basket(r: &mut WireReader, version: u32) -> Result<BasketInfo> {
+    Ok(BasketInfo {
+        offset: r.get_u64()?,
+        comp_len: r.get_u32()?,
+        raw_len: r.get_u32()?,
+        first_entry: r.get_u64()?,
+        n_entries: r.get_u32()?,
+        crc: r.get_u32()?,
+        settings: if version >= 2 {
+            Settings { codec: Codec::from_code(r.get_u8()?)?, level: r.get_u8()? }
+        } else {
+            // v1 entries carry no settings; the block containers are
+            // self-describing, so this placeholder is never decoded
+            // against.
+            Settings::uncompressed()
+        },
+    })
 }
 
 impl Directory {
@@ -153,6 +283,28 @@ impl Directory {
     }
 
     pub fn encode(&self) -> Vec<u8> {
+        // The current version can represent every directory, so this
+        // cannot fail.
+        self.encode_versioned(super::VERSION).expect("current-version encode is total")
+    }
+
+    /// Encode at a specific wire version. Fails if the directory uses
+    /// features the requested version cannot represent (element pages
+    /// or cluster spans need v3).
+    pub fn encode_versioned(&self, version: u32) -> Result<Vec<u8>> {
+        if !(super::MIN_VERSION..=super::VERSION).contains(&version) {
+            return Err(Error::Format(format!("cannot encode directory version {version}")));
+        }
+        if version < 3 {
+            for t in &self.trees {
+                if !t.clusters.is_empty() || t.branches.iter().any(|b| !b.elems.is_empty()) {
+                    return Err(Error::Format(format!(
+                        "tree '{}' uses the paged layout; requires format version 3",
+                        t.name
+                    )));
+                }
+            }
+        }
         let mut w = WireWriter::new();
         w.put_u32(self.trees.len() as u32);
         for t in &self.trees {
@@ -165,21 +317,36 @@ impl Directory {
                 w.put_u8(br.ty.code());
                 w.put_u32(br.baskets.len() as u32);
                 for b in &br.baskets {
-                    w.put_u64(b.offset);
-                    w.put_u32(b.comp_len);
-                    w.put_u32(b.raw_len);
-                    w.put_u64(b.first_entry);
-                    w.put_u32(b.n_entries);
-                    w.put_u32(b.crc);
-                    w.put_u8(b.settings.codec.code());
-                    w.put_u8(b.settings.level);
+                    put_basket(&mut w, b, version);
+                }
+                if version >= 3 {
+                    w.put_u32(br.elems.len() as u32);
+                    for b in &br.elems {
+                        put_basket(&mut w, b, version);
+                    }
+                }
+            }
+            if version >= 3 {
+                w.put_u32(t.clusters.len() as u32);
+                for c in &t.clusters {
+                    w.put_u64(c.first_entry);
+                    w.put_u64(c.n_entries);
                 }
             }
         }
-        w.finish()
+        Ok(w.finish())
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
+        Self::decode_versioned(buf, super::VERSION)
+    }
+
+    /// Decode a footer written at `version` (the container header
+    /// records which).
+    pub fn decode_versioned(buf: &[u8], version: u32) -> Result<Self> {
+        if !(super::MIN_VERSION..=super::VERSION).contains(&version) {
+            return Err(Error::Format(format!("cannot decode directory version {version}")));
+        }
         let mut r = WireReader::new(buf);
         let n_trees = r.get_u32()? as usize;
         let mut trees = Vec::with_capacity(n_trees);
@@ -195,22 +362,30 @@ impl Directory {
                 let n_baskets = r.get_u32()? as usize;
                 let mut baskets = Vec::with_capacity(n_baskets);
                 for _ in 0..n_baskets {
-                    baskets.push(BasketInfo {
-                        offset: r.get_u64()?,
-                        comp_len: r.get_u32()?,
-                        raw_len: r.get_u32()?,
+                    baskets.push(get_basket(&mut r, version)?);
+                }
+                let mut elems = Vec::new();
+                if version >= 3 {
+                    let n_elems = r.get_u32()? as usize;
+                    elems.reserve(n_elems);
+                    for _ in 0..n_elems {
+                        elems.push(get_basket(&mut r, version)?);
+                    }
+                }
+                branches.push(BranchMeta { name: bname, ty, baskets, elems });
+            }
+            let mut clusters = Vec::new();
+            if version >= 3 {
+                let n_clusters = r.get_u32()? as usize;
+                clusters.reserve(n_clusters);
+                for _ in 0..n_clusters {
+                    clusters.push(ClusterSpan {
                         first_entry: r.get_u64()?,
-                        n_entries: r.get_u32()?,
-                        crc: r.get_u32()?,
-                        settings: Settings {
-                            codec: Codec::from_code(r.get_u8()?)?,
-                            level: r.get_u8()?,
-                        },
+                        n_entries: r.get_u64()?,
                     });
                 }
-                branches.push(BranchMeta { name: bname, ty, baskets });
             }
-            trees.push(TreeMeta { name, schema, entries, branches });
+            trees.push(TreeMeta { name, schema, entries, branches, clusters });
         }
         Ok(Directory { trees })
     }
@@ -226,36 +401,79 @@ mod tests {
             Field::new("pt", ColumnType::F32),
             Field::new("n", ColumnType::I32),
         ]);
-        let mk = |name: &str, ty| BranchMeta {
-            name: name.into(),
-            ty,
-            baskets: vec![
-                BasketInfo {
-                    offset: 24,
-                    comp_len: 100,
-                    raw_len: 400,
-                    first_entry: 0,
-                    n_entries: 100,
-                    crc: 0xABCD,
-                    settings: Settings::default_compressed(),
-                },
-                BasketInfo {
-                    offset: 124,
-                    comp_len: 80,
-                    raw_len: 400,
-                    first_entry: 100,
-                    n_entries: 100,
-                    crc: 0x1234,
-                    settings: Settings::new(Codec::Lz4r, 3),
-                },
-            ],
+        let mk = |name: &str, ty| {
+            BranchMeta::simple(
+                name.into(),
+                ty,
+                vec![
+                    BasketInfo {
+                        offset: 24,
+                        comp_len: 100,
+                        raw_len: 400,
+                        first_entry: 0,
+                        n_entries: 100,
+                        crc: 0xABCD,
+                        settings: Settings::default_compressed(),
+                    },
+                    BasketInfo {
+                        offset: 124,
+                        comp_len: 80,
+                        raw_len: 400,
+                        first_entry: 100,
+                        n_entries: 100,
+                        crc: 0x1234,
+                        settings: Settings::new(Codec::Lz4r, 3),
+                    },
+                ],
+            )
+        };
+        Directory {
+            trees: vec![TreeMeta::classic(
+                "events".into(),
+                schema,
+                200,
+                vec![mk("pt", ColumnType::F32), mk("n", ColumnType::I32)],
+            )],
+        }
+    }
+
+    fn paged_sample() -> Directory {
+        let schema = Schema::new(vec![
+            Field::new("pt", ColumnType::F32),
+            Field::new("hits", ColumnType::ListF32),
+        ]);
+        let page = |offset, comp_len, first_entry, n_entries| BasketInfo {
+            offset,
+            comp_len,
+            raw_len: 4 * n_entries,
+            first_entry,
+            n_entries,
+            crc: 0x5150,
+            settings: Settings::default_compressed(),
+        };
+        let pt = BranchMeta::simple(
+            "pt".into(),
+            ColumnType::F32,
+            vec![page(24, 50, 0, 64), page(74, 50, 64, 36)],
+        );
+        let hits = BranchMeta {
+            name: "hits".into(),
+            ty: ColumnType::ListF32,
+            baskets: vec![page(200, 40, 0, 64), page(380, 40, 64, 36)],
+            // element pages directly follow their offset page, counted
+            // in global element coordinates
+            elems: vec![page(240, 140, 0, 130), page(420, 90, 130, 77)],
         };
         Directory {
             trees: vec![TreeMeta {
                 name: "events".into(),
                 schema,
-                entries: 200,
-                branches: vec![mk("pt", ColumnType::F32), mk("n", ColumnType::I32)],
+                entries: 100,
+                branches: vec![pt, hits],
+                clusters: vec![
+                    ClusterSpan { first_entry: 0, n_entries: 64 },
+                    ClusterSpan { first_entry: 64, n_entries: 36 },
+                ],
             }],
         }
     }
@@ -265,6 +483,42 @@ mod tests {
         let d = sample();
         let enc = d.encode();
         assert_eq!(Directory::decode(&enc).unwrap(), d);
+    }
+
+    #[test]
+    fn paged_encode_decode_roundtrip() {
+        let d = paged_sample();
+        d.check().unwrap();
+        let enc = d.encode();
+        assert_eq!(Directory::decode(&enc).unwrap(), d);
+    }
+
+    #[test]
+    fn older_versions_reject_paged_features() {
+        let d = paged_sample();
+        assert!(d.encode_versioned(2).is_err());
+        assert!(d.encode_versioned(1).is_err());
+        // a classic directory still encodes fine at either version
+        assert!(sample().encode_versioned(2).is_ok());
+        assert!(sample().encode_versioned(1).is_ok());
+    }
+
+    #[test]
+    fn v1_wire_omits_settings() {
+        let d = sample();
+        let v1 = d.encode_versioned(1).unwrap();
+        let v2 = d.encode_versioned(2).unwrap();
+        // 2 settings bytes per basket, 4 baskets
+        assert_eq!(v2.len(), v1.len() + 8);
+        let back = Directory::decode_versioned(&v1, 1).unwrap();
+        assert_eq!(back.trees[0].branches[0].baskets.len(), 2);
+        assert_eq!(
+            back.trees[0].branches[0].baskets[0].settings,
+            Settings::uncompressed()
+        );
+        // everything except the settings survives
+        assert_eq!(back.trees[0].branches[0].baskets[0].offset, 24);
+        assert_eq!(back.trees[0].branches[1].baskets[1].first_entry, 100);
     }
 
     #[test]
@@ -283,6 +537,37 @@ mod tests {
     fn check_catches_entry_mismatch() {
         let mut d = sample();
         d.trees[0].entries = 999;
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn check_catches_elem_page_gaps() {
+        let mut d = paged_sample();
+        d.trees[0].branches[1].elems[1].first_entry = 131;
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn check_catches_unpaired_elem_pages() {
+        let mut d = paged_sample();
+        d.trees[0].branches[1].elems.pop();
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn check_catches_non_adjacent_elem_pages() {
+        let mut d = paged_sample();
+        d.trees[0].branches[1].elems[0].offset += 8;
+        assert!(d.trees[0].check().is_err());
+    }
+
+    #[test]
+    fn check_catches_cluster_gaps() {
+        let mut d = paged_sample();
+        d.trees[0].clusters[1].first_entry = 65;
+        assert!(d.trees[0].check().is_err());
+        let mut d = paged_sample();
+        d.trees[0].clusters[1].n_entries = 35;
         assert!(d.trees[0].check().is_err());
     }
 

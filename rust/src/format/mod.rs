@@ -2,30 +2,51 @@
 //!
 //! ```text
 //! [0..4)    magic  "RNTF"
-//! [4..8)    u32 BE version (1)
+//! [4..8)    u32 BE version (1, 2 or 3)
 //! [8..16)   u64 BE footer offset   (0 until the file is finalised)
 //! [16..24)  u64 BE footer length
-//! [24..)    basket payloads (self-describing compressed containers),
-//!           appended in any order by the writer
+//! [24..)    basket/page payloads (self-describing compressed
+//!           containers), appended in any order by the writer
 //! footer:   Directory::encode() + u32 BE crc32(footer)
 //! ```
 //!
 //! The footer-last layout mirrors ROOT: a file is readable iff the
 //! footer was committed, and appending payloads never rewrites existing
 //! bytes (crash-safe up to the final header update).
+//!
+//! ## Wire versions
+//!
+//! * **1** — baskets record offset/lengths/entry-range/CRC only; the
+//!   compression settings live solely in the self-describing block
+//!   containers.
+//! * **2** — every basket directory entry additionally records its own
+//!   codec + level (per-column adaptive selection), one byte each after
+//!   the CRC.
+//! * **3** — paged columnar layout (RNTuple-style): a branch may store
+//!   many independently-compressed *pages* per cluster (the per-basket
+//!   record is reused as the page record), variable-length branches
+//!   split into an offset-page/element-page pair list
+//!   ([`BranchMeta::elems`]), and the tree records its cluster cuts
+//!   ([`TreeMeta::clusters`]). Readers of v3 files must pair each
+//!   offset page with its element page, which the writer stores
+//!   immediately after it on disk.
+//!
+//! Readers accept every version up to [`VERSION`]; writers emit
+//! [`VERSION`] unless an older wire is requested explicitly
+//! ([`writer::FileWriter::create_versioned`], compat tooling only).
 
 pub mod directory;
 pub mod reader;
 pub mod wire;
 pub mod writer;
 
-pub use directory::{BasketInfo, BranchMeta, Directory, TreeMeta};
+pub use directory::{BasketInfo, BranchMeta, ClusterSpan, Directory, TreeMeta};
 pub use reader::FileReader;
 pub use writer::FileWriter;
 
 pub const MAGIC: &[u8; 4] = b"RNTF";
-/// Format version. 2: every basket directory entry records its own
-/// codec + level (per-column adaptive selection), one byte each after
-/// the CRC.
-pub const VERSION: u32 = 2;
+/// Current format version (see the module docs for the version history).
+pub const VERSION: u32 = 3;
+/// Oldest wire version this build can still decode.
+pub const MIN_VERSION: u32 = 1;
 pub const HEADER_LEN: u64 = 24;

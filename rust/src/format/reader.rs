@@ -5,17 +5,20 @@ use crate::error::{Error, Result};
 use crate::storage::BackendRef;
 
 use super::directory::{BasketInfo, Directory};
-use super::{HEADER_LEN, MAGIC, VERSION};
+use super::{HEADER_LEN, MAGIC, MIN_VERSION, VERSION};
 
 /// Read-side handle on an `RNTF` file.
 pub struct FileReader {
     backend: BackendRef,
     directory: Directory,
+    version: u32,
 }
 
 impl FileReader {
     /// Open and validate: magic, version, footer checksum, and every
-    /// tree's structural invariants.
+    /// tree's structural invariants. Accepts every wire version from
+    /// [`MIN_VERSION`] to [`VERSION`] — older files decode through the
+    /// same paths (their directories simply never use newer features).
     pub fn open(backend: BackendRef) -> Result<Self> {
         let total = backend.len()?;
         if total < HEADER_LEN {
@@ -27,7 +30,7 @@ impl FileReader {
             return Err(Error::Format("bad magic".into()));
         }
         let version = u32::from_be_bytes(header[4..8].try_into().unwrap());
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(Error::Format(format!("unsupported version {version}")));
         }
         let foff = u64::from_be_bytes(header[8..16].try_into().unwrap());
@@ -45,15 +48,20 @@ impl FileReader {
         if crc32(payload) != want_crc {
             return Err(Error::Format("footer checksum mismatch".into()));
         }
-        let directory = Directory::decode(payload)?;
+        let directory = Directory::decode_versioned(payload, version)?;
         for t in &directory.trees {
             t.check()?;
         }
-        Ok(FileReader { backend, directory })
+        Ok(FileReader { backend, directory, version })
     }
 
     pub fn directory(&self) -> &Directory {
         &self.directory
+    }
+
+    /// Wire version the file was written at.
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     pub fn backend(&self) -> &BackendRef {
@@ -109,14 +117,14 @@ mod tests {
         let payload = b"compressed-bytes-go-here".to_vec();
         let (off, crc) = w.append(&payload).unwrap();
         let dir = Directory {
-            trees: vec![TreeMeta {
-                name: "t".into(),
-                schema: Schema::new(vec![Field::new("x", ColumnType::U8)]),
-                entries: 24,
-                branches: vec![BranchMeta {
-                    name: "x".into(),
-                    ty: ColumnType::U8,
-                    baskets: vec![BasketInfo {
+            trees: vec![TreeMeta::classic(
+                "t".into(),
+                Schema::new(vec![Field::new("x", ColumnType::U8)]),
+                24,
+                vec![BranchMeta::simple(
+                    "x".into(),
+                    ColumnType::U8,
+                    vec![BasketInfo {
                         offset: off,
                         comp_len: payload.len() as u32,
                         raw_len: payload.len() as u32,
@@ -125,8 +133,8 @@ mod tests {
                         crc,
                         settings: crate::compress::Settings::uncompressed(),
                     }],
-                }],
-            }],
+                )],
+            )],
         };
         w.finish(&dir).unwrap();
         (be, dir, payload)

@@ -7,7 +7,7 @@ use crate::error::{Error, Result};
 use crate::storage::BackendRef;
 
 use super::directory::{Directory, TreeMeta};
-use super::{HEADER_LEN, MAGIC, VERSION};
+use super::{HEADER_LEN, MAGIC, MIN_VERSION, VERSION};
 
 /// Writes an `RNTF` file: header, appended payloads, footer.
 ///
@@ -26,6 +26,9 @@ pub struct FileWriter {
     backend: BackendRef,
     cursor: Mutex<u64>,
     finished: Mutex<bool>,
+    /// Wire version the footer will be encoded at (normally
+    /// [`VERSION`]; older via [`FileWriter::create_versioned`]).
+    version: u32,
     /// Trees registered by concurrently-closing sinks, committed by
     /// [`FileWriter::finish_registered`].
     trees: Mutex<Vec<TreeMeta>>,
@@ -34,9 +37,20 @@ pub struct FileWriter {
 impl FileWriter {
     /// Start a new file on `backend`: writes the provisional header.
     pub fn create(backend: BackendRef) -> Result<Self> {
+        Self::create_versioned(backend, VERSION)
+    }
+
+    /// Start a new file at an explicit (possibly older) wire version —
+    /// compat tooling and benchmarks that compare layouts. Finishing
+    /// fails if the directory uses features the version cannot
+    /// represent (element pages / cluster spans need v3).
+    pub fn create_versioned(backend: BackendRef, version: u32) -> Result<Self> {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(Error::Format(format!("cannot write format version {version}")));
+        }
         let mut header = Vec::with_capacity(HEADER_LEN as usize);
         header.extend_from_slice(MAGIC);
-        header.extend_from_slice(&VERSION.to_be_bytes());
+        header.extend_from_slice(&version.to_be_bytes());
         header.extend_from_slice(&0u64.to_be_bytes()); // footer offset
         header.extend_from_slice(&0u64.to_be_bytes()); // footer length
         backend.write_at(0, &header)?;
@@ -44,8 +58,14 @@ impl FileWriter {
             backend,
             cursor: Mutex::new(HEADER_LEN),
             finished: Mutex::new(false),
+            version,
             trees: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Wire version this file is being written at.
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     pub fn backend(&self) -> &BackendRef {
@@ -138,7 +158,7 @@ impl FileWriter {
     /// Encode and append the footer, then patch the header (the file
     /// must already be sealed by the caller).
     fn write_footer(&self, dir: &Directory) -> Result<u64> {
-        let mut footer = dir.encode();
+        let mut footer = dir.encode_versioned(self.version)?;
         let crc = crc32(&footer);
         footer.extend_from_slice(&crc.to_be_bytes());
         let foff = self.reserve(footer.len() as u64);
@@ -190,15 +210,17 @@ mod tests {
         use crate::serial::schema::Schema;
         let be = Arc::new(MemBackend::new());
         let w = FileWriter::create(be.clone()).unwrap();
-        let mk = |name: &str| TreeMeta {
-            name: name.into(),
-            schema: Schema::flat_f32("x", 1),
-            entries: 0,
-            branches: vec![crate::format::directory::BranchMeta {
-                name: "x0".into(),
-                ty: crate::serial::schema::ColumnType::F32,
-                baskets: Vec::new(),
-            }],
+        let mk = |name: &str| {
+            TreeMeta::classic(
+                name.into(),
+                Schema::flat_f32("x", 1),
+                0,
+                vec![crate::format::directory::BranchMeta::simple(
+                    "x0".into(),
+                    crate::serial::schema::ColumnType::F32,
+                    Vec::new(),
+                )],
+            )
         };
         // registration order b, a — the footer must come out sorted
         w.add_tree(mk("b")).unwrap();
@@ -216,15 +238,17 @@ mod tests {
         use crate::serial::schema::Schema;
         let be = Arc::new(MemBackend::new());
         let w = FileWriter::create(be).unwrap();
-        let mk = || TreeMeta {
-            name: "t".into(),
-            schema: Schema::flat_f32("x", 1),
-            entries: 0,
-            branches: vec![crate::format::directory::BranchMeta {
-                name: "x0".into(),
-                ty: crate::serial::schema::ColumnType::F32,
-                baskets: Vec::new(),
-            }],
+        let mk = || {
+            TreeMeta::classic(
+                "t".into(),
+                Schema::flat_f32("x", 1),
+                0,
+                vec![crate::format::directory::BranchMeta::simple(
+                    "x0".into(),
+                    crate::serial::schema::ColumnType::F32,
+                    Vec::new(),
+                )],
+            )
         };
         w.add_tree(mk()).unwrap();
         w.add_tree(mk()).unwrap();
@@ -238,12 +262,8 @@ mod tests {
         let be = Arc::new(MemBackend::new());
         let w = FileWriter::create(be).unwrap();
         w.finish(&Directory::default()).unwrap();
-        let meta = TreeMeta {
-            name: "late".into(),
-            schema: Schema::flat_f32("x", 1),
-            entries: 0,
-            branches: Vec::new(),
-        };
+        let meta =
+            TreeMeta::classic("late".into(), Schema::flat_f32("x", 1), 0, Vec::new());
         assert!(w.add_tree(meta).is_err());
     }
 

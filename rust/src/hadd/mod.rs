@@ -82,23 +82,39 @@ fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
     };
     let mut buf = TreeBuffer::new(meta.schema.clone());
     buf.entries = meta.entries;
-    let infos: Vec<BasketInfo> =
-        meta.branches.iter().flat_map(|br| br.baskets.iter().copied()).collect();
+    buf.clusters = meta.clusters.clone();
+    // Interleave each paged list branch's offset/element pages so a
+    // stored pair (adjacent on disk) coalesces into one read.
+    let infos: Vec<BasketInfo> = meta
+        .branches
+        .iter()
+        .flat_map(|br| {
+            br.baskets.iter().enumerate().flat_map(|(i, k)| {
+                std::iter::once(*k).chain(br.elems.get(i).copied())
+            })
+        })
+        .collect();
     let mut payloads =
         crate::cache::fetch_baskets_coalesced(input, &infos, DEFAULT_COALESCE_GAP)?
             .into_iter();
+    let mut take = |k: &BasketInfo| -> Result<BasketPayload> {
+        let bytes = payloads
+            .next()
+            .ok_or_else(|| Error::Sync("hadd: coalesced fetch lost a basket payload".into()))?;
+        Ok(BasketPayload {
+            bytes,
+            raw_len: k.raw_len,
+            first_entry: k.first_entry,
+            n_entries: k.n_entries,
+            settings: k.settings,
+        })
+    };
     for (bb, br) in buf.branches.iter_mut().zip(&meta.branches) {
-        for k in &br.baskets {
-            let bytes = payloads.next().ok_or_else(|| {
-                Error::Sync("hadd: coalesced fetch lost a basket payload".into())
-            })?;
-            bb.baskets.push(BasketPayload {
-                bytes,
-                raw_len: k.raw_len,
-                first_entry: k.first_entry,
-                n_entries: k.n_entries,
-                settings: k.settings,
-            });
+        for (i, k) in br.baskets.iter().enumerate() {
+            bb.baskets.push(take(k)?);
+            if let Some(e) = br.elems.get(i) {
+                bb.elems.push(take(e)?);
+            }
         }
     }
     Ok(buf)
@@ -112,6 +128,11 @@ struct Appender {
     schema: Option<Schema>,
     branches: Vec<BranchMeta>,
     entries: u64,
+    /// Per-branch element totals: the global element coordinate each
+    /// input's element pages are rebased onto (paged list branches).
+    elem_counts: Vec<u64>,
+    /// Rebased cluster spans of paged (v3) inputs.
+    clusters: Vec<crate::format::directory::ClusterSpan>,
     stored: u64,
     /// Basket-size spread (entries) across everything appended.
     cluster_min: u32,
@@ -125,6 +146,8 @@ impl Appender {
             schema: None,
             branches: Vec::new(),
             entries: 0,
+            elem_counts: Vec::new(),
+            clusters: Vec::new(),
             stored: 0,
             cluster_min: 0,
             cluster_max: 0,
@@ -139,16 +162,24 @@ impl Appender {
                     .schema
                     .fields
                     .iter()
-                    .map(|f| BranchMeta { name: f.name.clone(), ty: f.ty, baskets: Vec::new() })
+                    .map(|f| BranchMeta::simple(f.name.clone(), f.ty, Vec::new()))
                     .collect();
+                self.elem_counts = vec![0; self.branches.len()];
             }
             Some(s) if *s != buf.schema => {
                 return Err(Error::Schema(format!("input {index} has a different schema")));
             }
             Some(_) => {}
         }
-        for (dst, src) in self.branches.iter_mut().zip(&buf.branches) {
-            for k in &src.baskets {
+        for (b, (dst, src)) in self.branches.iter_mut().zip(&buf.branches).enumerate() {
+            if !src.elems.is_empty() && src.elems.len() != src.baskets.len() {
+                return Err(Error::Format(format!(
+                    "input {index} branch {b}: {} element pages for {} offset pages",
+                    src.elems.len(),
+                    src.baskets.len()
+                )));
+            }
+            for (i, k) in src.baskets.iter().enumerate() {
                 let (offset, crc) = self.fw.append(&k.bytes)?;
                 self.stored += k.bytes.len() as u64;
                 if k.n_entries > 0 {
@@ -168,8 +199,35 @@ impl Appender {
                     crc,
                     settings: k.settings,
                 });
+                // Element page of a paged list branch: raw-copied
+                // directly after its offset page (sequential appends
+                // keep the v3 adjacency invariant without decoding —
+                // offsets inside the page are page-relative, so the
+                // bytes are position-independent); only the directory
+                // coordinates are rebased.
+                if let Some(e) = src.elems.get(i) {
+                    let (eoff, ecrc) = self.fw.append(&e.bytes)?;
+                    self.stored += e.bytes.len() as u64;
+                    dst.elems.push(BasketInfo {
+                        offset: eoff,
+                        comp_len: e.bytes.len() as u32,
+                        raw_len: e.raw_len,
+                        first_entry: self.elem_counts[b] + e.first_entry,
+                        n_entries: e.n_entries,
+                        crc: ecrc,
+                        settings: e.settings,
+                    });
+                }
             }
+            self.elem_counts[b] +=
+                src.elems.iter().map(|e| e.n_entries as u64).sum::<u64>();
         }
+        self.clusters.extend(buf.clusters.iter().map(|c| {
+            crate::format::directory::ClusterSpan {
+                first_entry: self.entries + c.first_entry,
+                n_entries: c.n_entries,
+            }
+        }));
         self.entries += buf.entries;
         Ok(())
     }
@@ -178,7 +236,13 @@ impl Appender {
         let schema = self
             .schema
             .ok_or_else(|| Error::Coordinator("hadd: no inputs appended".into()))?;
-        let meta = TreeMeta { name, schema, entries: self.entries, branches: self.branches };
+        let meta = TreeMeta {
+            name,
+            schema,
+            entries: self.entries,
+            branches: self.branches,
+            clusters: self.clusters,
+        };
         meta.check()?;
         Ok((meta, self.entries, self.stored, (self.cluster_min, self.cluster_max)))
     }
@@ -384,6 +448,110 @@ mod tests {
             &session,
         )
         .unwrap();
+        assert_eq!(dump(&serial_out), dump(&par_out));
+    }
+
+    fn make_paged_input(start: u32, n: u32) -> BackendRef {
+        use crate::serial::schema::{ColumnType, Field};
+        use crate::tree::writer::{Layout, TreeWriter, WriterConfig};
+        let schema = Schema::new(vec![
+            Field::new("x", ColumnType::F32),
+            Field::new("hits", ColumnType::ListF32),
+        ]);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(
+            crate::format::writer::FileWriter::create(be.clone()).unwrap(),
+        );
+        let sink = crate::tree::sink::FileSink::new(fw.clone(), schema.len());
+        let cfg = WriterConfig {
+            basket_entries: 32,
+            compression: Settings::new(Codec::Lz4r, 3),
+            flush: FlushMode::Serial,
+            layout: Layout::Paged { page_entries: 8 },
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in start..start + n {
+            let list: Vec<f32> = (0..i % 4).map(|j| (i + j) as f32).collect();
+            w.fill(vec![Value::F32(i as f32), Value::ListF32(list)]).unwrap();
+        }
+        let (sink, entries, _) = w.close().unwrap();
+        let meta = sink.into_meta("events".into(), schema, entries).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        be
+    }
+
+    /// Satellite (ISSUE 8): hadd raw-copies paged v3 inputs — page
+    /// pairs carried without decode, directories rebased — and the
+    /// merged file both validates and decodes to the concatenation.
+    /// The parallel merge must stay byte-identical to the serial one.
+    #[test]
+    fn paged_v3_inputs_raw_copy_without_decode() {
+        let inputs =
+            vec![make_paged_input(0, 100), make_paged_input(100, 60), make_paged_input(160, 9)];
+        let serial_out: BackendRef = Arc::new(MemBackend::new());
+        let rep = hadd(serial_out.clone(), &inputs, &HaddOptions::default()).unwrap();
+        assert_eq!(rep.entries, 169);
+        // Raw copy: every stored page in the output byte-matches its
+        // source page (same compressed payloads, only coordinates
+        // rebased), including offset/element pairs.
+        let out_reader =
+            TreeReader::open_first(Arc::new(FileReader::open(serial_out.clone()).unwrap()))
+                .unwrap();
+        let out_meta = out_reader.meta().clone();
+        let out_file = out_reader.file().clone();
+        let mut page_base = vec![0usize; out_meta.branches.len()];
+        for be in &inputs {
+            let f = Arc::new(FileReader::open(be.clone()).unwrap());
+            let m = &f.directory().trees[0];
+            for (b, br) in m.branches.iter().enumerate() {
+                let out_br = &out_meta.branches[b];
+                for (k, info) in br.baskets.iter().enumerate() {
+                    let src = f.fetch_basket(info).unwrap();
+                    let dst =
+                        out_file.fetch_basket(&out_br.baskets[page_base[b] + k]).unwrap();
+                    assert_eq!(src, dst, "page payload changed in the merge");
+                    if let Some(e) = br.elems.get(k) {
+                        let src_e = f.fetch_basket(e).unwrap();
+                        let dst_e =
+                            out_file.fetch_basket(&out_br.elems[page_base[b] + k]).unwrap();
+                        assert_eq!(src_e, dst_e, "element page payload changed");
+                    }
+                }
+                page_base[b] += br.baskets.len();
+            }
+        }
+        out_meta.check().unwrap();
+        assert!(out_meta.branches[1].is_paged_list());
+        assert_eq!(
+            out_meta.clusters.iter().map(|c| c.n_entries).sum::<u64>(),
+            169,
+            "cluster spans rebase to cover the concatenation"
+        );
+        // Decoded concatenation matches reading the inputs in order.
+        let merged = out_reader.read_all().unwrap();
+        let mut want_x = Vec::new();
+        for be in &inputs {
+            let r = TreeReader::open_first(Arc::new(FileReader::open(be.clone()).unwrap()))
+                .unwrap();
+            let cols = r.read_all().unwrap();
+            for i in 0..r.entries() as usize {
+                want_x.push(cols[0].get(i).unwrap());
+                assert_eq!(
+                    cols[1].get(i).unwrap(),
+                    merged[1].get(want_x.len() - 1).unwrap(),
+                    "variable-length entry {i} diverged after merge"
+                );
+            }
+        }
+        for (i, w) in want_x.iter().enumerate() {
+            assert_eq!(merged[0].get(i).unwrap(), *w);
+        }
+        // Parallel -j merge stays byte-identical.
+        crate::imt::enable(4);
+        let par_out: BackendRef = Arc::new(MemBackend::new());
+        hadd(par_out.clone(), &inputs, &HaddOptions { parallel: true, tree: None }).unwrap();
+        crate::imt::disable();
         assert_eq!(dump(&serial_out), dump(&par_out));
     }
 

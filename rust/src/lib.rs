@@ -23,14 +23,23 @@
 //! * [`serial`] — schema-driven object streamers: rows of typed values
 //!   split into per-column buffers (ROOT's TBuffer + streamer-info).
 //! * [`format`] — the `RNTF` container file format (TFile/TKey/TDirectory
-//!   analogue): append-only records plus a footer directory.
+//!   analogue): append-only records plus a footer directory. Wire v3
+//!   adds the RNTuple-style *paged* layout: clusters stored
+//!   column-major as independently compressed per-column pages, with
+//!   the page directory (entry span, offset, CRC, per-page codec) and
+//!   cluster spans in the footer; v1/v2 files still decode.
 //! * [`tree`] — TTree/TBranch/TBasket analogue: columnar trees of typed
 //!   branches, basketised, written/read through [`format`]. Cluster
 //!   sizes are fixed or *adaptive* ([`tree::sizer`]): a per-writer
 //!   feedback controller resizes clusters between pipelined flushes
 //!   from the stall/compress ratio and the session's admission-wait
 //!   pressure, with hysteresis, clamps and a replayable decision
-//!   trace.
+//!   trace. `WriterConfig::layout` picks the cluster layout: classic
+//!   one-basket-per-branch, or paged ([`tree::writer::Layout`]) where
+//!   each column's pages seal as independent tasks and variable-length
+//!   branches (`list<f32>`) split into offset/element page pairs whose
+//!   element payloads are page-relative (position-independent, so
+//!   merges raw-copy them).
 //! * [`imt`] — implicit multi-threading: a global *work-stealing* task
 //!   pool (per-worker LIFO deques, FIFO stealing, an injector queue,
 //!   condvar parking — no polling) with scoped task groups, the engine
@@ -73,7 +82,12 @@
 //!   controller (fetch-stall vs decode throughput). On unreliable
 //!   storage it degrades instead of failing: priority-tagged fetches,
 //!   head-only windows while the backend reports itself degraded, and
-//!   inline refetch of shed read-ahead.
+//!   inline refetch of shed read-ahead. On paged (v3) files the fetch
+//!   plan is *projection-aware*: a branch selection
+//!   (`ReadOptions::branches` / `PrefetchOptions::branches`) coalesces
+//!   only the selected columns' page ranges, and the report's
+//!   `bytes_selected`/`bytes_skipped` split shows what pushdown
+//!   avoided reading.
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 

@@ -84,6 +84,12 @@ struct OutputState {
     file: Arc<FileWriter>,
     branches: Vec<BranchMeta>,
     entries: u64,
+    /// Per-branch element totals (paged variable-length branches):
+    /// the global element coordinate buffer-relative element pages are
+    /// rebased onto.
+    elem_counts: Vec<u64>,
+    /// Merged cluster spans (paged buffers only), already rebased.
+    clusters: Vec<crate::format::directory::ClusterSpan>,
     stats: MergeStats,
 }
 
@@ -150,15 +156,18 @@ impl TBufferMerger {
         session: &Session,
     ) -> Result<Self> {
         let file = Arc::new(FileWriter::create(backend)?);
-        let branches = schema
+        let branches: Vec<BranchMeta> = schema
             .fields
             .iter()
-            .map(|f| BranchMeta { name: f.name.clone(), ty: f.ty, baskets: Vec::new() })
+            .map(|f| BranchMeta::simple(f.name.clone(), f.ty, Vec::new()))
             .collect();
+        let n = branches.len();
         let state = Arc::new(Mutex::new(OutputState {
             file,
             branches,
             entries: 0,
+            elem_counts: vec![0; n],
+            clusters: Vec::new(),
             stats: MergeStats::default(),
         }));
         let (tx, rx) = sync_channel::<MergeMsg>(config.queue_depth.max(1));
@@ -222,6 +231,7 @@ impl TBufferMerger {
             schema: self.schema.clone(),
             entries: st.entries,
             branches: std::mem::take(&mut st.branches),
+            clusters: std::mem::take(&mut st.clusters),
         };
         meta.check()?;
         st.file.finish(&Directory { trees: vec![meta] })?;
@@ -269,10 +279,10 @@ fn output_loop(
 
 
 fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
-    // Snapshot the entry base, then append baskets. Only the output
-    // thread mutates branches, so the lock is uncontended; it exists to
-    // let `close` read a consistent view.
-    let (file, base) = {
+    // Snapshot the entry/element bases, then append baskets. Only the
+    // output thread mutates branches, so the lock is uncontended; it
+    // exists to let `close` read a consistent view.
+    let (file, base, elem_bases) = {
         let st = lock_state(state)?;
         if st.branches.len() != buf.branches.len() {
             return Err(Error::Coordinator(format!(
@@ -281,12 +291,21 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
                 st.branches.len()
             )));
         }
-        (st.file.clone(), st.entries)
+        (st.file.clone(), st.entries, st.elem_counts.clone())
     };
-    let mut new_infos: Vec<Vec<BasketInfo>> = Vec::with_capacity(buf.branches.len());
-    for bb in &buf.branches {
+    let mut new_infos: Vec<(Vec<BasketInfo>, Vec<BasketInfo>)> =
+        Vec::with_capacity(buf.branches.len());
+    for (b, bb) in buf.branches.iter().enumerate() {
+        if !bb.elems.is_empty() && bb.elems.len() != bb.baskets.len() {
+            return Err(Error::Coordinator(format!(
+                "buffer branch {b}: {} element pages for {} offset pages",
+                bb.elems.len(),
+                bb.baskets.len()
+            )));
+        }
         let mut infos = Vec::with_capacity(bb.baskets.len());
-        for k in &bb.baskets {
+        let mut elem_infos = Vec::with_capacity(bb.elems.len());
+        for (i, k) in bb.baskets.iter().enumerate() {
             let (offset, crc) = file.append(&k.bytes)?;
             infos.push(BasketInfo {
                 offset,
@@ -297,13 +316,36 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
                 crc,
                 settings: k.settings,
             });
+            // A paged variable-length branch: its element page goes
+            // directly after the offset page (the v3 adjacency
+            // invariant — sequential appends make them contiguous).
+            if let Some(e) = bb.elems.get(i) {
+                let (eoff, ecrc) = file.append(&e.bytes)?;
+                elem_infos.push(BasketInfo {
+                    offset: eoff,
+                    comp_len: e.bytes.len() as u32,
+                    raw_len: e.raw_len,
+                    first_entry: elem_bases[b] + e.first_entry,
+                    n_entries: e.n_entries,
+                    crc: ecrc,
+                    settings: e.settings,
+                });
+            }
         }
-        new_infos.push(infos);
+        new_infos.push((infos, elem_infos));
     }
     let mut st = lock_state(state)?;
-    for (br, infos) in st.branches.iter_mut().zip(new_infos) {
-        br.baskets.extend(infos);
+    for (b, (infos, elem_infos)) in new_infos.into_iter().enumerate() {
+        st.elem_counts[b] += elem_infos.iter().map(|e| e.n_entries as u64).sum::<u64>();
+        st.branches[b].baskets.extend(infos);
+        st.branches[b].elems.extend(elem_infos);
     }
+    st.clusters.extend(buf.clusters.iter().map(|c| {
+        crate::format::directory::ClusterSpan {
+            first_entry: base + c.first_entry,
+            n_entries: c.n_entries,
+        }
+    }));
     st.entries = base + buf.entries;
     Ok(())
 }

@@ -15,6 +15,7 @@ pub enum ColumnData {
     F64(Vec<f64>),
     U8(Vec<u8>),
     Bytes(Vec<Vec<u8>>),
+    ListF32(Vec<Vec<f32>>),
 }
 
 impl ColumnData {
@@ -26,6 +27,7 @@ impl ColumnData {
             ColumnType::F64 => ColumnData::F64(Vec::new()),
             ColumnType::U8 => ColumnData::U8(Vec::new()),
             ColumnType::Bytes => ColumnData::Bytes(Vec::new()),
+            ColumnType::ListF32 => ColumnData::ListF32(Vec::new()),
         }
     }
 
@@ -37,6 +39,7 @@ impl ColumnData {
             ColumnData::F64(_) => ColumnType::F64,
             ColumnData::U8(_) => ColumnType::U8,
             ColumnData::Bytes(_) => ColumnType::Bytes,
+            ColumnData::ListF32(_) => ColumnType::ListF32,
         }
     }
 
@@ -48,6 +51,7 @@ impl ColumnData {
             ColumnData::F64(v) => v.len(),
             ColumnData::U8(v) => v.len(),
             ColumnData::Bytes(v) => v.len(),
+            ColumnData::ListF32(v) => v.len(),
         }
     }
 
@@ -64,6 +68,7 @@ impl ColumnData {
             ColumnData::F64(v) => v.len() * 8,
             ColumnData::U8(v) => v.len(),
             ColumnData::Bytes(v) => v.iter().map(|b| 4 + b.len()).sum(),
+            ColumnData::ListF32(v) => v.iter().map(|l| 4 + 4 * l.len()).sum(),
         }
     }
 
@@ -75,6 +80,7 @@ impl ColumnData {
             (ColumnData::F64(c), Value::F64(x)) => c.push(x),
             (ColumnData::U8(c), Value::U8(x)) => c.push(x),
             (ColumnData::Bytes(c), Value::Bytes(x)) => c.push(x),
+            (ColumnData::ListF32(c), Value::ListF32(x)) => c.push(x),
             (c, v) => {
                 return Err(Error::Schema(format!(
                     "type mismatch: column {:?}, value {:?}",
@@ -94,6 +100,7 @@ impl ColumnData {
             ColumnData::F64(v) => v.get(i).map(|&x| Value::F64(x)),
             ColumnData::U8(v) => v.get(i).map(|&x| Value::U8(x)),
             ColumnData::Bytes(v) => v.get(i).map(|x| Value::Bytes(x.clone())),
+            ColumnData::ListF32(v) => v.get(i).map(|x| Value::ListF32(x.clone())),
         }
     }
 
@@ -105,6 +112,7 @@ impl ColumnData {
             ColumnData::F64(v) => v.clear(),
             ColumnData::U8(v) => v.clear(),
             ColumnData::Bytes(v) => v.clear(),
+            ColumnData::ListF32(v) => v.clear(),
         }
     }
 
@@ -140,6 +148,14 @@ impl ColumnData {
                 for b in v {
                     out.extend_from_slice(&(b.len() as u32).to_be_bytes());
                     out.extend_from_slice(b);
+                }
+            }
+            ColumnData::ListF32(v) => {
+                for l in v {
+                    out.extend_from_slice(&(l.len() as u32).to_be_bytes());
+                    for x in l {
+                        out.extend_from_slice(&x.to_be_bytes());
+                    }
                 }
             }
         }
@@ -205,6 +221,36 @@ impl ColumnData {
                 }
                 ColumnData::Bytes(v)
             }
+            ColumnType::ListF32 => {
+                let mut v = Vec::with_capacity(count);
+                let mut pos = 0usize;
+                for _ in 0..count {
+                    if pos + 4 > buf.len() {
+                        return Err(err("truncated length prefix".into()));
+                    }
+                    let n = u32::from_be_bytes([
+                        buf[pos],
+                        buf[pos + 1],
+                        buf[pos + 2],
+                        buf[pos + 3],
+                    ]) as usize;
+                    pos += 4;
+                    if pos + 4 * n > buf.len() {
+                        return Err(err("truncated payload".into()));
+                    }
+                    v.push(
+                        buf[pos..pos + 4 * n]
+                            .chunks_exact(4)
+                            .map(|c| f32::from_be_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    );
+                    pos += 4 * n;
+                }
+                if pos != buf.len() {
+                    return Err(err("trailing bytes".into()));
+                }
+                ColumnData::ListF32(v)
+            }
         })
     }
 
@@ -217,6 +263,7 @@ impl ColumnData {
             (ColumnData::F64(a), ColumnData::F64(b)) => a.extend_from_slice(b),
             (ColumnData::U8(a), ColumnData::U8(b)) => a.extend_from_slice(b),
             (ColumnData::Bytes(a), ColumnData::Bytes(b)) => a.extend_from_slice(b),
+            (ColumnData::ListF32(a), ColumnData::ListF32(b)) => a.extend_from_slice(b),
             (a, b) => {
                 return Err(Error::Schema(format!(
                     "append type mismatch: {:?} vs {:?}",
@@ -237,6 +284,7 @@ impl ColumnData {
             ColumnData::F64(v) => ColumnData::F64(v.drain(..n).collect()),
             ColumnData::U8(v) => ColumnData::U8(v.drain(..n).collect()),
             ColumnData::Bytes(v) => ColumnData::Bytes(v.drain(..n).collect()),
+            ColumnData::ListF32(v) => ColumnData::ListF32(v.drain(..n).collect()),
         }
     }
 
@@ -246,6 +294,70 @@ impl ColumnData {
             ColumnData::F32(v) => Some(v),
             _ => None,
         }
+    }
+
+    /// Split a `ListF32` column into the v3 paged pair: an `I64` offset
+    /// column of *page-relative* end offsets (one per row) and an `F32`
+    /// element column of the flattened values. Page-relative offsets
+    /// keep stored pages position-independent, so hadd can raw-copy
+    /// them without rewriting payload bytes.
+    pub fn split_list(self) -> Result<(ColumnData, ColumnData)> {
+        let rows = match self {
+            ColumnData::ListF32(rows) => rows,
+            other => {
+                return Err(Error::Schema(format!(
+                    "split_list on {:?} column",
+                    other.column_type()
+                )))
+            }
+        };
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        let mut offsets = Vec::with_capacity(rows.len());
+        let mut elems = Vec::with_capacity(total);
+        let mut end = 0i64;
+        for r in rows {
+            end += r.len() as i64;
+            offsets.push(end);
+            elems.extend_from_slice(&r);
+        }
+        Ok((ColumnData::I64(offsets), ColumnData::F32(elems)))
+    }
+
+    /// Reassemble a `ListF32` column from a decoded offset/element page
+    /// pair (the inverse of [`ColumnData::split_list`]).
+    pub fn zip_list(offsets: &ColumnData, elems: &ColumnData) -> Result<ColumnData> {
+        let err = |m: String| Error::Format(format!("list page decode: {m}"));
+        let (offs, els) = match (offsets, elems) {
+            (ColumnData::I64(o), ColumnData::F32(e)) => (o, e),
+            (o, e) => {
+                return Err(err(format!(
+                    "want i64 offsets + f32 elements, got {:?} + {:?}",
+                    o.column_type(),
+                    e.column_type()
+                )))
+            }
+        };
+        let mut rows = Vec::with_capacity(offs.len());
+        let mut start = 0usize;
+        for (i, &end) in offs.iter().enumerate() {
+            let end = usize::try_from(end)
+                .map_err(|_| err(format!("negative end offset at row {i}")))?;
+            if end < start || end > els.len() {
+                return Err(err(format!(
+                    "row {i} spans {start}..{end} of {} elements",
+                    els.len()
+                )));
+            }
+            rows.push(els[start..end].to_vec());
+            start = end;
+        }
+        if start != els.len() {
+            return Err(err(format!(
+                "offsets cover {start} of {} elements",
+                els.len()
+            )));
+        }
+        Ok(ColumnData::ListF32(rows))
     }
 }
 
@@ -268,6 +380,36 @@ mod tests {
         roundtrip(ColumnData::F64(vec![0.0, 2.5e300, f64::MIN_POSITIVE]));
         roundtrip(ColumnData::U8(vec![0, 255, 7]));
         roundtrip(ColumnData::Bytes(vec![b"".to_vec(), b"hello".to_vec(), vec![0u8; 1000]]));
+        roundtrip(ColumnData::ListF32(vec![vec![], vec![1.5, -2.5], vec![0.0; 500]]));
+    }
+
+    #[test]
+    fn list_split_zip_roundtrip() {
+        let col = ColumnData::ListF32(vec![vec![1.0, 2.0], vec![], vec![3.0]]);
+        let (offs, els) = col.clone().split_list().unwrap();
+        assert_eq!(offs, ColumnData::I64(vec![2, 2, 3]));
+        assert_eq!(els, ColumnData::F32(vec![1.0, 2.0, 3.0]));
+        assert_eq!(ColumnData::zip_list(&offs, &els).unwrap(), col);
+        // empty column splits to empty pair and zips back
+        let empty = ColumnData::ListF32(vec![]);
+        let (o, e) = empty.clone().split_list().unwrap();
+        assert_eq!(ColumnData::zip_list(&o, &e).unwrap(), empty);
+    }
+
+    #[test]
+    fn zip_list_rejects_bad_offsets() {
+        let els = ColumnData::F32(vec![1.0, 2.0]);
+        // decreasing offsets
+        assert!(ColumnData::zip_list(&ColumnData::I64(vec![2, 1]), &els).is_err());
+        // past the end
+        assert!(ColumnData::zip_list(&ColumnData::I64(vec![3]), &els).is_err());
+        // elements left uncovered
+        assert!(ColumnData::zip_list(&ColumnData::I64(vec![1]), &els).is_err());
+        // negative
+        assert!(ColumnData::zip_list(&ColumnData::I64(vec![-1]), &els).is_err());
+        // wrong types
+        assert!(ColumnData::zip_list(&ColumnData::F32(vec![]), &els).is_err());
+        assert!(ColumnData::split_list(ColumnData::F32(vec![])).is_err());
     }
 
     #[test]

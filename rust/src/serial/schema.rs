@@ -4,7 +4,10 @@ use crate::error::{Error, Result};
 
 /// Column (leaf) types. Fixed-width types serialise big-endian like
 /// ROOT's on-disk representation; `Bytes` is a variable-length payload
-/// with a u32 length prefix (TString/std::vector analogue).
+/// with a u32 length prefix (TString analogue); `ListF32` is a
+/// variable-length collection of f32 (std::vector<float> analogue) —
+/// inline-coded in classic baskets, split into offset+element page
+/// pairs by the v3 paged layout.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ColumnType {
     I32,
@@ -13,6 +16,7 @@ pub enum ColumnType {
     F64,
     U8,
     Bytes,
+    ListF32,
 }
 
 impl ColumnType {
@@ -24,6 +28,7 @@ impl ColumnType {
             ColumnType::F64 => 3,
             ColumnType::U8 => 4,
             ColumnType::Bytes => 5,
+            ColumnType::ListF32 => 6,
         }
     }
 
@@ -35,6 +40,7 @@ impl ColumnType {
             3 => ColumnType::F64,
             4 => ColumnType::U8,
             5 => ColumnType::Bytes,
+            6 => ColumnType::ListF32,
             other => return Err(Error::Schema(format!("bad column type code {other}"))),
         })
     }
@@ -45,7 +51,7 @@ impl ColumnType {
             ColumnType::I32 | ColumnType::F32 => Some(4),
             ColumnType::I64 | ColumnType::F64 => Some(8),
             ColumnType::U8 => Some(1),
-            ColumnType::Bytes => None,
+            ColumnType::Bytes | ColumnType::ListF32 => None,
         }
     }
 
@@ -57,6 +63,7 @@ impl ColumnType {
             ColumnType::F64 => "f64",
             ColumnType::U8 => "u8",
             ColumnType::Bytes => "bytes",
+            ColumnType::ListF32 => "list<f32>",
         }
     }
 }
@@ -158,6 +165,7 @@ mod tests {
             Field::new("weight", ColumnType::F64),
             Field::new("flag", ColumnType::U8),
             Field::new("tag", ColumnType::Bytes),
+            Field::new("hits", ColumnType::ListF32),
         ])
     }
 
@@ -208,6 +216,7 @@ mod tests {
             ColumnType::F64,
             ColumnType::U8,
             ColumnType::Bytes,
+            ColumnType::ListF32,
         ] {
             assert_eq!(ColumnType::from_code(ty.code()).unwrap(), ty);
         }

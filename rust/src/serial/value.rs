@@ -11,6 +11,7 @@ pub enum Value {
     F64(f64),
     U8(u8),
     Bytes(Vec<u8>),
+    ListF32(Vec<f32>),
 }
 
 impl Value {
@@ -22,6 +23,7 @@ impl Value {
             Value::F64(_) => ColumnType::F64,
             Value::U8(_) => ColumnType::U8,
             Value::Bytes(_) => ColumnType::Bytes,
+            Value::ListF32(_) => ColumnType::ListF32,
         }
     }
 }
@@ -61,6 +63,11 @@ impl From<&str> for Value {
         Value::Bytes(v.as_bytes().to_vec())
     }
 }
+impl From<Vec<f32>> for Value {
+    fn from(v: Vec<f32>) -> Self {
+        Value::ListF32(v)
+    }
+}
 
 /// One event record: a cell per schema field, in schema order.
 pub type Row = Vec<Value>;
@@ -77,6 +84,7 @@ mod tests {
         assert_eq!(Value::from(2.5f64), Value::F64(2.5));
         assert_eq!(Value::from(7u8), Value::U8(7));
         assert_eq!(Value::from("hi"), Value::Bytes(b"hi".to_vec()));
+        assert_eq!(Value::from(vec![1.0f32, 2.0]), Value::ListF32(vec![1.0, 2.0]));
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub struct BasketPayload {
 #[derive(Clone, Debug, Default)]
 pub struct BranchBuffer {
     pub baskets: Vec<BasketPayload>,
+    /// Element pages of a paged variable-length branch, paired 1:1
+    /// with `baskets` (`first_entry` counts buffer-relative elements).
+    pub elems: Vec<BasketPayload>,
 }
 
 /// A complete in-memory tree: aligned per-branch baskets plus counts.
@@ -35,6 +38,8 @@ pub struct TreeBuffer {
     pub schema: Schema,
     pub entries: u64,
     pub branches: Vec<BranchBuffer>,
+    /// Cluster spans of a paged (v3) tree, buffer-relative.
+    pub clusters: Vec<crate::format::directory::ClusterSpan>,
 }
 
 impl TreeBuffer {
@@ -44,17 +49,26 @@ impl TreeBuffer {
             schema,
             entries: 0,
             branches: (0..n).map(|_| BranchBuffer::default()).collect(),
+            clusters: Vec::new(),
         }
     }
 
     /// Total compressed payload bytes held.
     pub fn stored_bytes(&self) -> usize {
-        self.branches.iter().flat_map(|b| &b.baskets).map(|k| k.bytes.len()).sum()
+        self.branches
+            .iter()
+            .flat_map(|b| b.baskets.iter().chain(&b.elems))
+            .map(|k| k.bytes.len())
+            .sum()
     }
 
     /// Total uncompressed bytes represented.
     pub fn raw_bytes(&self) -> usize {
-        self.branches.iter().flat_map(|b| &b.baskets).map(|k| k.raw_len as usize).sum()
+        self.branches
+            .iter()
+            .flat_map(|b| b.baskets.iter().chain(&b.elems))
+            .map(|k| k.raw_len as usize)
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {

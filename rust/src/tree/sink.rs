@@ -19,7 +19,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use crate::compress::pool::Scratch;
 use crate::error::{Error, Result};
-use crate::format::directory::{BasketInfo, BranchMeta, TreeMeta};
+use crate::format::directory::{BasketInfo, BranchMeta, ClusterSpan, TreeMeta};
 use crate::format::writer::FileWriter;
 use crate::serial::schema::Schema;
 use crate::storage::BackendRef;
@@ -30,21 +30,28 @@ use super::buffer::{BasketPayload, TreeBuffer};
 /// returns the allocation to the compression scratch pool.
 pub type PayloadBuf = Scratch;
 
-/// Identity and placement of one finished basket.
+/// Identity and placement of one finished basket (classic layout) or
+/// page (paged v3 layout).
 #[derive(Clone, Copy, Debug)]
 pub struct BasketMeta {
     /// Branch index.
     pub branch: usize,
-    /// Global append order, cluster-major then branch-minor.
-    /// [`FileSink`] appends baskets in exactly this order; the writer
-    /// assigns it densely from 0.
+    /// Global append order: cluster-major then branch-minor (classic),
+    /// or cluster-major, column-major, page-minor (paged — with each
+    /// element page sequenced directly after its offset page, so the
+    /// pair is adjacent on disk). [`FileSink`] appends baskets in
+    /// exactly this order; the writer assigns it densely from 0.
     pub seq: u64,
     /// Uncompressed payload length.
     pub raw_len: u32,
-    /// First entry covered (buffer-relative).
+    /// First entry covered (buffer-relative; *elements* for element
+    /// pages).
     pub first_entry: u64,
-    /// Entries covered.
+    /// Entries covered (elements, for element pages).
     pub n_entries: u32,
+    /// Is this the element page of a variable-length branch (recorded
+    /// in [`BranchMeta::elems`] rather than `baskets`)?
+    pub elem: bool,
     /// Compression settings this basket was written with (recorded in
     /// the directory; per-column selection makes this vary by branch).
     pub settings: crate::compress::Settings,
@@ -57,6 +64,12 @@ pub trait BasketSink: Send + Sync + 'static {
     /// Store one basket. Ownership of the pooled payload transfers to
     /// the sink, which recycles it once the bytes are appended/copied.
     fn put_basket(&self, meta: BasketMeta, payload: PayloadBuf) -> Result<()>;
+
+    /// Record one committed cluster's entry span (paged v3 layout
+    /// only; classic writers never call this).
+    fn put_cluster(&self, _span: ClusterSpan) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Poison-proof lock: a panicked flush task must surface as an error
@@ -88,6 +101,10 @@ struct AppendQueue {
 pub struct FileSink {
     file: std::sync::Arc<FileWriter>,
     baskets: Vec<Mutex<Vec<BasketInfo>>>,
+    /// Element pages per branch (paged variable-length branches only).
+    elems: Vec<Mutex<Vec<BasketInfo>>>,
+    /// Cluster spans committed by a paged writer.
+    clusters: Mutex<Vec<ClusterSpan>>,
     order: Mutex<AppendQueue>,
 }
 
@@ -96,6 +113,8 @@ impl FileSink {
         FileSink {
             file,
             baskets: (0..n_branches).map(|_| Mutex::new(Vec::new())).collect(),
+            elems: (0..n_branches).map(|_| Mutex::new(Vec::new())).collect(),
+            clusters: Mutex::new(Vec::new()),
             order: Mutex::new(AppendQueue { next_seq: 0, stash: BTreeMap::new() }),
         }
     }
@@ -103,7 +122,8 @@ impl FileSink {
     /// Append one basket whose turn has come and record its metadata.
     fn append_now(&self, meta: &BasketMeta, payload: &[u8]) -> Result<()> {
         let (offset, crc) = self.file.append(payload)?;
-        lock(&self.baskets[meta.branch])?.push(BasketInfo {
+        let list = if meta.elem { &self.elems[meta.branch] } else { &self.baskets[meta.branch] };
+        lock(list)?.push(BasketInfo {
             offset,
             comp_len: payload.len() as u32,
             raw_len: meta.raw_len,
@@ -139,12 +159,17 @@ impl FileSink {
             )));
         }
         let mut branches = Vec::with_capacity(self.baskets.len());
-        for (m, f) in self.baskets.into_iter().zip(&schema.fields) {
+        for ((m, e), f) in self.baskets.into_iter().zip(self.elems).zip(&schema.fields) {
             let mut baskets = unwrap_lock(m)?;
             baskets.sort_by_key(|b| b.first_entry);
-            branches.push(BranchMeta { name: f.name.clone(), ty: f.ty, baskets });
+            let mut elems = unwrap_lock(e)?;
+            // Element pages arrive in append (= page) order; the sort
+            // is a stable no-op that mirrors the row-page handling.
+            elems.sort_by_key(|b| b.first_entry);
+            branches.push(BranchMeta { name: f.name.clone(), ty: f.ty, baskets, elems });
         }
-        Ok(TreeMeta { name, schema, entries, branches })
+        let clusters = unwrap_lock(self.clusters)?;
+        Ok(TreeMeta { name, schema, entries, branches, clusters })
     }
 }
 
@@ -179,6 +204,11 @@ impl BasketSink for FileSink {
         }
         Ok(())
     }
+
+    fn put_cluster(&self, span: ClusterSpan) -> Result<()> {
+        lock(&self.clusters)?.push(span);
+        Ok(())
+    }
 }
 
 /// Sink accumulating into an in-memory [`TreeBuffer`]. Payload bytes
@@ -188,35 +218,51 @@ impl BasketSink for FileSink {
 /// by entry range when the buffer is taken.
 pub struct BufferSink {
     branches: Vec<Mutex<Vec<BasketPayload>>>,
+    elems: Vec<Mutex<Vec<BasketPayload>>>,
+    clusters: Mutex<Vec<ClusterSpan>>,
     schema: Schema,
 }
 
 impl BufferSink {
     pub fn new(schema: Schema) -> Self {
         let n = schema.len();
-        BufferSink { branches: (0..n).map(|_| Mutex::new(Vec::new())).collect(), schema }
+        BufferSink {
+            branches: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            elems: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            clusters: Mutex::new(Vec::new()),
+            schema,
+        }
     }
 
     pub fn into_buffer(self, entries: u64) -> Result<TreeBuffer> {
         let mut buf = TreeBuffer::new(self.schema.clone());
         buf.entries = entries;
-        for (dst, src) in buf.branches.iter_mut().zip(self.branches) {
+        for ((dst, src), es) in buf.branches.iter_mut().zip(self.branches).zip(self.elems) {
             dst.baskets = unwrap_lock(src)?;
             dst.baskets.sort_by_key(|b| b.first_entry);
+            dst.elems = unwrap_lock(es)?;
+            dst.elems.sort_by_key(|b| b.first_entry);
         }
+        buf.clusters = unwrap_lock(self.clusters)?;
         Ok(buf)
     }
 }
 
 impl BasketSink for BufferSink {
     fn put_basket(&self, meta: BasketMeta, payload: PayloadBuf) -> Result<()> {
-        lock(&self.branches[meta.branch])?.push(BasketPayload {
+        let list = if meta.elem { &self.elems[meta.branch] } else { &self.branches[meta.branch] };
+        lock(list)?.push(BasketPayload {
             bytes: payload.to_vec(),
             raw_len: meta.raw_len,
             first_entry: meta.first_entry,
             n_entries: meta.n_entries,
             settings: meta.settings,
         });
+        Ok(())
+    }
+
+    fn put_cluster(&self, span: ClusterSpan) -> Result<()> {
+        lock(&self.clusters)?.push(span);
         Ok(())
     }
 }
@@ -249,6 +295,7 @@ mod tests {
             raw_len,
             first_entry,
             n_entries,
+            elem: false,
             settings: crate::compress::Settings::uncompressed(),
         }
     }

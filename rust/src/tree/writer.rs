@@ -50,11 +50,12 @@ use std::time::{Duration, Instant};
 use crate::compress::select::{CodecSelection, ColumnSelector, Observation, SelectSummary};
 use crate::compress::{self, Settings};
 use crate::error::{Error, Result};
+use crate::format::directory::ClusterSpan;
 use crate::imt::{ClusterGuard, Pool, TaskGroup};
 use crate::metrics::{Recorder, SpanKind};
 use crate::session::{Session, WriterRegistration};
 use crate::serial::column::ColumnData;
-use crate::serial::schema::Schema;
+use crate::serial::schema::{ColumnType, Schema};
 use crate::serial::streamer::Streamer;
 use crate::serial::value::Row;
 
@@ -74,6 +75,37 @@ pub enum FlushMode {
     /// cluster while earlier clusters compress (paper §3.1 pipeline).
     #[default]
     Pipelined,
+}
+
+/// On-disk layout of each flushed cluster.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Layout {
+    /// One basket per branch per cluster (the TTree analogue; wire
+    /// v1/v2 compatible).
+    #[default]
+    Classic,
+    /// RNTuple-style paged layout (wire v3): each branch's cluster
+    /// chunk is cut into `page_entries`-row pages, sealed (serialised +
+    /// compressed) as independent tasks — no single per-cluster flush
+    /// lock; the session budget arbitrates only cluster commits — and
+    /// appended column-major within the cluster. Variable-length
+    /// branches split into offset/element page pairs.
+    Paged {
+        /// Rows per page (clamped to ≥ 1). Pages are also the units of
+        /// projection-pushdown reads, so smaller pages trade directory
+        /// size for finer fetch granularity.
+        page_entries: usize,
+    },
+}
+
+/// Default rows per page for [`Layout::paged`].
+pub const DEFAULT_PAGE_ENTRIES: usize = 1024;
+
+impl Layout {
+    /// The paged layout at the default page size.
+    pub fn paged() -> Self {
+        Layout::Paged { page_entries: DEFAULT_PAGE_ENTRIES }
+    }
 }
 
 /// Task decomposition of one flushed cluster.
@@ -122,6 +154,10 @@ pub struct WriterConfig {
     /// commits). Works under every flush mode; each basket records its
     /// own settings in the directory.
     pub selection: CodecSelection,
+    /// On-disk cluster layout: classic one-basket-per-branch clusters,
+    /// or the paged v3 layout ([`Layout::Paged`]) with per-column
+    /// pages and offset/element pairs for variable-length branches.
+    pub layout: Layout,
 }
 
 impl Default for WriterConfig {
@@ -134,6 +170,7 @@ impl Default for WriterConfig {
             max_inflight_clusters: 4,
             sizing: ClusterSizing::Fixed,
             selection: CodecSelection::Global,
+            layout: Layout::Classic,
         }
     }
 }
@@ -225,8 +262,13 @@ pub struct TreeWriter<S: BasketSink> {
     select_inbox: Arc<Mutex<Vec<(usize, Observation)>>>,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
-    /// Global basket sequence: cluster-major, branch-minor.
+    /// Global basket sequence: cluster-major, branch-minor (classic);
+    /// cluster-major, column-major, page-minor (paged).
     next_seq: u64,
+    /// Paged layout: elements written so far per branch — the global
+    /// element coordinate of each variable-length branch's next
+    /// element page.
+    elem_counts: Vec<u64>,
     /// Producer-side stall accumulator (only the filling thread adds).
     stall: Duration,
 }
@@ -256,6 +298,7 @@ impl<S: BasketSink> TreeWriter<S> {
                 .map(|_| ColumnSelector::new(sc.clone(), config.compression))
                 .collect(),
         };
+        let elem_counts = vec![0u64; columns.len()];
         TreeWriter {
             streamer,
             config,
@@ -272,6 +315,7 @@ impl<S: BasketSink> TreeWriter<S> {
             counters: Arc::new(TaskCounters::default()),
             errors: Arc::new(ErrorSlot::default()),
             next_seq: 0,
+            elem_counts,
             stall: Duration::ZERO,
         }
     }
@@ -408,8 +452,9 @@ impl<S: BasketSink> TreeWriter<S> {
         Ok(())
     }
 
-    /// Cut the first `chunk` buffered entries into one basket per
-    /// branch and hand them to the flush stage per `config.flush`.
+    /// Cut the first `chunk` buffered entries into one cluster — one
+    /// basket per branch (classic) or per-column page runs (paged) —
+    /// and hand the tasks to the flush stage per `config.flush`.
     fn flush_chunk(&mut self, chunk: usize) -> Result<()> {
         if chunk == 0 {
             return Ok(());
@@ -429,41 +474,58 @@ impl<S: BasketSink> TreeWriter<S> {
             } else {
                 None
             };
-        let n_entries = chunk as u32;
         let first_entry = self.entries - self.buffered as u64;
-        for (branch, col) in self.columns.iter_mut().enumerate() {
-            let settings = match self.selectors.get_mut(branch) {
-                Some(sel) => sel.next_settings(),
-                None => self.config.compression,
-            };
-            let task = BasketTask {
-                col: col.drain_front(chunk),
-                meta: BasketMeta {
-                    branch,
-                    seq: self.next_seq,
-                    raw_len: 0, // set after serialisation
+        match self.config.layout {
+            Layout::Classic => {
+                for branch in 0..self.columns.len() {
+                    let col = self.columns[branch].drain_front(chunk);
+                    self.submit_task(branch, col, first_entry, chunk as u32, false, &admission);
+                }
+            }
+            Layout::Paged { page_entries } => {
+                // Record the cluster cut up front — it is producer-side
+                // metadata, independent of when the page tasks finish.
+                self.sink.put_cluster(ClusterSpan {
                     first_entry,
-                    n_entries,
-                    settings,
-                },
-                sink: self.sink.clone(),
-                settings,
-                granularity: self.config.granularity,
-                recorder: self.recorder.clone(),
-                counters: self.counters.clone(),
-                errors: self.errors.clone(),
-                obs: (!self.selectors.is_empty()).then(|| self.select_inbox.clone()),
-                obs_compress_ns: AtomicU64::new(0),
-                _admission: admission.clone(),
-            };
-            self.next_seq += 1;
-            if self.config.flush == FlushMode::Serial {
-                let t0 = Instant::now();
-                task.run(None);
-                self.stall += t0.elapsed();
-            } else {
-                let group = self.group.clone();
-                self.group.spawn(move || task.run(Some(&group)));
+                    n_entries: chunk as u64,
+                })?;
+                let page_entries = page_entries.max(1);
+                for branch in 0..self.columns.len() {
+                    let mut cluster_col = self.columns[branch].drain_front(chunk);
+                    let mut start = 0usize;
+                    while start < chunk {
+                        let n = page_entries.min(chunk - start);
+                        let page = cluster_col.drain_front(n);
+                        let page_first = first_entry + start as u64;
+                        if page.column_type() == ColumnType::ListF32 {
+                            // Offset/element pair: the offset page holds
+                            // page-relative end offsets (rows), the
+                            // element page the flattened values; its
+                            // seq comes directly after the offset
+                            // page's, so the pair is adjacent on disk.
+                            let (offsets, elems) = page.split_list()?;
+                            let n_elems = elems.len();
+                            let elem_first = self.elem_counts[branch];
+                            self.elem_counts[branch] += n_elems as u64;
+                            self.submit_task(
+                                branch, offsets, page_first, n as u32, false, &admission,
+                            );
+                            self.submit_task(
+                                branch,
+                                elems,
+                                elem_first,
+                                n_elems as u32,
+                                true,
+                                &admission,
+                            );
+                        } else {
+                            self.submit_task(
+                                branch, page, page_first, n as u32, false, &admission,
+                            );
+                        }
+                        start += n;
+                    }
+                }
             }
         }
         drop(admission); // tasks hold the cluster's slot from here on
@@ -489,6 +551,55 @@ impl<S: BasketSink> TreeWriter<S> {
             self.sizer.observe(self.stall, compress, self.admission.waits());
         }
         done
+    }
+
+    /// Submit one basket/page task for `branch`, assigning it the next
+    /// global sequence number. `elem` marks element pages of paged
+    /// variable-length branches (routed to the directory's element
+    /// list, entry coordinates counting elements).
+    fn submit_task(
+        &mut self,
+        branch: usize,
+        col: ColumnData,
+        first_entry: u64,
+        n_entries: u32,
+        elem: bool,
+        admission: &Option<Arc<ClusterGuard>>,
+    ) {
+        let settings = match self.selectors.get_mut(branch) {
+            Some(sel) => sel.next_settings(),
+            None => self.config.compression,
+        };
+        let task = BasketTask {
+            col,
+            meta: BasketMeta {
+                branch,
+                seq: self.next_seq,
+                raw_len: 0, // set after serialisation
+                first_entry,
+                n_entries,
+                settings,
+                elem,
+            },
+            sink: self.sink.clone(),
+            settings,
+            granularity: self.config.granularity,
+            recorder: self.recorder.clone(),
+            counters: self.counters.clone(),
+            errors: self.errors.clone(),
+            obs: (!self.selectors.is_empty()).then(|| self.select_inbox.clone()),
+            obs_compress_ns: AtomicU64::new(0),
+            _admission: admission.clone(),
+        };
+        self.next_seq += 1;
+        if self.config.flush == FlushMode::Serial {
+            let t0 = Instant::now();
+            task.run(None);
+            self.stall += t0.elapsed();
+        } else {
+            let group = self.group.clone();
+            self.group.spawn(move || task.run(Some(&group)));
+        }
     }
 
     /// Relay completed-basket measurements from the flush-task inbox to
@@ -886,6 +997,142 @@ mod tests {
             assert!(br.baskets[probe_span + 1..]
                 .iter()
                 .all(|k| k.settings == committed));
+        }
+    }
+
+    #[test]
+    fn paged_layout_cuts_pages_and_records_cluster_spans() {
+        let cfg = WriterConfig {
+            layout: Layout::Paged { page_entries: 32 },
+            ..config(100)
+        };
+        let mut w = TreeWriter::new(schema(), BufferSink::new(schema()), cfg);
+        for i in 0..250 {
+            w.fill(vec![Value::F32(i as f32), Value::I32(i)]).unwrap();
+        }
+        let (sink, entries, _) = w.close().unwrap();
+        let buf = sink.into_buffer(entries).unwrap();
+        let spans: Vec<(u64, u64)> =
+            buf.clusters.iter().map(|c| (c.first_entry, c.n_entries)).collect();
+        assert_eq!(spans, vec![(0, 100), (100, 100), (200, 50)]);
+        // 100-entry clusters cut into 32-row pages: 32+32+32+4 per full
+        // cluster, 32+18 for the 50-entry tail — per branch.
+        for br in &buf.branches {
+            let counts: Vec<u32> = br.baskets.iter().map(|b| b.n_entries).collect();
+            assert_eq!(counts, vec![32, 32, 32, 4, 32, 32, 32, 4, 32, 18]);
+            let firsts: Vec<u64> = br.baskets.iter().map(|b| b.first_entry).collect();
+            assert_eq!(firsts, vec![0, 32, 64, 96, 100, 132, 164, 196, 200, 232]);
+            assert!(br.elems.is_empty(), "fixed-width branches have no element pages");
+        }
+    }
+
+    #[test]
+    fn paged_variable_length_branch_emits_paired_offset_and_element_pages() {
+        let schema = Schema::new(vec![
+            Field::new("x", ColumnType::F32),
+            Field::new("hits", ColumnType::ListF32),
+        ]);
+        let cfg = WriterConfig {
+            layout: Layout::Paged { page_entries: 16 },
+            ..config(64)
+        };
+        let mut w = TreeWriter::new(schema.clone(), BufferSink::new(schema.clone()), cfg);
+        for i in 0..100u32 {
+            let list: Vec<f32> = (0..i % 5).map(|j| (i + j) as f32).collect();
+            w.fill(vec![Value::F32(i as f32), Value::ListF32(list)]).unwrap();
+        }
+        let (sink, entries, _) = w.close().unwrap();
+        let buf = sink.into_buffer(entries).unwrap();
+        let hits = &buf.branches[1];
+        assert_eq!(
+            hits.elems.len(),
+            hits.baskets.len(),
+            "paged list branch pairs every offset page with an element page"
+        );
+        // Offset pages cover entries gaplessly; element pages cover the
+        // flattened values gaplessly (kept 1:1 even when empty).
+        let mut next_entry = 0u64;
+        let mut next_elem = 0u64;
+        let mut total_elems = 0u64;
+        for (off, el) in hits.baskets.iter().zip(&hits.elems) {
+            assert_eq!(off.first_entry, next_entry);
+            next_entry += off.n_entries as u64;
+            assert_eq!(el.first_entry, next_elem);
+            next_elem += el.n_entries as u64;
+            total_elems += el.n_entries as u64;
+        }
+        assert_eq!(next_entry, 100);
+        let expected: u64 = (0..100u64).map(|i| i % 5).sum();
+        assert_eq!(total_elems, expected);
+        // The fixed-width branch stays element-page-free.
+        assert!(buf.branches[0].elems.is_empty());
+    }
+
+    /// Acceptance (ISSUE 8 tentpole): pages sealed concurrently on the
+    /// pool — the pipelined flush, where every page is its own
+    /// serialise+compress task — must produce byte-identical baskets,
+    /// element pages and cluster spans to the serial writer, across
+    /// codecs and including a variable-length branch.
+    #[test]
+    fn paged_pipelined_flush_matches_serial_bytes_across_codecs() {
+        let schema = Schema::new(vec![
+            Field::new("x", ColumnType::F32),
+            Field::new("n", ColumnType::I32),
+            Field::new("hits", ColumnType::ListF32),
+        ]);
+        let rows: Vec<Row> = (0..600u32)
+            .map(|i| {
+                let list: Vec<f32> = (0..i % 7).map(|j| (i * 3 + j) as f32 * 0.5).collect();
+                vec![Value::F32((i % 97) as f32), Value::I32(i as i32 % 13), Value::ListF32(list)]
+            })
+            .collect();
+        for settings in [
+            Settings::uncompressed(),
+            Settings::new(Codec::Lz4r, 3),
+            Settings::new(Codec::Rzip, 4),
+        ] {
+            let mk = |pool: Option<Arc<Pool>>| {
+                let cfg = WriterConfig {
+                    basket_entries: 128,
+                    compression: settings,
+                    flush: if pool.is_some() {
+                        FlushMode::Pipelined
+                    } else {
+                        FlushMode::Serial
+                    },
+                    layout: Layout::Paged { page_entries: 48 },
+                    max_inflight_clusters: 3,
+                    ..Default::default()
+                };
+                let mut w =
+                    TreeWriter::new(schema.clone(), BufferSink::new(schema.clone()), cfg);
+                if let Some(p) = pool {
+                    w = w.with_pool(p);
+                }
+                for r in &rows {
+                    w.fill(r.clone()).unwrap();
+                }
+                let (sink, entries, _) = w.close().unwrap();
+                sink.into_buffer(entries).unwrap()
+            };
+            let serial = mk(None);
+            let piped = mk(Some(Arc::new(Pool::new(4))));
+            assert_eq!(serial.clusters.len(), piped.clusters.len());
+            for (a, b) in serial.clusters.iter().zip(&piped.clusters) {
+                assert_eq!((a.first_entry, a.n_entries), (b.first_entry, b.n_entries));
+            }
+            for (bs, bp) in serial.branches.iter().zip(&piped.branches) {
+                assert_eq!(bs.baskets.len(), bp.baskets.len());
+                for (ks, kp) in bs.baskets.iter().zip(&bp.baskets) {
+                    assert_eq!(ks.bytes, kp.bytes, "page bytes diverged ({settings:?})");
+                    assert_eq!(ks.first_entry, kp.first_entry);
+                }
+                assert_eq!(bs.elems.len(), bp.elems.len());
+                for (ks, kp) in bs.elems.iter().zip(&bp.elems) {
+                    assert_eq!(ks.bytes, kp.bytes, "element page bytes diverged ({settings:?})");
+                    assert_eq!(ks.first_entry, kp.first_entry);
+                }
+            }
         }
     }
 

@@ -48,7 +48,20 @@ impl Gen {
         &items[self.range(0, items.len())]
     }
 
-    /// Random schema: 1..=max_fields typed fields.
+    /// A variable-length f32 collection: usually short, sometimes
+    /// empty, occasionally long — the nesting profile real event data
+    /// has (most entries hold a few hits, a tail holds many).
+    pub fn list_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let n = match self.range(0, 8) {
+            0 | 1 => 0,
+            7 => self.range(0, max_len + 1),
+            _ => self.range(1, (max_len + 1).min(9).max(2)),
+        };
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// Random schema: 1..=max_fields typed fields (variable-length
+    /// `list<f32>` columns included).
     pub fn schema(&mut self, max_fields: usize) -> Schema {
         let types = [
             ColumnType::I32,
@@ -57,6 +70,7 @@ impl Gen {
             ColumnType::F64,
             ColumnType::U8,
             ColumnType::Bytes,
+            ColumnType::ListF32,
         ];
         let n = self.range(1, max_fields + 1);
         Schema::new(
@@ -78,6 +92,7 @@ impl Gen {
                 ColumnType::F64 => Value::F64(self.f32() as f64 * 1e3),
                 ColumnType::U8 => Value::U8(self.u32() as u8),
                 ColumnType::Bytes => Value::Bytes(self.bytes(24)),
+                ColumnType::ListF32 => Value::ListF32(self.list_f32(40)),
             })
             .collect()
     }

@@ -24,6 +24,7 @@ use rootio_par::compress::select::{CodecSelection, SelectConfig};
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::serial::schema::Schema;
 use rootio_par::tree::sizer::{AdaptiveConfig, ClusterSizing};
+use rootio_par::tree::writer::Layout;
 
 use super::Gen;
 
@@ -71,6 +72,16 @@ pub struct StressPlan {
     /// always pass, so recovery is deterministic under any schedule).
     /// 0 keeps the device healthy; half the matrix draws a fault rate.
     pub write_fault_rate: f64,
+    /// Cluster-layout dimension: half the matrix writes the classic
+    /// one-basket-per-branch layout, half the paged v3 layout at a
+    /// randomised page size (degenerate 1-row pages included) — so
+    /// every decoded-identity property also covers per-column page
+    /// sealing under schedule perturbation.
+    pub layout: Layout,
+    /// Projection-pushdown dimension: when set, the read side repeats
+    /// the read restricted to this branch subset and checks it
+    /// column-for-column against the full decode (projected-vs-full).
+    pub projection: Option<Vec<usize>>,
 }
 
 impl StressPlan {
@@ -115,6 +126,23 @@ impl StressPlan {
                 ..Default::default()
             })
         };
+        let schema = g.schema(4);
+        let layout = if g.bool() {
+            Layout::Paged { page_entries: *g.choose(&[1usize, 7, 32, 128]) }
+        } else {
+            Layout::Classic
+        };
+        let projection = if g.bool() {
+            let keep = g.range(1, schema.len() + 1);
+            let mut sel: Vec<usize> = (0..schema.len()).collect();
+            for i in (1..sel.len()).rev() {
+                sel.swap(i, g.range(0, i + 1));
+            }
+            sel.truncate(keep);
+            Some(sel)
+        } else {
+            None
+        };
         StressPlan {
             seed,
             workers: g.range(1, 9),
@@ -123,11 +151,13 @@ impl StressPlan {
             max_inflight: g.range(1, 5),
             sizing,
             n_rows,
-            schema: g.schema(4),
+            schema,
             read_window,
             coalesce_gap: *g.choose(&[0u32, 64, 4096]),
             selection,
             write_fault_rate: *g.choose(&[0.0, 0.0, 0.15, 0.35]),
+            layout,
+            projection,
         }
     }
 }

@@ -239,6 +239,116 @@ fn prop_hadd_parallel_equals_serial() {
     });
 }
 
+/// Variable-length columns must round-trip through both layouts at
+/// the shapes that historically break offset encodings: a tree where
+/// every collection is empty (offset column is all-equal), a single
+/// entry holding one huge collection (element page much larger than
+/// its offset page), wildly uneven nesting, and the zero-entry tree.
+#[test]
+fn prop_variable_length_roundtrip_edge_shapes() {
+    use rootio_par::tree::writer::Layout;
+    property(24, |g| {
+        use rootio_par::serial::schema::{ColumnType, Field};
+        let schema = Schema::new(vec![
+            Field::new("pt", ColumnType::F32),
+            Field::new("hits", ColumnType::ListF32),
+        ]);
+        let rows: Vec<Row> = match g.range(0, 4) {
+            // zero-entry tree
+            0 => vec![],
+            // every collection empty: offset column carries no motion
+            1 => (0..g.range(1, 150))
+                .map(|i| vec![Value::F32(i as f32), Value::ListF32(vec![])])
+                .collect(),
+            // one entry, one huge collection
+            2 => vec![vec![
+                Value::F32(1.5),
+                Value::ListF32((0..g.range(2_000, 20_000)).map(|k| k as f32 * 0.5).collect()),
+            ]],
+            // uneven nesting: empties interleaved with large bursts
+            _ => (0..g.range(20, 200))
+                .map(|i| {
+                    let len = match i % 5 {
+                        0 => 0,
+                        4 => g.range(50, 400),
+                        _ => g.range(0, 6),
+                    };
+                    vec![
+                        Value::F32(i as f32),
+                        Value::ListF32((0..len).map(|k| (i * 31 + k) as f32).collect()),
+                    ]
+                })
+                .collect(),
+        };
+        let compression = *g.choose(&codecs());
+        let layouts = [
+            Layout::Classic,
+            Layout::Paged { page_entries: g.range(1, 96) },
+        ];
+        for layout in layouts {
+            let cfg = WriterConfig {
+                basket_entries: g.range(1, 128),
+                compression,
+                flush: FlushMode::Serial,
+                layout,
+                ..Default::default()
+            };
+            let (reader, _) = write_rows(&schema, &rows, cfg);
+            let tr = TreeReader::open_first(reader).unwrap();
+            assert_eq!(tr.entries(), rows.len() as u64);
+            let cols = tr.read_all().unwrap();
+            assert_eq!(tr.rows(&cols).unwrap(), rows);
+        }
+    });
+}
+
+/// v3 paged files over arbitrary schemas (lists included) and random
+/// page/cluster geometry must decode identically to the classic layout
+/// of the same rows — full reads and projected reads alike.
+#[test]
+fn prop_paged_layout_matches_classic_any_geometry() {
+    use rootio_par::tree::writer::Layout;
+    property(16, |g| {
+        let schema = g.schema(6);
+        let rows: Vec<Row> = (0..g.range(0, 300)).map(|_| g.row(&schema)).collect();
+        let compression = *g.choose(&codecs());
+        let basket_entries = g.range(1, 100);
+        let classic = WriterConfig {
+            basket_entries,
+            compression,
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let paged = WriterConfig {
+            layout: Layout::Paged { page_entries: g.range(1, 80) },
+            ..classic.clone()
+        };
+        let (classic_reader, _) = write_rows(&schema, &rows, classic);
+        let (paged_reader, _) = write_rows(&schema, &rows, paged);
+        let ct = TreeReader::open_first(classic_reader).unwrap();
+        let pt = TreeReader::open_first(paged_reader).unwrap();
+        assert_eq!(ct.read_all().unwrap(), pt.read_all().unwrap());
+        // Projected read on the paged file: any random branch subset.
+        if !schema.fields.is_empty() {
+            let n_sel = g.range(1, schema.len() + 1);
+            let mut sel: Vec<usize> = (0..schema.len()).collect();
+            for i in (1..sel.len()).rev() {
+                sel.swap(i, g.range(0, i + 1));
+            }
+            sel.truncate(n_sel);
+            let proj = read_columns(
+                &pt,
+                &ReadOptions { branches: Some(sel.clone()), ..Default::default() },
+            )
+            .unwrap();
+            let full = ct.read_all().unwrap();
+            for (k, &b) in sel.iter().enumerate() {
+                assert_eq!(proj.columns[k], full[b], "projected branch {b} diverged");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_codec_container_roundtrips_arbitrary_bytes() {
     property(60, |g| {

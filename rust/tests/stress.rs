@@ -20,6 +20,7 @@ use std::time::Duration;
 use common::stress::stress;
 use rootio_par::cache::PrefetchOptions;
 use rootio_par::compress::{Codec, Settings};
+use rootio_par::coordinator::read::{read_columns, ReadOptions};
 use rootio_par::error::Result;
 use rootio_par::format::reader::FileReader;
 use rootio_par::format::writer::FileWriter;
@@ -50,9 +51,10 @@ fn write_and_decode(
     rows: &[Row],
     cfg: WriterConfig,
     session: Option<&Session>,
+    version: u32,
 ) -> (u64, Vec<Vec<u8>>) {
     let be: BackendRef = Arc::new(MemBackend::new());
-    let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+    let fw = Arc::new(FileWriter::create_versioned(be.clone(), version).unwrap());
     let sink = FileSink::new(fw.clone(), schema.len());
     let mut w = match session {
         Some(s) => TreeWriter::attached(schema.clone(), sink, cfg, s),
@@ -73,8 +75,11 @@ fn write_and_decode(
 
 /// Satellite: adaptive-sized writes decode to entry-identical data vs
 /// `ClusterSizing::Fixed` — across the codec mix, random worker
-/// counts, uneven tails, and always including the empty-tree and
-/// single-entry edge cases.
+/// counts, uneven tails, both cluster layouts (classic and paged v3,
+/// per the seed's `plan.layout`), and always including the empty-tree
+/// and single-entry edge cases. A wire-v1 classic write of the same
+/// rows is the third leg: the oldest readable format must decode
+/// identically to both v3 layouts.
 #[test]
 fn prop_adaptive_writes_decode_identical_to_fixed() {
     stress("prop_adaptive_writes_decode_identical_to_fixed", |g, plan| {
@@ -87,7 +92,18 @@ fn prop_adaptive_writes_decode_identical_to_fixed() {
                 flush: FlushMode::Serial,
                 ..Default::default()
             };
-            let (fixed_entries, fixed) = write_and_decode(&plan.schema, &rows, fixed_cfg, None);
+            let (fixed_entries, fixed) = write_and_decode(
+                &plan.schema,
+                &rows,
+                fixed_cfg.clone(),
+                None,
+                rootio_par::format::VERSION,
+            );
+            // v1 wire (classic layout by construction — the paged
+            // directory doesn't encode below v3).
+            let (v1_entries, v1) = write_and_decode(&plan.schema, &rows, fixed_cfg, None, 1);
+            assert_eq!(v1_entries, fixed_entries);
+            assert_eq!(v1, fixed, "wire-v1 decode diverged from v3 classic");
 
             let session = Session::with_pool(
                 pool.clone(),
@@ -101,17 +117,23 @@ fn prop_adaptive_writes_decode_identical_to_fixed() {
                 max_inflight_clusters: plan.max_inflight,
                 sizing: plan.sizing,
                 selection: plan.selection.clone(),
+                layout: plan.layout,
             };
-            let (adaptive_entries, adaptive) =
-                write_and_decode(&plan.schema, &rows, adaptive_cfg, Some(&session));
+            let (adaptive_entries, adaptive) = write_and_decode(
+                &plan.schema,
+                &rows,
+                adaptive_cfg,
+                Some(&session),
+                rootio_par::format::VERSION,
+            );
 
             assert_eq!(fixed_entries, n_rows as u64);
             assert_eq!(adaptive_entries, fixed_entries, "entry count diverged");
             assert_eq!(
                 adaptive, fixed,
                 "adaptive decode diverged from fixed (rows={n_rows}, workers={}, \
-                 basket={}, sizing={:?})",
-                plan.workers, plan.basket_entries, plan.sizing,
+                 basket={}, sizing={:?}, layout={:?})",
+                plan.workers, plan.basket_entries, plan.sizing, plan.layout,
             );
             assert_eq!(session.stats().in_flight_clusters, 0, "budget fully released");
         }
@@ -268,6 +290,7 @@ fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
                     max_inflight_clusters: plan.max_inflight,
                     sizing: plan.sizing,
                     selection: plan.selection.clone(),
+                    layout: plan.layout,
                 };
                 let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
                 for row in &rows {
@@ -319,6 +342,31 @@ fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
                     }
                 });
 
+                // Projected-vs-full (paged dimension): a prefetched
+                // read restricted to the plan's branch subset must
+                // return exactly the serial decode of those branches,
+                // in selection order, on either layout.
+                if let Some(sel) = &plan.projection {
+                    let proj = read_columns(
+                        &reader,
+                        &ReadOptions {
+                            branches: Some(sel.clone()),
+                            prefetch: Some(opts.clone()),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    assert_eq!(proj.columns.len(), sel.len());
+                    for (k, &b) in sel.iter().enumerate() {
+                        assert_eq!(
+                            proj.columns[k], serial[b],
+                            "projected read diverged on branch {b} \
+                             (layout={:?}, seed={})",
+                            plan.layout, plan.seed,
+                        );
+                    }
+                }
+
                 // A stream abandoned mid-flight must not leak slots.
                 if n_rows > 0 {
                     let mut s3 = reader.stream_in_session(&opts, &session).unwrap();
@@ -355,7 +403,8 @@ fn prop_write_faults_recover_to_identical_decode() {
             flush: FlushMode::Serial,
             ..Default::default()
         };
-        let (clean_entries, clean) = write_and_decode(&plan.schema, &rows, clean_cfg, None);
+        let (clean_entries, clean) =
+            write_and_decode(&plan.schema, &rows, clean_cfg, None, rootio_par::format::VERSION);
 
         let flaky = Arc::new(FaultyBackend::new(
             Arc::new(MemBackend::new()),
@@ -390,6 +439,7 @@ fn prop_write_faults_recover_to_identical_decode() {
             max_inflight_clusters: plan.max_inflight,
             sizing: plan.sizing,
             selection: plan.selection.clone(),
+            layout: plan.layout,
         };
         let mut w = TreeWriter::attached(plan.schema.clone(), sink, cfg, &session);
         for row in &rows {
