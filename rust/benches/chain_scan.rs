@@ -1,0 +1,14 @@
+//! Bench harness for the chained-dataset zone-map predicate-pushdown
+//! experiment (harness = false; criterion is unavailable offline — see
+//! Cargo.toml). Pass --quick for the reduced chain. Emits
+//! BENCH_fig10.json.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match rootio_par::experiments::chain_scan(quick) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("chain_scan: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -14,6 +14,12 @@
 //!   per window; the writer lays baskets out cluster-major, so a whole
 //!   cluster is one contiguous range). [`plan::fetch_baskets_coalesced`]
 //!   packages the same merging for bulk loaders ([`crate::hadd`]).
+//!   A [`Predicate`] (`branch op constant`) pushes range filtering
+//!   below the plan: pages whose wire-v4 zone maps
+//!   ([`crate::format::ZoneMap`]) provably exclude every matching row
+//!   are never fetched, whole row-aligned pages at a time, with
+//!   `pages_pruned`/`bytes_pruned` accounted beside the projection's
+//!   selected/skipped split.
 //! * [`window`] — the **adaptive window controller**: the write-side
 //!   cluster sizer ([`crate::tree::sizer`]) reused as-is (grow/shrink
 //!   ×2/÷2, hysteresis, clamps, replayable trace), fed with consumer
@@ -47,7 +53,8 @@ pub mod window;
 
 pub use plan::{
     adaptive_coalesce_gap, fetch_baskets_coalesced, ClusterPlan, ClusterWindow,
-    FetchRange, PlannedBasket, DEFAULT_COALESCE_GAP, MAX_ADAPTIVE_GAP, MAX_BULK_FETCH,
+    FetchRange, PlannedBasket, PredOp, Predicate, DEFAULT_COALESCE_GAP,
+    MAX_ADAPTIVE_GAP, MAX_BULK_FETCH,
 };
 pub use prefetch::{ClusterStream, DecodedCluster, PrefetchOptions, PrefetchStats};
 pub use window::{WindowConfig, WindowController, WindowPolicy};

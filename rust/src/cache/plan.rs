@@ -20,9 +20,156 @@
 //! stream's windows still rebuilds every column in entry order.
 
 use crate::error::{Error, Result};
-use crate::format::directory::{BasketInfo, TreeMeta};
+use crate::format::directory::{BasketInfo, BranchMeta, TreeMeta, ZoneMap};
 use crate::serial::schema::ColumnType;
 use crate::storage::BackendRef;
+
+/// Comparison operator of a pushed-down range predicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// A `branch op constant` range predicate, pushed below the fetch
+/// plan: pages whose [`ZoneMap`] provably excludes every matching row
+/// are never fetched (counted in [`ClusterPlan::pages_pruned`] /
+/// [`ClusterPlan::bytes_pruned`]). Pruning is *conservative* — a page
+/// without a zone (older wire, NaN present) always survives — so the
+/// surviving rows are a superset of the matching rows and a residual
+/// row filter ([`Predicate::matches`]) makes the result exact.
+///
+/// Only fixed-width numeric branches can carry a predicate; the
+/// constant is compared in `f64` on both the pruning and the residual
+/// path, so the two always agree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Predicate {
+    /// Branch the predicate constrains.
+    pub branch: usize,
+    pub op: PredOp,
+    pub value: f64,
+}
+
+impl Predicate {
+    pub fn lt(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Lt, value }
+    }
+    pub fn le(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Le, value }
+    }
+    pub fn gt(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Gt, value }
+    }
+    pub fn ge(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Ge, value }
+    }
+    pub fn eq(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Eq, value }
+    }
+    pub fn ne(branch: usize, value: f64) -> Self {
+        Predicate { branch, op: PredOp::Ne, value }
+    }
+
+    /// Row-level evaluation — the residual filter applied after
+    /// pruning (NaN rows fail every comparison except `!=`, matching
+    /// IEEE semantics).
+    pub fn matches(&self, v: f64) -> bool {
+        match self.op {
+            PredOp::Lt => v < self.value,
+            PredOp::Le => v <= self.value,
+            PredOp::Gt => v > self.value,
+            PredOp::Ge => v >= self.value,
+            PredOp::Eq => v == self.value,
+            PredOp::Ne => v != self.value,
+        }
+    }
+
+    /// Can a page whose values span `zone` contain a matching row?
+    /// `false` only when the zone provably excludes every row.
+    pub fn selects_zone(&self, zone: &ZoneMap) -> bool {
+        let (lo, hi) = (zone.min(), zone.max());
+        match self.op {
+            PredOp::Lt => lo < self.value,
+            PredOp::Le => lo <= self.value,
+            PredOp::Gt => hi > self.value,
+            PredOp::Ge => hi >= self.value,
+            PredOp::Eq => self.value >= lo && self.value <= hi,
+            PredOp::Ne => !(lo == hi && lo == self.value),
+        }
+    }
+
+    /// Validate against a tree: the branch must exist and be a
+    /// fixed-width numeric column (zones order values as `f64`; byte
+    /// strings have no order here and list branches would need
+    /// per-element semantics).
+    fn check(&self, meta: &TreeMeta) -> Result<()> {
+        let Some(br) = meta.branches.get(self.branch) else {
+            return Err(Error::Coordinator(format!(
+                "predicate: branch index {} out of range ({} branches)",
+                self.branch,
+                meta.branches.len()
+            )));
+        };
+        match br.ty {
+            ColumnType::I32
+            | ColumnType::I64
+            | ColumnType::F32
+            | ColumnType::F64
+            | ColumnType::U8 => {}
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "predicate: branch '{}' has non-scalar type {other:?}; range \
+                     predicates need a fixed-width numeric branch",
+                    br.name
+                )));
+            }
+        }
+        if self.value.is_nan() {
+            return Err(Error::Coordinator(
+                "predicate: comparison against NaN never matches".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Merge half-open `[start, end)` entry ranges into a sorted disjoint
+/// union (empty ranges dropped).
+fn merge_ranges(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.retain(|&(s, e)| e > s);
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(r) if s <= r.1 => r.1 = r.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Is `[s, e)` fully inside one of the (merged, disjoint) `ranges`?
+fn covered(ranges: &[(u64, u64)], s: u64, e: u64) -> bool {
+    ranges.iter().any(|&(lo, hi)| lo <= s && e <= hi)
+}
+
+/// The subset of `ranges` this branch can realise as whole pages: the
+/// merged union of its baskets lying fully inside a range. Pruning a
+/// partial page would desynchronise this branch's surviving rows from
+/// its siblings', so anything less than a whole page is given back.
+fn prunable(br: &BranchMeta, ranges: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    merge_ranges(
+        br.baskets
+            .iter()
+            .map(|k| (k.first_entry, k.first_entry + k.n_entries as u64))
+            .filter(|&(s, e)| covered(ranges, s, e))
+            .collect(),
+    )
+}
 
 /// One basket (or page pair) scheduled inside a cluster window.
 #[derive(Clone, Copy, Debug)]
@@ -97,24 +244,91 @@ pub struct ClusterPlan {
     pub bytes_selected: u64,
     /// Stored bytes of the tree's *other* branches that the projection
     /// never touches — what a full-cluster decode would have read on
-    /// top of `bytes_selected`.
+    /// top of `bytes_selected` (and `bytes_pruned`).
     pub bytes_skipped: u64,
+    /// Pages of *selected* branches a pushed-down predicate's zone
+    /// maps excluded from the plan (element pages of pruned pairs
+    /// count too).
+    pub pages_pruned: u64,
+    /// Stored bytes those pruned pages would have fetched — pushdown's
+    /// saving *below* the projection split:
+    /// `bytes_selected + bytes_pruned + bytes_skipped` partition the
+    /// tree's stored bytes.
+    pub bytes_pruned: u64,
 }
 
 impl ClusterPlan {
     /// Build the plan for `selection` over `meta`, merging stored
     /// ranges separated by at most `coalesce_gap` bytes.
     pub fn build(meta: &TreeMeta, selection: &[usize], coalesce_gap: u32) -> Result<ClusterPlan> {
-        for &b in selection {
+        Self::build_filtered(meta, selection, coalesce_gap, None)
+    }
+
+    /// As [`ClusterPlan::build`], additionally pruning pages a range
+    /// predicate's zone maps exclude.
+    ///
+    /// Pruned entry ranges are identical across every selected branch
+    /// (whole pages only, shrunk to what all branches can realise), so
+    /// the surviving window chunks stay row-aligned: concatenated
+    /// columns keep equal lengths and a residual row filter over them
+    /// is exact. Files without zones (wire v1–v3) plan unpruned.
+    pub fn build_filtered(
+        meta: &TreeMeta,
+        selection: &[usize],
+        coalesce_gap: u32,
+        predicate: Option<&Predicate>,
+    ) -> Result<ClusterPlan> {
+        for (i, &b) in selection.iter().enumerate() {
             if b >= meta.branches.len() {
                 return Err(Error::Coordinator(format!(
                     "prefetch: branch index {b} out of range ({} branches)",
                     meta.branches.len()
                 )));
             }
+            // A duplicated selection would double-fetch and
+            // double-count the branch's bytes (breaking the
+            // selected+skipped partition) and emit the column twice.
+            if selection[..i].contains(&b) {
+                return Err(Error::Coordinator(format!(
+                    "prefetch: branch index {b} selected more than once"
+                )));
+            }
+        }
+        if let Some(p) = predicate {
+            p.check(meta)?;
         }
         let Some(&lead) = selection.first() else {
             return Ok(ClusterPlan::default());
+        };
+        // Entry ranges the predicate's zone maps exclude, shrunk to
+        // the whole-page boundaries *every* selected branch shares.
+        // The writer seals all branches at identical page cuts, so
+        // this normally converges immediately; a foreign misaligned
+        // file just prunes less (never inconsistently).
+        let excluded: Vec<(u64, u64)> = match predicate {
+            None => Vec::new(),
+            Some(p) => {
+                let pb = &meta.branches[p.branch];
+                let mut ex = merge_ranges(
+                    pb.baskets
+                        .iter()
+                        .filter(|k| k.zone.is_some_and(|z| !p.selects_zone(&z)))
+                        .map(|k| (k.first_entry, k.first_entry + k.n_entries as u64))
+                        .collect(),
+                );
+                loop {
+                    let mut next = ex.clone();
+                    for &b in selection {
+                        next = prunable(&meta.branches[b], &next);
+                    }
+                    if next == ex || next.is_empty() {
+                        ex = next;
+                        break;
+                    }
+                    ex = next;
+                }
+                ex
+            }
         };
         // Window cuts: the tree's recorded cluster spans (paged v3
         // trees — the lead branch holds many pages per cluster there),
@@ -146,17 +360,12 @@ impl ClusterPlan {
             .collect();
         let mut total = 0usize;
         let mut bytes_selected = 0u64;
+        let mut pages_pruned = 0u64;
+        let mut bytes_pruned = 0u64;
         for (slot, &b) in selection.iter().enumerate() {
             let br = &meta.branches[b];
             let paged_list = br.is_paged_list();
             for (k, info) in br.baskets.iter().enumerate() {
-                // Window containing this basket's first entry: the
-                // last cut at or before it.
-                let w = match cuts.binary_search(&info.first_entry) {
-                    Ok(i) => i,
-                    Err(0) => 0,
-                    Err(i) => i - 1,
-                };
                 let planned = PlannedBasket {
                     slot,
                     branch: b,
@@ -164,6 +373,25 @@ impl ClusterPlan {
                     ty: br.ty,
                     info: *info,
                     elem: paged_list.then(|| br.elems[k]),
+                };
+                if covered(
+                    &excluded,
+                    info.first_entry,
+                    info.first_entry + info.n_entries as u64,
+                ) {
+                    // Offset and element pages count separately — the
+                    // pair is two stored pages neither of which is
+                    // fetched.
+                    pages_pruned += 1 + u64::from(planned.elem.is_some());
+                    bytes_pruned += planned.stored_len();
+                    continue;
+                }
+                // Window containing this basket's first entry: the
+                // last cut at or before it.
+                let w = match cuts.binary_search(&info.first_entry) {
+                    Ok(i) => i,
+                    Err(0) => 0,
+                    Err(i) => i - 1,
                 };
                 bytes_selected += planned.stored_len();
                 windows[w].baskets.push(planned);
@@ -183,7 +411,9 @@ impl ClusterPlan {
             windows,
             total_baskets: total,
             bytes_selected,
-            bytes_skipped: tree_bytes.saturating_sub(bytes_selected),
+            bytes_skipped: tree_bytes.saturating_sub(bytes_selected + bytes_pruned),
+            pages_pruned,
+            bytes_pruned,
         })
     }
 
@@ -309,7 +539,20 @@ mod tests {
             n_entries,
             crc: 0,
             settings: crate::compress::Settings::default_compressed(),
+            zone: None,
         }
+    }
+
+    /// `info` with a zone map attached.
+    fn zinfo(
+        offset: u64,
+        comp_len: u32,
+        first_entry: u64,
+        n_entries: u32,
+        lo: f64,
+        hi: f64,
+    ) -> BasketInfo {
+        BasketInfo { zone: ZoneMap::new(lo, hi), ..info(offset, comp_len, first_entry, n_entries) }
     }
 
     /// 2 branches × 2 clusters, written cluster-major (the tree
@@ -490,6 +733,160 @@ mod tests {
         assert!(ClusterPlan::build(&meta, &[2], 0).is_err());
     }
 
+    /// Duplicate selections would double-fetch a branch and
+    /// double-count its bytes, silently breaking the
+    /// selected+pruned+skipped partition — they are rejected at plan
+    /// build, not deduplicated.
+    #[test]
+    fn duplicate_branch_selection_is_an_error() {
+        let meta = aligned_meta();
+        let err = ClusterPlan::build(&meta, &[0, 0], 0).unwrap_err();
+        assert!(err.to_string().contains("selected more than once"), "{err}");
+        assert!(ClusterPlan::build(&meta, &[1, 0, 1], 0).is_err());
+        // Adjacent or not, order independent.
+        assert!(ClusterPlan::build(&meta, &[0, 1], 0).is_ok());
+    }
+
+    /// `aligned_meta` with zone maps on branch "a": cluster 0 spans
+    /// values [0, 9], cluster 1 spans [10, 19].
+    fn zoned_meta() -> TreeMeta {
+        let mut meta = aligned_meta();
+        meta.branches[0].baskets = vec![
+            zinfo(24, 100, 0, 100, 0.0, 9.0),
+            zinfo(224, 100, 100, 100, 10.0, 19.0),
+        ];
+        meta
+    }
+
+    #[test]
+    fn zone_pruning_drops_whole_clusters_and_partitions_bytes() {
+        let meta = zoned_meta();
+        let pred = Predicate::gt(0, 15.0);
+        let plan = ClusterPlan::build_filtered(&meta, &[0, 1], 0, Some(&pred)).unwrap();
+        // Cluster 0's zone [0, 9] cannot satisfy `a > 15`: both
+        // branches' first baskets are pruned, window 0 plans nothing.
+        assert_eq!(plan.pages_pruned, 2);
+        assert_eq!(plan.bytes_pruned, 200);
+        assert_eq!(plan.bytes_selected, 200);
+        assert_eq!(plan.bytes_skipped, 0);
+        assert!(plan.windows[0].baskets.is_empty());
+        assert!(plan.windows[0].fetches.is_empty());
+        assert_eq!(plan.windows[1].baskets.len(), 2);
+        let tree_bytes: u64 = meta.branches.iter().map(|br| br.stored_bytes()).sum();
+        assert_eq!(plan.bytes_selected + plan.bytes_pruned + plan.bytes_skipped, tree_bytes);
+    }
+
+    #[test]
+    fn pruning_composes_with_projection_in_the_byte_partition() {
+        let meta = zoned_meta();
+        let pred = Predicate::lt(0, 5.0);
+        // Only branch 0 selected: cluster 1's zone [10, 19] fails
+        // `a < 5`, branch 1 is skipped entirely.
+        let plan = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&pred)).unwrap();
+        assert_eq!(plan.pages_pruned, 1);
+        assert_eq!(plan.bytes_pruned, 100);
+        assert_eq!(plan.bytes_selected, 100);
+        assert_eq!(plan.bytes_skipped, 200, "unselected branch stays 'skipped', not 'pruned'");
+    }
+
+    /// A predicate over zone-less pages (older wire, or NaN-bearing
+    /// columns) must not prune anything: the plan is byte-identical to
+    /// the unfiltered one.
+    #[test]
+    fn zone_less_pages_are_never_pruned() {
+        let meta = aligned_meta();
+        let pred = Predicate::eq(0, 123.0);
+        let plan = ClusterPlan::build_filtered(&meta, &[0, 1], 0, Some(&pred)).unwrap();
+        let plain = ClusterPlan::build(&meta, &[0, 1], 0).unwrap();
+        assert_eq!(plan.pages_pruned, 0);
+        assert_eq!(plan.bytes_pruned, 0);
+        assert_eq!(plan.bytes_selected, plain.bytes_selected);
+        assert_eq!(plan.total_baskets, plain.total_baskets);
+    }
+
+    /// Misaligned sibling pages shrink the excluded range to what every
+    /// branch can realise as whole pages — here branch 1's 80/120 cut
+    /// cannot realise any part of the excluded [0, 100), so *nothing*
+    /// prunes. Pruning different row sets per branch would tear rows
+    /// apart; pruning less is merely slower.
+    #[test]
+    fn misaligned_branches_prune_consistently_or_not_at_all() {
+        let mut meta = zoned_meta();
+        meta.branches[1].baskets = vec![info(124, 80, 0, 80), info(324, 120, 80, 120)];
+        let pred = Predicate::gt(0, 15.0);
+        let plan = ClusterPlan::build_filtered(&meta, &[0, 1], 0, Some(&pred)).unwrap();
+        assert_eq!(plan.pages_pruned, 0, "partial-page prune would desynchronise columns");
+        assert_eq!(plan.total_baskets, 4);
+        // Without the misaligned sibling in the selection, the
+        // excluded range is realisable again.
+        let solo = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&pred)).unwrap();
+        assert_eq!(solo.pages_pruned, 1);
+    }
+
+    /// Paged v3 trees prune at page granularity (finer than clusters),
+    /// and a pruned offset/element pair counts both stored pages.
+    #[test]
+    fn paged_tree_prunes_pages_and_counts_element_pairs() {
+        let mut meta = paged_meta();
+        meta.branches[0].baskets = vec![
+            zinfo(24, 50, 0, 50, 0.0, 4.0),
+            zinfo(74, 50, 50, 50, 5.0, 9.0),
+            zinfo(224, 50, 100, 50, 10.0, 14.0),
+            zinfo(274, 50, 150, 50, 15.0, 19.0),
+        ];
+        let pred = Predicate::ge(0, 10.0);
+        let plan = ClusterPlan::build_filtered(&meta, &[0, 1], 0, Some(&pred)).unwrap();
+        // Cluster 0's two f32 pages fail the zone test; the list
+        // branch's page covers the same [0, 100) span, so its
+        // offset+element pair prunes with them: 2 + 2 pages.
+        assert_eq!(plan.pages_pruned, 4);
+        assert_eq!(plan.bytes_pruned, 200, "100 f32 bytes + 40 offset + 60 element");
+        assert_eq!(plan.bytes_selected, 200);
+        assert_eq!(plan.bytes_skipped, 0);
+        // Page-granular: a predicate excluding only page 0 keeps page 1
+        // even though they share a cluster — but then the list page
+        // covering [0, 100) cannot prune either, and the fixpoint
+        // gives page 0 back too.
+        let narrow = Predicate::ge(0, 5.0);
+        let p2 = ClusterPlan::build_filtered(&meta, &[0, 1], 0, Some(&narrow)).unwrap();
+        assert_eq!(p2.pages_pruned, 0, "list sibling's coarser pages veto a half-cluster prune");
+        let p3 = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&narrow)).unwrap();
+        assert_eq!(p3.pages_pruned, 1, "f32-only selection prunes the single failing page");
+    }
+
+    #[test]
+    fn zone_selection_respects_operator_semantics() {
+        let z = ZoneMap::new(10.0, 20.0).unwrap();
+        assert!(!Predicate::lt(0, 10.0).selects_zone(&z));
+        assert!(Predicate::le(0, 10.0).selects_zone(&z));
+        assert!(!Predicate::gt(0, 20.0).selects_zone(&z));
+        assert!(Predicate::ge(0, 20.0).selects_zone(&z));
+        assert!(Predicate::eq(0, 15.0).selects_zone(&z));
+        assert!(!Predicate::eq(0, 9.0).selects_zone(&z));
+        assert!(Predicate::ne(0, 15.0).selects_zone(&z));
+        // A constant-valued page is the only zone `!=` can exclude.
+        let c = ZoneMap::new(7.0, 7.0).unwrap();
+        assert!(!Predicate::ne(0, 7.0).selects_zone(&c));
+        assert!(Predicate::ne(0, 8.0).selects_zone(&c));
+    }
+
+    #[test]
+    fn predicate_validation_rejects_bad_targets() {
+        let meta = paged_meta();
+        // Out-of-range branch.
+        let plan = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&Predicate::lt(9, 1.0)));
+        assert!(plan.is_err());
+        // List branch: no scalar order to compare against.
+        let list = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&Predicate::lt(1, 1.0)));
+        assert!(list.unwrap_err().to_string().contains("non-scalar"));
+        // NaN constant: would silently select nothing.
+        let nan = ClusterPlan::build_filtered(&meta, &[0], 0, Some(&Predicate::lt(0, f64::NAN)));
+        assert!(nan.is_err());
+        // The predicate branch need not be selected.
+        let ok = ClusterPlan::build_filtered(&meta, &[1], 0, Some(&Predicate::lt(0, 1.0)));
+        assert!(ok.is_ok());
+    }
+
     /// The bulk-loader cap closes a range before it outgrows
     /// `max_len`, even over perfectly contiguous baskets.
     #[test]
@@ -550,6 +947,7 @@ mod tests {
                 n_entries: 1,
                 crc: crc32(&a),
                 settings: crate::compress::Settings::uncompressed(),
+                zone: None,
             },
             BasketInfo {
                 offset: 150,
@@ -559,6 +957,7 @@ mod tests {
                 n_entries: 1,
                 crc: crc32(&b),
                 settings: crate::compress::Settings::uncompressed(),
+                zone: None,
             },
         ];
         let backend: BackendRef = Arc::new(be);

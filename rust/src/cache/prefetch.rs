@@ -78,6 +78,13 @@ pub struct PrefetchOptions {
     /// (seek-dominated devices coalesce more aggressively); backends
     /// with no cost estimate use this value unchanged.
     pub coalesce_gap: u32,
+    /// Range predicate pushed below the fetch plan: pages whose zone
+    /// map (wire v4) provably excludes every matching row are never
+    /// fetched. Pruning is conservative — surviving clusters may still
+    /// hold non-matching rows (and zone-less v1–v3 files prune
+    /// nothing), so exact row filtering stays the consumer's job (see
+    /// [`crate::framework::chain::Chain::scan_where`]).
+    pub predicate: Option<super::plan::Predicate>,
 }
 
 impl Default for PrefetchOptions {
@@ -86,6 +93,7 @@ impl Default for PrefetchOptions {
             branches: None,
             window: WindowPolicy::default(),
             coalesce_gap: super::plan::DEFAULT_COALESCE_GAP,
+            predicate: None,
         }
     }
 }
@@ -135,6 +143,14 @@ pub struct PrefetchStats {
     /// Stored bytes of unselected branches the projection never
     /// fetches (projection pushdown's saving over a full read).
     pub bytes_skipped: u64,
+    /// Selected pages a pushed-down predicate's zone maps excluded
+    /// from the plan (element pages of pruned pairs count too).
+    pub pages_pruned: u64,
+    /// Stored bytes those pruned pages would have fetched — predicate
+    /// pushdown's saving *below* the projection:
+    /// `bytes_selected + bytes_pruned + bytes_skipped` partition the
+    /// tree's stored bytes.
+    pub bytes_pruned: u64,
     /// Consumer wall time spent waiting on a not-yet-ready cluster —
     /// the exposed storage latency the window exists to hide.
     pub fetch_stall: Duration,
@@ -426,7 +442,8 @@ impl ClusterStream {
             }
             None => opts.coalesce_gap,
         };
-        let plan = ClusterPlan::build(meta, &selection, gap)?;
+        let plan =
+            ClusterPlan::build_filtered(meta, &selection, gap, opts.predicate.as_ref())?;
         let slot_types: Vec<ColumnType> =
             selection.iter().map(|&b| meta.branches[b].ty).collect();
         let controller = WindowController::new(opts.window);
@@ -468,6 +485,19 @@ impl ClusterStream {
     /// Clusters the stream will yield in total.
     pub fn n_clusters(&self) -> usize {
         self.plan.windows.len()
+    }
+
+    /// Start prefetching now, without consuming anything: submit
+    /// fetches up to the current window target. Opening a stream is
+    /// lazy (the first fetch is issued by the first [`Self::next`]);
+    /// a chain primes its *next* file's stream while the current
+    /// file's tail decodes, so the first cross-file window is already
+    /// in flight when the boundary is crossed — no inter-file stall.
+    /// Idempotent and cheap once the window is full.
+    pub fn prime(&mut self) {
+        if !self.failed {
+            self.pump();
+        }
     }
 
     /// Submit fetches up to the current window target. Admission is
@@ -789,6 +819,8 @@ impl ClusterStream {
             stored_bytes: self.consumed_stored,
             bytes_selected: self.plan.bytes_selected,
             bytes_skipped: self.plan.bytes_skipped,
+            pages_pruned: self.plan.pages_pruned,
+            bytes_pruned: self.plan.bytes_pruned,
             fetch_stall: self.stall,
             fetch_time: Duration::from_nanos(
                 self.shared.fetch_nanos.load(Ordering::Relaxed),
@@ -1015,6 +1047,53 @@ mod tests {
             s2.admission_high_water()
         );
         assert_eq!(session.stats().in_flight_read_windows, 0);
+    }
+
+    #[test]
+    fn predicate_pruned_stream_skips_pages_and_stays_row_aligned() {
+        // Monotonic values: every 100-entry cluster's zone on branch 0
+        // is a disjoint [k·100, k·100+99] band, so `x >= 500` prunes
+        // exactly the first five clusters — of *both* branches, so the
+        // surviving concatenated columns stay equal-length.
+        let schema = Schema::flat_f32("c", 2);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+        let sink = FileSink::new(fw.clone(), 2);
+        let cfg = WriterConfig {
+            basket_entries: 100,
+            compression: Settings::uncompressed(),
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..1000 {
+            w.fill(vec![Value::F32(i as f32), Value::F32(-(i as f32))]).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+        let full = serial_columns(&reader);
+        let opts = PrefetchOptions {
+            predicate: Some(super::super::plan::Predicate::ge(0, 500.0)),
+            ..Default::default()
+        };
+        let mut stream = ClusterStream::open(&reader, &opts).unwrap();
+        let cols = stream.read_all_columns().unwrap();
+        assert_eq!(cols[0].len(), 500, "first five clusters pruned");
+        assert_eq!(cols[1].len(), 500, "sibling column pruned identically");
+        for i in 0..500 {
+            assert_eq!(cols[0].get(i), full[0].get(i + 500));
+            assert_eq!(cols[1].get(i), full[1].get(i + 500));
+        }
+        let st = stream.stats();
+        assert_eq!(st.pages_pruned, 10, "5 clusters × 2 branches");
+        assert!(st.bytes_pruned > 0);
+        assert_eq!(st.clusters, 10, "pruned windows still deliver (empty)");
+        assert_eq!(st.baskets, 10, "only surviving baskets decode");
+        assert_eq!(st.device_reads, 5, "pruned windows fetch nothing");
+        assert_eq!(st.bytes_skipped, 0, "both branches selected");
     }
 
     #[test]

@@ -171,6 +171,25 @@ pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadRepor
         (None, Some(v)) => v.clone(),
         (None, None) => (0..reader.n_branches()).collect(),
     };
+    // The serial and per-branch parallel paths below never consult
+    // ClusterPlan, so they must enforce its selection invariants
+    // themselves: a duplicated branch would be fetched twice and its
+    // bytes double-counted into `bytes_selected`, silently breaking
+    // the selected+skipped partition. (The prefetch path re-checks in
+    // `ClusterPlan::build`; checking here keeps every path agreeing.)
+    for (i, &b) in selection.iter().enumerate() {
+        if b >= reader.n_branches() {
+            return Err(Error::Coordinator(format!(
+                "read: branch index {b} out of range ({} branches)",
+                reader.n_branches()
+            )));
+        }
+        if selection[..i].contains(&b) {
+            return Err(Error::Coordinator(format!(
+                "read: branch index {b} selected more than once"
+            )));
+        }
+    }
     let t0 = Instant::now();
     let mut prefetch_stats: Option<PrefetchStats> = None;
     let serial = || -> Result<Vec<ColumnData>> {
@@ -477,6 +496,59 @@ mod tests {
         assert_eq!(part.bytes_selected, part.stored_bytes);
         assert_eq!(part.bytes_selected + part.bytes_skipped, meta_total);
         assert!(part.bytes_skipped > 0);
+    }
+
+    /// Regression (ISSUE 9 satellite): duplicate branch indices in a
+    /// selection were never rejected — only out-of-range was checked —
+    /// so `bytes_selected` double-counted the duplicated branch and
+    /// `bytes_selected + bytes_skipped` overshot the tree's stored
+    /// bytes. Every path (serial, parallel, prefetched, and a
+    /// duplicate smuggled in via the prefetch options) must error.
+    #[test]
+    fn duplicate_branch_selection_is_rejected_on_every_path() {
+        let file = build(4, 300);
+        let reader = TreeReader::open_first(file).unwrap();
+        let dup = Some(vec![1usize, 3, 1]);
+        let serial = read_columns(
+            &reader,
+            &ReadOptions { branches: dup.clone(), force_serial: true, ..Default::default() },
+        );
+        assert!(serial.unwrap_err().to_string().contains("selected more than once"));
+        crate::imt::enable(2);
+        let parallel =
+            read_columns(&reader, &ReadOptions { branches: dup.clone(), ..Default::default() });
+        crate::imt::disable();
+        assert!(parallel.is_err());
+        let prefetched = read_columns(
+            &reader,
+            &ReadOptions {
+                branches: dup,
+                prefetch: Some(PrefetchOptions::default()),
+                ..Default::default()
+            },
+        );
+        assert!(prefetched.is_err());
+        let inner = read_columns(
+            &reader,
+            &ReadOptions {
+                prefetch: Some(PrefetchOptions {
+                    branches: Some(vec![0, 0]),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        );
+        assert!(inner.is_err(), "prefetch-carried selections are validated too");
+        // The partition invariant the rejection protects: a valid
+        // subset's selected + skipped bytes exactly cover the tree.
+        let ok = read_columns(
+            &reader,
+            &ReadOptions { branches: Some(vec![3, 1]), force_serial: true, ..Default::default() },
+        )
+        .unwrap();
+        let total: u64 =
+            reader.meta().branches.iter().map(|b| b.stored_bytes()).sum();
+        assert_eq!(ok.bytes_selected + ok.bytes_skipped, total);
     }
 
     #[test]

@@ -5,9 +5,92 @@
 
 use crate::compress::{Codec, Settings};
 use crate::error::{Error, Result};
+use crate::serial::column::ColumnData;
 use crate::serial::schema::{ColumnType, Schema};
 
 use super::wire::{WireReader, WireWriter};
+
+/// Per-page min/max zone map (wire v4): the numeric range of every
+/// value a basket/page stores, captured at page-seal time. Fetch plans
+/// use zones to *prune* pages a range predicate excludes; decode never
+/// consults them, so a page without a zone (older wire, non-numeric
+/// column, NaN present, empty page) simply never prunes.
+///
+/// Bounds are stored as `f64` **bit patterns** so the record stays
+/// `Copy + Eq` like the rest of [`BasketInfo`] (f64 conversion of
+/// integer values rounds to nearest, which is monotone — the converted
+/// bounds still bracket every converted value, keeping pruning against
+/// f64 predicate constants conservative).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZoneMap {
+    min_bits: u64,
+    max_bits: u64,
+}
+
+impl ZoneMap {
+    /// A zone from already-validated bounds. `min`/`max` must be
+    /// non-NaN with `min <= max`; NaN inputs yield `None`.
+    pub fn new(min: f64, max: f64) -> Option<ZoneMap> {
+        if min.is_nan() || max.is_nan() || min > max {
+            return None;
+        }
+        Some(ZoneMap { min_bits: min.to_bits(), max_bits: max.to_bits() })
+    }
+
+    /// Smallest value the page may contain.
+    pub fn min(&self) -> f64 {
+        f64::from_bits(self.min_bits)
+    }
+
+    /// Largest value the page may contain.
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits)
+    }
+
+    /// Scan a sealed column chunk for its numeric min/max. `None` for
+    /// empty chunks, byte-string columns, and chunks containing NaN
+    /// (a NaN page must never be pruned — NaN rows fail every range
+    /// predicate *except* `!=`, and the zone cannot represent that).
+    pub fn from_column(col: &ColumnData) -> Option<ZoneMap> {
+        fn fold<T: Copy, F: Fn(T) -> f64>(vals: &[T], to: F) -> Option<(f64, f64)> {
+            let mut it = vals.iter().map(|&v| to(v));
+            let first = it.next()?;
+            let mut lo = first;
+            let mut hi = first;
+            for v in it {
+                if v.is_nan() {
+                    return None;
+                }
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+            if lo.is_nan() {
+                return None;
+            }
+            Some((lo, hi))
+        }
+        let (lo, hi) = match col {
+            ColumnData::I32(v) => fold(v, |x| x as f64)?,
+            ColumnData::I64(v) => fold(v, |x| x as f64)?,
+            ColumnData::F32(v) => fold(v, |x| x as f64)?,
+            ColumnData::F64(v) => fold(v, |x| x)?,
+            ColumnData::U8(v) => fold(v, |x| x as f64)?,
+            ColumnData::ListF32(v) => {
+                // Zone over the *elements* — pruned together with the
+                // page's rows when a predicate on another (row-aligned)
+                // branch excludes them.
+                let flat: Vec<f64> = v.iter().flatten().map(|&x| x as f64).collect();
+                fold(&flat, |x| x)?
+            }
+            ColumnData::Bytes(_) => return None,
+        };
+        ZoneMap::new(lo, hi)
+    }
+}
 
 /// Location + integrity info for one stored basket (classic layout) or
 /// one stored page (paged v3 layout — pages reuse the basket record).
@@ -31,6 +114,10 @@ pub struct BasketInfo {
     /// decode — it records the writer's (possibly per-column adaptive)
     /// choice for inspection and tooling.
     pub settings: Settings,
+    /// Min/max of the values this basket stores (wire v4, advisory —
+    /// `None` on older wires, non-numeric columns, or NaN-bearing
+    /// pages). See [`ZoneMap`].
+    pub zone: Option<ZoneMap>,
 }
 
 /// One cluster's entry span (v3 paged layout): the row range the
@@ -239,6 +326,19 @@ fn put_basket(w: &mut WireWriter, b: &BasketInfo, version: u32) {
         w.put_u8(b.settings.codec.code());
         w.put_u8(b.settings.level);
     }
+    // Zones are advisory pruning metadata: encoding at an older wire
+    // simply drops them (unlike element pages / cluster spans, which
+    // are structural and hard-error below v3).
+    if version >= 4 {
+        match b.zone {
+            Some(z) => {
+                w.put_u8(1);
+                w.put_u64(z.min().to_bits());
+                w.put_u64(z.max().to_bits());
+            }
+            None => w.put_u8(0),
+        }
+    }
 }
 
 fn get_basket(r: &mut WireReader, version: u32) -> Result<BasketInfo> {
@@ -256,6 +356,16 @@ fn get_basket(r: &mut WireReader, version: u32) -> Result<BasketInfo> {
             // self-describing, so this placeholder is never decoded
             // against.
             Settings::uncompressed()
+        },
+        zone: if version >= 4 && r.get_u8()? != 0 {
+            let min = f64::from_bits(r.get_u64()?);
+            let max = f64::from_bits(r.get_u64()?);
+            let z = ZoneMap::new(min, max).ok_or_else(|| {
+                Error::Format(format!("basket zone map [{min}, {max}] is not a valid range"))
+            })?;
+            Some(z)
+        } else {
+            None
         },
     })
 }
@@ -308,12 +418,12 @@ impl Directory {
         let mut w = WireWriter::new();
         w.put_u32(self.trees.len() as u32);
         for t in &self.trees {
-            w.put_str(&t.name);
-            w.put_bytes(&t.schema.encode());
+            w.put_str(&t.name)?;
+            w.put_bytes(&t.schema.encode())?;
             w.put_u64(t.entries);
             w.put_u32(t.branches.len() as u32);
             for br in &t.branches {
-                w.put_str(&br.name);
+                w.put_str(&br.name)?;
                 w.put_u8(br.ty.code());
                 w.put_u32(br.baskets.len() as u32);
                 for b in &br.baskets {
@@ -414,6 +524,7 @@ mod tests {
                         n_entries: 100,
                         crc: 0xABCD,
                         settings: Settings::default_compressed(),
+                        zone: ZoneMap::new(-2.5, 117.0),
                     },
                     BasketInfo {
                         offset: 124,
@@ -423,6 +534,7 @@ mod tests {
                         n_entries: 100,
                         crc: 0x1234,
                         settings: Settings::new(Codec::Lz4r, 3),
+                        zone: None,
                     },
                 ],
             )
@@ -450,6 +562,7 @@ mod tests {
             n_entries,
             crc: 0x5150,
             settings: Settings::default_compressed(),
+            zone: ZoneMap::new(0.0, 64.0),
         };
         let pt = BranchMeta::simple(
             "pt".into(),
@@ -501,6 +614,55 @@ mod tests {
         // a classic directory still encodes fine at either version
         assert!(sample().encode_versioned(2).is_ok());
         assert!(sample().encode_versioned(1).is_ok());
+    }
+
+    /// Zones are v4 wire: a v3 encode of the same directory silently
+    /// drops them (they are advisory), and the v3 decode comes back
+    /// zone-free but otherwise identical.
+    #[test]
+    fn v3_wire_drops_zone_maps() {
+        let d = sample();
+        assert!(d.trees[0].branches[0].baskets[0].zone.is_some());
+        let v3 = d.encode_versioned(3).unwrap();
+        let v4 = d.encode_versioned(4).unwrap();
+        // one presence byte per zone-less basket, +16 payload when present
+        assert!(v4.len() > v3.len());
+        let back = Directory::decode_versioned(&v3, 3).unwrap();
+        for (t, t0) in back.trees.iter().zip(&d.trees) {
+            for (b, b0) in t.branches.iter().zip(&t0.branches) {
+                for (k, k0) in b.baskets.iter().zip(&b0.baskets) {
+                    assert_eq!(k.zone, None);
+                    assert_eq!(BasketInfo { zone: k0.zone, ..*k }, *k0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zone_map_roundtrips_through_v4_wire() {
+        let d = sample();
+        let back = Directory::decode(&d.encode()).unwrap();
+        let z = back.trees[0].branches[0].baskets[0].zone.unwrap();
+        assert_eq!((z.min(), z.max()), (-2.5, 117.0));
+        assert_eq!(back.trees[0].branches[0].baskets[1].zone, None);
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn zone_from_column_covers_numeric_types_and_rejects_nan() {
+        let z = ZoneMap::from_column(&ColumnData::I32(vec![3, -7, 12])).unwrap();
+        assert_eq!((z.min(), z.max()), (-7.0, 12.0));
+        let z = ZoneMap::from_column(&ColumnData::F64(vec![0.5])).unwrap();
+        assert_eq!((z.min(), z.max()), (0.5, 0.5));
+        let z =
+            ZoneMap::from_column(&ColumnData::ListF32(vec![vec![1.0, 9.0], vec![], vec![-4.0]]))
+                .unwrap();
+        assert_eq!((z.min(), z.max()), (-4.0, 9.0));
+        assert_eq!(ZoneMap::from_column(&ColumnData::F32(vec![])), None);
+        assert_eq!(ZoneMap::from_column(&ColumnData::F32(vec![1.0, f32::NAN])), None);
+        assert_eq!(ZoneMap::from_column(&ColumnData::Bytes(vec![vec![1]])), None);
+        assert_eq!(ZoneMap::new(f64::NAN, 1.0), None);
+        assert_eq!(ZoneMap::new(2.0, 1.0), None);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! [0..4)    magic  "RNTF"
-//! [4..8)    u32 BE version (1, 2 or 3)
+//! [4..8)    u32 BE version (1, 2, 3 or 4)
 //! [8..16)   u64 BE footer offset   (0 until the file is finalised)
 //! [16..24)  u64 BE footer length
 //! [24..)    basket/page payloads (self-describing compressed
@@ -30,6 +30,13 @@
 //!   ([`TreeMeta::clusters`]). Readers of v3 files must pair each
 //!   offset page with its element page, which the writer stores
 //!   immediately after it on disk.
+//! * **4** — per-page min/max *zone maps* ([`directory::ZoneMap`]):
+//!   every basket/page record may carry the numeric min/max of its
+//!   values (one presence byte, then two f64 bit patterns), captured
+//!   at page-seal time. Zones are advisory pruning metadata — fetch
+//!   plans use them to skip pages a range predicate excludes
+//!   ([`crate::cache::Predicate`]); decode never needs them, and
+//!   v1–v3 files simply scan without pruning.
 //!
 //! Readers accept every version up to [`VERSION`]; writers emit
 //! [`VERSION`] unless an older wire is requested explicitly
@@ -40,13 +47,13 @@ pub mod reader;
 pub mod wire;
 pub mod writer;
 
-pub use directory::{BasketInfo, BranchMeta, ClusterSpan, Directory, TreeMeta};
+pub use directory::{BasketInfo, BranchMeta, ClusterSpan, Directory, TreeMeta, ZoneMap};
 pub use reader::FileReader;
 pub use writer::FileWriter;
 
 pub const MAGIC: &[u8; 4] = b"RNTF";
 /// Current format version (see the module docs for the version history).
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 /// Oldest wire version this build can still decode.
 pub const MIN_VERSION: u32 = 1;
 pub const HEADER_LEN: u64 = 24;

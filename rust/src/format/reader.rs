@@ -132,6 +132,7 @@ mod tests {
                         n_entries: 24,
                         crc,
                         settings: crate::compress::Settings::uncompressed(),
+                        zone: None,
                     }],
                 )],
             )],

@@ -25,13 +25,29 @@ impl WireWriter {
         self.buf.extend_from_slice(&v.to_be_bytes());
     }
 
-    pub fn put_bytes(&mut self, v: &[u8]) {
-        self.put_u32(v.len() as u32);
-        self.buf.extend_from_slice(v);
+    /// Encode `n` as the u32 length prefix of a variable-length record.
+    /// Lengths that do not fit the prefix are a hard error — silently
+    /// truncating `n as u32` would commit a record whose prefix promises
+    /// the wrong byte count and desynchronise every later field.
+    pub fn put_len(&mut self, n: usize) -> Result<()> {
+        let n32 = u32::try_from(n).map_err(|_| {
+            Error::Format(format!(
+                "record length {n} exceeds the u32 wire prefix (max {})",
+                u32::MAX
+            ))
+        })?;
+        self.put_u32(n32);
+        Ok(())
     }
 
-    pub fn put_str(&mut self, v: &str) {
-        self.put_bytes(v.as_bytes());
+    pub fn put_bytes(&mut self, v: &[u8]) -> Result<()> {
+        self.put_len(v.len())?;
+        self.buf.extend_from_slice(v);
+        Ok(())
+    }
+
+    pub fn put_str(&mut self, v: &str) -> Result<()> {
+        self.put_bytes(v.as_bytes())
     }
 
     pub fn finish(self) -> Vec<u8> {
@@ -102,8 +118,8 @@ mod tests {
         w.put_u8(7);
         w.put_u32(0xDEADBEEF);
         w.put_u64(1 << 40);
-        w.put_str("branch/pt");
-        w.put_bytes(&[1, 2, 3]);
+        w.put_str("branch/pt").unwrap();
+        w.put_bytes(&[1, 2, 3]).unwrap();
         let buf = w.finish();
         let mut r = WireReader::new(&buf);
         assert_eq!(r.get_u8().unwrap(), 7);
@@ -128,5 +144,21 @@ mod tests {
         let buf2 = w2.finish();
         let mut r2 = WireReader::new(&buf2);
         assert!(r2.get_bytes().is_err());
+    }
+
+    /// Lengths that overflow the u32 prefix must surface as
+    /// `Error::Format`, not truncate. Exercised through `put_len` so the
+    /// test does not have to materialise a 4 GiB buffer.
+    #[test]
+    fn oversize_length_is_rejected_not_truncated() {
+        let mut w = WireWriter::new();
+        w.put_len(u32::MAX as usize).unwrap();
+        let before = w.buf.len();
+        let err = w.put_len(u32::MAX as usize + 1).unwrap_err();
+        assert!(matches!(err, Error::Format(_)), "want Error::Format, got {err:?}");
+        // A failed encode must not leave a partial prefix behind.
+        assert_eq!(w.buf.len(), before);
+        let err2 = w.put_len(usize::MAX).unwrap_err();
+        assert!(matches!(err2, Error::Format(_)));
     }
 }

@@ -1,0 +1,672 @@
+//! Dataset chains: one logical event stream over N files.
+//!
+//! Real analyses rarely read one file — a dataset is a *chain* of
+//! hundreds of files with identical schemas (ROOT's `TChain`).
+//! [`Chain`] walks them as one stream of row [`Batch`]es on top of the
+//! per-file [`ClusterStream`]s, with two properties the naive
+//! file-at-a-time loop lacks:
+//!
+//! * **Cross-file pipelining** — all files share one [`Session`] (one
+//!   read budget, one completion domain), and the next file's stream
+//!   is opened and [`ClusterStream::prime`]d while the current file's
+//!   tail clusters are still decoding, so the first cross-boundary
+//!   window is already in flight when the boundary is crossed: no
+//!   inter-file stall bubble.
+//! * **Predicate pushdown** — [`Chain::scan_where`] threads a
+//!   [`Predicate`] down to every file's fetch plan, where wire-v4 zone
+//!   maps prune whole row-aligned pages before any byte is fetched
+//!   ([`crate::cache::plan`]); the surviving rows are then filtered
+//!   exactly with the same predicate, so the result is row-identical
+//!   to an unpruned scan filtered row by row. Files without zones
+//!   (wire v1–v3) simply scan unpruned — the residual filter alone
+//!   keeps them exact.
+//!
+//! Accounting sums across files ([`ChainReport`]): the projection
+//! split (`bytes_selected`/`bytes_skipped`) plus the pruning saving
+//! (`pages_pruned`/`bytes_pruned`) partition the chain's stored bytes.
+
+use std::sync::Arc;
+
+use crate::cache::plan::Predicate;
+use crate::cache::{ClusterStream, PrefetchOptions, PrefetchStats};
+use crate::error::{Error, Result};
+use crate::format::reader::FileReader;
+use crate::serial::column::ColumnData;
+use crate::serial::schema::Schema;
+use crate::session::{Session, SessionConfig};
+use crate::storage::BackendRef;
+use crate::tree::reader::TreeReader;
+use crate::tree::sizer::SizerSummary;
+
+/// Open + prime the next file once this many clusters remain in the
+/// current one: deep enough that the footer read and first window
+/// fetch overlap the current tail's decode, shallow enough that the
+/// speculative stream holds budget slots only briefly.
+const TAIL_PRIME_CLUSTERS: usize = 2;
+
+/// One row batch a chain scan delivers — a decoded cluster in
+/// chain-global coordinates, after predicate filtering.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Index of the file this batch came from.
+    pub file: usize,
+    /// Cluster index within that file.
+    pub cluster: usize,
+    /// Chain-global first entry of the cluster (pre-filter
+    /// coordinates: file bases accumulate whole trees, so the value is
+    /// stable whether or not rows were pruned or filtered out).
+    pub first_entry: u64,
+    /// Selected columns in selection order, equal-length for
+    /// writer-produced (cluster-aligned) files. Under
+    /// [`Chain::scan_where`] only the predicate's surviving rows
+    /// remain.
+    pub columns: Vec<ColumnData>,
+}
+
+impl Batch {
+    /// Rows this batch carries (length of the first column).
+    pub fn rows(&self) -> usize {
+        self.columns.first().map_or(0, |c| c.len())
+    }
+}
+
+/// Accounting for one chain scan, summed over every file.
+#[derive(Clone, Debug, Default)]
+pub struct ChainReport {
+    /// Files scanned (empty trees included).
+    pub files: u64,
+    /// Lead-branch entries the chain covers — pruned and filtered rows
+    /// count, so the value is independent of any predicate.
+    pub entries: u64,
+    /// Rows delivered to the consumer (after pruning + residual
+    /// filtering; equals `entries` for a plain [`Chain::scan`]).
+    pub rows: u64,
+    /// Clusters streamed (pruned-empty ones included).
+    pub clusters: u64,
+    /// Prefetcher accounting summed across files (byte partition,
+    /// pruning counters, stall/decode clocks, window band).
+    pub prefetch: PrefetchStats,
+}
+
+/// Sum per-file prefetch accounting into a chain-wide total. Counters
+/// and clocks add; the window band merges (min of mins, max of maxes,
+/// last file's closing target).
+fn add_stats(total: &mut PrefetchStats, file: &PrefetchStats) {
+    total.clusters += file.clusters;
+    total.baskets += file.baskets;
+    total.device_reads += file.device_reads;
+    total.stored_bytes += file.stored_bytes;
+    total.bytes_selected += file.bytes_selected;
+    total.bytes_skipped += file.bytes_skipped;
+    total.pages_pruned += file.pages_pruned;
+    total.bytes_pruned += file.bytes_pruned;
+    total.fetch_stall += file.fetch_stall;
+    total.fetch_time += file.fetch_time;
+    total.decode_time += file.decode_time;
+    total.admission_denials += file.admission_denials;
+    total.retries += file.retries;
+    total.hedges += file.hedges;
+    total.hedge_wins += file.hedge_wins;
+    total.deadline_misses += file.deadline_misses;
+    total.degraded_windows += file.degraded_windows;
+    total.window = merge_window(&total.window, &file.window);
+}
+
+fn merge_window(a: &SizerSummary, b: &SizerSummary) -> SizerSummary {
+    if b.clusters == 0 {
+        return *a;
+    }
+    if a.clusters == 0 {
+        return *b;
+    }
+    SizerSummary {
+        min_entries: a.min_entries.min(b.min_entries),
+        max_entries: a.max_entries.max(b.max_entries),
+        last_entries: b.last_entries,
+        grows: a.grows + b.grows,
+        shrinks: a.shrinks + b.shrinks,
+        clusters: a.clusters + b.clusters,
+    }
+}
+
+/// Per-row scalar view of a numeric column, in the same `f64` domain
+/// zone maps and [`Predicate::matches`] compare in — the residual
+/// filter and the pruning pass therefore agree exactly.
+fn scalar_at(col: &ColumnData, i: usize) -> Option<f64> {
+    match col {
+        ColumnData::I32(v) => v.get(i).map(|&x| x as f64),
+        ColumnData::I64(v) => v.get(i).map(|&x| x as f64),
+        ColumnData::F32(v) => v.get(i).map(|&x| x as f64),
+        ColumnData::F64(v) => v.get(i).copied(),
+        ColumnData::U8(v) => v.get(i).map(|&x| f64::from(x)),
+        _ => None,
+    }
+}
+
+/// Keep only the rows `keep` marks, preserving order and type.
+fn filter_rows(col: &ColumnData, keep: &[bool]) -> ColumnData {
+    fn pick<T: Clone>(v: &[T], keep: &[bool]) -> Vec<T> {
+        v.iter().zip(keep).filter(|&(_, &k)| k).map(|(x, _)| x.clone()).collect()
+    }
+    match col {
+        ColumnData::I32(v) => ColumnData::I32(pick(v, keep)),
+        ColumnData::I64(v) => ColumnData::I64(pick(v, keep)),
+        ColumnData::F32(v) => ColumnData::F32(pick(v, keep)),
+        ColumnData::F64(v) => ColumnData::F64(pick(v, keep)),
+        ColumnData::U8(v) => ColumnData::U8(pick(v, keep)),
+        ColumnData::Bytes(v) => ColumnData::Bytes(pick(v, keep)),
+        ColumnData::ListF32(v) => ColumnData::ListF32(pick(v, keep)),
+    }
+}
+
+/// A chain of same-schema files scanned as one event stream.
+pub struct Chain {
+    files: Vec<BackendRef>,
+}
+
+/// One file's open stream plus its tree's entry count (the chain-
+/// global base advances by whole trees).
+struct Cursor {
+    stream: ClusterStream,
+    entries: u64,
+}
+
+impl Chain {
+    pub fn new(files: Vec<BackendRef>) -> Chain {
+        Chain { files }
+    }
+
+    pub fn push(&mut self, file: BackendRef) {
+        self.files.push(file);
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Stream every file's clusters in chain order, handing each
+    /// decoded cluster to `f` as a [`Batch`] and dropping it — flat
+    /// memory however long the chain. Empty trees mid-chain deliver no
+    /// batches and do not interrupt the stream.
+    pub fn scan(
+        &self,
+        opts: &PrefetchOptions,
+        mut f: impl FnMut(&Batch),
+    ) -> Result<ChainReport> {
+        self.scan_inner(opts, &mut |b| {
+            f(b);
+            Ok(b.rows() as u64)
+        })
+    }
+
+    /// As [`Chain::scan`], keeping only rows matching `predicate`
+    /// (`branch op constant`). The predicate is pushed down into every
+    /// file's fetch plan — zone-mapped pages that provably contain no
+    /// matching row are never fetched — and re-applied row by row to
+    /// the survivors, so the delivered rows are exactly the matching
+    /// rows, pruned or not. Batches with no surviving rows are not
+    /// delivered.
+    ///
+    /// The predicate branch is fetched even when the selection omits
+    /// it (the filter needs its values) but only selected columns
+    /// appear in the batches.
+    pub fn scan_where(
+        &self,
+        predicate: Predicate,
+        opts: &PrefetchOptions,
+        mut f: impl FnMut(&Batch),
+    ) -> Result<ChainReport> {
+        // Extend the selection with the predicate branch when absent;
+        // the extra column is dropped from batches after filtering.
+        let out_cols = match &opts.branches {
+            None => None, // all branches — the predicate branch is one of them
+            Some(sel) => match sel.iter().position(|&b| b == predicate.branch) {
+                Some(_) => Some(sel.clone()),
+                None => {
+                    let mut extended = sel.clone();
+                    extended.push(predicate.branch);
+                    Some(extended)
+                }
+            },
+        };
+        let n_out = opts.branches.as_ref().map(|s| s.len());
+        let opts = PrefetchOptions {
+            branches: out_cols,
+            predicate: Some(predicate),
+            ..opts.clone()
+        };
+        self.scan_inner(&opts, &mut |b| {
+            // Predicate slot: its position in the (possibly extended)
+            // selection; with branches=None the selection is identity.
+            let pred_slot = match &opts.branches {
+                None => predicate.branch,
+                Some(sel) => sel
+                    .iter()
+                    .position(|&x| x == predicate.branch)
+                    .expect("predicate branch is always in the extended selection"),
+            };
+            let pred_col = &b.columns[pred_slot];
+            let n = pred_col.len();
+            if b.columns.iter().any(|c| c.len() != n) {
+                return Err(Error::Coordinator(
+                    "chain: misaligned cluster columns cannot be row-filtered \
+                     (branches disagree on the cluster's row count)"
+                        .into(),
+                ));
+            }
+            let keep: Vec<bool> = (0..n)
+                .map(|i| {
+                    scalar_at(pred_col, i).is_some_and(|v| predicate.matches(v))
+                })
+                .collect();
+            let rows = keep.iter().filter(|&&k| k).count();
+            if rows == 0 {
+                return Ok(0);
+            }
+            let filtered = Batch {
+                file: b.file,
+                cluster: b.cluster,
+                first_entry: b.first_entry,
+                columns: b
+                    .columns
+                    .iter()
+                    .take(n_out.unwrap_or(b.columns.len()))
+                    .map(|c| filter_rows(c, &keep))
+                    .collect(),
+            };
+            f(&filtered);
+            Ok(rows as u64)
+        })
+    }
+
+    /// Scan core shared by [`Chain::scan`] and [`Chain::scan_where`]:
+    /// one shared session, per-file streams, and the tail-primed
+    /// cross-file handoff. The `scan` path wraps its callback to
+    /// deliver every batch unfiltered.
+    fn scan_inner(
+        &self,
+        opts: &PrefetchOptions,
+        deliver: &mut dyn FnMut(&Batch) -> Result<u64>,
+    ) -> Result<ChainReport> {
+        // Twice the window: the budget must admit the current file's
+        // tail *and* the next file's primed head at once, or the
+        // handoff would serialise behind the tail's slots.
+        let session = Session::new(SessionConfig {
+            max_inflight_read_windows: (opts.window.max_window() * 2).max(2),
+            ..Default::default()
+        });
+        let mut report = ChainReport::default();
+        let mut schema: Option<Schema> = None;
+        let mut base = 0u64;
+        let mut pending: Option<Cursor> = None;
+        for fi in 0..self.files.len() {
+            let mut cur = match pending.take() {
+                Some(c) => c,
+                None => self.open_file(fi, opts, &session, &mut schema)?,
+            };
+            let mut consumed = 0usize;
+            loop {
+                // Near the tail (or on an empty tree): open + prime
+                // the next file so its first window fetch overlaps the
+                // remaining decode work.
+                if pending.is_none()
+                    && fi + 1 < self.files.len()
+                    && cur.stream.n_clusters() - consumed <= TAIL_PRIME_CLUSTERS
+                {
+                    let mut next =
+                        self.open_file(fi + 1, opts, &session, &mut schema)?;
+                    next.stream.prime();
+                    pending = Some(next);
+                }
+                let Some(cluster) = cur.stream.next()? else { break };
+                consumed += 1;
+                report.entries += cluster.entries;
+                report.clusters += 1;
+                let batch = Batch {
+                    file: fi,
+                    cluster: cluster.index,
+                    first_entry: base + cluster.first_entry,
+                    columns: cluster.columns,
+                };
+                report.rows += deliver(&batch)?;
+            }
+            add_stats(&mut report.prefetch, &cur.stream.stats());
+            report.files += 1;
+            base += cur.entries;
+        }
+        Ok(report)
+    }
+
+    /// Open file `fi`'s first tree as a stream in the shared session,
+    /// checking its schema matches the chain's.
+    fn open_file(
+        &self,
+        fi: usize,
+        opts: &PrefetchOptions,
+        session: &Session,
+        schema: &mut Option<Schema>,
+    ) -> Result<Cursor> {
+        let reader =
+            TreeReader::open_first(Arc::new(FileReader::open(self.files[fi].clone())?))?;
+        let meta = reader.meta();
+        match schema {
+            None => *schema = Some(meta.schema.clone()),
+            Some(s) if *s == meta.schema => {}
+            Some(_) => {
+                return Err(Error::Coordinator(format!(
+                    "chain: file {fi} ('{}') has a different schema from the \
+                     chain's first file",
+                    meta.name
+                )));
+            }
+        }
+        let entries = reader.entries();
+        let stream = ClusterStream::open_in_session(&reader, opts, session)?;
+        Ok(Cursor { stream, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::WindowPolicy;
+    use crate::compress::{Codec, Settings};
+    use crate::format::writer::FileWriter;
+    use crate::format::Directory;
+    use crate::serial::schema::Schema;
+    use crate::serial::value::Value;
+    use crate::storage::mem::MemBackend;
+    use crate::tree::reader::TreeReader;
+    use crate::tree::sink::FileSink;
+    use crate::tree::writer::{FlushMode, TreeWriter, WriterConfig};
+
+    /// Write one file: 2 f32 branches, branch 0 = `start + i`, branch
+    /// 1 = `-(start + i)`, at the given wire version.
+    fn file_v(start: u64, entries: usize, basket: usize, version: u32) -> BackendRef {
+        let schema = Schema::flat_f32("c", 2);
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let fw = Arc::new(FileWriter::create_versioned(be.clone(), version).unwrap());
+        let sink = FileSink::new(fw.clone(), 2);
+        let cfg = WriterConfig {
+            basket_entries: basket,
+            compression: Settings::new(Codec::Lz4r, 2),
+            flush: FlushMode::Serial,
+            ..Default::default()
+        };
+        let mut w = TreeWriter::new(schema.clone(), sink, cfg);
+        for i in 0..entries {
+            let x = (start + i as u64) as f32;
+            w.fill(vec![Value::F32(x), Value::F32(-x)]).unwrap();
+        }
+        let (sink, n, _) = w.close().unwrap();
+        let meta = sink.into_meta("t".into(), schema, n).unwrap();
+        fw.finish(&Directory { trees: vec![meta] }).unwrap();
+        be
+    }
+
+    fn file(start: u64, entries: usize, basket: usize) -> BackendRef {
+        file_v(start, entries, basket, crate::format::VERSION)
+    }
+
+    /// Branch-0 values of a chain, read file by file through the plain
+    /// serial path.
+    fn all_values(files: &[BackendRef]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for be in files {
+            let r = TreeReader::open_first(Arc::new(FileReader::open(be.clone()).unwrap()))
+                .unwrap();
+            if let ColumnData::F32(v) = &r.read_all().unwrap()[0] {
+                out.extend_from_slice(v);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chain_scan_concatenates_files_in_order() {
+        let files = vec![file(0, 300, 100), file(300, 250, 100), file(550, 100, 100)];
+        let chain = Chain::new(files.clone());
+        let mut got: Vec<f32> = Vec::new();
+        let mut last_first = None;
+        let rep = chain
+            .scan(&PrefetchOptions::default(), |b| {
+                if let Some(p) = last_first {
+                    assert!(b.first_entry > p, "batches arrive in chain-global entry order");
+                }
+                last_first = Some(b.first_entry);
+                assert_eq!(b.columns.len(), 2);
+                assert_eq!(b.rows(), b.columns[1].len());
+                if let ColumnData::F32(v) = &b.columns[0] {
+                    got.extend_from_slice(v);
+                }
+            })
+            .unwrap();
+        assert_eq!(rep.files, 3);
+        assert_eq!(rep.entries, 650);
+        assert_eq!(rep.rows, 650);
+        assert_eq!(rep.clusters, 3 + 3 + 1);
+        assert_eq!(got, all_values(&files));
+        // The whole chain was fetched: the byte partition is exact.
+        assert_eq!(rep.prefetch.pages_pruned, 0);
+        assert_eq!(rep.prefetch.bytes_skipped, 0);
+        assert_eq!(rep.prefetch.stored_bytes, rep.prefetch.bytes_selected);
+    }
+
+    #[test]
+    fn chain_pipelines_across_file_boundaries_on_a_pool() {
+        let files: Vec<BackendRef> =
+            (0..5).map(|k| file(k * 400, 400, 100)).collect();
+        let chain = Chain::new(files.clone());
+        // The chain builds its own session internally; it binds to the
+        // global IMT pool, so enable it for real cross-file overlap.
+        crate::imt::enable(3);
+        let mut got: Vec<f32> = Vec::new();
+        let rep = chain
+            .scan(
+                &PrefetchOptions { window: WindowPolicy::Fixed(3), ..Default::default() },
+                |b| {
+                    if let ColumnData::F32(v) = &b.columns[0] {
+                        got.extend_from_slice(v);
+                    }
+                },
+            )
+            .unwrap();
+        crate::imt::disable();
+        assert_eq!(rep.entries, 2000);
+        assert_eq!(got, all_values(&files));
+        assert_eq!(rep.prefetch.clusters, 20);
+    }
+
+    /// Satellite regression: zero-entry files anywhere in the chain —
+    /// first, middle, or everywhere — must neither fuse the stream nor
+    /// skew the accounting.
+    #[test]
+    fn empty_files_anywhere_do_not_fuse_or_skew() {
+        let empty = || file(0, 0, 100);
+        let shapes: [(Vec<BackendRef>, u64, u64); 4] = [
+            (vec![empty(), file(0, 200, 100), file(200, 100, 100)], 300, 5),
+            (vec![file(0, 200, 100), empty(), file(200, 100, 100)], 300, 5),
+            (vec![file(0, 200, 100), file(200, 100, 100), empty()], 300, 5),
+            (vec![empty(), empty(), empty()], 0, 0),
+        ];
+        for (files, want_entries, want_clusters) in shapes {
+            let n_files = files.len() as u64;
+            let chain = Chain::new(files.clone());
+            let mut got: Vec<f32> = Vec::new();
+            let rep = chain
+                .scan(&PrefetchOptions::default(), |b| {
+                    if let ColumnData::F32(v) = &b.columns[0] {
+                        got.extend_from_slice(v);
+                    }
+                })
+                .unwrap();
+            assert_eq!(rep.files, n_files, "every file visited, empty or not");
+            assert_eq!(rep.entries, want_entries);
+            assert_eq!(rep.rows, want_entries);
+            assert_eq!(rep.clusters, want_clusters);
+            assert_eq!(got, all_values(&files));
+        }
+    }
+
+    #[test]
+    fn scan_where_is_row_identical_to_filtering_an_unpruned_scan() {
+        // Monotonic values 0..900 over 3 files: `x >= 600` lives
+        // entirely in file 2, so files 0 and 1 prune wholesale.
+        let files = vec![file(0, 300, 100), file(300, 300, 100), file(600, 300, 100)];
+        let chain = Chain::new(files.clone());
+        let pred = Predicate::ge(0, 600.0);
+        let mut got: Vec<f32> = Vec::new();
+        let mut got_neg: Vec<f32> = Vec::new();
+        let rep = chain
+            .scan_where(pred, &PrefetchOptions::default(), |b| {
+                assert_eq!(b.columns.len(), 2, "full selection, no appended column");
+                if let ColumnData::F32(v) = &b.columns[0] {
+                    got.extend_from_slice(v);
+                }
+                if let ColumnData::F32(v) = &b.columns[1] {
+                    got_neg.extend_from_slice(v);
+                }
+            })
+            .unwrap();
+        let want: Vec<f32> =
+            all_values(&files).into_iter().filter(|&x| x >= 600.0).collect();
+        assert_eq!(got, want, "pruned+filtered == unpruned-then-filtered");
+        let want_neg: Vec<f32> = want.iter().map(|&x| -x).collect();
+        assert_eq!(got_neg, want_neg, "sibling columns filtered row-identically");
+        assert_eq!(rep.rows, 300);
+        assert_eq!(rep.entries, 900, "entries count the whole chain, not survivors");
+        assert!(rep.prefetch.pages_pruned > 0, "zones must have pruned pages");
+        assert!(rep.prefetch.bytes_pruned > 0);
+        // selected + pruned + skipped partition the chain's bytes.
+        let full = chain.scan(&PrefetchOptions::default(), |_| {}).unwrap();
+        assert_eq!(
+            rep.prefetch.bytes_selected
+                + rep.prefetch.bytes_pruned
+                + rep.prefetch.bytes_skipped,
+            full.prefetch.bytes_selected,
+            "byte partition across the chain"
+        );
+        assert!(
+            rep.prefetch.bytes_selected < full.prefetch.bytes_selected / 2,
+            "a 1-in-3 predicate must cut fetched bytes well below half: {} of {}",
+            rep.prefetch.bytes_selected,
+            full.prefetch.bytes_selected
+        );
+    }
+
+    #[test]
+    fn scan_where_fetches_but_does_not_emit_an_unselected_predicate_branch() {
+        let files = vec![file(0, 200, 100), file(200, 200, 100)];
+        let chain = Chain::new(files.clone());
+        // Project branch 1 only; the predicate rides branch 0.
+        let opts = PrefetchOptions { branches: Some(vec![1]), ..Default::default() };
+        let mut got: Vec<f32> = Vec::new();
+        let rep = chain
+            .scan_where(Predicate::lt(0, 100.0), &opts, |b| {
+                assert_eq!(b.columns.len(), 1, "predicate column dropped from batches");
+                if let ColumnData::F32(v) = &b.columns[0] {
+                    got.extend_from_slice(v);
+                }
+            })
+            .unwrap();
+        let want: Vec<f32> = all_values(&files)
+            .into_iter()
+            .filter(|&x| x < 100.0)
+            .map(|x| -x)
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(rep.rows, 100);
+        assert!(rep.prefetch.pages_pruned > 0, "file 2 prunes entirely");
+    }
+
+    /// Zone-less wire versions still chain-scan with predicates: no
+    /// pruning, but the residual filter keeps the rows exact — and
+    /// mixed-version chains compose.
+    #[test]
+    fn v1_and_v2_files_chain_scan_without_zones() {
+        for version in [1u32, 2] {
+            let files =
+                vec![file_v(0, 300, 100, version), file_v(300, 300, 100, version)];
+            let chain = Chain::new(files.clone());
+            let mut got: Vec<f32> = Vec::new();
+            let rep = chain
+                .scan_where(Predicate::ge(0, 450.0), &PrefetchOptions::default(), |b| {
+                    if let ColumnData::F32(v) = &b.columns[0] {
+                        got.extend_from_slice(v);
+                    }
+                })
+                .unwrap();
+            let want: Vec<f32> =
+                all_values(&files).into_iter().filter(|&x| x >= 450.0).collect();
+            assert_eq!(got, want, "wire v{version}");
+            assert_eq!(rep.prefetch.pages_pruned, 0, "v{version} has no zones");
+            assert_eq!(rep.prefetch.bytes_pruned, 0);
+        }
+        // Mixed chain: a zone-less v2 file between two v4 files prunes
+        // where it can and filters everywhere.
+        let files =
+            vec![file(0, 300, 100), file_v(300, 300, 100, 2), file(600, 300, 100)];
+        let chain = Chain::new(files.clone());
+        let mut got: Vec<f32> = Vec::new();
+        let rep = chain
+            .scan_where(Predicate::lt(0, 150.0), &PrefetchOptions::default(), |b| {
+                if let ColumnData::F32(v) = &b.columns[0] {
+                    got.extend_from_slice(v);
+                }
+            })
+            .unwrap();
+        let want: Vec<f32> =
+            all_values(&files).into_iter().filter(|&x| x < 150.0).collect();
+        assert_eq!(got, want);
+        assert!(rep.prefetch.pages_pruned > 0, "the v4 files still prune");
+    }
+
+    #[test]
+    fn mismatched_schema_is_an_error() {
+        let a = file(0, 100, 100);
+        let b: BackendRef = {
+            let schema = Schema::flat_f32("other", 3);
+            let be: BackendRef = Arc::new(MemBackend::new());
+            let fw = Arc::new(FileWriter::create(be.clone()).unwrap());
+            let sink = FileSink::new(fw.clone(), 3);
+            let mut w = TreeWriter::new(
+                schema.clone(),
+                sink,
+                WriterConfig {
+                    basket_entries: 64,
+                    flush: FlushMode::Serial,
+                    ..Default::default()
+                },
+            );
+            for i in 0..100 {
+                w.fill(vec![
+                    Value::F32(i as f32),
+                    Value::F32(i as f32),
+                    Value::F32(i as f32),
+                ])
+                .unwrap();
+            }
+            let (sink, n, _) = w.close().unwrap();
+            let meta = sink.into_meta("t".into(), schema, n).unwrap();
+            fw.finish(&Directory { trees: vec![meta] }).unwrap();
+            be
+        };
+        let chain = Chain::new(vec![a, b]);
+        let err = chain.scan(&PrefetchOptions::default(), |_| {}).unwrap_err();
+        assert!(err.to_string().contains("different schema"), "{err}");
+    }
+
+    #[test]
+    fn empty_chain_scans_to_nothing() {
+        let chain = Chain::new(Vec::new());
+        assert!(chain.is_empty());
+        let rep = chain.scan(&PrefetchOptions::default(), |_| panic!("no batches")).unwrap();
+        assert_eq!(rep.files, 0);
+        assert_eq!(rep.entries, 0);
+        assert_eq!(rep.clusters, 0);
+    }
+}

@@ -16,6 +16,7 @@
 //!   and the `TBufferMerger` output thread only appends bytes: the
 //!   IMT-on path that keeps scaling.
 
+pub mod chain;
 pub mod dataset;
 
 use std::sync::atomic::{AtomicU64, Ordering};

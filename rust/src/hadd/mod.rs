@@ -107,6 +107,7 @@ fn load_input(input: &BackendRef, tree: &Option<String>) -> Result<TreeBuffer> {
             first_entry: k.first_entry,
             n_entries: k.n_entries,
             settings: k.settings,
+            zone: k.zone,
         })
     };
     for (bb, br) in buf.branches.iter_mut().zip(&meta.branches) {
@@ -198,6 +199,7 @@ impl Appender {
                     n_entries: k.n_entries,
                     crc,
                     settings: k.settings,
+                    zone: k.zone,
                 });
                 // Element page of a paged list branch: raw-copied
                 // directly after its offset page (sequential appends
@@ -216,6 +218,7 @@ impl Appender {
                         n_entries: e.n_entries,
                         crc: ecrc,
                         settings: e.settings,
+                        zone: e.zone,
                     });
                 }
             }

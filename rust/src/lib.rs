@@ -27,7 +27,10 @@
 //!   adds the RNTuple-style *paged* layout: clusters stored
 //!   column-major as independently compressed per-column pages, with
 //!   the page directory (entry span, offset, CRC, per-page codec) and
-//!   cluster spans in the footer; v1/v2 files still decode.
+//!   cluster spans in the footer. Wire v4 adds per-page min/max *zone
+//!   maps*, recorded at page seal and carried in the directory so scan
+//!   planners can exclude pages without touching their bytes; v1–v3
+//!   files still decode (zone-less pages simply never prune).
 //! * [`tree`] — TTree/TBranch/TBasket analogue: columnar trees of typed
 //!   branches, basketised, written/read through [`format`]. Cluster
 //!   sizes are fixed or *adaptive* ([`tree::sizer`]): a per-writer
@@ -61,6 +64,14 @@
 //!   the hot path. Python never runs at request time.
 //! * [`framework`] — a CMSSW-like mini framework: N concurrent streams
 //!   generating, processing and writing events (paper §3.1, Figure 3).
+//!   [`framework::chain`] adds the TChain analogue: a
+//!   [`Chain`](framework::chain::Chain) scans N same-schema files as one
+//!   stream of row batches, priming the next file's prefetcher while
+//!   the current file drains so file boundaries never stall, and
+//!   `Chain::scan_where` pushes a `branch op constant` predicate down
+//!   into every file's fetch plan (zone-excluded pages are never
+//!   fetched, then survivors are re-filtered row by row — exactly the
+//!   rows a full scan plus filter would deliver).
 //! * [`coordinator`] — the paper's contribution: parallel column
 //!   reading at basket granularity (per-(branch, basket) tasks with
 //!   ordered reassembly, scaling as `min(total_baskets, T)` instead of
@@ -87,7 +98,11 @@
 //!   (`ReadOptions::branches` / `PrefetchOptions::branches`) coalesces
 //!   only the selected columns' page ranges, and the report's
 //!   `bytes_selected`/`bytes_skipped` split shows what pushdown
-//!   avoided reading.
+//!   avoided reading. `PrefetchOptions::predicate` pushes a zone-map
+//!   predicate into the same plan: pages whose v4 min/max zone
+//!   provably excludes every matching row are dropped from the fetch
+//!   windows before any device read, accounted as
+//!   `pages_pruned`/`bytes_pruned` in [`cache::PrefetchStats`].
 //! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 

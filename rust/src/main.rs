@@ -1,7 +1,7 @@
 //! `rootio` — CLI for the parallel I/O subsystem reproduction.
 //!
 //! ```text
-//! rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|projection|hadd|codec|all> [--quick]
+//! rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|projection|chain|hadd|codec|all> [--quick]
 //! rootio generate --out <path> [--dataset reco|aod|gensim|xaod]
 //!                 [--entries N] [--codec none|lz4|zlib] [--level L]
 //! rootio inspect <path>
@@ -64,7 +64,7 @@ fn parse(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
 
 fn usage() -> Result<()> {
     println!(
-        "usage:\n  rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|projection|hadd|codec|all> [--quick]\n  \
+        "usage:\n  rootio bench <fig1|fig2|fig3|write|multiwrite|adaptive|prefetch|remote|fig6|fig7|projection|chain|hadd|codec|all> [--quick]\n  \
          rootio generate --out <path> [--dataset reco|aod|gensim|xaod] [--entries N] \
          [--codec none|lz4|zlib] [--level L]\n  rootio inspect <path>\n  \
          rootio read <path> [--threads N] [--granularity basket|branch]\n  \
@@ -121,6 +121,9 @@ fn bench(which: &str, opts: &HashMap<&str, &str>) -> Result<()> {
     }
     if all || which == "projection" || which == "fig9" {
         outputs.push(experiments::page_projection(quick)?);
+    }
+    if all || which == "chain" || which == "fig10" {
+        outputs.push(experiments::chain_scan(quick)?);
     }
     if all || which == "hadd" {
         outputs.push(experiments::hadd_bench(quick)?);

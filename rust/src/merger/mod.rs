@@ -315,6 +315,7 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
                 n_entries: k.n_entries,
                 crc,
                 settings: k.settings,
+                zone: k.zone,
             });
             // A paged variable-length branch: its element page goes
             // directly after the offset page (the v3 adjacency
@@ -329,6 +330,7 @@ fn merge_one(state: &Arc<Mutex<OutputState>>, buf: &TreeBuffer) -> Result<()> {
                     n_entries: e.n_entries,
                     crc: ecrc,
                     settings: e.settings,
+                    zone: e.zone,
                 });
             }
         }

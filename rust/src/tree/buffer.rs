@@ -21,6 +21,10 @@ pub struct BasketPayload {
     /// Compression settings the basket was written with; carried into
     /// the output directory when the buffer is merged.
     pub settings: crate::compress::Settings,
+    /// Per-page zone map captured at seal time; carried through merges
+    /// (raw-copy paths never decode, so the zone must travel with the
+    /// payload to survive into the merged directory).
+    pub zone: Option<crate::format::ZoneMap>,
 }
 
 /// Per-branch basket list.
@@ -92,6 +96,7 @@ mod tests {
             first_entry: 0,
             n_entries: 100,
             settings: crate::compress::Settings::default_compressed(),
+            zone: None,
         });
         b.entries = 100;
         assert_eq!(b.stored_bytes(), 50);

@@ -343,7 +343,7 @@ mod tests {
         let be = Arc::new(MemBackend::new());
         write_paged(be.clone(), crate::format::VERSION, &rows, 128, 48).unwrap();
         let file = Arc::new(FileReader::open(be.clone()).unwrap());
-        assert_eq!(file.version(), 3);
+        assert_eq!(file.version(), crate::format::VERSION);
         let r = TreeReader::open(file, "events").unwrap();
         assert_eq!(r.entries(), 500);
         let meta = r.meta().clone();

@@ -55,6 +55,10 @@ pub struct BasketMeta {
     /// Compression settings this basket was written with (recorded in
     /// the directory; per-column selection makes this vary by branch).
     pub settings: crate::compress::Settings,
+    /// Min/max zone map of the sealed column chunk, captured by the
+    /// flush task before serialisation (wire v4; `None` for
+    /// non-numeric columns and NaN-bearing pages).
+    pub zone: Option<crate::format::ZoneMap>,
 }
 
 /// Receives finished (compressed) baskets. Must be thread-safe: during
@@ -131,6 +135,7 @@ impl FileSink {
             n_entries: meta.n_entries,
             crc,
             settings: meta.settings,
+            zone: meta.zone,
         });
         Ok(())
     }
@@ -257,6 +262,7 @@ impl BasketSink for BufferSink {
             first_entry: meta.first_entry,
             n_entries: meta.n_entries,
             settings: meta.settings,
+            zone: meta.zone,
         });
         Ok(())
     }
@@ -297,6 +303,7 @@ mod tests {
             n_entries,
             elem: false,
             settings: crate::compress::Settings::uncompressed(),
+            zone: None,
         }
     }
 

@@ -580,6 +580,7 @@ impl<S: BasketSink> TreeWriter<S> {
                 n_entries,
                 settings,
                 elem,
+                zone: None, // captured by the flush task before sealing
             },
             sink: self.sink.clone(),
             settings,
@@ -681,6 +682,11 @@ impl<S: BasketSink> BasketTask<S> {
     /// `group` otherwise. Infallible by construction: failures go to
     /// the shared error slot.
     fn run(mut self, group: Option<&TaskGroup>) {
+        // Zone capture happens on the flush task (not the producer):
+        // the min/max scan rides the same parallelism as the
+        // serialise/compress work, and the column is still intact here
+        // (it is cleared right after serialisation).
+        self.meta.zone = crate::format::ZoneMap::from_column(&self.col);
         let mut raw = compress::pool::get(self.col.byte_len());
         let ((), ser) = timed(|| self.col.encode_into(&mut raw));
         self.counters.serialize_ns.fetch_add(span_ns(ser), Ordering::Relaxed);

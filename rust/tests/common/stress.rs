@@ -82,6 +82,18 @@ pub struct StressPlan {
     /// the read restricted to this branch subset and checks it
     /// column-for-column against the full decode (projected-vs-full).
     pub projection: Option<Vec<usize>>,
+    /// Chain dimension (ISSUE 9): how many same-schema files the
+    /// chained-scan property strings into one stream (single-file
+    /// chains included).
+    pub chain_files: usize,
+    /// Chain slot written with zero rows (None = every file populated)
+    /// — the empty-file-mid-chain regression rides every seed that
+    /// draws it, at a random position.
+    pub chain_empty: Option<usize>,
+    /// Zone-less legacy wire version (1 or 2) for the chain property's
+    /// third leg: the same rows rewritten below the zone-map wire must
+    /// predicate-scan identically with zero pages pruned.
+    pub legacy_version: u32,
 }
 
 impl StressPlan {
@@ -143,6 +155,8 @@ impl StressPlan {
         } else {
             None
         };
+        let chain_files = g.range(1, 5);
+        let chain_empty = if g.bool() { Some(g.range(0, chain_files)) } else { None };
         StressPlan {
             seed,
             workers: g.range(1, 9),
@@ -158,6 +172,9 @@ impl StressPlan {
             write_fault_rate: *g.choose(&[0.0, 0.0, 0.15, 0.35]),
             layout,
             projection,
+            chain_files,
+            chain_empty,
+            legacy_version: if g.bool() { 1 } else { 2 },
         }
     }
 }

@@ -385,6 +385,180 @@ fn prop_prefetched_stream_decodes_identical_under_window_perturbation() {
     );
 }
 
+/// Tentpole property (ISSUE 9): a chained scan over N same-schema
+/// files decodes identically to the per-file serial reads
+/// concatenated, and a predicate-pushed `scan_where` delivers exactly
+/// the rows of that unpruned scan filtered row by row — across the
+/// seed matrix's codecs, layouts, window policies, adaptive cluster
+/// cuts, an empty file at a random chain slot, and with non-scalar
+/// sibling columns (bytes, lists) riding the filter. The same rows
+/// rewritten on a zone-less legacy wire (v1/v2 classic) must scan
+/// identically with zero pages pruned, pinning that zone-map pruning
+/// is a pure optimisation, never a semantic change.
+#[test]
+fn prop_chained_predicate_scan_equals_filtered_scan() {
+    use rootio_par::cache::Predicate;
+    use rootio_par::framework::chain::Chain;
+    use rootio_par::serial::schema::{ColumnType, Field};
+    use rootio_par::serial::value::Value;
+    use rootio_par::tree::writer::Layout;
+
+    stress("prop_chained_predicate_scan_equals_filtered_scan", |g, plan| {
+        // Slot 0 carries a chain-global monotone f32 the predicate
+        // targets; the seed's random typed fields follow.
+        let mut fields = vec![Field::new("pred", ColumnType::F32)];
+        fields.extend(plan.schema.fields.iter().cloned());
+        let schema = Schema::new(fields);
+
+        // Draw every file's rows up front so the v4 and legacy legs
+        // write identical data.
+        let mut file_rows: Vec<Vec<Row>> = Vec::new();
+        let mut global = 0u64;
+        for fi in 0..plan.chain_files {
+            let n = if Some(fi) == plan.chain_empty {
+                0
+            } else {
+                plan.n_rows / plan.chain_files + 1
+            };
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut row: Row = vec![Value::F32(global as f32)];
+                row.extend(g.row(&plan.schema));
+                rows.push(row);
+                global += 1;
+            }
+            file_rows.push(rows);
+        }
+        let total = global;
+
+        let pool = Arc::new(Pool::new(plan.workers));
+        let session = Session::with_pool(
+            pool,
+            SessionConfig { max_inflight_clusters: plan.max_inflight, ..Default::default() },
+        );
+        let write_file = |rows: &[Row], version: u32, layout: Layout| -> BackendRef {
+            let be: BackendRef = Arc::new(MemBackend::new());
+            let fw = Arc::new(FileWriter::create_versioned(be.clone(), version).unwrap());
+            let sink = FileSink::new(fw.clone(), schema.len());
+            let cfg = WriterConfig {
+                basket_entries: plan.basket_entries,
+                compression: plan.compression,
+                flush: FlushMode::Pipelined,
+                granularity: FlushGranularity::Block,
+                max_inflight_clusters: plan.max_inflight,
+                sizing: plan.sizing,
+                selection: plan.selection.clone(),
+                layout,
+            };
+            let mut w = TreeWriter::attached(schema.clone(), sink, cfg, &session);
+            for row in rows {
+                w.fill(row.clone()).unwrap();
+            }
+            let (sink, entries, _) = w.close().unwrap();
+            let meta = sink.into_meta("t".into(), schema.clone(), entries).unwrap();
+            fw.finish(&Directory { trees: vec![meta] }).unwrap();
+            be
+        };
+        let v4: Vec<BackendRef> = file_rows
+            .iter()
+            .map(|rows| write_file(rows, rootio_par::format::VERSION, plan.layout))
+            .collect();
+        let legacy: Vec<BackendRef> = file_rows
+            .iter()
+            .map(|rows| write_file(rows, plan.legacy_version, Layout::Classic))
+            .collect();
+
+        let opts = PrefetchOptions {
+            window: plan.read_window,
+            coalesce_gap: plan.coalesce_gap,
+            ..Default::default()
+        };
+        let empty_cols = || -> Vec<ColumnData> {
+            schema.fields.iter().map(|f| ColumnData::new(f.ty)).collect()
+        };
+        let concat = |parts: Vec<Vec<ColumnData>>| -> Vec<ColumnData> {
+            let mut out = empty_cols();
+            for part in parts {
+                for (acc, col) in out.iter_mut().zip(part.iter()) {
+                    acc.append(col).unwrap();
+                }
+            }
+            out
+        };
+
+        // Unpruned chain scan == per-file serial reads concatenated.
+        let chain = Chain::new(v4.clone());
+        let mut parts = Vec::new();
+        let all_rep = chain.scan(&opts, |b| parts.push(b.columns.clone())).unwrap();
+        let base = concat(parts);
+        let mut serial = empty_cols();
+        for be in &v4 {
+            let r = TreeReader::open_first(Arc::new(FileReader::open(be.clone()).unwrap()))
+                .unwrap();
+            for (acc, col) in serial.iter_mut().zip(r.read_all().unwrap().iter()) {
+                acc.append(col).unwrap();
+            }
+        }
+        assert_eq!(
+            base, serial,
+            "chain scan diverged from per-file serial reads (seed {})",
+            plan.seed,
+        );
+        assert_eq!(all_rep.entries, total);
+
+        // Predicate leg: pushed-down scan == row-filtered unpruned scan.
+        let cutoff = total as f64 * 0.6;
+        let pred = Predicate::ge(0, cutoff);
+        let keep: Vec<bool> = (0..base[0].len())
+            .map(|i| match base[0].get(i) {
+                Some(Value::F32(v)) => pred.matches(f64::from(v)),
+                _ => unreachable!("pred column is f32"),
+            })
+            .collect();
+        let mut want = empty_cols();
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                for (w, c) in want.iter_mut().zip(base.iter()) {
+                    w.push(c.get(i).unwrap()).unwrap();
+                }
+            }
+        }
+        let scan_where = |files: &[BackendRef]| {
+            let chain = Chain::new(files.to_vec());
+            let mut parts = Vec::new();
+            let rep = chain
+                .scan_where(pred, &opts, |b| parts.push(b.columns.clone()))
+                .unwrap();
+            (concat(parts), rep)
+        };
+        let (got, rep) = scan_where(&v4);
+        assert_eq!(
+            got, want,
+            "pruned chain scan diverged from the filtered scan (seed {}, layout {:?})",
+            plan.seed, plan.layout,
+        );
+        assert_eq!(
+            rep.prefetch.bytes_selected + rep.prefetch.bytes_pruned,
+            all_rep.prefetch.bytes_selected,
+            "pruning must partition the unpruned plan's bytes (seed {})",
+            plan.seed,
+        );
+
+        // Legacy zone-less leg: identical rows, nothing pruned.
+        let (legacy_got, legacy_rep) = scan_where(&legacy);
+        assert_eq!(
+            legacy_got, want,
+            "legacy v{} chain scan diverged (seed {})",
+            plan.legacy_version, plan.seed,
+        );
+        assert_eq!(legacy_rep.prefetch.pages_pruned, 0, "no zones below wire v4");
+        assert_eq!(legacy_rep.prefetch.bytes_pruned, 0);
+
+        session.drain().unwrap();
+        assert_eq!(session.stats().in_flight_clusters, 0);
+    });
+}
+
 /// Satellite property (ISSUE 6): a seeded fraction of write ranges
 /// blipping on their first attempt must be invisible after retry —
 /// the pipelined adaptive write through a
