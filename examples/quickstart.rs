@@ -79,6 +79,24 @@
 //!    result is row-identical to scanning everything and filtering.
 //!    Files written before wire v4 have no zones and simply scan
 //!    unpruned.
+//! 10. **observability**: build the session with
+//!    `SessionConfig::default().traced()` and every pool task, budget
+//!    admission wait, coalesced device read, retry/hedge, basket
+//!    decode, page seal, zone prune and chain file-advance lands in a
+//!    sharded per-thread [`Recorder`] — no lock on the record path, and
+//!    a disabled recorder costs one branch. `recorder.timeline_ascii`
+//!    draws the per-thread schedule in the terminal,
+//!    `recorder.to_chrome_json()` exports a Perfetto-loadable trace,
+//!    and `session.metrics().snapshot()` folds every stats struct into
+//!    one named counter/gauge/histogram registry (window latency,
+//!    basket compress, device read percentiles). The same surface is on
+//!    the CLI: `rootio trace bench --out trace.json` traces a real
+//!    write+pruned-chain-scan pipeline, `rootio stats` dumps the
+//!    registry as JSON, and `rootio summary` collects every
+//!    `BENCH_fig*.json` + trace/stats snapshot into `BENCH_summary.json`
+//!    and fails on a >2x regression vs `bench_baselines.json`. See also
+//!    `cargo run --release --example trace_a_scan` (in rust/examples/)
+//!    for the minimal runnable version.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -482,6 +500,32 @@ fn chain_with_predicate() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Section 10: the same streaming scan, traced. The recorder rides in
+/// the session config; afterwards the span buffer renders an ASCII
+/// timeline and exports Chrome trace events, and the registry snapshot
+/// reconciles the prefetch byte partition.
+fn traced_scan(be: BackendRef) -> anyhow::Result<()> {
+    let session = Session::new(SessionConfig::default().traced());
+    let reader = TreeReader::open(Arc::new(FileReader::open(be)?), "mytree")?;
+    let mut stream = reader.stream_in_session(&PrefetchOptions::fixed(4), &session)?;
+    stream.read_all_columns()?;
+
+    let rec = session.recorder();
+    rec.check()?;
+    println!(
+        "  traced scan: {} spans, useful fraction {:.3}",
+        rec.snapshot().len(),
+        rec.useful_fraction()
+    );
+    // rec.to_chrome_json() is the Perfetto export; the registry snapshot
+    // folds PrefetchStats/SessionStats into named counters + histograms.
+    let mut snap = session.metrics().snapshot();
+    snap.put_prefetch("prefetch", &stream.stats());
+    snap.put_session(&session.stats());
+    assert!(snap.counter("prefetch.stored_bytes").unwrap_or(0) > 0);
+    Ok(())
+}
+
 fn read_sorted(be: BackendRef, tree: &str) -> anyhow::Result<Vec<i32>> {
     let reader = TreeReader::open(Arc::new(FileReader::open(be)?), tree)?;
     let cols = reader.read_all()?;
@@ -538,6 +582,9 @@ fn main() -> anyhow::Result<()> {
     // The same scan from a flaky simulated remote store: the
     // resilience wrapper absorbs the faults, the data is identical.
     stream_remote_resilient(seq.clone(), &session)?;
+
+    // The same scan once more, traced: spans + registry snapshot.
+    traced_scan(seq.clone())?;
 
     let expect = read_sorted(seq, "mytree")?;
     assert_eq!(expect.len(), N_ENTRIES);

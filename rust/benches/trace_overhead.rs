@@ -1,0 +1,91 @@
+//! Overhead guard for the observability layer (harness = false;
+//! criterion is unavailable offline — see Cargo.toml).
+//!
+//! Runs the same 8-worker prefetch read three ways — plain (the
+//! product default, whose session carries a disabled recorder), with
+//! an explicitly disabled recorder, and fully traced — and asserts the
+//! cost envelope the tracing design promises: a disabled recorder is
+//! within 1% of the untraced wall (it is the same one-branch code
+//! path), and an enabled recorder stays under 5%. Min-of-N walls so a
+//! noisy scheduler tick can't fail the guard.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rootio_par::cache::PrefetchOptions;
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::experiments::util::synthesize_flat_f32;
+use rootio_par::format::reader::FileReader;
+use rootio_par::imt::Pool;
+use rootio_par::metrics::Recorder;
+use rootio_par::session::{Session, SessionConfig};
+use rootio_par::tree::reader::TreeReader;
+
+fn scan(file: &Arc<FileReader>, pool: &Arc<Pool>, recorder: Recorder) -> Duration {
+    let session = Session::with_pool(
+        pool.clone(),
+        SessionConfig { recorder, ..Default::default() },
+    );
+    let reader = TreeReader::open_first(file.clone()).unwrap();
+    let t0 = Instant::now();
+    let mut stream =
+        reader.stream_in_session(&PrefetchOptions::fixed(4), &session).unwrap();
+    stream.read_all_columns().unwrap();
+    t0.elapsed()
+}
+
+fn min_of(n: usize, mut f: impl FnMut() -> Duration) -> Duration {
+    (0..n).map(|_| f()).min().unwrap()
+}
+
+fn pct(x: Duration, base: Duration) -> f64 {
+    (x.as_secs_f64() / base.as_secs_f64().max(1e-12) - 1.0) * 100.0
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (entries, trials) = if quick { (16_384, 5) } else { (65_536, 9) };
+    let be =
+        synthesize_flat_f32(16, entries, 1_024, Settings::new(Codec::Rzip, 4)).unwrap();
+    let file = Arc::new(FileReader::open(be).unwrap());
+    let pool = Arc::new(Pool::new(8));
+
+    // Warm the pool, the scratch buffers and the page cache.
+    for _ in 0..2 {
+        scan(&file, &pool, Recorder::disabled());
+    }
+
+    let untraced = min_of(trials, || scan(&file, &pool, Recorder::disabled()));
+    let disabled = min_of(trials, || scan(&file, &pool, Recorder::disabled()));
+    let traced = {
+        let rec = Recorder::new();
+        let wall = min_of(trials, || scan(&file, &pool, rec.clone()));
+        let spans = rec.snapshot().len();
+        println!("traced runs recorded {spans} spans");
+        wall
+    };
+
+    println!(
+        "untraced  {:>9.3} ms\ndisabled  {:>9.3} ms ({:+.2}%)\ntraced    {:>9.3} ms ({:+.2}%)",
+        untraced.as_secs_f64() * 1e3,
+        disabled.as_secs_f64() * 1e3,
+        pct(disabled, untraced),
+        traced.as_secs_f64() * 1e3,
+        pct(traced, untraced),
+    );
+
+    // Small absolute slack so microsecond-scale walls can't trip the
+    // percentage gates on timer granularity alone.
+    let slack = Duration::from_micros(500);
+    assert!(
+        disabled <= untraced.mul_f64(1.01) + slack,
+        "disabled-recorder overhead {:+.2}% exceeds the 1% envelope",
+        pct(disabled, untraced)
+    );
+    assert!(
+        traced <= untraced.mul_f64(1.05) + slack,
+        "enabled-recorder overhead {:+.2}% exceeds the 5% envelope",
+        pct(traced, untraced)
+    );
+    println!("trace overhead OK");
+}

@@ -52,6 +52,7 @@ use crate::compress;
 use crate::error::{Error, Result};
 use crate::format::reader::FileReader;
 use crate::imt::{ClusterGuard, TaskGroup};
+use crate::metrics::{HistSnapshot, Histogram, Recorder, Registry, SpanKind};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::ColumnType;
 use crate::session::{ReaderRegistration, Session, SessionConfig};
@@ -214,9 +215,15 @@ struct Shared {
     slots: Mutex<HashMap<usize, SlotState>>,
     fetch_nanos: AtomicU64,
     decode_nanos: AtomicU64,
-    /// Completed submit→decoded latency per non-empty window, nanos
-    /// (the tail the hedged-read experiment measures).
-    window_nanos: Mutex<Vec<u64>>,
+    /// Completed submit→decoded latency per non-empty window — the
+    /// log-bucketed distribution whose tail the hedged-read
+    /// experiment measures ([`ClusterStream::window_latency`]).
+    window_hist: Histogram,
+    /// Session recorder (disabled = one branch per record) — fetch,
+    /// scatter-read and decode tasks emit spans when tracing is on.
+    recorder: Recorder,
+    /// Session registry: window-latency and device-read histograms.
+    registry: Registry,
 }
 
 impl Shared {
@@ -260,11 +267,8 @@ fn finish_part(shared: &Shared, idx: usize, part: usize, result: Result<ColumnDa
         }
     };
     if let Some(lat) = latency {
-        shared
-            .window_nanos
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .push(lat.as_nanos() as u64);
+        shared.window_hist.record(lat);
+        shared.registry.window_latency().record(lat);
     }
 }
 
@@ -288,6 +292,7 @@ fn fetch_window(
     hints: IoHints,
 ) {
     let backend = file.backend();
+    let fetch_start = shared.recorder.is_enabled().then(|| shared.recorder.elapsed());
     let t0 = Instant::now();
     let mut bufs = Vec::with_capacity(window.fetches.len());
     for range in &window.fetches {
@@ -302,12 +307,23 @@ fn fetch_window(
             .zip(bufs.iter_mut())
             .map(|(r, b)| (r.offset, b.as_mut_slice()))
             .collect();
-        if let Err(e) = backend.read_scatter(&mut ranges, hints) {
+        let read_start =
+            shared.recorder.is_enabled().then(|| shared.recorder.elapsed());
+        let rt0 = Instant::now();
+        let result = backend.read_scatter(&mut ranges, hints);
+        shared.registry.device_read().record(rt0.elapsed());
+        if let Some(start) = read_start {
+            shared.recorder.push(SpanKind::ScatterRead, start, shared.recorder.elapsed());
+        }
+        if let Err(e) = result {
             fail_slot(shared, idx, e);
             return;
         }
     }
     shared.fetch_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if let Some(start) = fetch_start {
+        shared.recorder.push(SpanKind::Fetch, start, shared.recorder.elapsed());
+    }
     for (range, buf) in window.fetches.iter().zip(bufs) {
         // The coalesced buffer is shared by the range's decode tasks
         // and returns to the pool when the last of them drops it.
@@ -336,6 +352,8 @@ fn fetch_window(
                 let shared = shared.clone();
                 let buf = buf.clone();
                 group.spawn(move || {
+                    let dec_start =
+                        shared.recorder.is_enabled().then(|| shared.recorder.elapsed());
                     let t0 = Instant::now();
                     let result = crate::tree::reader::decode_page_pair(
                         &pb.info,
@@ -346,6 +364,13 @@ fn fetch_window(
                     shared
                         .decode_nanos
                         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    if let Some(start) = dec_start {
+                        shared.recorder.push(
+                            SpanKind::Decompress,
+                            start,
+                            shared.recorder.elapsed(),
+                        );
+                    }
                     finish_part(&shared, idx, bi, result);
                 });
                 continue;
@@ -353,6 +378,8 @@ fn fetch_window(
             let shared = shared.clone();
             let buf = buf.clone();
             group.spawn(move || {
+                let dec_start =
+                    shared.recorder.is_enabled().then(|| shared.recorder.elapsed());
                 let t0 = Instant::now();
                 let result = crate::tree::reader::decode_basket_bytes(
                     pb.ty,
@@ -360,6 +387,13 @@ fn fetch_window(
                     &buf[within..end],
                 );
                 shared.decode_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if let Some(start) = dec_start {
+                    shared.recorder.push(
+                        SpanKind::Decompress,
+                        start,
+                        shared.recorder.elapsed(),
+                    );
+                }
                 finish_part(&shared, idx, bi, result);
             });
         }
@@ -444,6 +478,10 @@ impl ClusterStream {
         };
         let plan =
             ClusterPlan::build_filtered(meta, &selection, gap, opts.predicate.as_ref())?;
+        if plan.pages_pruned > 0 {
+            // Zero-width mark: zone maps excluded pages from the plan.
+            session.recorder().mark(SpanKind::ZonePrune);
+        }
         let slot_types: Vec<ColumnType> =
             selection.iter().map(|&b| meta.branches[b].ty).collect();
         let controller = WindowController::new(opts.window);
@@ -457,7 +495,9 @@ impl ClusterStream {
                 slots: Mutex::new(HashMap::new()),
                 fetch_nanos: AtomicU64::new(0),
                 decode_nanos: AtomicU64::new(0),
-                window_nanos: Mutex::new(Vec::new()),
+                window_hist: Histogram::new(),
+                recorder: session.recorder().clone(),
+                registry: session.metrics().clone(),
             }),
             group: session.task_group(),
             reg,
@@ -838,18 +878,14 @@ impl ClusterStream {
         }
     }
 
-    /// Completed submit→fully-decoded wall latency of every non-empty
-    /// window so far, in completion order — the distribution whose
-    /// tail hedged reads compress (see the `remote_reads` experiment's
-    /// p99 column). Windows that errored out record nothing.
-    pub fn window_latencies(&self) -> Vec<Duration> {
-        self.shared
-            .window_nanos
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .iter()
-            .map(|&n| Duration::from_nanos(n))
-            .collect()
+    /// Completed submit→fully-decoded wall latency distribution over
+    /// every non-empty window so far — the tail hedged reads compress
+    /// (see the `remote_reads` experiment's p99 column). Log-bucketed
+    /// ([`HistSnapshot::p50`]/[`p95`](HistSnapshot::p95)/
+    /// [`p99`](HistSnapshot::p99)); windows that errored out record
+    /// nothing.
+    pub fn window_latency(&self) -> HistSnapshot {
+        self.shared.window_hist.snapshot()
     }
 
     /// The window controller's replayable decision trace.
@@ -1206,7 +1242,7 @@ mod tests {
             "every window submitted while the breaker was open counts"
         );
         assert_eq!(st.retries, 0, "head reads pass the open breaker first try");
-        assert_eq!(stream.window_latencies().len(), 8);
+        assert_eq!(stream.window_latency().count(), 8);
         drop(stream);
         session.drain().unwrap();
         assert_eq!(session.stats().in_flight_read_windows, 0);

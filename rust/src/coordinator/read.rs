@@ -20,10 +20,11 @@
 
 use std::time::Instant;
 
-use crate::cache::{PrefetchOptions, PrefetchStats};
+use crate::cache::{ClusterStream, PrefetchOptions, PrefetchStats};
 use crate::error::{Error, Result};
 use crate::imt;
 use crate::serial::column::ColumnData;
+use crate::session::Session;
 use crate::tree::reader::TreeReader;
 
 /// Task decomposition for a parallel column read.
@@ -160,6 +161,27 @@ pub fn read_baskets_on_pool(
 
 /// Read the selected columns of `reader`, in parallel when IMT is on.
 pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadReport> {
+    read_columns_with(reader, opts, None)
+}
+
+/// As [`read_columns`], but running the prefetch path inside `session`
+/// — shared read budget, shared completion domain, and (when the
+/// session is traced) pool/budget/prefetch/storage spans for the whole
+/// read. The non-prefetch paths are unchanged; pass a
+/// `ReadOptions::prefetch` to get the session-scoped behaviour.
+pub fn read_columns_in_session(
+    reader: &TreeReader,
+    opts: &ReadOptions,
+    session: &Session,
+) -> Result<ReadReport> {
+    read_columns_with(reader, opts, Some(session))
+}
+
+fn read_columns_with(
+    reader: &TreeReader,
+    opts: &ReadOptions,
+    session: Option<&Session>,
+) -> Result<ReadReport> {
     // Effective selection: the outer `branches` wins, else a selection
     // carried inside the prefetch options, else every branch — so the
     // report's accounting always matches what was actually read.
@@ -200,11 +222,17 @@ pub fn read_columns(reader: &TreeReader, opts: &ReadOptions) -> Result<ReadRepor
     } else if let Some(pf) = &opts.prefetch {
         // Stream through the read-ahead cache: coalesced window
         // fetches + pooled decode tasks (inline while IMT is off, so
-        // the coalescing benefit survives either way).
-        let mut stream = reader.stream(&PrefetchOptions {
+        // the coalescing benefit survives either way). A caller-held
+        // session scopes the stream's budget and tracing; otherwise
+        // the stream opens its own private session.
+        let pf_opts = PrefetchOptions {
             branches: Some(selection.clone()),
             ..pf.clone()
-        })?;
+        };
+        let mut stream = match session {
+            Some(s) => ClusterStream::open_in_session(reader, &pf_opts, s)?,
+            None => reader.stream(&pf_opts)?,
+        };
         let cols = stream.read_all_columns()?;
         prefetch_stats = Some(stream.stats());
         cols

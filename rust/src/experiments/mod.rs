@@ -51,8 +51,8 @@ use crate::tree::sizer::{AdaptiveConfig, ClusterSizer, ClusterSizing};
 use crate::tree::writer::{FlushGranularity, FlushMode, WriterConfig};
 
 use util::{
-    save_bench_json, save_csv, synthesize_dataset, synthesize_flat_f32, synthesize_physics_file,
-    try_engine, BenchRow, Table,
+    save_bench_json, save_csv, save_observability, synthesize_dataset, synthesize_flat_f32,
+    synthesize_physics_file, try_engine, BenchRow, Table,
 };
 
 fn thread_sweep(quick: bool) -> Vec<usize> {
@@ -165,6 +165,7 @@ pub fn fig1(quick: bool) -> Result<String> {
     }
     save_csv("fig1_parallel_read", &table);
     save_bench_json("fig1", &bench_rows);
+    save_observability("fig1", None);
     Ok(format!(
         "## Figure 1 — parallel column reading (branch vs basket granularity)\n\
          (simulated workers, calibrated from measured per-basket costs; \
@@ -261,6 +262,7 @@ pub fn fig2(quick: bool) -> Result<String> {
     }
     save_csv("fig2_basket_decompression", &table);
     save_bench_json("fig2", &bench_rows);
+    save_observability("fig2", None);
     Ok(format!(
         "## Figure 2 — parallel basket decompression (+ interleaved processing)\n\
          (simulated workers, calibrated per-basket costs; analysis runs on the \
@@ -605,6 +607,7 @@ pub fn write_scaling(quick: bool) -> Result<String> {
 
     save_csv("fig3_write_scaling", &table);
     save_bench_json("fig3", &bench_rows);
+    save_observability("fig3", None);
     Ok(format!(
         "## Write scaling — pipelined block-granularity flush (§3.1 mirror of Fig 1)\n\
          (simulated workers from measured per-basket / per-block costs; 'measured' \
@@ -845,6 +848,7 @@ pub fn multi_writer(quick: bool) -> Result<String> {
 
     save_csv("fig4_multi_writer", &table);
     save_bench_json("fig4", &bench_rows);
+    save_observability("fig4", None);
     Ok(format!(
         "## Multi-writer session scaling (writers × workers, solo-sequential vs shared session)\n\
          (simulated workers from measured per-cluster producer and per-basket \
@@ -1229,6 +1233,7 @@ pub fn adaptive_sizing(quick: bool) -> Result<String> {
 
     save_csv("fig5_adaptive_sizing", &table);
     save_bench_json("fig5", &bench_rows);
+    save_observability("fig5", None);
     Ok(format!(
         "## Adaptive cluster sizing — fixed sweep vs feedback-sized clusters (narrow fast producer)\n\
          (simulated workers from measured per-size costs; the adaptive trace is the real \
@@ -1678,6 +1683,7 @@ pub fn codec_bench(quick: bool) -> Result<String> {
         });
     }
     save_bench_json("fig8", &fig8);
+    save_observability("fig8", None);
 
     Ok(format!("## Codec characterisation\n\n{}", table.render()))
 }
@@ -2157,6 +2163,7 @@ pub fn read_prefetch(quick: bool) -> Result<String> {
 
     save_csv("fig6_read_prefetch", &table);
     save_bench_json("fig6", &bench_rows);
+    save_observability("fig6", None);
     Ok(format!(
         "## Read-ahead cache — coalesced cluster prefetch across devices (Fig 6 companion)\n\
          (virtual rows: calibrated device models + measured decode costs through a \
@@ -2179,7 +2186,7 @@ pub fn read_prefetch(quick: bool) -> Result<String> {
 /// the fault-free serial baseline; the raw device is *expected* to
 /// fail once faults are injected and its row records that. Per-window
 /// submit→decoded latencies come from
-/// [`crate::cache::ClusterStream::window_latencies`]; the p99 column
+/// [`crate::cache::ClusterStream::window_latency`]; the p99 column
 /// is the tail hedging exists to compress — a stuck request stalls a
 /// retry-only window for its full deadline, while a hedge cuts in
 /// after ~p99 and wins.
@@ -2209,15 +2216,6 @@ pub fn remote_reads(quick: bool) -> Result<String> {
         ("retry", true, false),
         ("retry+hedge", true, true),
     ];
-
-    fn pct(lats: &mut [Duration], q: f64) -> Duration {
-        if lats.is_empty() {
-            return Duration::ZERO;
-        }
-        lats.sort_unstable();
-        let i = ((lats.len() - 1) as f64 * q).round() as usize;
-        lats[i]
-    }
 
     let make_device = |rate: f64| -> Result<Arc<RemoteDevice>> {
         let dev = Arc::new(RemoteDevice::new(
@@ -2256,7 +2254,7 @@ pub fn remote_reads(quick: bool) -> Result<String> {
     let run = |be: BackendRef| -> Result<(
         Vec<ColumnData>,
         PrefetchStats,
-        Vec<Duration>,
+        crate::metrics::HistSnapshot,
         Duration,
     )> {
         let file = Arc::new(FileReader::open(be)?);
@@ -2270,7 +2268,7 @@ pub fn remote_reads(quick: bool) -> Result<String> {
         let cols = stream.read_all_columns()?;
         let wall = t0.elapsed();
         let st = stream.stats();
-        let lats = stream.window_latencies();
+        let lats = stream.window_latency();
         Ok((cols, st, lats, wall))
     };
 
@@ -2288,7 +2286,7 @@ pub fn remote_reads(quick: bool) -> Result<String> {
                 dev.clone()
             };
             match run(be) {
-                Ok((cols, st, mut lats, wall)) => {
+                Ok((cols, st, lats, wall)) => {
                     if cols != serial_cols {
                         return Err(Error::Coordinator(format!(
                             "remote_reads: {pname}@{rate} decoded data diverged from \
@@ -2302,8 +2300,8 @@ pub fn remote_reads(quick: bool) -> Result<String> {
                         format!("{rate:.2}"),
                         "ok".into(),
                         ms(wall),
-                        ms(pct(&mut lats, 0.5)),
-                        ms(pct(&mut lats, 0.99)),
+                        ms(lats.p50()),
+                        ms(lats.p99()),
                         st.retries.to_string(),
                         st.hedges.to_string(),
                         st.hedge_wins.to_string(),
@@ -2344,6 +2342,7 @@ pub fn remote_reads(quick: bool) -> Result<String> {
 
     save_csv("fig7_remote_reads", &table);
     save_bench_json("fig7", &bench_rows);
+    save_observability("fig7", None);
     Ok(format!(
         "## Remote reads — retry, deadlines and hedged reads on a faulty object store \
          (Fig 7 companion)\n\
@@ -2535,6 +2534,11 @@ pub fn page_projection(quick: bool) -> Result<String> {
     }
     save_csv("fig9_page_projection", &table);
     save_bench_json("fig9", &bench_rows);
+    // Trace the experiment's own paged (v3) file rather than a stand-in.
+    let obs: BackendRef = Arc::new(MemBackend::new());
+    if obs.write_at(0, &v3).is_ok() {
+        save_observability("fig9", Some(obs));
+    }
     Ok(format!(
         "## Figure 9 — projection pushdown on the paged columnar layout (format v3)\n\
          (real prefetched reads on a zero-latency simulated device: wall is \
@@ -2778,6 +2782,13 @@ pub fn chain_scan(quick: bool) -> Result<String> {
     }
     save_csv("fig10_chain_scan", &table);
     save_bench_json("fig10", &bench_rows);
+    // Trace one real file from the chain rather than a stand-in.
+    if let Some(bytes) = chain_files.first() {
+        let obs: BackendRef = Arc::new(MemBackend::new());
+        if obs.write_at(0, bytes).is_ok() {
+            save_observability("fig10", Some(obs));
+        }
+    }
     Ok(format!(
         "## Figure 10 — chained dataset scan with zone-map predicate pushdown (format v4)\n\
          ({files} files scanned as one chain through a shared session with cross-file \

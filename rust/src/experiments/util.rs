@@ -3,14 +3,19 @@
 
 use std::sync::Arc;
 
-use crate::compress::Settings;
+use crate::cache::PrefetchOptions;
+use crate::compress::{Codec, Settings};
 use crate::coordinator::write::{write_blocks, WriteReport};
 use crate::error::Result;
+use crate::format::reader::FileReader;
 use crate::framework::dataset::{self, DatasetKind, SplitMix};
+use crate::metrics::{Recorder, Snapshot};
 use crate::runtime::Engine;
 use crate::serial::column::ColumnData;
+use crate::session::{Session, SessionConfig};
 use crate::storage::mem::MemBackend;
 use crate::storage::BackendRef;
+use crate::tree::reader::TreeReader;
 use crate::tree::writer::{FlushMode, WriterConfig};
 
 /// Simple fixed-width table printer (markdown-flavoured).
@@ -106,6 +111,54 @@ pub fn save_bench_json(name: &str, rows: &[BenchRow]) {
     }
     s.push_str("]}\n");
     let _ = std::fs::write(format!("BENCH_{name}.json"), s);
+}
+
+/// Emit `TRACE_<name>.json` — a Chrome trace-event (Perfetto-loadable)
+/// dump of everything `recorder` collected. Best-effort, like
+/// [`save_csv`]; a disabled recorder writes nothing.
+pub fn save_trace_json(name: &str, recorder: &Recorder) {
+    if recorder.is_enabled() {
+        let _ = std::fs::write(format!("TRACE_{name}.json"), recorder.to_chrome_json());
+    }
+}
+
+/// Emit `STATS_<name>.json` — one metrics-registry snapshot.
+/// Best-effort, like [`save_csv`].
+pub fn save_stats_json(name: &str, snap: &Snapshot) {
+    let _ = std::fs::write(format!("STATS_{name}.json"), snap.to_json());
+}
+
+/// Observability epilogue every experiment runs after its measured
+/// cells: stream `file` (the experiment's own data when it is still in
+/// scope, else a small synthesized stand-in) through a **traced**
+/// 4-worker session and emit `TRACE_<name>.json` + `STATS_<name>.json`
+/// beside `BENCH_<name>.json`. The epilogue is a separate run so the
+/// measured numbers are never perturbed by tracing; it is best-effort,
+/// so observability can never fail a benchmark.
+pub fn save_observability(name: &str, file: Option<BackendRef>) {
+    let run = || -> Result<()> {
+        let be = match file {
+            Some(b) => b,
+            None => {
+                synthesize_flat_f32(4, 8_192, 512, Settings::new(Codec::Lz4r, 2))?
+            }
+        };
+        let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+        let pool = Arc::new(crate::imt::Pool::new(4));
+        let session =
+            Session::with_pool(pool, SessionConfig::default().traced());
+        let mut stream =
+            reader.stream_in_session(&PrefetchOptions::fixed(4), &session)?;
+        stream.read_all_columns()?;
+        let mut snap = session.metrics().snapshot();
+        snap.put_prefetch("prefetch", &stream.stats());
+        snap.put_session(&session.stats());
+        snap.put_pool(&crate::compress::pool::stats());
+        save_stats_json(name, &snap);
+        save_trace_json(name, session.recorder());
+        session.recorder().check()
+    };
+    let _ = run();
 }
 
 /// Build an in-memory flat-f32 file with exactly `n_branches` branches

@@ -31,6 +31,7 @@ use crate::cache::plan::Predicate;
 use crate::cache::{ClusterStream, PrefetchOptions, PrefetchStats};
 use crate::error::{Error, Result};
 use crate::format::reader::FileReader;
+use crate::metrics::{Recorder, SpanKind};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::Schema;
 use crate::session::{Session, SessionConfig};
@@ -162,6 +163,11 @@ fn filter_rows(col: &ColumnData, keep: &[bool]) -> ColumnData {
 /// A chain of same-schema files scanned as one event stream.
 pub struct Chain {
     files: Vec<BackendRef>,
+    /// Recorder the scan's private session adopts (disabled by
+    /// default): file transitions emit [`SpanKind::ChainAdvance`]
+    /// spans, and every layer below — pool tasks, admission waits,
+    /// fetches, decodes — traces into the same buffers.
+    recorder: Recorder,
 }
 
 /// One file's open stream plus its tree's entry count (the chain-
@@ -173,7 +179,16 @@ struct Cursor {
 
 impl Chain {
     pub fn new(files: Vec<BackendRef>) -> Chain {
-        Chain { files }
+        Chain { files, recorder: Recorder::disabled() }
+    }
+
+    /// Trace this chain's scans into `recorder`: the scan session (and
+    /// so the pool, budgets, prefetchers and backends under it) emits
+    /// spans there, plus a [`SpanKind::ChainAdvance`] span per file
+    /// transition.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Chain {
+        self.recorder = recorder;
+        self
     }
 
     pub fn push(&mut self, file: BackendRef) {
@@ -297,8 +312,10 @@ impl Chain {
         // handoff would serialise behind the tail's slots.
         let session = Session::new(SessionConfig {
             max_inflight_read_windows: (opts.window.max_window() * 2).max(2),
+            recorder: self.recorder.clone(),
             ..Default::default()
         });
+        let rec = session.recorder().clone();
         let mut report = ChainReport::default();
         let mut schema: Option<Schema> = None;
         let mut base = 0u64;
@@ -306,7 +323,14 @@ impl Chain {
         for fi in 0..self.files.len() {
             let mut cur = match pending.take() {
                 Some(c) => c,
-                None => self.open_file(fi, opts, &session, &mut schema)?,
+                None => {
+                    let start = rec.is_enabled().then(|| rec.elapsed());
+                    let c = self.open_file(fi, opts, &session, &mut schema)?;
+                    if let Some(s) = start {
+                        rec.push(SpanKind::ChainAdvance, s, rec.elapsed());
+                    }
+                    c
+                }
             };
             let mut consumed = 0usize;
             loop {
@@ -317,9 +341,13 @@ impl Chain {
                     && fi + 1 < self.files.len()
                     && cur.stream.n_clusters() - consumed <= TAIL_PRIME_CLUSTERS
                 {
+                    let start = rec.is_enabled().then(|| rec.elapsed());
                     let mut next =
                         self.open_file(fi + 1, opts, &session, &mut schema)?;
                     next.stream.prime();
+                    if let Some(s) = start {
+                        rec.push(SpanKind::ChainAdvance, s, rec.elapsed());
+                    }
                     pending = Some(next);
                 }
                 let Some(cluster) = cur.stream.next()? else { break };

@@ -37,6 +37,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::pool::Pool;
+use crate::metrics::{Recorder, SpanKind};
 
 /// Counters of the shared budget, snapshotted by [`IoBudget::stats`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -68,6 +69,9 @@ struct BudgetInner {
     idle_cv: Condvar,
     admissions: AtomicU64,
     waits: AtomicU64,
+    /// Session recorder: admission waits that actually block emit an
+    /// `AdmissionWait` span (disabled recorder = one branch, no clock).
+    recorder: Recorder,
 }
 
 impl BudgetInner {
@@ -100,6 +104,14 @@ impl IoBudget {
     /// Budget capped at `limit` clusters in flight (min 1). Waiters
     /// help execute on `pool` when given, else on the global IMT pool.
     pub fn new(limit: usize, pool: Option<Arc<Pool>>) -> Self {
+        IoBudget::traced(limit, pool, Recorder::disabled())
+    }
+
+    /// Like [`IoBudget::new`], but admission waits that block emit
+    /// [`SpanKind::AdmissionWait`] spans on `recorder` when it is
+    /// enabled. [`crate::session::Session`] builds all its budgets
+    /// through this so backpressure stalls show up in traces.
+    pub fn traced(limit: usize, pool: Option<Arc<Pool>>, recorder: Recorder) -> Self {
         IoBudget {
             inner: Arc::new(BudgetInner {
                 limit: limit.max(1),
@@ -110,6 +122,7 @@ impl IoBudget {
                 idle_cv: Condvar::new(),
                 admissions: AtomicU64::new(0),
                 waits: AtomicU64::new(0),
+                recorder,
             }),
         }
     }
@@ -239,7 +252,8 @@ impl MemberBudget {
         }
         self.budget.waits.fetch_add(1, Ordering::Relaxed);
         self.state.waits.fetch_add(1, Ordering::Relaxed);
-        loop {
+        let wait_start = self.budget.recorder.is_enabled().then(|| self.budget.recorder.elapsed());
+        let guard = loop {
             match self.budget.pool() {
                 Some(p) => p.wait_until(&|| self.admittable()),
                 None => {
@@ -258,9 +272,13 @@ impl MemberBudget {
                 }
             }
             if let Some(g) = self.try_admit() {
-                return g;
+                break g;
             }
+        };
+        if let Some(start) = wait_start {
+            self.budget.recorder.push(SpanKind::AdmissionWait, start, self.budget.recorder.elapsed());
         }
+        guard
     }
 }
 

@@ -30,6 +30,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::metrics::{Recorder, SpanKind};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -59,6 +60,14 @@ struct Shared {
     shutdown: AtomicBool,
     /// Rotation seed so external stealers don't all hammer worker 0.
     next_steal: AtomicUsize,
+    /// `true` while a session has a recorder installed: the job-run
+    /// sites check this one relaxed flag before touching `recorder`,
+    /// so untraced pools pay a single load per job.
+    traced: AtomicBool,
+    /// Recorder installed by a traced session (disabled otherwise).
+    /// Jobs executed while it is installed are wrapped in
+    /// [`SpanKind::Task`] container spans.
+    recorder: Mutex<Recorder>,
 }
 
 impl Shared {
@@ -146,6 +155,18 @@ impl Shared {
         }
         None
     }
+
+    /// Execute one dequeued job, wrapped in a [`SpanKind::Task`]
+    /// container span when a session recorder is installed. The
+    /// untraced fast path is one relaxed load.
+    fn run_job(&self, job: Job) {
+        if !self.traced.load(Ordering::Relaxed) {
+            job();
+            return;
+        }
+        let r = self.recorder.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        r.record(SpanKind::Task, job);
+    }
 }
 
 /// Fixed-size work-stealing worker pool.
@@ -168,6 +189,8 @@ impl Pool {
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             next_steal: AtomicUsize::new(0),
+            traced: AtomicBool::new(false),
+            recorder: Mutex::new(Recorder::disabled()),
         });
         let workers = (0..n)
             .map(|i| {
@@ -271,7 +294,7 @@ impl Pool {
         let me = sh.current_worker();
         while pending.load(Ordering::SeqCst) > limit {
             if let Some(job) = sh.find_job(me) {
-                job();
+                sh.run_job(job);
                 continue;
             }
             // Nothing runnable: park until some job completes (group
@@ -308,7 +331,7 @@ impl Pool {
         let me = sh.current_worker();
         while !pred() {
             if let Some(job) = sh.find_job(me) {
-                job();
+                sh.run_job(job);
                 continue;
             }
             let g = sh.sleep_mx.lock().unwrap();
@@ -335,6 +358,29 @@ impl Pool {
     pub(crate) fn notify_waiters(&self) {
         self.shared.notify_all();
     }
+
+    /// Install a session recorder: every job the pool executes from now
+    /// on is wrapped in a [`SpanKind::Task`] container span. Disabled
+    /// recorders are ignored (installing one would only add overhead).
+    /// Last installer wins when sessions overlap on a shared pool.
+    pub fn install_recorder(&self, recorder: &Recorder) {
+        if !recorder.is_enabled() {
+            return;
+        }
+        *self.shared.recorder.lock().unwrap_or_else(|p| p.into_inner()) = recorder.clone();
+        self.shared.traced.store(true, Ordering::SeqCst);
+    }
+
+    /// Uninstall `recorder` if it is the one currently installed
+    /// (identity-compared, so one session's teardown cannot clobber a
+    /// recorder a later session installed on the same shared pool).
+    pub fn clear_recorder(&self, recorder: &Recorder) {
+        let mut g = self.shared.recorder.lock().unwrap_or_else(|p| p.into_inner());
+        if g.same(recorder) {
+            *g = Recorder::disabled();
+            self.shared.traced.store(false, Ordering::SeqCst);
+        }
+    }
 }
 
 impl Drop for Pool {
@@ -359,14 +405,14 @@ fn worker_loop(sh: &Arc<Shared>, me: usize) {
     WORKER_ID.with(|w| w.set((sh.id(), me + 1)));
     loop {
         if let Some(job) = sh.find_job(Some(me)) {
-            job();
+            sh.run_job(job);
             continue;
         }
         if sh.shutdown.load(Ordering::SeqCst) {
             // Drain: jobs enqueued before shutdown must still run, or a
             // scope owner would be left waiting on work nobody takes.
             while let Some(job) = sh.find_job(Some(me)) {
-                job();
+                sh.run_job(job);
             }
             break;
         }

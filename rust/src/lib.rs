@@ -103,7 +103,18 @@
 //!   provably excludes every matching row are dropped from the fetch
 //!   windows before any device read, accounted as
 //!   `pages_pruned`/`bytes_pruned` in [`cache::PrefetchStats`].
-//! * [`metrics`] — per-thread span timelines (the "VTune" for Figure 7).
+//! * [`metrics`] — observability for the whole pipeline. A sharded
+//!   per-thread [`metrics::Recorder`] (no lock on the record path;
+//!   disabled = one branch) collects spans for every subsystem — pool
+//!   tasks, budget admission waits, coalesced/scatter device reads,
+//!   retries/hedges/breaker trips, basket decode, page seals, zone
+//!   prunes, chain file-advances — and renders them as an ASCII
+//!   timeline (the "VTune" for Figure 7), CSV, or Chrome trace-event
+//!   JSON loadable in Perfetto. [`metrics::Registry`] folds every
+//!   stats struct into one named counter/gauge tree with log-bucketed
+//!   latency histograms (window submit→decoded, basket compress,
+//!   device read). Surfaced on the CLI as `rootio trace`,
+//!   `rootio stats` and the `rootio summary` bench-trajectory gate.
 //! * [`hadd`] — serial and parallel merging of existing files (§3.4).
 
 pub mod cache;

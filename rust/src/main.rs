@@ -7,6 +7,9 @@
 //! rootio inspect <path>
 //! rootio read <path> [--threads N] [--granularity basket|branch]
 //! rootio analyze <path> [--threads N]
+//! rootio trace <bench|read|write> [path] [--out trace.json] [--threads N]
+//! rootio stats [path] [--threads N]
+//! rootio summary [--dir .] [--baseline bench_baselines.json] [--out BENCH_summary.json]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no external CLI crates available in
@@ -16,16 +19,25 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use rootio_par::cache::{Predicate, PrefetchOptions};
 use rootio_par::compress::{Codec, Settings};
 use rootio_par::coordinator::baskets::{self, PipelineOptions};
 use rootio_par::coordinator::read::{read_columns, Granularity, ReadOptions};
+use rootio_par::coordinator::write::write_blocks_in_session;
 use rootio_par::error::Result;
 use rootio_par::format::reader::FileReader;
+use rootio_par::framework::chain::Chain;
 use rootio_par::framework::dataset::DatasetKind;
+use rootio_par::metrics::{json, Recorder};
 use rootio_par::runtime::Engine;
+use rootio_par::serial::column::ColumnData;
+use rootio_par::serial::schema::Schema;
+use rootio_par::session::{Session, SessionConfig};
 use rootio_par::storage::local::LocalFile;
+use rootio_par::storage::mem::MemBackend;
 use rootio_par::storage::BackendRef;
 use rootio_par::tree::reader::TreeReader;
+use rootio_par::tree::writer::{FlushMode, Layout, WriterConfig};
 use rootio_par::{experiments, imt};
 
 fn main() -> ExitCode {
@@ -68,7 +80,10 @@ fn usage() -> Result<()> {
          rootio generate --out <path> [--dataset reco|aod|gensim|xaod] [--entries N] \
          [--codec none|lz4|zlib] [--level L]\n  rootio inspect <path>\n  \
          rootio read <path> [--threads N] [--granularity basket|branch]\n  \
-         rootio analyze <path> [--threads N]"
+         rootio analyze <path> [--threads N]\n  \
+         rootio trace <bench|read|write> [path] [--out trace.json] [--threads N]\n  \
+         rootio stats [path] [--threads N]\n  \
+         rootio summary [--dir .] [--baseline bench_baselines.json] [--out BENCH_summary.json]"
     );
     Ok(())
 }
@@ -81,6 +96,9 @@ fn run(args: &[String]) -> Result<()> {
         Some("inspect") => inspect(pos.get(1).copied()),
         Some("read") => read(pos.get(1).copied(), &opts),
         Some("analyze") => analyze(pos.get(1).copied(), &opts),
+        Some("trace") => trace(pos.get(1).copied(), pos.get(2).copied(), &opts),
+        Some("stats") => stats(pos.get(1).copied(), &opts),
+        Some("summary") => summary(&opts),
         _ => usage(),
     }
 }
@@ -278,6 +296,340 @@ fn analyze(path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
             let bar = "#".repeat((count / max * 50.0) as usize);
             println!("{lo:6.1} | {bar} {count}");
         }
+    }
+    Ok(())
+}
+
+/// Write `files` small paged (v3/v4) tree files into fresh in-memory
+/// backends through `session` — a deliberately tight cluster budget so
+/// the trace shows real admission waits, pipelined flushes so sealing
+/// overlaps filling, and a chain-monotone branch 0 so a later
+/// `scan_where` can zone-prune.
+fn traced_write_files(session: &Session, files: usize) -> Result<Vec<BackendRef>> {
+    let n_branches = 16usize;
+    let entries = 8_192usize;
+    let schema = Schema::flat_f32("b", n_branches);
+    let cfg = WriterConfig {
+        basket_entries: 1024,
+        compression: Settings::new(Codec::Lz4r, 3),
+        flush: FlushMode::Pipelined,
+        max_inflight_clusters: 2,
+        layout: Layout::Paged { page_entries: 256 },
+        ..Default::default()
+    };
+    let mut out = Vec::new();
+    for f in 0..files {
+        let be: BackendRef = Arc::new(MemBackend::new());
+        let block: Vec<ColumnData> = (0..n_branches)
+            .map(|b| {
+                ColumnData::F32(
+                    (0..entries)
+                        .map(|i| {
+                            if b == 0 {
+                                (f * entries + i) as f32
+                            } else {
+                                ((i * 31 + b * 7 + f) % 997) as f32
+                            }
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        write_blocks_in_session(
+            session,
+            be.clone(),
+            schema.clone(),
+            "events",
+            cfg.clone(),
+            vec![block],
+        )?;
+        out.push(be);
+    }
+    Ok(out)
+}
+
+/// Distinct subsystems present in a recorder's spans, sorted.
+fn trace_subsystems(rec: &Recorder) -> Vec<&'static str> {
+    let mut subs: Vec<&'static str> =
+        rec.snapshot().iter().map(|s| s.kind.subsystem()).collect();
+    subs.sort_unstable();
+    subs.dedup();
+    subs
+}
+
+/// `rootio trace <bench|read|write>` — run a real pipeline under an
+/// enabled recorder and export a Chrome trace-event (Perfetto-loadable)
+/// JSON file, plus the ASCII timeline on stdout.
+fn trace(what: Option<&str>, path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
+    let out = opts.get("out").copied().unwrap_or("trace.json");
+    let threads: usize = opts.get("threads").and_then(|v| v.parse().ok()).unwrap_or(8);
+    imt::enable(threads);
+    let rec = Recorder::new();
+    match what.unwrap_or("bench") {
+        // Full pipeline: a tight-budget pipelined write of a small file
+        // chain, then an 8-worker predicate scan of that chain — spans
+        // from the pool, budgets, writer, prefetcher, storage, chain
+        // and codec layers land in one timeline.
+        "bench" => {
+            let files = {
+                let session = Session::new(SessionConfig {
+                    max_inflight_clusters: 2,
+                    recorder: rec.clone(),
+                    ..Default::default()
+                });
+                let files = traced_write_files(&session, 3)?;
+                session.drain()?;
+                files
+            };
+            let total_rows = 3 * 8_192;
+            let cutoff = total_rows as f64 * 0.9;
+            let chain = Chain::new(files).with_recorder(rec.clone());
+            let mut rows = 0u64;
+            let report = chain.scan_where(
+                Predicate::ge(0, cutoff),
+                &PrefetchOptions::fixed(4),
+                |b| rows += b.rows() as u64,
+            )?;
+            println!(
+                "traced chain scan: {} files, {} rows matched, {} pages pruned",
+                report.files, rows, report.prefetch.pages_pruned
+            );
+        }
+        // Traced read of a real on-disk file through the prefetcher.
+        "read" => {
+            let file = open_file(path)?;
+            let session = Session::new(SessionConfig {
+                recorder: rec.clone(),
+                ..Default::default()
+            });
+            let reader = TreeReader::open_first(file)?;
+            let mut stream = reader.stream_in_session(&PrefetchOptions::fixed(4), &session)?;
+            let cols = stream.read_all_columns()?;
+            println!("traced read: {} columns, {} entries", cols.len(), reader.entries());
+        }
+        // Traced write phase only.
+        "write" => {
+            let session = Session::new(SessionConfig {
+                max_inflight_clusters: 2,
+                recorder: rec.clone(),
+                ..Default::default()
+            });
+            let files = traced_write_files(&session, 3)?;
+            session.drain()?;
+            println!("traced write: {} files", files.len());
+        }
+        other => {
+            return Err(rootio_par::Error::Coordinator(format!(
+                "unknown trace target '{other}' (bench|read|write)"
+            )))
+        }
+    }
+    rec.check()?;
+    std::fs::write(out, rec.to_chrome_json())
+        .map_err(|e| rootio_par::Error::Coordinator(format!("writing {out}: {e}")))?;
+    let subs = trace_subsystems(&rec);
+    println!(
+        "\n{}\nwrote {out}: {} spans on {} threads across {} subsystems ({}); \
+         useful fraction {:.2} — open in ui.perfetto.dev",
+        rec.timeline_ascii(100),
+        rec.snapshot().len(),
+        rec.n_threads(),
+        subs.len(),
+        subs.join(", "),
+        rec.useful_fraction(),
+    );
+    Ok(())
+}
+
+/// `rootio stats [path]` — one-shot metrics-registry dump: stream the
+/// file (or a synthesized stand-in) through a session and print the
+/// unified counter/gauge/histogram tree as JSON.
+fn stats(path: Option<&str>, opts: &HashMap<&str, &str>) -> Result<()> {
+    let threads: usize = opts.get("threads").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let be: BackendRef = match path {
+        Some(p) => Arc::new(LocalFile::open(p)?),
+        None => experiments::util::synthesize_flat_f32(
+            8,
+            16_384,
+            1024,
+            Settings::new(Codec::Lz4r, 3),
+        )?,
+    };
+    let pool = Arc::new(imt::Pool::new(threads));
+    let session = Session::with_pool(pool, SessionConfig::default());
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be)?))?;
+    let mut stream = reader.stream_in_session(&PrefetchOptions::fixed(4), &session)?;
+    stream.read_all_columns()?;
+    let mut snap = session.metrics().snapshot();
+    snap.put_prefetch("prefetch", &stream.stats());
+    snap.put_session(&session.stats());
+    snap.put_pool(&rootio_par::compress::pool::stats());
+    println!("{}", snap.to_json());
+    Ok(())
+}
+
+/// One bench's headline numbers pulled out of its `BENCH_*.json`.
+struct BenchHeadline {
+    bench: String,
+    best_mbps: f64,
+    min_wall_ms: f64,
+}
+
+fn load_bench_headline(path: &std::path::Path) -> Result<BenchHeadline> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| rootio_par::Error::Coordinator(format!("{}: {e}", path.display())))?;
+    let doc = json::parse(&text)?;
+    let bench = doc
+        .get("bench")
+        .and_then(json::Json::as_str)
+        .ok_or_else(|| {
+            rootio_par::Error::Coordinator(format!("{}: missing \"bench\"", path.display()))
+        })?
+        .to_string();
+    let mut best_mbps = 0.0f64;
+    let mut min_wall_ms = f64::INFINITY;
+    for row in doc.get("rows").and_then(json::Json::as_arr).unwrap_or(&[]) {
+        if let Some(m) = row.get("MBps").and_then(json::Json::as_f64) {
+            best_mbps = best_mbps.max(m);
+        }
+        if let Some(w) = row.get("wall_ms").and_then(json::Json::as_f64) {
+            if w > 0.0 {
+                min_wall_ms = min_wall_ms.min(w);
+            }
+        }
+    }
+    if !min_wall_ms.is_finite() {
+        min_wall_ms = 0.0;
+    }
+    Ok(BenchHeadline { bench, best_mbps, min_wall_ms })
+}
+
+/// `rootio summary` — collect every `BENCH_*.json` in `--dir` into one
+/// `BENCH_summary.json`, compare each bench's headline throughput to
+/// the committed baselines and fail on a >2x regression. `STATS_*.json`
+/// and `TRACE_*.json` artifacts in the directory are indexed alongside.
+fn summary(opts: &HashMap<&str, &str>) -> Result<()> {
+    let dir = opts.get("dir").copied().unwrap_or(".");
+    let out = opts.get("out").copied().unwrap_or("BENCH_summary.json");
+
+    // Baselines are optional: no file means no gate (first runs on a
+    // new machine still produce a summary).
+    let baseline_text = match opts.get("baseline").copied() {
+        Some(p) => Some(std::fs::read_to_string(p).map_err(|e| {
+            rootio_par::Error::Coordinator(format!("baseline {p}: {e}"))
+        })?),
+        None => std::fs::read_to_string("bench_baselines.json")
+            .or_else(|_| std::fs::read_to_string("rust/bench_baselines.json"))
+            .ok(),
+    };
+    let mut baselines: Vec<(String, f64)> = Vec::new();
+    if let Some(text) = &baseline_text {
+        let doc = json::parse(text)?;
+        for b in doc.get("benches").and_then(json::Json::as_arr).unwrap_or(&[]) {
+            if let (Some(name), Some(mbps)) = (
+                b.get("bench").and_then(json::Json::as_str),
+                b.get("MBps").and_then(json::Json::as_f64),
+            ) {
+                baselines.push((name.to_string(), mbps));
+            }
+        }
+    }
+
+    let mut heads: Vec<BenchHeadline> = Vec::new();
+    let mut stats_files: Vec<String> = Vec::new();
+    let mut trace_files: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| rootio_par::Error::Coordinator(format!("reading {dir}: {e}")))?
+    {
+        let entry =
+            entry.map_err(|e| rootio_par::Error::Coordinator(format!("reading {dir}: {e}")))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.ends_with(".json") || name == out {
+            continue;
+        }
+        if name.starts_with("BENCH_") {
+            heads.push(load_bench_headline(&entry.path())?);
+        } else if name.starts_with("STATS_") {
+            stats_files.push(name);
+        } else if name.starts_with("TRACE_") {
+            trace_files.push(name);
+        }
+    }
+    heads.sort_by(|a, b| a.bench.cmp(&b.bench));
+    stats_files.sort();
+    trace_files.sort();
+    if heads.is_empty() {
+        return Err(rootio_par::Error::Coordinator(format!(
+            "summary: no BENCH_*.json files in {dir} (run `rootio bench` first)"
+        )));
+    }
+
+    let mut regressed: Vec<String> = Vec::new();
+    let mut body = String::from("{\"summary\":[");
+    for (i, h) in heads.iter().enumerate() {
+        let base = baselines.iter().find(|(n, _)| *n == h.bench).map(|(_, m)| *m);
+        // Gate: >2x throughput regression against the pinned baseline.
+        let bad = matches!(base, Some(b) if b > 0.0 && h.best_mbps < b / 2.0);
+        if bad {
+            regressed.push(format!(
+                "{} ({:.1} MB/s vs baseline {:.1})",
+                h.bench,
+                h.best_mbps,
+                base.unwrap_or(0.0)
+            ));
+        }
+        println!(
+            "{:<10} best {:>9.1} MB/s  min wall {:>9.2} ms  baseline {:>9}  {}",
+            h.bench,
+            h.best_mbps,
+            h.min_wall_ms,
+            base.map_or("-".into(), |b| format!("{b:.1}")),
+            if bad { "REGRESSED" } else { "ok" },
+        );
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!(
+            "{{\"bench\":\"{}\",\"best_MBps\":{:.3},\"min_wall_ms\":{:.3},\
+             \"baseline_MBps\":{},\"regressed\":{}}}",
+            json::escape(&h.bench),
+            h.best_mbps,
+            h.min_wall_ms,
+            base.map_or("null".into(), |b| format!("{b:.3}")),
+            bad,
+        ));
+    }
+    body.push_str("],\"stats_files\":[");
+    for (i, f) in stats_files.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!("\"{}\"", json::escape(f)));
+    }
+    body.push_str("],\"trace_files\":[");
+    for (i, f) in trace_files.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!("\"{}\"", json::escape(f)));
+    }
+    body.push_str("]}\n");
+    let out_path = std::path::Path::new(dir).join(out);
+    std::fs::write(&out_path, body).map_err(|e| {
+        rootio_par::Error::Coordinator(format!("writing {}: {e}", out_path.display()))
+    })?;
+    println!(
+        "wrote {} ({} benches, {} stats, {} traces)",
+        out_path.display(),
+        heads.len(),
+        stats_files.len(),
+        trace_files.len()
+    );
+    if !regressed.is_empty() {
+        return Err(rootio_par::Error::Coordinator(format!(
+            "bench-trajectory regression (>2x vs baseline): {}",
+            regressed.join(", ")
+        )));
     }
     Ok(())
 }

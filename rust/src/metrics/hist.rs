@@ -1,0 +1,199 @@
+//! Log-bucketed latency histograms.
+//!
+//! A [`Histogram`] is a lock-free array of power-of-two nanosecond
+//! buckets: `record` is three relaxed atomic adds, so it can sit on
+//! the window-decode / basket-compress / device-read hot paths without
+//! serialising them. [`HistSnapshot`] is the value type the registry
+//! stores: it subtracts (`since`) for per-phase deltas and answers
+//! quantile queries (p50/p95/p99) at bucket resolution — good to ~2x,
+//! which is what a regression gate needs, without retaining one entry
+//! per observation the way the old `window_latencies` vec did.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of power-of-two buckets: bucket `i` holds observations in
+/// `[2^i, 2^(i+1))` nanoseconds (bucket 0 also absorbs 0 ns), which
+/// spans 1 ns ..= ~584 years — every latency this crate can see.
+pub const BUCKETS: usize = 64;
+
+/// Concurrent log-bucketed histogram of durations.
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+fn bucket_of(ns: u64) -> usize {
+    // floor(log2(ns)) with 0 mapped to bucket 0.
+    (63 - ns.max(1).leading_zeros()) as usize
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    /// Record one observation. Never blocks; three relaxed atomics.
+    pub fn record(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current bucket counts out.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`].
+#[derive(Clone, Copy, Debug)]
+pub struct HistSnapshot {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Observations accumulated since the `earlier` snapshot — the
+    /// same delta idiom every stats struct in this crate uses.
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (i, dst) in buckets.iter_mut().enumerate() {
+            *dst = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.saturating_sub(earlier.count),
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.count)
+    }
+
+    /// Value at quantile `p` in `[0, 1]`: the upper bound of the bucket
+    /// holding the rank-`ceil(p * count)` observation (so the reported
+    /// value is ≥ the true one, never flattering). Zero when empty.
+    pub fn quantile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let hi = if i >= 63 { u64::MAX } else { (2u64 << i) - 1 };
+                return Duration::from_nanos(hi);
+            }
+        }
+        Duration::from_nanos(u64::MAX)
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.p50(), Duration::ZERO);
+        assert_eq!(s.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantiles_bound_the_observations() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 10);
+        // p50 upper bucket bound must cover 50 µs but stay within 2x.
+        assert!(s.p50() >= Duration::from_micros(50), "p50 {:?}", s.p50());
+        assert!(s.p50() < Duration::from_micros(200), "p50 {:?}", s.p50());
+        // p99 lands in the 1 ms outlier's bucket.
+        assert!(s.p99() >= Duration::from_micros(1000), "p99 {:?}", s.p99());
+        assert!(s.p99() < Duration::from_micros(4000), "p99 {:?}", s.p99());
+        assert!(s.mean() >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn since_subtracts_buckets_and_count() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(5));
+        let base = h.snapshot();
+        h.record(Duration::from_micros(5));
+        h.record(Duration::from_millis(5));
+        let delta = h.snapshot().since(&base);
+        assert_eq!(delta.count(), 2);
+        assert!(delta.p99() >= Duration::from_millis(5));
+        // The full snapshot still sees all three.
+        assert_eq!(h.snapshot().count(), 3);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(Duration::from_nanos(i * 37 + 1));
+                    }
+                })
+            })
+            .collect();
+        for t in hs {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,19 +1,41 @@
-//! Per-thread activity timelines — the stand-in for the paper's VTune
-//! screenshots (Figure 7).
+//! Pipeline observability: per-thread span timelines (the stand-in
+//! for the paper's VTune screenshots, Figure 7) plus the unified
+//! metrics [`Registry`].
 //!
-//! A [`Recorder`] collects `(thread, kind, start, end)` spans from any
-//! instrumented code path. After a run it can report the useful-work
-//! fraction per thread, dump CSV for plotting, and render the same kind
-//! of ASCII timeline the paper shows: one stripe per thread, dark where
-//! the thread does useful work.
+//! A [`Recorder`] is a cheap-clone handle collecting `(thread, kind,
+//! start, end)` spans from any instrumented code path — pool task
+//! execution, budget admission waits, prefetch fetch/decode, resilient
+//! retries/hedges, writer flush stages, chain file transitions. The
+//! record path is *sharded*: each thread appends to its own buffer
+//! (one uncontended mutex per thread, drained only at snapshot), so
+//! recording never serialises the workers it measures, and a
+//! [`Recorder::disabled`] handle costs a single branch. After a run it
+//! reports the useful-work fraction per thread, dumps CSV, renders the
+//! paper-style ASCII timeline, and exports Chrome trace-event JSON
+//! that Perfetto / `chrome://tracing` load directly.
+//!
+//! Submodules: [`hist`] (log-bucketed latency histograms),
+//! [`registry`] (the named counter/gauge tree), [`json`] (reader for
+//! the crate's own artifacts).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-use std::thread::ThreadId;
+pub mod hist;
+pub mod json;
+pub mod registry;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{Registry, Snapshot};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::time::{Duration, Instant};
 
-/// What a thread was doing during a span. `Running` counts as *not*
-/// useful (the "green" in VTune); everything else is useful ("brown").
+use crate::error::{Error, Result};
+
+/// What a thread was doing during a span. Waiting kinds (`Running`,
+/// `AdmissionWait`, `Retry`, `Hedge`) and the `Task` container count
+/// as *not* useful (the "green" in VTune); everything else is useful
+/// ("brown").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SpanKind {
     Startup,
@@ -28,11 +50,46 @@ pub enum SpanKind {
     Merge,
     /// Scheduled but not doing useful work (lock wait, queue wait).
     Running,
+    /// One pool job executing, whatever it does. A *container* span:
+    /// the real work inside it records its own kind, so `Task` itself
+    /// is excluded from useful-work accounting (no double counting)
+    /// but shows task boundaries in the Chrome trace.
+    Task,
+    /// A prefetch window's coalesced fetch (plan → verify → decode
+    /// spawn).
+    Fetch,
+    /// The device-level vectored read inside a fetch.
+    ScatterRead,
+    /// Backoff sleep before a storage retry attempt.
+    Retry,
+    /// A hedged duplicate read racing a slow primary.
+    Hedge,
+    /// Blocked acquiring an `IoBudget` slot.
+    AdmissionWait,
+    /// Sealing one page/basket of a paged cluster (serialise +
+    /// compress, recorded by those kinds) — the paged-layout container.
+    PageSeal,
+    /// Zone-map predicate pruning while building a fetch plan.
+    ZonePrune,
+    /// A chain advancing to its next file (open + schema check +
+    /// prefetcher prime).
+    ChainAdvance,
+    /// Circuit-breaker state transition (zero-width mark: open,
+    /// half-open probe window, or close).
+    BreakerTrip,
 }
 
 impl SpanKind {
     pub fn is_useful(self) -> bool {
-        !matches!(self, SpanKind::Running)
+        !matches!(
+            self,
+            SpanKind::Running
+                | SpanKind::Task
+                | SpanKind::AdmissionWait
+                | SpanKind::Retry
+                | SpanKind::Hedge
+                | SpanKind::BreakerTrip
+        )
     }
 
     pub fn glyph(self) -> char {
@@ -48,6 +105,16 @@ impl SpanKind {
             SpanKind::Write => 'w',
             SpanKind::Merge => 'm',
             SpanKind::Running => '.',
+            SpanKind::Task => ':',
+            SpanKind::Fetch => 'f',
+            SpanKind::ScatterRead => 'v',
+            SpanKind::Retry => '~',
+            SpanKind::Hedge => 'h',
+            SpanKind::AdmissionWait => 'a',
+            SpanKind::PageSeal => 'P',
+            SpanKind::ZonePrune => 'z',
+            SpanKind::ChainAdvance => '>',
+            SpanKind::BreakerTrip => '!',
         }
     }
 
@@ -64,11 +131,44 @@ impl SpanKind {
             SpanKind::Write => "write",
             SpanKind::Merge => "merge",
             SpanKind::Running => "running",
+            SpanKind::Task => "task",
+            SpanKind::Fetch => "fetch",
+            SpanKind::ScatterRead => "scatter_read",
+            SpanKind::Retry => "retry",
+            SpanKind::Hedge => "hedge",
+            SpanKind::AdmissionWait => "admission_wait",
+            SpanKind::PageSeal => "page_seal",
+            SpanKind::ZonePrune => "zone_prune",
+            SpanKind::ChainAdvance => "chain_advance",
+            SpanKind::BreakerTrip => "breaker_trip",
+        }
+    }
+
+    /// Which subsystem emits this kind — the `cat` field of the Chrome
+    /// trace, so Perfetto can filter per layer.
+    pub fn subsystem(self) -> &'static str {
+        match self {
+            SpanKind::Task => "pool",
+            SpanKind::AdmissionWait => "budget",
+            SpanKind::Fetch => "prefetch",
+            SpanKind::ScatterRead
+            | SpanKind::Read
+            | SpanKind::Retry
+            | SpanKind::Hedge
+            | SpanKind::BreakerTrip => "storage",
+            SpanKind::Serialize | SpanKind::Compress | SpanKind::PageSeal | SpanKind::Write => {
+                "writer"
+            }
+            SpanKind::ChainAdvance | SpanKind::ZonePrune => "chain",
+            SpanKind::Decompress | SpanKind::Deserialize => "codec",
+            SpanKind::Merge => "merger",
+            SpanKind::Startup | SpanKind::Generate | SpanKind::Process => "framework",
+            SpanKind::Running => "idle",
         }
     }
 }
 
-/// One recorded activity interval, times relative to the recorder epoch.
+/// One recorded activity interval, times relative to [`process_epoch`].
 #[derive(Clone, Copy, Debug)]
 pub struct Span {
     pub thread: usize,
@@ -77,71 +177,252 @@ pub struct Span {
     pub end: Duration,
 }
 
-#[derive(Default)]
-struct State {
-    spans: Vec<Span>,
-    threads: HashMap<ThreadId, usize>,
+/// The process-wide monotonic t0 every span is timed against, so
+/// spans pushed by different subsystems (and different recorders)
+/// share one timebase.
+pub fn process_epoch() -> &'static Instant {
+    static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
 }
 
-/// Thread-safe span collector.
+/// Time a closure against [`process_epoch`]; returns `(value, (start,
+/// end))`. The interval can be handed to [`Recorder::push`].
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, (Duration, Duration)) {
+    let t0 = process_epoch().elapsed();
+    let out = f();
+    let t1 = process_epoch().elapsed();
+    (out, (t0, t1))
+}
+
+/// One thread's private span buffer. Only its owning thread appends;
+/// the recorder locks it briefly at snapshot time to drain.
+struct Shard {
+    thread: usize,
+    buf: Mutex<Vec<Span>>,
+}
+
+struct Inner {
+    /// Distinguishes recorders in the thread-local shard cache (an
+    /// `Arc` pointer can be reused after drop; this never is).
+    id: u64,
+    shards: Mutex<Vec<Arc<Shard>>>,
+    /// Spans already pulled out of shards by earlier snapshots.
+    drained: Mutex<Vec<Span>>,
+    next_thread: AtomicUsize,
+    /// A recording thread panicked while holding a shard lock. The
+    /// spans are plain values so recovery is safe, but surfaced via
+    /// [`Recorder::check`] as the PR 2/3 `Error::Sync` convention.
+    poisoned: AtomicBool,
+}
+
+thread_local! {
+    /// Cache of (recorder id, this thread's shard). One entry per
+    /// recorder this thread has recorded into; entries whose recorder
+    /// died are pruned on the next miss.
+    static SHARDS: RefCell<Vec<(u64, Arc<Shard>, Weak<Inner>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Recover a poisoned lock: span data is plain values, so the state
+/// is usable — the poisoning is remembered and surfaced by `check()`.
+fn lock_recover<'a, T>(m: &'a Mutex<T>, poisoned: &AtomicBool) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| {
+        poisoned.store(true, Ordering::Release);
+        p.into_inner()
+    })
+}
+
+/// Thread-safe span collector handle. `Clone` is an `Arc` bump; all
+/// clones feed the same buffers. A [`Recorder::disabled`] handle
+/// (also the `Default`) makes every record call a single branch.
+#[derive(Clone, Default)]
 pub struct Recorder {
-    epoch: Instant,
-    state: Mutex<State>,
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Recorder({})", if self.inner.is_some() { "enabled" } else { "disabled" })
+    }
 }
 
 impl Recorder {
+    /// An enabled recorder (historical name; same as [`Recorder::enabled`]).
     pub fn new() -> Self {
-        Recorder { epoch: Instant::now(), state: Mutex::new(State::default()) }
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                shards: Mutex::new(Vec::new()),
+                drained: Mutex::new(Vec::new()),
+                next_thread: AtomicUsize::new(0),
+                poisoned: AtomicBool::new(false),
+            })),
+        }
     }
 
-    fn thread_index(&self, state: &mut State) -> usize {
-        let id = std::thread::current().id();
-        let next = state.threads.len();
-        *state.threads.entry(id).or_insert(next)
+    pub fn enabled() -> Self {
+        Recorder::new()
     }
 
-    /// Time `f` and record it under `kind`.
+    /// The no-op handle: every call is one branch, nothing allocates.
+    pub fn disabled() -> Self {
+        Recorder { inner: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Do two handles record into the same buffers? (Two disabled
+    /// handles compare equal — neither records anything.) Lets an
+    /// installer uninstall only its *own* recorder from a shared pool.
+    pub fn same(&self, other: &Recorder) -> bool {
+        match (&self.inner, &other.inner) {
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            (None, None) => true,
+            _ => false,
+        }
+    }
+
+    /// This thread's shard for this recorder, creating + registering
+    /// it on first use.
+    fn shard(inner: &Arc<Inner>) -> Arc<Shard> {
+        SHARDS.with(|cache| {
+            let mut cache = cache.borrow_mut();
+            if let Some((_, shard, _)) = cache.iter().find(|(id, _, _)| *id == inner.id) {
+                return shard.clone();
+            }
+            cache.retain(|(_, _, rec)| rec.strong_count() > 0);
+            let shard = Arc::new(Shard {
+                thread: inner.next_thread.fetch_add(1, Ordering::Relaxed),
+                buf: Mutex::new(Vec::new()),
+            });
+            lock_recover(&inner.shards, &inner.poisoned).push(shard.clone());
+            cache.push((inner.id, shard.clone(), Arc::downgrade(inner)));
+            shard
+        })
+    }
+
+    fn append(inner: &Arc<Inner>, kind: SpanKind, start: Duration, end: Duration) {
+        let shard = Self::shard(inner);
+        let mut buf = lock_recover(&shard.buf, &inner.poisoned);
+        buf.push(Span { thread: shard.thread, kind, start, end });
+    }
+
+    /// Time `f` and record it under `kind`. Disabled: runs `f` with no
+    /// clock reads at all.
     pub fn record<R>(&self, kind: SpanKind, f: impl FnOnce() -> R) -> R {
-        let start = self.epoch.elapsed();
+        let Some(inner) = &self.inner else { return f() };
+        let start = process_epoch().elapsed();
         let out = f();
-        let end = self.epoch.elapsed();
-        let mut st = self.state.lock().unwrap();
-        let thread = self.thread_index(&mut st);
-        st.spans.push(Span { thread, kind, start, end });
+        let end = process_epoch().elapsed();
+        Self::append(inner, kind, start, end);
         out
     }
 
-    /// Record an externally timed span.
+    /// Record an externally timed span (times from [`process_epoch`],
+    /// e.g. via [`timed`]).
     pub fn push(&self, kind: SpanKind, start: Duration, end: Duration) {
-        let mut st = self.state.lock().unwrap();
-        let thread = self.thread_index(&mut st);
-        st.spans.push(Span { thread, kind, start, end });
-    }
-
-    pub fn elapsed(&self) -> Duration {
-        self.epoch.elapsed()
-    }
-
-    pub fn snapshot(&self) -> Vec<Span> {
-        self.state.lock().unwrap().spans.clone()
-    }
-
-    pub fn n_threads(&self) -> usize {
-        self.state.lock().unwrap().threads.len()
-    }
-
-    /// Useful-work time per thread, and the total wall time observed.
-    pub fn useful_per_thread(&self) -> (Vec<Duration>, Duration) {
-        let st = self.state.lock().unwrap();
-        let n = st.threads.len();
-        let mut useful = vec![Duration::ZERO; n];
-        let mut wall = Duration::ZERO;
-        for s in &st.spans {
-            if s.kind.is_useful() {
-                useful[s.thread] += s.end.saturating_sub(s.start);
-            }
-            wall = wall.max(s.end);
+        if let Some(inner) = &self.inner {
+            Self::append(inner, kind, start, end);
         }
+    }
+
+    /// Record an instantaneous event (breaker transition, prune
+    /// decision) as a zero-length span.
+    pub fn mark(&self, kind: SpanKind) {
+        if let Some(inner) = &self.inner {
+            let t = process_epoch().elapsed();
+            Self::append(inner, kind, t, t);
+        }
+    }
+
+    /// Time since the process epoch (kept for callers that stamp their
+    /// own span ends, e.g. the merger output loop).
+    pub fn elapsed(&self) -> Duration {
+        process_epoch().elapsed()
+    }
+
+    /// Surface recording-side lock poisoning (a thread panicked while
+    /// appending) as [`Error::Sync`] instead of a propagated panic.
+    pub fn check(&self) -> Result<()> {
+        match &self.inner {
+            Some(inner) if inner.poisoned.load(Ordering::Acquire) => Err(Error::Sync(
+                "metrics recorder shard lock poisoned by a panicked thread".into(),
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// Drain every thread shard and return all spans recorded so far,
+    /// sorted by start time. Cumulative: repeated snapshots return the
+    /// same (growing) history.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        let shards: Vec<Arc<Shard>> =
+            lock_recover(&inner.shards, &inner.poisoned).clone();
+        let mut drained = lock_recover(&inner.drained, &inner.poisoned);
+        for shard in shards {
+            let mut buf = lock_recover(&shard.buf, &inner.poisoned);
+            drained.append(&mut buf);
+        }
+        let mut out = drained.clone();
+        drop(drained);
+        out.sort_by_key(|s| (s.start, s.thread));
+        out
+    }
+
+    /// Threads that have recorded at least one span.
+    pub fn n_threads(&self) -> usize {
+        match &self.inner {
+            Some(inner) => inner.next_thread.load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Useful-work time per thread (union of useful spans — nested or
+    /// overlapping spans never double-count), and the wall time
+    /// between the first span start and the last span end.
+    pub fn useful_per_thread(&self) -> (Vec<Duration>, Duration) {
+        let spans = self.snapshot();
+        let n = self
+            .n_threads()
+            .max(spans.iter().map(|s| s.thread + 1).max().unwrap_or(0));
+        let mut per: Vec<Vec<(Duration, Duration)>> = vec![Vec::new(); n];
+        let mut t0 = Duration::MAX;
+        let mut t1 = Duration::ZERO;
+        for s in &spans {
+            t0 = t0.min(s.start);
+            t1 = t1.max(s.end.max(s.start));
+            if s.kind.is_useful() && s.end > s.start {
+                per[s.thread].push((s.start, s.end));
+            }
+        }
+        let wall = if spans.is_empty() { Duration::ZERO } else { t1.saturating_sub(t0) };
+        let useful = per
+            .into_iter()
+            .map(|mut iv| {
+                // Interval union (input already start-sorted by snapshot).
+                iv.sort_by_key(|&(s, _)| s);
+                let mut total = Duration::ZERO;
+                let mut cur: Option<(Duration, Duration)> = None;
+                for (s, e) in iv {
+                    match &mut cur {
+                        Some((_, ce)) if s <= *ce => *ce = (*ce).max(e),
+                        _ => {
+                            if let Some((cs, ce)) = cur.take() {
+                                total += ce.saturating_sub(cs);
+                            }
+                            cur = Some((s, e));
+                        }
+                    }
+                }
+                if let Some((cs, ce)) = cur {
+                    total += ce.saturating_sub(cs);
+                }
+                total
+            })
+            .collect();
         (useful, wall)
     }
 
@@ -171,55 +452,90 @@ impl Recorder {
         out
     }
 
+    /// Chrome trace-event JSON (the `traceEvents` array of complete
+    /// `"ph":"X"` events). Loadable by Perfetto / `chrome://tracing`.
+    /// Timestamps are microseconds from the first recorded span.
+    pub fn to_chrome_json(&self) -> String {
+        let spans = self.snapshot();
+        let t0 = spans.iter().map(|s| s.start).min().unwrap_or_default();
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        for (i, s) in spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let ts = s.start.saturating_sub(t0).as_secs_f64() * 1e6;
+            let dur = s.end.saturating_sub(s.start).as_secs_f64() * 1e6;
+            out.push_str(&format!(
+                "\n{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{}}}",
+                s.kind.name(),
+                s.kind.subsystem(),
+                ts,
+                dur.max(0.001),
+                s.thread
+            ));
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
     /// ASCII timeline: one row per thread, `width` buckets across the
     /// observed wall time. A bucket shows the glyph of the dominant
-    /// useful kind, '.' if only `Running`, ' ' if idle.
+    /// useful kind, the dominant waiting glyph if only waits, ' ' if
+    /// idle.
     pub fn timeline_ascii(&self, width: usize) -> String {
         let spans = self.snapshot();
-        let n_threads = self.n_threads();
-        let wall = spans.iter().map(|s| s.end).max().unwrap_or_default();
-        if wall.is_zero() || n_threads == 0 || width == 0 {
+        let n_threads = self
+            .n_threads()
+            .max(spans.iter().map(|s| s.thread + 1).max().unwrap_or(0));
+        if spans.is_empty() || n_threads == 0 || width == 0 {
+            return String::new();
+        }
+        let t0 = spans.iter().map(|s| s.start).min().unwrap_or_default();
+        let wall = spans
+            .iter()
+            .map(|s| s.end.max(s.start).saturating_sub(t0))
+            .max()
+            .unwrap_or_default();
+        if wall.is_zero() {
             return String::new();
         }
         let bucket = wall.as_secs_f64() / width as f64;
-        // per (thread, bucket): accumulated useful time per kind glyph
-        let mut grid: Vec<Vec<HashMap<char, f64>>> = vec![vec![HashMap::new(); width]; n_threads];
+        // per (thread, bucket): accumulated time per kind
+        let mut grid: Vec<Vec<std::collections::HashMap<SpanKind, f64>>> =
+            vec![vec![std::collections::HashMap::new(); width]; n_threads];
         for s in &spans {
-            let b0 = ((s.start.as_secs_f64() / bucket) as usize).min(width - 1);
-            let b1 = ((s.end.as_secs_f64() / bucket) as usize).min(width - 1);
-            for b in b0..=b1 {
+            let start = s.start.saturating_sub(t0).as_secs_f64();
+            let end = s.end.max(s.start).saturating_sub(t0).as_secs_f64();
+            let b0 = ((start / bucket) as usize).min(width - 1);
+            let b1 = ((end / bucket) as usize).min(width - 1);
+            let row = &mut grid[s.thread.min(n_threads - 1)];
+            for (b, cell) in row.iter_mut().enumerate().take(b1 + 1).skip(b0) {
                 let cell_start = b as f64 * bucket;
                 let cell_end = cell_start + bucket;
-                let overlap = (s.end.as_secs_f64().min(cell_end)
-                    - s.start.as_secs_f64().max(cell_start))
-                .max(0.0);
-                *grid[s.thread][b].entry(s.kind.glyph()).or_insert(0.0) += overlap;
+                let overlap = (end.min(cell_end) - start.max(cell_start)).max(0.0);
+                *cell.entry(s.kind).or_insert(0.0) += overlap;
             }
         }
+        let dominant = |cell: &std::collections::HashMap<SpanKind, f64>, useful: bool| {
+            cell.iter()
+                .filter(|(k, _)| k.is_useful() == useful)
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(k, _)| k.glyph())
+        };
         let mut out = String::new();
         for (t, row) in grid.iter().enumerate() {
             out.push_str(&format!("T{t:02} |"));
             for cell in row {
-                let ch = cell
-                    .iter()
-                    .filter(|(g, _)| **g != '.')
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(g, _)| *g)
-                    .or_else(|| cell.keys().next().copied())
-                    .unwrap_or(' ');
-                out.push(ch);
+                out.push(dominant(cell, true).or_else(|| dominant(cell, false)).unwrap_or(' '));
             }
             out.push_str("|\n");
         }
         out.push_str("legend: S startup, g generate, s serialize, c compress, ");
-        out.push_str("d decompress, u deserialize, p process, r read, w write, m merge, . idle-running\n");
+        out.push_str("d decompress, u deserialize, p process, r read, w write, m merge, ");
+        out.push_str("f fetch, v scatter-read, P page-seal, z zone-prune, > chain-advance, ");
+        out.push_str(": task, a admission-wait, ~ retry, h hedge, ! breaker-trip, ");
+        out.push_str(". idle-running\n");
         out
-    }
-}
-
-impl Default for Recorder {
-    fn default() -> Self {
-        Self::new()
     }
 }
 
@@ -262,8 +578,9 @@ mod tests {
     #[test]
     fn csv_and_ascii_render() {
         let r = Recorder::new();
-        r.push(SpanKind::Generate, Duration::ZERO, Duration::from_millis(5));
-        r.push(SpanKind::Write, Duration::from_millis(5), Duration::from_millis(10));
+        let t0 = process_epoch().elapsed();
+        r.push(SpanKind::Generate, t0, t0 + Duration::from_millis(5));
+        r.push(SpanKind::Write, t0 + Duration::from_millis(5), t0 + Duration::from_millis(10));
         let csv = r.to_csv();
         assert!(csv.contains("generate"));
         assert!(csv.contains("write"));
@@ -278,5 +595,102 @@ mod tests {
         let r = Recorder::new();
         assert_eq!(r.useful_fraction(), 0.0);
         assert_eq!(r.timeline_ascii(10), "");
+        assert!(r.check().is_ok());
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        let v = r.record(SpanKind::Compress, || 42);
+        assert_eq!(v, 42);
+        r.push(SpanKind::Write, Duration::ZERO, Duration::from_millis(1));
+        r.mark(SpanKind::ZonePrune);
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.n_threads(), 0);
+        assert_eq!(r.useful_fraction(), 0.0);
+        assert!(r.check().is_ok());
+    }
+
+    #[test]
+    fn clones_share_the_same_buffers() {
+        let r = Recorder::new();
+        let r2 = r.clone();
+        r.record(SpanKind::Read, || {});
+        r2.record(SpanKind::Write, || {});
+        assert_eq!(r.snapshot().len(), 2);
+        assert_eq!(r2.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn nested_spans_do_not_double_count_useful_time() {
+        // A Task container holding a Compress span: useful time is the
+        // compress interval once, not task + compress.
+        let r = Recorder::new();
+        let t0 = process_epoch().elapsed();
+        let ms = Duration::from_millis;
+        r.push(SpanKind::Task, t0, t0 + ms(10));
+        r.push(SpanKind::Compress, t0 + ms(2), t0 + ms(8));
+        // Overlapping useful spans also merge.
+        r.push(SpanKind::Decompress, t0 + ms(6), t0 + ms(9));
+        let (useful, wall) = r.useful_per_thread();
+        assert_eq!(useful.len(), 1);
+        assert_eq!(useful[0], ms(7)); // union of [2,8) and [6,9)
+        assert_eq!(wall, ms(10));
+    }
+
+    #[test]
+    fn zero_duration_and_out_of_order_spans_do_not_panic() {
+        let r = Recorder::new();
+        let t0 = process_epoch().elapsed();
+        let ms = Duration::from_millis;
+        r.push(SpanKind::Compress, t0, t0); // zero duration
+        r.push(SpanKind::Write, t0 + ms(5), t0 + ms(1)); // end < start
+        r.mark(SpanKind::ZonePrune);
+        let (useful, _) = r.useful_per_thread();
+        assert_eq!(useful[0], Duration::ZERO);
+        let _ = r.timeline_ascii(10);
+        let _ = r.to_csv();
+        let _ = r.to_chrome_json();
+        assert!(r.useful_fraction() >= 0.0);
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_categorised() {
+        let r = Recorder::new();
+        r.record(SpanKind::Fetch, || std::thread::sleep(Duration::from_millis(1)));
+        r.record(SpanKind::Task, || {});
+        let doc = r.to_chrome_json();
+        let j = json::parse(&doc).unwrap();
+        let events = j.get("traceEvents").and_then(json::Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        let cats: Vec<&str> =
+            events.iter().filter_map(|e| e.get("cat").and_then(json::Json::as_str)).collect();
+        assert!(cats.contains(&"prefetch"));
+        assert!(cats.contains(&"pool"));
+        for e in events {
+            assert_eq!(e.get("ph").and_then(json::Json::as_str), Some("X"));
+            assert!(e.get("dur").and_then(json::Json::as_f64).unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_surfaces_as_sync_error_not_panic() {
+        // Poison a shard by panicking while the recorder's locks are
+        // held on this thread, then confirm the API recovers.
+        let r = Recorder::new();
+        r.record(SpanKind::Read, || {});
+        let inner = r.inner.as_ref().unwrap().clone();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = inner.shards.lock().unwrap();
+            panic!("poison");
+        }));
+        assert!(res.is_err());
+        // Snapshot still works (recovers the lock) and check() reports.
+        assert_eq!(r.snapshot().len(), 1);
+        match r.check() {
+            Err(Error::Sync(_)) => {}
+            other => panic!("expected Error::Sync, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,338 @@
+//! Unified metrics registry: one named counter/gauge tree.
+//!
+//! Every subsystem in this crate reports through its own stats struct
+//! ([`crate::session::SessionStats`], [`crate::cache::PrefetchStats`],
+//! [`crate::tree::writer::WriteStats`],
+//! [`crate::storage::ResilienceStats`],
+//! [`crate::storage::sim::DeviceStats`],
+//! [`crate::compress::pool::PoolStats`], sizer/selector summaries).
+//! The [`Registry`] folds them into one [`Snapshot`] — a sorted
+//! `name → value` tree with `since()` deltas — so `rootio stats`, the
+//! bench-trajectory gate and (eventually) a `rootio serve` metrics
+//! endpoint all read a single surface instead of ten structs.
+//!
+//! A [`Registry`] also owns the three *live* latency histograms
+//! ([`crate::metrics::hist::Histogram`]) the pipeline feeds directly:
+//! window submit→decoded, basket compress, and device read. Recording
+//! into them is a few relaxed atomics, so they are always on.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::hist::{HistSnapshot, Histogram};
+use super::json::escape;
+
+/// Shared handle to the live histograms + snapshot builder.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    window_latency: Histogram,
+    basket_compress: Histogram,
+    device_read: Histogram,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Window submit→decoded latency (fed by the prefetcher when a
+    /// window's last basket finishes decoding).
+    pub fn window_latency(&self) -> &Histogram {
+        &self.inner.window_latency
+    }
+
+    /// Per-basket compression latency (fed by flush tasks).
+    pub fn basket_compress(&self) -> &Histogram {
+        &self.inner.basket_compress
+    }
+
+    /// Device read latency per coalesced scatter fetch (fed by the
+    /// prefetcher's fetch tasks).
+    pub fn device_read(&self) -> &Histogram {
+        &self.inner.device_read
+    }
+
+    /// Snapshot with the three live histograms pre-filled; callers
+    /// fold whatever stats structs their run produced on top.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut s = Snapshot::default();
+        s.put_hist("window_latency", self.inner.window_latency.snapshot());
+        s.put_hist("basket_compress", self.inner.basket_compress.snapshot());
+        s.put_hist("device_read", self.inner.device_read.snapshot());
+        s
+    }
+}
+
+/// One point-in-time metrics tree: monotonic counters, point-in-time
+/// gauges, and histogram snapshots, each under a dotted name.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    pub fn add_counter(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn put_hist(&mut self, name: &str, h: HistSnapshot) {
+        self.hists.insert(name.to_string(), h);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Delta view: counters and histograms subtract (missing-in-earlier
+    /// counts as zero), gauges keep their current value.
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        let mut out = self.clone();
+        for (name, v) in &mut out.counters {
+            *v = v.saturating_sub(earlier.counter(name).unwrap_or(0));
+        }
+        for (name, h) in &mut out.hists {
+            if let Some(e) = earlier.hist(name) {
+                *h = h.since(e);
+            }
+        }
+        out
+    }
+
+    fn dur_counter(&mut self, name: &str, d: Duration) {
+        self.set_counter(name, d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold a session's budget/membership stats in.
+    pub fn put_session(&mut self, s: &crate::session::SessionStats) {
+        self.set_counter("session.writers_opened", s.writers_opened);
+        self.set_gauge("session.active_writers", s.active_writers as f64);
+        self.set_gauge("session.in_flight_clusters", s.in_flight_clusters as f64);
+        self.set_gauge("session.budget_limit", s.budget_limit as f64);
+        self.set_counter("session.admissions", s.admissions);
+        self.set_counter("session.admission_waits", s.admission_waits);
+        self.set_counter("session.readers_opened", s.readers_opened);
+        self.set_gauge("session.active_readers", s.active_readers as f64);
+        self.set_gauge("session.in_flight_read_windows", s.in_flight_read_windows as f64);
+        self.set_gauge("session.read_budget_limit", s.read_budget_limit as f64);
+        self.set_counter("session.read_admission_waits", s.read_admission_waits);
+        self.set_gauge("session.in_flight_hedges", s.in_flight_hedges as f64);
+        self.set_gauge("session.hedge_limit", s.hedge_limit as f64);
+    }
+
+    /// Fold one stream's (or one chain's summed) prefetch stats in
+    /// under `prefix` (usually `"prefetch"`).
+    pub fn put_prefetch(&mut self, prefix: &str, s: &crate::cache::PrefetchStats) {
+        self.set_counter(&format!("{prefix}.clusters"), s.clusters);
+        self.set_counter(&format!("{prefix}.baskets"), s.baskets);
+        self.set_counter(&format!("{prefix}.device_reads"), s.device_reads);
+        self.set_counter(&format!("{prefix}.stored_bytes"), s.stored_bytes);
+        self.set_counter(&format!("{prefix}.bytes_selected"), s.bytes_selected);
+        self.set_counter(&format!("{prefix}.bytes_skipped"), s.bytes_skipped);
+        self.set_counter(&format!("{prefix}.pages_pruned"), s.pages_pruned);
+        self.set_counter(&format!("{prefix}.bytes_pruned"), s.bytes_pruned);
+        self.dur_counter(&format!("{prefix}.fetch_stall_us"), s.fetch_stall);
+        self.dur_counter(&format!("{prefix}.fetch_time_us"), s.fetch_time);
+        self.dur_counter(&format!("{prefix}.decode_time_us"), s.decode_time);
+        self.set_counter(&format!("{prefix}.admission_denials"), s.admission_denials);
+        self.set_counter(&format!("{prefix}.retries"), s.retries);
+        self.set_counter(&format!("{prefix}.hedges"), s.hedges);
+        self.set_counter(&format!("{prefix}.hedge_wins"), s.hedge_wins);
+        self.set_counter(&format!("{prefix}.deadline_misses"), s.deadline_misses);
+        self.set_counter(&format!("{prefix}.degraded_windows"), s.degraded_windows);
+        self.put_sizer(&format!("{prefix}.window"), &s.window);
+    }
+
+    /// Fold a writer's close-time stats in under `prefix`.
+    pub fn put_write(&mut self, prefix: &str, s: &crate::tree::writer::WriteStats) {
+        self.dur_counter(&format!("{prefix}.serialize_us"), s.serialize);
+        self.dur_counter(&format!("{prefix}.compress_us"), s.compress);
+        self.dur_counter(&format!("{prefix}.stall_us"), s.stall);
+        self.set_counter(&format!("{prefix}.baskets"), s.baskets);
+        self.put_sizer(&format!("{prefix}.sizing"), &s.sizing);
+        self.set_gauge(&format!("{prefix}.selection.columns"), s.selection.columns as f64);
+        self.set_gauge(&format!("{prefix}.selection.committed"), s.selection.committed as f64);
+        self.set_counter(&format!("{prefix}.selection.probes"), s.selection.probes);
+        self.set_gauge(&format!("{prefix}.selection.reprobes"), s.selection.reprobes as f64);
+    }
+
+    /// Fold a resilient backend's counters in under `prefix`.
+    pub fn put_resilience(&mut self, prefix: &str, s: &crate::storage::ResilienceStats) {
+        self.set_counter(&format!("{prefix}.requests"), s.requests);
+        self.set_counter(&format!("{prefix}.attempts"), s.attempts);
+        self.set_counter(&format!("{prefix}.retries"), s.retries);
+        self.set_counter(&format!("{prefix}.hedges"), s.hedges);
+        self.set_counter(&format!("{prefix}.hedge_wins"), s.hedge_wins);
+        self.set_counter(&format!("{prefix}.deadline_misses"), s.deadline_misses);
+        self.set_counter(&format!("{prefix}.breaker_opens"), s.breaker_opens);
+        self.set_counter(&format!("{prefix}.shed"), s.shed);
+        self.set_counter(&format!("{prefix}.write_retries"), s.write_retries);
+        self.set_counter(&format!("{prefix}.exhausted"), s.exhausted);
+    }
+
+    /// Fold a simulated/remote device's counters in under `prefix`.
+    pub fn put_device(&mut self, prefix: &str, s: &crate::storage::sim::DeviceStats) {
+        self.set_counter(&format!("{prefix}.reads"), s.reads);
+        self.set_counter(&format!("{prefix}.writes"), s.writes);
+        self.set_counter(&format!("{prefix}.bytes_read"), s.bytes_read);
+        self.set_counter(&format!("{prefix}.bytes_written"), s.bytes_written);
+        self.set_counter(&format!("{prefix}.seeks"), s.seeks);
+        self.dur_counter(&format!("{prefix}.queue_wait_us"), s.queue_wait);
+        self.dur_counter(&format!("{prefix}.seek_time_us"), s.seek_time);
+        self.dur_counter(&format!("{prefix}.transfer_time_us"), s.transfer_time);
+        self.set_counter(&format!("{prefix}.faults"), s.faults);
+        self.set_counter(&format!("{prefix}.timeouts"), s.timeouts);
+        self.set_counter(&format!("{prefix}.short_reads"), s.short_reads);
+        self.set_counter(&format!("{prefix}.stuck"), s.stuck);
+    }
+
+    /// Fold the scratch-buffer pool's effectiveness counters in.
+    pub fn put_pool(&mut self, s: &crate::compress::pool::PoolStats) {
+        self.set_counter("scratch_pool.hits", s.hits);
+        self.set_counter("scratch_pool.misses", s.misses);
+        self.set_counter("scratch_pool.drops", s.drops);
+        self.set_counter("scratch_pool.evictions", s.evictions);
+        self.set_gauge("scratch_pool.resident_bytes", s.resident_bytes as f64);
+    }
+
+    /// Fold a sizer band summary in under `prefix`.
+    pub fn put_sizer(&mut self, prefix: &str, s: &crate::tree::sizer::SizerSummary) {
+        self.set_gauge(&format!("{prefix}.min_entries"), s.min_entries as f64);
+        self.set_gauge(&format!("{prefix}.max_entries"), s.max_entries as f64);
+        self.set_gauge(&format!("{prefix}.last_entries"), s.last_entries as f64);
+        self.set_counter(&format!("{prefix}.grows"), s.grows as u64);
+        self.set_counter(&format!("{prefix}.shrinks"), s.shrinks as u64);
+        self.set_counter(&format!("{prefix}.clusters"), s.clusters);
+    }
+
+    /// Serialise the whole tree as JSON (stable key order — the
+    /// BTreeMaps keep names sorted).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        let mut first = true;
+        for (k, v) in &self.counters {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n    \"{}\": {}", escape(k), v));
+        }
+        out.push_str("\n  },\n  \"gauges\": {");
+        first = true;
+        for (k, v) in &self.gauges {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n    \"{}\": {}", escape(k), fmt_f64(*v)));
+        }
+        out.push_str("\n  },\n  \"histograms\": {");
+        first = true;
+        for (k, h) in &self.hists {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    \"{}\": {{\"count\": {}, \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}}}",
+                escape(k),
+                h.count(),
+                fmt_f64(h.mean().as_secs_f64() * 1e6),
+                fmt_f64(h.p50().as_secs_f64() * 1e6),
+                fmt_f64(h.p95().as_secs_f64() * 1e6),
+                fmt_f64(h.p99().as_secs_f64() * 1e6),
+            ));
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::json;
+
+    #[test]
+    fn counters_gauges_and_since_deltas() {
+        let mut a = Snapshot::default();
+        a.set_counter("x.n", 10);
+        a.set_gauge("x.level", 3.0);
+        let mut b = Snapshot::default();
+        b.set_counter("x.n", 25);
+        b.set_counter("x.new", 5);
+        b.set_gauge("x.level", 7.0);
+        let d = b.since(&a);
+        assert_eq!(d.counter("x.n"), Some(15));
+        assert_eq!(d.counter("x.new"), Some(5));
+        assert_eq!(d.gauge("x.level"), Some(7.0));
+    }
+
+    #[test]
+    fn registry_histograms_appear_in_snapshot() {
+        let r = Registry::new();
+        r.window_latency().record(Duration::from_micros(100));
+        r.device_read().record(Duration::from_micros(50));
+        let s = r.snapshot();
+        assert_eq!(s.hist("window_latency").unwrap().count(), 1);
+        assert_eq!(s.hist("device_read").unwrap().count(), 1);
+        assert_eq!(s.hist("basket_compress").unwrap().count(), 0);
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let r = Registry::new();
+        r.window_latency().record(Duration::from_micros(300));
+        let mut s = r.snapshot();
+        s.set_counter("session.admissions", 42);
+        s.set_gauge("session.budget_limit", 16.0);
+        let doc = s.to_json();
+        let j = json::parse(&doc).unwrap();
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("session.admissions")).and_then(|v| v.as_f64()),
+            Some(42.0)
+        );
+        let h = j.get("histograms").and_then(|h| h.get("window_latency")).unwrap();
+        assert_eq!(h.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(h.get("p99_us").and_then(|v| v.as_f64()).unwrap() >= 300.0);
+    }
+}

@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex};
 use crate::compress;
 use crate::error::Result;
 use crate::imt::{BudgetStats, ClusterGuard, IoBudget, MemberBudget, Pool, TaskGroup};
+use crate::metrics::{Recorder, Registry};
 
 /// Session tuning.
 #[derive(Clone, Debug)]
@@ -60,6 +61,13 @@ pub struct SessionConfig {
     /// session. Hedges are speculative extra device requests; this cap
     /// keeps a tail-latency spike from doubling device load.
     pub max_hedged_reads: usize,
+    /// Span recorder threaded through every subsystem the session
+    /// touches (pool task execution, budget admission waits, prefetch
+    /// fetch/decode, resilient retries/hedges, writer flush stages).
+    /// Defaults to [`Recorder::disabled`] — one branch on each hot
+    /// path. Set an enabled recorder (or use
+    /// [`SessionConfig::traced`]) to collect a pipeline-wide trace.
+    pub recorder: Recorder,
 }
 
 impl Default for SessionConfig {
@@ -68,6 +76,7 @@ impl Default for SessionConfig {
             max_inflight_clusters: 16,
             max_inflight_read_windows: 16,
             max_hedged_reads: 4,
+            recorder: Recorder::disabled(),
         }
     }
 }
@@ -90,6 +99,12 @@ impl SessionConfig {
             max_inflight_read_windows: (readers * per_reader).max(1),
             ..Default::default()
         }
+    }
+
+    /// Enable pipeline tracing with a fresh recorder.
+    pub fn traced(mut self) -> Self {
+        self.recorder = Recorder::new();
+        self
     }
 }
 
@@ -143,6 +158,24 @@ struct SessionInner {
     groups: Mutex<Vec<TaskGroup>>,
     writers_opened: AtomicU64,
     readers_opened: AtomicU64,
+    /// The session's span recorder (disabled unless the config enabled
+    /// tracing). Cloned into budgets, writers, streams and backends at
+    /// registration time.
+    recorder: Recorder,
+    /// The unified metrics registry: live latency histograms fed by
+    /// the pipeline plus the snapshot surface `rootio stats` dumps.
+    metrics: Registry,
+    /// The pool the recorder was installed on at build time, so the
+    /// session can uninstall it again when it drops.
+    traced_pool: Option<Arc<Pool>>,
+}
+
+impl Drop for SessionInner {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.traced_pool {
+            pool.clear_recorder(&self.recorder);
+        }
+    }
 }
 
 /// Cloneable handle on one shared I/O session.
@@ -175,9 +208,26 @@ impl Session {
     }
 
     fn build(pool: Option<Arc<Pool>>, config: SessionConfig) -> Self {
-        let budget = IoBudget::new(config.max_inflight_clusters, pool.clone());
-        let read_budget = IoBudget::new(config.max_inflight_read_windows, pool.clone());
-        let hedge_budget = IoBudget::new(config.max_hedged_reads, pool.clone());
+        let recorder = config.recorder.clone();
+        let budget =
+            IoBudget::traced(config.max_inflight_clusters, pool.clone(), recorder.clone());
+        let read_budget =
+            IoBudget::traced(config.max_inflight_read_windows, pool.clone(), recorder.clone());
+        let hedge_budget =
+            IoBudget::traced(config.max_hedged_reads, pool.clone(), recorder.clone());
+        // Install the recorder on the pool the session resolves *now*
+        // so task execution shows up in the trace. A traced session on
+        // the lazily-bound global pool only records tasks if the pool
+        // is already up — `rootio trace` and tests pass explicit pools.
+        let traced_pool = if recorder.is_enabled() {
+            let p = pool.clone().or_else(crate::imt::pool);
+            if let Some(p) = &p {
+                p.install_recorder(&recorder);
+            }
+            p
+        } else {
+            None
+        };
         Session {
             inner: Arc::new(SessionInner {
                 config,
@@ -188,8 +238,22 @@ impl Session {
                 groups: Mutex::new(Vec::new()),
                 writers_opened: AtomicU64::new(0),
                 readers_opened: AtomicU64::new(0),
+                recorder,
+                metrics: Registry::new(),
+                traced_pool,
             }),
         }
+    }
+
+    /// The session's span recorder (disabled unless tracing was
+    /// enabled in the config).
+    pub fn recorder(&self) -> &Recorder {
+        &self.inner.recorder
+    }
+
+    /// The session's unified metrics registry.
+    pub fn metrics(&self) -> &Registry {
+        &self.inner.metrics
     }
 
     pub fn config(&self) -> &SessionConfig {

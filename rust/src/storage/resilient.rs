@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::imt::{IoBudget, MemberBudget};
+use crate::metrics::{Recorder, SpanKind};
 use crate::session::Session;
 
 use super::fault::{mix, unit};
@@ -182,6 +183,9 @@ pub struct ResilientBackend {
     requests: AtomicU64,
     breaker: Mutex<BreakerWindow>,
     stats: Counters,
+    /// Session recorder (disabled when standalone): retry backoffs and
+    /// hedge races emit spans, breaker transitions emit marks.
+    recorder: Recorder,
 }
 
 impl ResilientBackend {
@@ -192,17 +196,29 @@ impl ResilientBackend {
         // The member handle keeps the budget's inner state alive, so
         // the wrapper IoBudget can be dropped here.
         let hedge_slots = IoBudget::new(cap, None).register(cap);
-        ResilientBackend::with_hedge_slots(inner, cfg, hedge_slots)
+        ResilientBackend::with_hedge_slots(inner, cfg, hedge_slots, Recorder::disabled())
     }
 
     /// Wrapper drawing hedge slots from `session`'s shared hedged-read
-    /// budget ([`crate::session::SessionConfig::max_hedged_reads`]).
+    /// budget ([`crate::session::SessionConfig::max_hedged_reads`]) —
+    /// and, when the session is traced, emitting retry/hedge spans and
+    /// breaker-transition marks into the session recorder.
     pub fn in_session(inner: BackendRef, cfg: ResilientConfig, session: &Session) -> Self {
         let cap = cfg.max_hedged_reads.max(1);
-        ResilientBackend::with_hedge_slots(inner, cfg, session.register_hedger(cap))
+        ResilientBackend::with_hedge_slots(
+            inner,
+            cfg,
+            session.register_hedger(cap),
+            session.recorder().clone(),
+        )
     }
 
-    fn with_hedge_slots(inner: BackendRef, cfg: ResilientConfig, hedge_slots: MemberBudget) -> Self {
+    fn with_hedge_slots(
+        inner: BackendRef,
+        cfg: ResilientConfig,
+        hedge_slots: MemberBudget,
+        recorder: Recorder,
+    ) -> Self {
         ResilientBackend {
             inner,
             cfg,
@@ -214,6 +230,7 @@ impl ResilientBackend {
                 outcomes: VecDeque::new(),
             }),
             stats: Counters::default(),
+            recorder,
         }
     }
 
@@ -303,12 +320,14 @@ impl ResilientBackend {
                     if successes + 1 >= cfg.half_open_probes.max(1) {
                         b.state = BreakerState::Closed;
                         b.outcomes.clear();
+                        self.recorder.mark(SpanKind::BreakerTrip);
                     } else {
                         b.state = BreakerState::HalfOpen { successes: successes + 1 };
                     }
                 } else {
                     b.state = BreakerState::Open { until: Instant::now() + cfg.cooldown };
                     self.stats.breaker_opens.fetch_add(1, Ordering::SeqCst);
+                    self.recorder.mark(SpanKind::BreakerTrip);
                 }
             }
             BreakerState::Open { .. } => {}
@@ -323,6 +342,7 @@ impl ResilientBackend {
                         b.state = BreakerState::Open { until: Instant::now() + cfg.cooldown };
                         b.outcomes.clear();
                         self.stats.breaker_opens.fetch_add(1, Ordering::SeqCst);
+                        self.recorder.mark(SpanKind::BreakerTrip);
                     }
                 }
             }
@@ -357,7 +377,15 @@ impl ResilientBackend {
         spawn_attempt(0, None);
         let mut outstanding = 1usize;
         let mut hedged = false;
+        // Span from the hedge launch to the race's resolution — the
+        // window a duplicate was genuinely in flight.
+        let mut hedge_start: Option<Duration> = None;
         let mut last_err: Option<Error> = None;
+        let finish_hedge_span = |start: Option<Duration>| {
+            if let Some(s) = start {
+                self.recorder.push(SpanKind::Hedge, s, self.recorder.elapsed());
+            }
+        };
         loop {
             let msg = if hedged {
                 rx.recv().ok()
@@ -369,6 +397,10 @@ impl ResilientBackend {
                         if let Some(slot) = self.hedge_slots.try_acquire() {
                             self.stats.hedges.fetch_add(1, Ordering::SeqCst);
                             self.stats.attempts.fetch_add(1, Ordering::SeqCst);
+                            hedge_start = self
+                                .recorder
+                                .is_enabled()
+                                .then(|| self.recorder.elapsed());
                             spawn_attempt(1, Some(slot));
                             outstanding += 1;
                         }
@@ -378,6 +410,7 @@ impl ResilientBackend {
                 }
             };
             let Some((tag, result)) = msg else {
+                finish_hedge_span(hedge_start.take());
                 return Err(last_err
                     .unwrap_or_else(|| Error::Sync("hedged read lost both attempts".into())));
             };
@@ -387,11 +420,13 @@ impl ResilientBackend {
                     if tag == 1 {
                         self.stats.hedge_wins.fetch_add(1, Ordering::SeqCst);
                     }
+                    finish_hedge_span(hedge_start.take());
                     return Ok(data);
                 }
                 Err(e) => {
                     last_err = Some(e);
                     if outstanding == 0 {
+                        finish_hedge_span(hedge_start.take());
                         return Err(last_err.take().expect("error just stored"));
                     }
                 }
@@ -439,7 +474,12 @@ impl Backend for ResilientBackend {
                         return Err(e);
                     }
                     self.stats.retries.fetch_add(1, Ordering::SeqCst);
+                    let retry_start =
+                        self.recorder.is_enabled().then(|| self.recorder.elapsed());
                     std::thread::sleep(self.backoff(req, attempt));
+                    if let Some(start) = retry_start {
+                        self.recorder.push(SpanKind::Retry, start, self.recorder.elapsed());
+                    }
                 }
             }
         }
@@ -475,7 +515,12 @@ impl Backend for ResilientBackend {
                         return Err(e);
                     }
                     self.stats.write_retries.fetch_add(1, Ordering::SeqCst);
+                    let retry_start =
+                        self.recorder.is_enabled().then(|| self.recorder.elapsed());
                     std::thread::sleep(self.backoff(req, attempt));
+                    if let Some(start) = retry_start {
+                        self.recorder.push(SpanKind::Retry, start, self.recorder.elapsed());
+                    }
                 }
             }
         }

@@ -52,7 +52,7 @@ use crate::compress::{self, Settings};
 use crate::error::{Error, Result};
 use crate::format::directory::ClusterSpan;
 use crate::imt::{ClusterGuard, Pool, TaskGroup};
-use crate::metrics::{Recorder, SpanKind};
+use crate::metrics::{timed, Recorder, Registry, SpanKind};
 use crate::session::{Session, WriterRegistration};
 use crate::serial::column::ColumnData;
 use crate::serial::schema::{ColumnType, Schema};
@@ -244,7 +244,12 @@ pub struct TreeWriter<S: BasketSink> {
     columns: Vec<ColumnData>,
     buffered: usize,
     entries: u64,
-    recorder: Option<Arc<Recorder>>,
+    /// The session's span recorder (disabled unless the session traced;
+    /// every record call is then a single branch).
+    recorder: Recorder,
+    /// The session's metrics registry (always on — feeds the
+    /// basket-compress latency histogram from flush tasks).
+    registry: Registry,
     group: TaskGroup,
     /// Membership in the session's shared in-flight budget: every
     /// pipelined cluster is admitted through it before spawning.
@@ -306,7 +311,8 @@ impl<S: BasketSink> TreeWriter<S> {
             columns,
             buffered: 0,
             entries: 0,
-            recorder: None,
+            recorder: session.recorder().clone(),
+            registry: session.metrics().clone(),
             group,
             admission,
             sizer,
@@ -320,9 +326,12 @@ impl<S: BasketSink> TreeWriter<S> {
         }
     }
 
-    /// Attach a span recorder (Fig 7 instrumentation).
+    /// Attach a span recorder (Fig 7 instrumentation). Clones share
+    /// the recorder's buffers, so unwrapping the `Arc` here keeps the
+    /// historical callers working while the writer stores the plain
+    /// cheap-clone handle.
     pub fn with_recorder(mut self, r: Arc<Recorder>) -> Self {
-        self.recorder = Some(r);
+        self.recorder = (*r).clone();
         self
     }
 
@@ -586,6 +595,8 @@ impl<S: BasketSink> TreeWriter<S> {
             settings,
             granularity: self.config.granularity,
             recorder: self.recorder.clone(),
+            registry: self.registry.clone(),
+            page: matches!(self.config.layout, Layout::Paged { .. }),
             counters: self.counters.clone(),
             errors: self.errors.clone(),
             obs: (!self.selectors.is_empty()).then(|| self.select_inbox.clone()),
@@ -660,7 +671,12 @@ struct BasketTask<S: BasketSink> {
     sink: Arc<S>,
     settings: Settings,
     granularity: FlushGranularity,
-    recorder: Option<Arc<Recorder>>,
+    recorder: Recorder,
+    registry: Registry,
+    /// Paged-layout page task: `run` wraps itself in a
+    /// [`SpanKind::PageSeal`] span (union accounting keeps the nested
+    /// serialize/compress spans from double-counting).
+    page: bool,
     counters: Arc<TaskCounters>,
     errors: Arc<ErrorSlot>,
     /// Selection inbox: when per-column selection is active the stored
@@ -687,12 +703,12 @@ impl<S: BasketSink> BasketTask<S> {
         // serialise/compress work, and the column is still intact here
         // (it is cleared right after serialisation).
         self.meta.zone = crate::format::ZoneMap::from_column(&self.col);
+        let seal_rec = self.recorder.clone();
+        let seal_start = (self.page && seal_rec.is_enabled()).then(|| seal_rec.elapsed());
         let mut raw = compress::pool::get(self.col.byte_len());
         let ((), ser) = timed(|| self.col.encode_into(&mut raw));
         self.counters.serialize_ns.fetch_add(span_ns(ser), Ordering::Relaxed);
-        if let Some(r) = &self.recorder {
-            r.push(SpanKind::Serialize, ser.0, ser.1);
-        }
+        self.recorder.push(SpanKind::Serialize, ser.0, ser.1);
         self.meta.raw_len = raw.len() as u32;
         self.col.clear(); // release entry memory before compression
         let ranges = compress::block_ranges(raw.len());
@@ -709,15 +725,17 @@ impl<S: BasketSink> BasketTask<S> {
                 self.store(payload);
             }
         }
+        if let Some(start) = seal_start {
+            seal_rec.push(SpanKind::PageSeal, start, seal_rec.elapsed());
+        }
     }
 
     fn note_compress(&self, span: (Duration, Duration)) {
         let ns = span_ns(span);
         self.counters.compress_ns.fetch_add(ns, Ordering::Relaxed);
         self.obs_compress_ns.fetch_add(ns, Ordering::Relaxed);
-        if let Some(r) = &self.recorder {
-            r.push(SpanKind::Compress, span.0, span.1);
-        }
+        self.registry.basket_compress().record(Duration::from_nanos(ns));
+        self.recorder.push(SpanKind::Compress, span.0, span.1);
     }
 
     fn store(&self, payload: PayloadBuf) {
@@ -805,23 +823,8 @@ impl<S: BasketSink> Assembly<S> {
     }
 }
 
-/// Time a closure against the recorder epoch-free monotonic clock.
-/// Returns (value, (start, end)) as durations since an arbitrary t0
-/// shared within the process.
-fn timed<R>(f: impl FnOnce() -> R) -> (R, (Duration, Duration)) {
-    let t0 = process_epoch().elapsed();
-    let out = f();
-    let t1 = process_epoch().elapsed();
-    (out, (t0, t1))
-}
-
 fn span_ns(span: (Duration, Duration)) -> u64 {
     span.1.saturating_sub(span.0).as_nanos() as u64
-}
-
-fn process_epoch() -> &'static std::time::Instant {
-    static EPOCH: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
-    EPOCH.get_or_init(std::time::Instant::now)
 }
 
 #[cfg(test)]

@@ -1,0 +1,285 @@
+//! Observability acceptance: the traced pipeline covers every layer,
+//! the useful-work fraction of a real 8-worker read clears its pinned
+//! floor, the metrics registry reconciles exactly with the stats
+//! structs it folds in, and the exporters survive degenerate spans.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rootio_par::cache::{Predicate, PrefetchOptions};
+use rootio_par::compress::{Codec, Settings};
+use rootio_par::coordinator::write::write_blocks_in_session;
+use rootio_par::experiments::util::synthesize_flat_f32;
+use rootio_par::format::reader::FileReader;
+use rootio_par::framework::chain::Chain;
+use rootio_par::imt::Pool;
+use rootio_par::metrics::{json, Recorder, SpanKind};
+use rootio_par::serial::column::ColumnData;
+use rootio_par::serial::schema::Schema;
+use rootio_par::session::{Session, SessionConfig};
+use rootio_par::storage::mem::MemBackend;
+use rootio_par::storage::BackendRef;
+use rootio_par::tree::reader::TreeReader;
+use rootio_par::tree::writer::{FlushMode, Layout, WriterConfig};
+
+/// Write `files` paged files through `session` with a chain-monotone
+/// branch 0 (so a later predicate scan can zone-prune) — the same
+/// pipeline `rootio trace bench` runs.
+fn write_chain_files(session: &Session, files: usize, entries: usize) -> Vec<BackendRef> {
+    let n_branches = 8usize;
+    let schema = Schema::flat_f32("b", n_branches);
+    let cfg = WriterConfig {
+        basket_entries: 512,
+        compression: Settings::new(Codec::Lz4r, 3),
+        flush: FlushMode::Pipelined,
+        max_inflight_clusters: 2,
+        layout: Layout::Paged { page_entries: 128 },
+        ..Default::default()
+    };
+    (0..files)
+        .map(|f| {
+            let be: BackendRef = Arc::new(MemBackend::new());
+            let block: Vec<ColumnData> = (0..n_branches)
+                .map(|b| {
+                    ColumnData::F32(
+                        (0..entries)
+                            .map(|i| {
+                                if b == 0 {
+                                    (f * entries + i) as f32
+                                } else {
+                                    ((i * 31 + b * 7 + f) % 499) as f32
+                                }
+                            })
+                            .collect(),
+                    )
+                })
+                .collect();
+            write_blocks_in_session(
+                session,
+                be.clone(),
+                schema.clone(),
+                "events",
+                cfg.clone(),
+                vec![block],
+            )
+            .unwrap();
+            be
+        })
+        .collect()
+}
+
+/// The `rootio trace bench` pipeline end to end: a tight-budget
+/// pipelined write of a small chain, then a predicate scan of it, all
+/// into one recorder — spans from at least five distinct subsystems
+/// must land, the Chrome export must parse, and the pruned scan must
+/// really prune.
+#[test]
+fn traced_chain_scan_covers_five_subsystems() {
+    rootio_par::imt::enable(8);
+    let entries = 4_096usize;
+    let files = 3usize;
+    let rec = Recorder::new();
+    let session = Session::new(SessionConfig {
+        max_inflight_clusters: 2,
+        recorder: rec.clone(),
+        ..Default::default()
+    });
+    let backends = write_chain_files(&session, files, entries);
+    session.drain().unwrap();
+
+    let cutoff = (files * entries) as f64 * 0.9;
+    let chain = Chain::new(backends).with_recorder(rec.clone());
+    let mut rows = 0u64;
+    let rep = chain
+        .scan_where(Predicate::ge(0, cutoff), &PrefetchOptions::fixed(4), |b| {
+            rows += b.rows() as u64
+        })
+        .unwrap();
+    assert_eq!(rep.files, files as u64);
+    assert_eq!(rows, rep.rows);
+    assert!(rep.prefetch.pages_pruned > 0, "zone maps must prune the bottom 90%");
+    rec.check().unwrap();
+
+    // Spans from >= 5 distinct subsystems, and specifically the layers
+    // the acceptance criteria name.
+    let spans = rec.snapshot();
+    assert!(!spans.is_empty());
+    let mut subs: Vec<&str> = spans.iter().map(|s| s.kind.subsystem()).collect();
+    subs.sort_unstable();
+    subs.dedup();
+    assert!(subs.len() >= 5, "only {} subsystems traced: {subs:?}", subs.len());
+    for want in ["pool", "writer", "prefetch", "storage", "chain"] {
+        assert!(subs.contains(&want), "missing '{want}' spans: {subs:?}");
+    }
+
+    // The Chrome export is valid JSON with the same subsystem spread.
+    let doc = json::parse(&rec.to_chrome_json()).unwrap();
+    let events = doc.get("traceEvents").and_then(json::Json::as_arr).unwrap();
+    assert_eq!(events.len(), spans.len());
+    let mut cats: Vec<&str> =
+        events.iter().filter_map(|e| e.get("cat").and_then(json::Json::as_str)).collect();
+    cats.sort_unstable();
+    cats.dedup();
+    assert!(cats.len() >= 5, "chrome export lost categories: {cats:?}");
+    for e in events {
+        assert_eq!(e.get("ph").and_then(json::Json::as_str), Some("X"));
+        assert!(e.get("dur").and_then(json::Json::as_f64).unwrap() > 0.0);
+    }
+}
+
+/// Fig2-shaped acceptance: a real parallel read on an 8-worker pool
+/// must clear a pinned useful-work floor. The floor is deliberately
+/// loose (CI machines vary wildly); the regression it guards against
+/// is tracing going blind (no useful spans at all) or the accounting
+/// double-counting itself above 1.0.
+#[test]
+fn eight_worker_read_useful_fraction_floor() {
+    let be = synthesize_flat_f32(16, 32_768, 1_024, Settings::new(Codec::Rzip, 4)).unwrap();
+    let pool = Arc::new(Pool::new(8));
+    let rec = Recorder::new();
+    let session = Session::with_pool(
+        pool,
+        SessionConfig { recorder: rec.clone(), ..Default::default() },
+    );
+    let reader = TreeReader::open_first(Arc::new(FileReader::open(be).unwrap())).unwrap();
+    let mut stream =
+        reader.stream_in_session(&PrefetchOptions::fixed(4), &session).unwrap();
+    let cols = stream.read_all_columns().unwrap();
+    assert_eq!(cols.len(), 16);
+    rec.check().unwrap();
+
+    let (useful, wall) = rec.useful_per_thread();
+    assert!(!useful.is_empty());
+    assert!(!wall.is_zero());
+    let frac = rec.useful_fraction();
+    assert!(frac >= 0.02, "useful fraction {frac:.4} under the 0.02 floor");
+    assert!(frac <= 1.0, "useful fraction {frac:.4} over 1.0 — double-counting");
+    // Decode work must actually be on the pool, not just the consumer.
+    assert!(
+        rec.snapshot().iter().any(|s| s.kind == SpanKind::Decompress),
+        "no decompress spans recorded"
+    );
+}
+
+/// The registry snapshot must reconcile *exactly* with the stats
+/// structs it folds in: the selected/pruned/skipped byte partition
+/// sums to the tree's stored bytes, every mirrored counter matches,
+/// and the session's in-flight gauges never exceed their limits.
+#[test]
+fn registry_reconciles_bytes_and_budgets() {
+    let be = synthesize_flat_f32(8, 16_384, 1_024, Settings::new(Codec::Lz4r, 3)).unwrap();
+    let file = Arc::new(FileReader::open(be).unwrap());
+    let tree_bytes: u64 = file.directory().trees[0]
+        .branches
+        .iter()
+        .map(|br| br.stored_bytes())
+        .sum();
+
+    let pool = Arc::new(Pool::new(4));
+    let session = Session::with_pool(pool, SessionConfig::default());
+    let reader = TreeReader::open_first(file).unwrap();
+    let mut stream =
+        reader.stream_in_session(&PrefetchOptions::fixed(4), &session).unwrap();
+    stream.read_all_columns().unwrap();
+    let st = stream.stats();
+
+    let mut snap = session.metrics().snapshot();
+    snap.put_prefetch("prefetch", &st);
+    snap.put_session(&session.stats());
+
+    // Byte partition: selected + pruned + skipped == the tree's stored
+    // bytes, and a full unfiltered read consumed all of the selection.
+    let selected = snap.counter("prefetch.bytes_selected").unwrap();
+    let pruned = snap.counter("prefetch.bytes_pruned").unwrap();
+    let skipped = snap.counter("prefetch.bytes_skipped").unwrap();
+    assert_eq!(selected + pruned + skipped, tree_bytes);
+    assert_eq!(snap.counter("prefetch.stored_bytes"), Some(selected));
+
+    // Every mirrored counter is the stats struct's value, exactly.
+    assert_eq!(snap.counter("prefetch.clusters"), Some(st.clusters));
+    assert_eq!(snap.counter("prefetch.baskets"), Some(st.baskets));
+    assert_eq!(snap.counter("prefetch.device_reads"), Some(st.device_reads));
+    assert_eq!(snap.counter("prefetch.retries"), Some(st.retries));
+
+    // Live histograms: one window-latency sample per consumed window,
+    // device reads timed for every scatter fetch.
+    let wl = snap.hist("window_latency").unwrap();
+    assert_eq!(wl.count(), stream.window_latency().count());
+    assert!(wl.count() > 0);
+    assert!(snap.hist("device_read").unwrap().count() > 0);
+
+    // Budget gauges: in-flight high-waters can never exceed limits.
+    let ss = session.stats();
+    assert!(ss.in_flight_read_windows <= ss.read_budget_limit);
+    assert!(ss.in_flight_clusters <= ss.budget_limit);
+    assert!(ss.in_flight_hedges <= ss.hedge_limit);
+    let g = |n: &str| snap.gauge(n).unwrap();
+    assert!(g("session.in_flight_read_windows") <= g("session.read_budget_limit"));
+    assert!(g("session.in_flight_clusters") <= g("session.budget_limit"));
+    assert!(g("session.in_flight_hedges") <= g("session.hedge_limit"));
+
+    // The JSON dump parses back with the same numbers.
+    let doc = json::parse(&snap.to_json()).unwrap();
+    assert_eq!(
+        doc.get("counters")
+            .and_then(|c| c.get("prefetch.stored_bytes"))
+            .and_then(json::Json::as_f64),
+        Some(selected as f64)
+    );
+}
+
+/// Zero-duration marks, end-before-start and out-of-order spans must
+/// render, export and account without panicking — a poisoned or racy
+/// producer can hand the exporters anything.
+#[test]
+fn exporters_survive_degenerate_spans() {
+    let rec = Recorder::new();
+    rec.mark(SpanKind::BreakerTrip); // zero-width event
+    rec.mark(SpanKind::ZonePrune);
+    let t = rec.elapsed();
+    rec.push(SpanKind::Decompress, t, t); // zero duration
+    rec.push(SpanKind::Fetch, t + Duration::from_micros(50), t); // end < start
+    rec.push(
+        // out of order vs the spans above
+        SpanKind::Compress,
+        t.saturating_sub(Duration::from_micros(10)),
+        t.saturating_sub(Duration::from_micros(5)),
+    );
+
+    let (useful, wall) = rec.useful_per_thread();
+    assert!(useful.iter().all(|d| *d <= wall.max(Duration::from_micros(100))));
+    let f = rec.useful_fraction();
+    assert!((0.0..=1.0).contains(&f), "fraction {f}");
+    let ascii = rec.timeline_ascii(60);
+    assert!(ascii.contains("legend") || ascii.is_empty());
+    let _ = rec.to_csv();
+    let doc = json::parse(&rec.to_chrome_json()).unwrap();
+    for e in doc.get("traceEvents").and_then(json::Json::as_arr).unwrap() {
+        assert!(e.get("dur").and_then(json::Json::as_f64).unwrap() >= 0.0);
+    }
+    rec.check().unwrap();
+}
+
+/// A disabled recorder records nothing, costs one branch per call and
+/// still satisfies the whole exporter surface.
+#[test]
+fn disabled_recorder_is_inert() {
+    let rec = Recorder::disabled();
+    assert!(!rec.is_enabled());
+    rec.mark(SpanKind::BreakerTrip);
+    rec.push(SpanKind::Fetch, Duration::ZERO, Duration::from_micros(5));
+    let out = rec.record(SpanKind::Compress, || 41 + 1);
+    assert_eq!(out, 42);
+    assert!(rec.snapshot().is_empty());
+    assert_eq!(rec.n_threads(), 0);
+    assert_eq!(rec.useful_fraction(), 0.0);
+    assert!(rec.timeline_ascii(60).is_empty());
+    rec.check().unwrap();
+    // Two disabled handles are "the same" (neither records); an
+    // enabled handle is only the same as its own clones.
+    assert!(rec.same(&Recorder::disabled()));
+    let on = Recorder::new();
+    assert!(on.same(&on.clone()));
+    assert!(!on.same(&Recorder::new()));
+    assert!(!on.same(&rec));
+}
